@@ -1,0 +1,69 @@
+//! Bench: pure-rust environment step rates (the baseline's substrate)
+//! and the serialization layer's cost per megabyte.
+
+use warpsci::baseline::RolloutWorker;
+use warpsci::bench::Bench;
+use warpsci::envs::make_cpu_env;
+use warpsci::nn::Mlp;
+use warpsci::util::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    let bench = Bench::from_env();
+
+    // raw env physics throughput (no policy)
+    for name in ["cartpole", "acrobot", "pendulum", "covid_econ",
+                 "catalysis_lh"] {
+        let mut env = make_cpu_env(name)?;
+        let mut rng = Pcg64::new(0);
+        env.reset(&mut rng);
+        let na = env.n_agents();
+        let n_act = env.n_actions();
+        let mut rewards = vec![0f32; na];
+        let actions: Vec<usize> = (0..na).map(|i| i % n_act).collect();
+        let iters = 20_000usize;
+        let mut steps_done = 0usize;
+        let r = bench.run(&format!("env_step/{name}"), iters as f64, || {
+            for _ in 0..iters {
+                if env.step(&actions, &mut rng, &mut rewards) {
+                    env.reset(&mut rng);
+                }
+                steps_done += 1;
+            }
+        });
+        println!("{}", r.report());
+    }
+
+    // worker roll-out incl. policy inference (the baseline hot loop)
+    for name in ["cartpole", "covid_econ"] {
+        let envs: Vec<_> = (0..4).map(|_| make_cpu_env(name).unwrap())
+            .collect();
+        let mut rng = Pcg64::new(1);
+        let policy = Mlp::init(envs[0].obs_dim(), 64, envs[0].n_actions(),
+                               &mut rng);
+        let mut worker = RolloutWorker::new(envs, policy, 0);
+        let t = 16usize;
+        let r = bench.run(&format!("worker_rollout/{name}/4envs"),
+                          (t * 4) as f64, || {
+                              std::hint::black_box(worker.rollout(t));
+                          });
+        println!("{}", r.report());
+    }
+
+    // serialization cost
+    let envs: Vec<_> = (0..8).map(|_| make_cpu_env("covid_econ").unwrap())
+        .collect();
+    let mut rng = Pcg64::new(2);
+    let policy = Mlp::init(7, 64, 10, &mut rng);
+    let mut worker = RolloutWorker::new(envs, policy, 0);
+    let batch = worker.rollout(13);
+    let bytes = batch.serialize();
+    let mb = bytes.len() as f64 / 1e6;
+    let r = bench.run(&format!("serialize+deserialize ({mb:.2} MB batch)"),
+                      1.0, || {
+        let b = batch.serialize();
+        std::hint::black_box(
+            warpsci::baseline::TrajectoryBatch::deserialize(&b).unwrap());
+    });
+    println!("{}", r.report());
+    Ok(())
+}

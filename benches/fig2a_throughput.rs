@@ -1,0 +1,47 @@
+//! Bench: Fig 2(a) — classic-control throughput vs concurrency.
+//!
+//! Measures roll-out and roll-out+train steps/second for every available
+//! cartpole/acrobot artifact (run `make artifacts-bench` for the full
+//! sweep) and reports the scaling factor between consecutive levels —
+//! the paper's claim is near-perfect linearity.
+
+use warpsci::bench::Bench;
+use warpsci::harness::{sweep_tags, trainer_for, HarnessOpts};
+use warpsci::runtime::Device;
+
+fn main() -> anyhow::Result<()> {
+    let opts = HarnessOpts::default();
+    let device = Device::cpu()?;
+    let bench = Bench::from_env();
+    for env in ["cartpole", "acrobot"] {
+        let tags = sweep_tags(&opts, env, 32)?;
+        if tags.is_empty() {
+            eprintln!("no {env} artifacts; run `make artifacts` first");
+            continue;
+        }
+        let mut prev: Option<(usize, f64)> = None;
+        for (n, tag) in tags {
+            if tag.ends_with("_jnp") || tag.ends_with("_nstep") {
+                continue;
+            }
+            let mut tr = trainer_for(&device, &opts, &tag, 0, 1)?;
+            tr.init()?;
+            let steps = tr.graphs.artifact.manifest.steps_per_iter as f64;
+            let roll = bench.run(&format!("{env}/rollout/n{n}"), steps,
+                                 || { tr.step_rollout().unwrap(); });
+            println!("{}", roll.report());
+            let mut tr = trainer_for(&device, &opts, &tag, 0, 1)?;
+            tr.init()?;
+            let train = bench.run(&format!("{env}/train_iter/n{n}"), steps,
+                                  || { tr.step_train().unwrap(); });
+            println!("{}", train.report());
+            if let Some((pn, psps)) = prev {
+                println!("    scaling n{pn} -> n{n}: x{:.2} measured vs \
+                          x{:.1} ideal",
+                         roll.items_per_sec() / psps, n as f64 / pn as f64);
+            }
+            prev = Some((n, roll.items_per_sec()));
+        }
+    }
+    Ok(())
+}

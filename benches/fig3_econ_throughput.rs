@@ -1,0 +1,45 @@
+//! Bench: Fig 3 — COVID economy: WarpSci vs the distributed baseline.
+//!
+//! End-to-end iteration benchmark of both systems at matched workloads,
+//! plus the econ scaling series (right panel).
+
+use warpsci::baseline::{DistributedConfig, DistributedSystem};
+use warpsci::bench::Bench;
+use warpsci::harness::{sweep_tags, trainer_for, HarnessOpts};
+use warpsci::runtime::Device;
+
+fn main() -> anyhow::Result<()> {
+    let opts = HarnessOpts::default();
+    let device = Device::cpu()?;
+    let bench = Bench::from_env();
+
+    // WarpSci across available econ sizes
+    for (n, tag) in sweep_tags(&opts, "covid_econ", 13)? {
+        let mut tr = trainer_for(&device, &opts, &tag, 0, 1)?;
+        tr.init()?;
+        let steps = tr.graphs.artifact.manifest.steps_per_iter as f64;
+        let r = bench.run(&format!("warpsci/econ/train_iter/n{n}"), steps,
+                          || { tr.step_train().unwrap(); });
+        println!("{}", r.report());
+    }
+
+    // distributed baseline: one full round (rollout+transfer+train)
+    for workers in [4usize, 16] {
+        let cfg = DistributedConfig {
+            env: "covid_econ".into(),
+            n_workers: workers,
+            envs_per_worker: 4,
+            t: 13,
+            ..Default::default()
+        };
+        let steps = (cfg.t * cfg.n_workers * cfg.envs_per_worker) as f64;
+        let mut sys = DistributedSystem::new(cfg)?;
+        let r = bench.run(&format!("distributed/econ/round/w{workers}"),
+                          steps, || { sys.round().unwrap(); });
+        println!("{}", r.report());
+        println!("    phases so far: rollout {:.3}s transfer {:.3}s \
+                  train {:.3}s", sys.timer.secs("rollout"),
+                 sys.timer.secs("transfer"), sys.timer.secs("train"));
+    }
+    Ok(())
+}

@@ -1,0 +1,24 @@
+//! Bench: Fig 4 — catalysis roll-out/train throughput per concurrency
+//! level and mechanism (LH vs ER must cost the same: identical encoding).
+
+use warpsci::bench::Bench;
+use warpsci::harness::{sweep_tags, trainer_for, HarnessOpts};
+use warpsci::runtime::Device;
+
+fn main() -> anyhow::Result<()> {
+    let opts = HarnessOpts::default();
+    let device = Device::cpu()?;
+    let bench = Bench::from_env();
+    for mech in ["lh", "er"] {
+        let env = format!("catalysis_{mech}");
+        for (n, tag) in sweep_tags(&opts, &env, 32)? {
+            let mut tr = trainer_for(&device, &opts, &tag, 0, 1)?;
+            tr.init()?;
+            let steps = tr.graphs.artifact.manifest.steps_per_iter as f64;
+            let r = bench.run(&format!("{env}/train_iter/n{n}"), steps,
+                              || { tr.step_train().unwrap(); });
+            println!("{}", r.report());
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Bench: runtime micro-costs — per-`execute_b` dispatch overhead, the
+//! metrics fetch, and the host round-trip the resident store avoids.
+//!
+//! These are the L3 numbers behind EXPERIMENTS.md §Perf: dispatch must be
+//! microseconds (it bounds throughput at small n_envs), and the
+//! round-trip cost is the Fig 3 "data transfer" bar in isolation.
+
+use warpsci::bench::Bench;
+use warpsci::harness::{trainer_for, HarnessOpts};
+use warpsci::runtime::Device;
+
+fn main() -> anyhow::Result<()> {
+    let opts = HarnessOpts::default();
+    let device = Device::cpu()?;
+    let bench = Bench::from_env();
+    let tag = "cartpole_n64_t16";
+
+    // per-call dispatch: tiny graph (get_params) on a resident buffer
+    let tr = trainer_for(&device, &opts, tag, 0, 1)?;
+    let state = tr.graphs.init_state(0)?;
+    let r = bench.run("dispatch/get_params (device-resident)", 1000.0,
+                      || {
+                          for _ in 0..1000 {
+                              tr.graphs.get_params(&state).unwrap();
+                          }
+                      });
+    println!("{}", r.report());
+
+    // metrics fetch: the only recurring host transfer in the hot loop
+    let r = bench.run("metrics fetch (12 floats to host)", 1000.0, || {
+        for _ in 0..1000 {
+            tr.graphs.metrics(&state).unwrap();
+        }
+    });
+    println!("{}", r.report());
+
+    // full store round-trip: what HostRoundTrip mode pays every iteration
+    let size = tr.graphs.artifact.manifest.state_size as f64;
+    let r = bench.run(
+        &format!("full store round-trip ({size} f32)"), 100.0, || {
+            for _ in 0..100 {
+                let host = tr.graphs.download_state(&state).unwrap();
+                tr.graphs.upload_state(&host).unwrap();
+            }
+        });
+    println!("{}", r.report());
+
+    // chained train_iter at small batch: dispatch-bound regime
+    let mut tr = trainer_for(&device, &opts, tag, 0, 1)?;
+    tr.init()?;
+    let steps = tr.graphs.artifact.manifest.steps_per_iter as f64;
+    let r = bench.run("train_iter n64 t16 (dispatch-bound)", steps, || {
+        tr.step_train().unwrap();
+    });
+    println!("{}", r.report());
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Quickstart: train CartPole-v1 with 1024 concurrent environments.
+//!
+//! This is the end-to-end driver for the whole stack: the L1 Pallas
+//! kernels and L2 JAX graphs were AOT-lowered by `make artifacts`; here
+//! the rust coordinator chains the fused roll-out+train executable over
+//! the device-resident unified store and logs the reward curve.
+//!
+//! Run:  cargo run --release --example quickstart
+//! (requires `make artifacts` first)
+
+use anyhow::Result;
+
+use warpsci::config::RunConfig;
+use warpsci::coordinator::Trainer;
+use warpsci::runtime::{Artifact, Device, GraphSet};
+use warpsci::util::csv::human;
+
+fn main() -> Result<()> {
+    let root = warpsci::artifacts_dir();
+    let artifact = Artifact::load(&root, "cartpole_n1024_t32")?;
+    let device = Device::cpu()?;
+    println!("platform: {}", device.platform());
+    let graphs = GraphSet::compile(&device, artifact)?;
+    println!("compiled {} in {:.2?}", graphs.artifact.manifest.tag,
+             graphs.compile_time);
+
+    let cfg = RunConfig {
+        env: "cartpole".into(),
+        n_envs: 1024,
+        t: 32,
+        iters: 150,
+        seed: 0,
+        metrics_every: 5,
+        target_return: Some(400.0),
+        log_csv: Some("results/quickstart_cartpole.csv".into()),
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(graphs, cfg)?;
+    trainer.init()?;
+    println!("\n{:>6} {:>12} {:>10} {:>10} {:>12}", "iter", "return",
+             "ep_len", "entropy", "steps/s");
+    let t0 = std::time::Instant::now();
+    for i in 0..150 {
+        trainer.step_train()?;
+        if (i + 1) % 5 == 0 {
+            let row = trainer.record_metrics()?;
+            println!("{:>6} {:>12.2} {:>10.1} {:>10.3} {:>12}",
+                     row.iter as u64, row.ep_return_ema, row.ep_len_ema,
+                     row.entropy,
+                     human(row.env_steps / t0.elapsed().as_secs_f64()));
+            if row.ep_return_ema >= 400.0 {
+                println!("\nsolved: return >= 400 (CartPole-v1 optimum is \
+                          500)");
+                break;
+            }
+        }
+    }
+    let row = trainer.record_metrics()?;
+    trainer.log.flush()?;
+    println!("\nfinal return {:.1} after {} env steps in {:.1}s \
+              (curve: results/quickstart_cartpole.csv)",
+             row.ep_return_ema, human(row.env_steps),
+             t0.elapsed().as_secs_f64());
+    Ok(())
+}

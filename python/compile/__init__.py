@@ -1,0 +1,5 @@
+"""WarpSci build-time python package (L1 kernels + L2 graphs + AOT).
+
+Never imported at runtime: `make artifacts` lowers everything to HLO text
+that the rust coordinator loads via PJRT.
+"""

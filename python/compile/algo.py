@@ -1,0 +1,128 @@
+"""Actor-critic RL algorithm pieces: distributions, returns, A2C loss, Adam.
+
+Everything is written from scratch in jnp (no optax/flax in the build
+environment) and unit-tested against numpy references in
+``python/tests/test_algo.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------
+# distributions
+# --------------------------------------------------------------------------
+def categorical_sample(key, logits: jnp.ndarray) -> jnp.ndarray:
+    """Gumbel-max sample.  logits (..., A) -> (...,) int32."""
+    return jax.random.categorical(key, logits).astype(jnp.int32)
+
+
+def categorical_logp(logits: jnp.ndarray, action: jnp.ndarray) -> jnp.ndarray:
+    logz = jax.nn.log_softmax(logits)
+    return jnp.take_along_axis(logz, action[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+
+
+def categorical_entropy(logits: jnp.ndarray) -> jnp.ndarray:
+    logz = jax.nn.log_softmax(logits)
+    p = jnp.exp(logz)
+    return -jnp.sum(p * logz, axis=-1)
+
+
+_LOG_2PI = float(jnp.log(2.0 * jnp.pi))
+
+
+def gaussian_sample(key, mean: jnp.ndarray, log_std: jnp.ndarray):
+    std = jnp.exp(log_std)
+    return mean + std * jax.random.normal(key, mean.shape)
+
+
+def gaussian_logp(mean, log_std, action) -> jnp.ndarray:
+    std = jnp.exp(log_std)
+    z = (action - mean) / std
+    return jnp.sum(-0.5 * z * z - log_std - 0.5 * _LOG_2PI, axis=-1)
+
+
+def gaussian_entropy(log_std) -> jnp.ndarray:
+    return jnp.sum(log_std + 0.5 * (_LOG_2PI + 1.0))
+
+
+# --------------------------------------------------------------------------
+# return estimators.  rewards/dones/values: (T, N); bootstrap: (N,)
+# --------------------------------------------------------------------------
+def nstep_returns(rewards, dones, bootstrap, gamma: float) -> jnp.ndarray:
+    """Discounted n-step returns R_t = r_t + gamma * (1 - d_t) * R_{t+1}."""
+    def body(carry, xs):
+        r, d = xs
+        ret = r + gamma * (1.0 - d) * carry
+        return ret, ret
+    _, rets = jax.lax.scan(body, bootstrap, (rewards, dones), reverse=True)
+    return rets
+
+
+def gae_advantages(rewards, dones, values, bootstrap,
+                   gamma: float, lam: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """GAE(lambda).  values: (T, N) V(s_t).  Returns (advantages, returns)."""
+    next_values = jnp.concatenate([values[1:], bootstrap[None]], axis=0)
+    deltas = rewards + gamma * (1.0 - dones) * next_values - values
+
+    def body(carry, xs):
+        delta, d = xs
+        adv = delta + gamma * lam * (1.0 - d) * carry
+        return adv, adv
+    _, advs = jax.lax.scan(body, jnp.zeros_like(bootstrap),
+                           (deltas, dones), reverse=True)
+    return advs, advs + values
+
+
+# --------------------------------------------------------------------------
+# A2C loss (forward recompute happens in the caller's closure)
+# --------------------------------------------------------------------------
+def a2c_loss_terms(logp, entropy, values_pred, returns, advantages,
+                   vf_coef: float, ent_coef: float):
+    """Scalar loss + components.  All inputs flattened (T*N,)."""
+    pi_loss = -jnp.mean(logp * jax.lax.stop_gradient(advantages))
+    v_loss = jnp.mean((values_pred - jax.lax.stop_gradient(returns)) ** 2)
+    ent = jnp.mean(entropy)
+    loss = pi_loss + vf_coef * v_loss - ent_coef * ent
+    return loss, (pi_loss, v_loss, ent)
+
+
+# --------------------------------------------------------------------------
+# Adam with global-norm clipping (from scratch)
+# --------------------------------------------------------------------------
+def adam_init(params: Dict[str, jnp.ndarray]):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()},
+            "t": jnp.zeros((), jnp.float32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(x * x) for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-8))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gn
+
+
+def adam_update(params, grads, m, v, t, lr: float,
+                b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
+    """One Adam step.  Returns (params', m', v', t')."""
+    t2 = t + 1.0
+    bc1 = 1.0 - b1 ** t2
+    bc2 = 1.0 - b2 ** t2
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        new_m[k] = b1 * m[k] + (1.0 - b1) * g
+        new_v[k] = b2 * v[k] + (1.0 - b2) * g * g
+        mh = new_m[k] / bc1
+        vh = new_v[k] / bc2
+        new_p[k] = params[k] - lr * mh / (jnp.sqrt(vh) + eps)
+    return new_p, new_m, new_v, t2

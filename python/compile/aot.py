@@ -1,0 +1,199 @@
+"""AOT lowering: jax L2 graphs -> HLO text artifacts + JSON manifest.
+
+This is the ONLY place python touches the pipeline: ``make artifacts`` runs
+it once, the rust coordinator then loads ``artifacts/<tag>/*.hlo.txt`` via
+PJRT and never imports python again.
+
+Interchange format is HLO **text**, not serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids that xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --suite default --out-dir ../artifacts
+    python -m compile.aot --suite bench   --out-dir ../artifacts
+    python -m compile.aot --env cartpole --n-envs 1024 --t 32 ...
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .envs import CovidSpec, make_env
+from .graphs import METRIC_NAMES, TrainConfig, build_graphs
+from .graphs_covid import build_covid_graphs
+
+SCHEMA_VERSION = 1
+
+
+def to_hlo_text(fn, example_args) -> str:
+    """Lower a jax function to XLA HLO text (single non-tuple result)."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False)
+    return comp.as_hlo_text()
+
+
+def tag_for(env_name: str, cfg: TrainConfig) -> str:
+    suffix = "" if cfg.use_pallas else "_jnp"
+    if not cfg.use_gae:
+        suffix += "_nstep"
+    return f"{env_name}_n{cfg.n_envs}_t{cfg.t}{suffix}"
+
+
+def build_for(env_name: str, cfg: TrainConfig):
+    """(layout, graphs, meta) for any registered environment."""
+    if env_name == "covid_econ":
+        spec = CovidSpec()
+        lo, graphs = build_covid_graphs(spec, cfg)
+        meta = dict(obs_dim=spec.gov_obs_dim, n_actions=spec.n_actions,
+                    act_type="discrete", max_steps=spec.max_steps,
+                    agents_per_env=spec.n_states + 1)
+    else:
+        env = make_env(env_name)
+        lo, graphs = build_graphs(env, cfg)
+        meta = dict(obs_dim=env.obs_dim, n_actions=env.n_actions,
+                    act_type=env.act_type, max_steps=env.max_steps,
+                    agents_per_env=1)
+    return lo, graphs, meta
+
+
+def emit(env_name: str, cfg: TrainConfig, out_dir: str,
+         force: bool = False) -> str:
+    """Lower all graphs for one (env, config) and write the artifact dir."""
+    tag = tag_for(env_name, cfg)
+    dest = os.path.join(out_dir, tag)
+    manifest_path = os.path.join(dest, "manifest.json")
+    if os.path.exists(manifest_path) and not force:
+        print(f"[aot] {tag}: up to date")
+        return dest
+    os.makedirs(dest, exist_ok=True)
+    t0 = time.time()
+    lo, graphs, meta = build_for(env_name, cfg)
+    graph_entries = {}
+    for name, (fn, args) in graphs.items():
+        text = to_hlo_text(fn, args)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(dest, fname), "w") as f:
+            f.write(text)
+        graph_entries[name] = {
+            "file": fname,
+            "inputs": [{"shape": list(a.shape), "dtype": "f32"}
+                       for a in args],
+        }
+    p_off, p_size = lo.group_span("params")
+    manifest = {
+        "schema": SCHEMA_VERSION,
+        "tag": tag,
+        "env": env_name,
+        "config": dataclass_dict(cfg),
+        "state_size": lo.total,
+        "params_offset": p_off,
+        "params_size": p_size,
+        "steps_per_iter": cfg.t * cfg.n_envs,
+        "metrics": list(METRIC_NAMES),
+        "layout": lo.to_manifest(),
+        "graphs": graph_entries,
+        **meta,
+    }
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] {tag}: {len(graphs)} graphs in {time.time()-t0:.1f}s "
+          f"(state={lo.total} f32, params={p_size})")
+    return dest
+
+
+def dataclass_dict(cfg: TrainConfig) -> dict:
+    import dataclasses
+    return dataclasses.asdict(cfg)
+
+
+# --------------------------------------------------------------------------
+# suites
+# --------------------------------------------------------------------------
+def default_suite():
+    """Artifacts needed by tests, examples and the quickstart."""
+    yield "cartpole", TrainConfig(n_envs=64, t=16)
+    yield "cartpole", TrainConfig(n_envs=1024, t=32)
+    yield "acrobot", TrainConfig(n_envs=1024, t=32)
+    yield "pendulum", TrainConfig(n_envs=256, t=32, lr=1e-3, ent_coef=0.001)
+    yield "covid_econ", TrainConfig(n_envs=32, t=13)
+    yield "covid_econ", TrainConfig(n_envs=60, t=13)
+    yield "catalysis_lh", TrainConfig(n_envs=100, t=32)
+    yield "catalysis_er", TrainConfig(n_envs=100, t=32)
+
+
+def bench_suite():
+    """Artifacts for the figure-regeneration harness (DESIGN.md section 4)."""
+    # F2a throughput scaling sweep (roll-out + train)
+    for env in ("cartpole", "acrobot"):
+        for n in (16, 64, 256, 1024, 4096, 8192):
+            yield env, TrainConfig(n_envs=n, t=32)
+    # F2b/F2c convergence-vs-concurrency
+    for env in ("cartpole", "acrobot"):
+        for n in (16, 128, 1024):
+            if n in (1024,):
+                continue  # already in the scaling sweep
+            yield env, TrainConfig(n_envs=n, t=32)
+    # F3 econ scaling
+    for n in (4, 16, 60, 256, 1024):
+        if n == 60:
+            continue  # in the default suite
+        yield "covid_econ", TrainConfig(n_envs=n, t=13)
+    # F4 catalysis concurrency sweep
+    for mech in ("catalysis_lh", "catalysis_er"):
+        for n in (4, 20, 100, 500):
+            if n == 100:
+                continue  # in the default suite
+            yield mech, TrainConfig(n_envs=n, t=32)
+    # perf ablation: pallas kernels vs pure-jnp oracle path
+    yield "cartpole", TrainConfig(n_envs=1024, t=32, use_pallas=False)
+    # estimator ablation: n-step returns instead of GAE
+    yield "cartpole", TrainConfig(n_envs=1024, t=32, use_gae=False)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--suite", choices=["default", "bench", "all"])
+    ap.add_argument("--env", help="single env to emit")
+    ap.add_argument("--n-envs", type=int, default=1024)
+    ap.add_argument("--t", type=int, default=32)
+    ap.add_argument("--hidden", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--no-pallas", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    if not args.suite and not args.env:
+        args.suite = "default"
+    jobs = []
+    if args.suite in ("default", "all"):
+        jobs += list(default_suite())
+    if args.suite in ("bench", "all"):
+        jobs += list(bench_suite())
+    if args.env:
+        jobs.append((args.env, TrainConfig(
+            n_envs=args.n_envs, t=args.t, hidden=args.hidden, lr=args.lr,
+            use_pallas=not args.no_pallas)))
+    seen = set()
+    for env_name, cfg in jobs:
+        tag = tag_for(env_name, cfg)
+        if tag in seen:
+            continue
+        seen.add(tag)
+        emit(env_name, cfg, args.out_dir, force=args.force)
+    print(f"[aot] done: {len(seen)} artifact sets in {args.out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,24 @@
+"""Environment registry."""
+from .base import EnvSpec, Fields, where_reset  # noqa: F401
+from .classic import make_acrobot, make_cartpole, make_pendulum  # noqa: F401
+from .catalysis import make_catalysis  # noqa: F401
+from .covid import (  # noqa: F401
+    CovidSpec, covid_init, covid_obs, covid_reset_where, covid_step,
+    make_calibration,
+)
+
+_REGISTRY = {
+    "cartpole": make_cartpole,
+    "acrobot": make_acrobot,
+    "pendulum": make_pendulum,
+    "catalysis_lh": lambda: make_catalysis("lh"),
+    "catalysis_er": lambda: make_catalysis("er"),
+}
+
+
+def make_env(name: str) -> EnvSpec:
+    """Build a single-policy EnvSpec by name (covid_econ is two-level and
+    built via CovidSpec in graphs_covid)."""
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown env {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()

@@ -1,0 +1,43 @@
+"""Environment protocol for the L2 graph builders.
+
+An environment is a bundle of pure functions over a dict of named state
+arrays ("fields") with a leading env axis.  The graph builder owns episode
+accounting (step counter, truncation, auto-reset) and action sampling; the
+environment supplies deterministic physics (L1 kernels) plus reset
+distributions.  ``use_pallas`` switches between the Pallas kernel and its
+jnp oracle — both paths must agree bit-for-bit under pytest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+import jax.numpy as jnp
+
+Fields = Dict[str, jnp.ndarray]
+
+
+@dataclasses.dataclass
+class EnvSpec:
+    """Static description of a single-policy environment."""
+
+    name: str
+    obs_dim: int
+    act_type: str            # "discrete" | "continuous"
+    n_actions: int           # discrete: action count; continuous: act dim
+    max_steps: int
+    # name -> (per-env shape tail, dtype); leading n_envs axis implied
+    field_defs: Dict[str, Tuple[Tuple[int, ...], str]]
+    init: Callable           # (key, n_envs) -> Fields
+    obs: Callable            # (fields) -> (N, obs_dim)
+    step: Callable           # (fields, action, use_pallas) -> (fields', r, done_f)
+    reset_where: Callable    # (fields, key, mask_f) -> fields'
+    act_scale: float = 1.0   # continuous: tanh(mean) * act_scale
+
+
+def where_reset(mask_f: jnp.ndarray, fresh: jnp.ndarray,
+                old: jnp.ndarray) -> jnp.ndarray:
+    """Blend freshly-reset state into envs flagged by ``mask_f`` (0/1)."""
+    m = mask_f.reshape((-1,) + (1,) * (old.ndim - 1))
+    return m * fresh + (1.0 - m) * old

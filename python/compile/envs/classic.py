@@ -1,0 +1,126 @@
+"""Gym classic-control environments (CartPole-v1, Acrobot-v1, Pendulum-v1).
+
+Dynamics follow gym's classic_control sources exactly (Euler for CartPole,
+single RK4 step with the "book" equations for Acrobot); the Pallas kernels
+in :mod:`..kernels.steps` are the batched hot path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import kernels
+from ..kernels import ref
+from .base import EnvSpec, where_reset
+
+
+# --------------------------------------------------------------------------
+# CartPole-v1
+# --------------------------------------------------------------------------
+def _cartpole_init(key, n_envs):
+    s = jax.random.uniform(key, (n_envs, 4), minval=-0.05, maxval=0.05)
+    return {"phys": s}
+
+
+def _cartpole_obs(fields):
+    return fields["phys"]
+
+
+def _cartpole_step(fields, action, use_pallas=True):
+    fn = kernels.cartpole_step if use_pallas else ref.cartpole_step_ref
+    nxt, rew, done = fn(fields["phys"], action)
+    if done.dtype != jnp.float32:
+        done = done.astype(jnp.float32)
+    return {"phys": nxt}, rew, done
+
+
+def _cartpole_reset_where(fields, key, mask_f):
+    fresh = jax.random.uniform(key, fields["phys"].shape,
+                               minval=-0.05, maxval=0.05)
+    return {"phys": where_reset(mask_f, fresh, fields["phys"])}
+
+
+def make_cartpole() -> EnvSpec:
+    return EnvSpec(
+        name="cartpole", obs_dim=4, act_type="discrete", n_actions=2,
+        max_steps=int(ref.CARTPOLE["max_steps"]),
+        field_defs={"phys": ((4,), "f32")},
+        init=_cartpole_init, obs=_cartpole_obs, step=_cartpole_step,
+        reset_where=_cartpole_reset_where,
+    )
+
+
+# --------------------------------------------------------------------------
+# Acrobot-v1
+# --------------------------------------------------------------------------
+def _acrobot_init(key, n_envs):
+    s = jax.random.uniform(key, (n_envs, 4), minval=-0.1, maxval=0.1)
+    return {"phys": s}
+
+
+def _acrobot_obs(fields):
+    return ref.acrobot_obs_ref(fields["phys"])
+
+
+def _acrobot_step(fields, action, use_pallas=True):
+    fn = kernels.acrobot_step if use_pallas else ref.acrobot_step_ref
+    nxt, rew, done = fn(fields["phys"], action)
+    if done.dtype != jnp.float32:
+        done = done.astype(jnp.float32)
+    return {"phys": nxt}, rew, done
+
+
+def _acrobot_reset_where(fields, key, mask_f):
+    fresh = jax.random.uniform(key, fields["phys"].shape,
+                               minval=-0.1, maxval=0.1)
+    return {"phys": where_reset(mask_f, fresh, fields["phys"])}
+
+
+def make_acrobot() -> EnvSpec:
+    return EnvSpec(
+        name="acrobot", obs_dim=6, act_type="discrete", n_actions=3,
+        max_steps=int(ref.ACROBOT["max_steps"]),
+        field_defs={"phys": ((4,), "f32")},
+        init=_acrobot_init, obs=_acrobot_obs, step=_acrobot_step,
+        reset_where=_acrobot_reset_where,
+    )
+
+
+# --------------------------------------------------------------------------
+# Pendulum-v1 (continuous)
+# --------------------------------------------------------------------------
+def _pendulum_init(key, n_envs):
+    k1, k2 = jax.random.split(key)
+    th = jax.random.uniform(k1, (n_envs,), minval=-jnp.pi, maxval=jnp.pi)
+    thdot = jax.random.uniform(k2, (n_envs,), minval=-1.0, maxval=1.0)
+    return {"phys": jnp.stack([th, thdot], axis=1)}
+
+
+def _pendulum_obs(fields):
+    return ref.pendulum_obs_ref(fields["phys"])
+
+
+def _pendulum_step(fields, action, use_pallas=True):
+    act = action.reshape((-1,))
+    fn = kernels.pendulum_step if use_pallas else ref.pendulum_step_ref
+    nxt, rew, done = fn(fields["phys"], act)
+    if done.dtype != jnp.float32:
+        done = done.astype(jnp.float32)
+    return {"phys": nxt}, rew, done
+
+
+def _pendulum_reset_where(fields, key, mask_f):
+    fresh = _pendulum_init(key, fields["phys"].shape[0])["phys"]
+    return {"phys": where_reset(mask_f, fresh, fields["phys"])}
+
+
+def make_pendulum() -> EnvSpec:
+    return EnvSpec(
+        name="pendulum", obs_dim=3, act_type="continuous", n_actions=1,
+        max_steps=int(ref.PENDULUM["max_steps"]),
+        field_defs={"phys": ((2,), "f32")},
+        init=_pendulum_init, obs=_pendulum_obs, step=_pendulum_step,
+        reset_where=_pendulum_reset_where,
+        act_scale=float(ref.PENDULUM["max_torque"]),
+    )

@@ -1,0 +1,314 @@
+"""L2 graph builders: the entire RL iteration as one fused jax function.
+
+Each graph has signature ``f32[N] -> f32[N]`` (or small fixed extras) over
+the unified flat data store (see layout.py), so the rust coordinator chains
+device buffers with zero host transfer — the paper's "entire RL workflow on
+the GPU with a unified in-place data store".
+
+Graph set per environment (DESIGN.md section 2):
+  init        f32[1] seed          -> f32[N] packed state
+  train_iter  f32[N]               -> f32[N]   T-step roll-out + A2C update
+  rollout     f32[N]               -> f32[N]   roll-out only (throughput)
+  metrics     f32[N]               -> f32[M]   scalar telemetry
+  get_params  f32[N]               -> f32[P]
+  set_params  f32[N], f32[P]       -> f32[N]
+  avg2        f32[P], f32[P]       -> f32[P]   multi-device param averaging
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import algo, models
+from .envs.base import EnvSpec
+from .layout import Layout
+
+METRIC_NAMES = (
+    "iter", "env_steps", "ep_return_ema", "ep_len_ema", "episodes_done",
+    "pi_loss", "v_loss", "entropy", "grad_norm", "reward_mean",
+    "value_mean", "adam_t",
+)
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    """Hyperparameters baked into the lowered graphs."""
+
+    n_envs: int = 1024
+    t: int = 32                # roll-out length per iteration
+    hidden: int = 64
+    gamma: float = 0.99
+    lam: float = 0.95          # GAE lambda
+    use_gae: bool = True
+    lr: float = 1e-2
+    vf_coef: float = 0.25
+    ent_coef: float = 0.005
+    max_grad_norm: float = 2.0
+    ema: float = 0.9           # episodic stat smoothing
+    use_pallas: bool = True
+    block: int = 0             # 0 = auto (whole batch in one grid block)
+
+
+def _block(cfg: TrainConfig):
+    return cfg.block if cfg.block > 0 else cfg.n_envs
+
+
+def _wrap_key(bits_u32: jnp.ndarray):
+    return jax.random.wrap_key_data(bits_u32, impl="threefry2x32")
+
+
+def _key_bits(key) -> jnp.ndarray:
+    return jax.random.key_data(key).astype(jnp.uint32)
+
+
+def build_layout(env: EnvSpec, cfg: TrainConfig) -> Layout:
+    """Field layout of the unified store for a single-policy env."""
+    n = cfg.n_envs
+    lo = Layout()
+    for name, (tail, dtype) in env.field_defs.items():
+        lo.add(f"env.{name}", (n,) + tuple(tail), dtype, group="env")
+    lo.add("ep_steps", (n,), "f32", group="episode")
+    lo.add("ep_return", (n,), "f32", group="episode")
+    lo.add("rng", (2,), "u32", group="rng")
+    continuous = env.act_type == "continuous"
+    shapes = models.param_shapes(env.obs_dim, cfg.hidden, env.n_actions,
+                                 continuous)
+    for pname in list(models.PARAM_ORDER) + (
+            ["log_std"] if continuous else []):
+        lo.add(f"param.{pname}", shapes[pname], "f32", group="params")
+    for pname in list(models.PARAM_ORDER) + (
+            ["log_std"] if continuous else []):
+        lo.add(f"adam_m.{pname}", shapes[pname], "f32", group="opt")
+    for pname in list(models.PARAM_ORDER) + (
+            ["log_std"] if continuous else []):
+        lo.add(f"adam_v.{pname}", shapes[pname], "f32", group="opt")
+    lo.add("adam_t", (), "f32", group="opt")
+    for s in ("iter", "env_steps", "ep_return_ema", "ep_len_ema",
+              "episodes_done", "pi_loss", "v_loss", "entropy", "grad_norm",
+              "reward_mean", "value_mean"):
+        lo.add(f"stat.{s}", (), "f32", group="stats")
+    return lo
+
+
+def _split_fields(env: EnvSpec, vals: Dict[str, jnp.ndarray]):
+    envf = {k[len("env."):]: v for k, v in vals.items()
+            if k.startswith("env.")}
+    params = {k[len("param."):]: v for k, v in vals.items()
+              if k.startswith("param.")}
+    return envf, params
+
+
+def _policy_sample(env: EnvSpec, cfg: TrainConfig, params, obs, key):
+    """Sample an action + return value estimate (inference path)."""
+    out, value = models.forward(params, obs, use_pallas=cfg.use_pallas,
+                                block=_block(cfg))
+    if env.act_type == "discrete":
+        action = algo.categorical_sample(key, out)
+        return action, value
+    mean = out
+    action = algo.gaussian_sample(key, mean, params["log_std"])
+    return env.act_scale * jnp.tanh(action), value
+
+
+def _rollout_scan(env: EnvSpec, cfg: TrainConfig, vals, collect: bool):
+    """T-step roll-out with auto-reset; returns (vals', trajectory or None,
+    final obs, episode-stat accumulators)."""
+    envf, params = _split_fields(env, vals)
+    key = _wrap_key(vals["rng"])
+
+    def body(carry, _):
+        envf, ep_steps, ep_ret, key, acc = carry
+        obs = env.obs(envf)
+        key, k_act, k_reset = jax.random.split(key, 3)
+        action, value = _policy_sample(env, cfg, params, obs, k_act)
+        envf2, rew, term_f = env.step(envf, action, cfg.use_pallas)
+        ep_steps2 = ep_steps + 1.0
+        trunc_f = (ep_steps2 >= float(env.max_steps)).astype(jnp.float32)
+        done = jnp.clip(term_f + trunc_f, 0.0, 1.0)
+        ep_ret2 = ep_ret + rew
+        # episode completion accounting (before the reset wipes it)
+        sum_ret, sum_len, n_done = acc
+        acc2 = (sum_ret + jnp.sum(done * ep_ret2),
+                sum_len + jnp.sum(done * ep_steps2),
+                n_done + jnp.sum(done))
+        envf3 = env.reset_where(envf2, k_reset, done)
+        ep_steps3 = ep_steps2 * (1.0 - done)
+        ep_ret3 = ep_ret2 * (1.0 - done)
+        ys = (obs, action, rew, done, value) if collect else None
+        return (envf3, ep_steps3, ep_ret3, key, acc2), ys
+
+    acc0 = (jnp.zeros(()), jnp.zeros(()), jnp.zeros(()))
+    carry0 = (envf, vals["ep_steps"], vals["ep_return"], key, acc0)
+    (envf, ep_steps, ep_ret, key, acc), traj = lax.scan(
+        body, carry0, None, length=cfg.t)
+
+    vals = dict(vals)
+    for k, v in envf.items():
+        vals[f"env.{k}"] = v
+    vals["ep_steps"] = ep_steps
+    vals["ep_return"] = ep_ret
+    vals["rng"] = _key_bits(key)
+    final_obs = env.obs(envf)
+    return vals, traj, final_obs, acc
+
+
+def _update_episode_stats(cfg: TrainConfig, vals, acc):
+    sum_ret, sum_len, n_done = acc
+    has = (n_done > 0).astype(jnp.float32)
+    mean_ret = sum_ret / jnp.maximum(n_done, 1.0)
+    mean_len = sum_len / jnp.maximum(n_done, 1.0)
+    first = (vals["stat.episodes_done"] == 0).astype(jnp.float32)
+    # seed the EMA with the first observed batch mean, then smooth
+    blend = lambda old, new: (first * new
+                              + (1 - first) * (cfg.ema * old
+                                               + (1 - cfg.ema) * new))
+    vals["stat.ep_return_ema"] = jnp.where(
+        has > 0, blend(vals["stat.ep_return_ema"], mean_ret),
+        vals["stat.ep_return_ema"])
+    vals["stat.ep_len_ema"] = jnp.where(
+        has > 0, blend(vals["stat.ep_len_ema"], mean_len),
+        vals["stat.ep_len_ema"])
+    vals["stat.episodes_done"] = vals["stat.episodes_done"] + n_done
+    return vals
+
+
+def build_graphs(env: EnvSpec, cfg: TrainConfig):
+    """Returns (layout, dict graph_name -> (callable, example_args))."""
+    lo = build_layout(env, cfg)
+    n = cfg.n_envs
+    continuous = env.act_type == "continuous"
+    pnames = list(models.PARAM_ORDER) + (["log_std"] if continuous else [])
+    p_off, p_size = lo.group_span("params")
+
+    # ----------------------------------------------------------------- init
+    def init(seed: jnp.ndarray) -> jnp.ndarray:
+        key = jax.random.PRNGKey(seed[0].astype(jnp.int32))
+        k_env, k_par, k_run = jax.random.split(key, 3)
+        envf = env.init(k_env, n)
+        params = models.init_params(k_par, env.obs_dim, cfg.hidden,
+                                    env.n_actions, continuous)
+        opt = algo.adam_init(params)
+        vals: Dict[str, jnp.ndarray] = {}
+        for k, v in envf.items():
+            vals[f"env.{k}"] = v
+        vals["ep_steps"] = jnp.zeros((n,), jnp.float32)
+        vals["ep_return"] = jnp.zeros((n,), jnp.float32)
+        vals["rng"] = _key_bits(k_run)
+        for pn in pnames:
+            vals[f"param.{pn}"] = params[pn]
+            vals[f"adam_m.{pn}"] = opt["m"][pn]
+            vals[f"adam_v.{pn}"] = opt["v"][pn]
+        vals["adam_t"] = opt["t"]
+        for f in lo.group("stats"):
+            vals[f.name] = jnp.zeros((), jnp.float32)
+        return lo.pack(vals)
+
+    # ----------------------------------------------------------- train_iter
+    def train_iter(flat: jnp.ndarray) -> jnp.ndarray:
+        vals = lo.unpack(flat)
+        vals, traj, final_obs, acc = _rollout_scan(env, cfg, vals,
+                                                   collect=True)
+        obs_t, act_t, rew_t, done_t, val_t = traj
+
+        _, params = _split_fields(env, vals)
+        _, boot = models.forward(params, final_obs,
+                                 use_pallas=cfg.use_pallas, block=_block(cfg))
+        boot = lax.stop_gradient(boot)
+        if cfg.use_gae:
+            adv, rets = algo.gae_advantages(rew_t, done_t, val_t, boot,
+                                            cfg.gamma, cfg.lam)
+        else:
+            rets = algo.nstep_returns(rew_t, done_t, boot, cfg.gamma)
+            adv = rets - val_t
+        adv = (adv - jnp.mean(adv)) / (jnp.std(adv) + 1e-8)
+        obs_flat = obs_t.reshape((-1, env.obs_dim))
+        act_flat = (act_t.reshape((-1,)) if env.act_type == "discrete"
+                    else act_t.reshape((-1, env.n_actions)))
+        rets_flat = rets.reshape((-1,))
+        adv_flat = adv.reshape((-1,))
+
+        def loss_fn(params):
+            # training recompute in plain jnp (autodiff path)
+            out, vpred = models.forward(params, obs_flat, use_pallas=False)
+            if env.act_type == "discrete":
+                logp = algo.categorical_logp(out, act_flat)
+                ent = algo.categorical_entropy(out)
+            else:
+                # invert the tanh squash for the stored env action
+                pre = jnp.arctanh(jnp.clip(act_flat / env.act_scale,
+                                           -0.999999, 0.999999))
+                logp = algo.gaussian_logp(out, params["log_std"], pre)
+                ent = jnp.broadcast_to(
+                    algo.gaussian_entropy(params["log_std"]), logp.shape)
+            loss, (pi_l, v_l, e) = algo.a2c_loss_terms(
+                logp, ent, vpred, rets_flat, adv_flat,
+                cfg.vf_coef, cfg.ent_coef)
+            return loss, (pi_l, v_l, e, vpred)
+
+        params = {pn: vals[f"param.{pn}"] for pn in pnames}
+        grads, (pi_l, v_l, e, vpred) = jax.grad(
+            loss_fn, has_aux=True)(params)
+        grads, gnorm = algo.clip_by_global_norm(grads, cfg.max_grad_norm)
+        m = {pn: vals[f"adam_m.{pn}"] for pn in pnames}
+        v = {pn: vals[f"adam_v.{pn}"] for pn in pnames}
+        params, m, v, t = algo.adam_update(params, grads, m, v,
+                                           vals["adam_t"], cfg.lr)
+        for pn in pnames:
+            vals[f"param.{pn}"] = params[pn]
+            vals[f"adam_m.{pn}"] = m[pn]
+            vals[f"adam_v.{pn}"] = v[pn]
+        vals["adam_t"] = t
+
+        vals = _update_episode_stats(cfg, vals, acc)
+        vals["stat.iter"] = vals["stat.iter"] + 1.0
+        vals["stat.env_steps"] = vals["stat.env_steps"] + float(cfg.t * n)
+        vals["stat.pi_loss"] = pi_l
+        vals["stat.v_loss"] = v_l
+        vals["stat.entropy"] = e
+        vals["stat.grad_norm"] = gnorm
+        vals["stat.reward_mean"] = jnp.mean(rew_t)
+        vals["stat.value_mean"] = jnp.mean(vpred)
+        return lo.pack(vals)
+
+    # -------------------------------------------------------------- rollout
+    def rollout(flat: jnp.ndarray) -> jnp.ndarray:
+        vals = lo.unpack(flat)
+        vals, _, _, acc = _rollout_scan(env, cfg, vals, collect=False)
+        vals = _update_episode_stats(cfg, vals, acc)
+        vals["stat.env_steps"] = vals["stat.env_steps"] + float(cfg.t * n)
+        return lo.pack(vals)
+
+    # -------------------------------------------------------------- metrics
+    def metrics(flat: jnp.ndarray) -> jnp.ndarray:
+        vals = lo.unpack(flat)
+        stats = [vals[f"stat.{s}"] for s in METRIC_NAMES if s != "adam_t"]
+        return jnp.stack(stats + [vals["adam_t"]])
+
+    # ------------------------------------------------------- params plumbing
+    def get_params(flat: jnp.ndarray) -> jnp.ndarray:
+        return lax.slice(flat, (p_off,), (p_off + p_size,))
+
+    def set_params(flat: jnp.ndarray, pvec: jnp.ndarray) -> jnp.ndarray:
+        return lax.dynamic_update_slice(flat, pvec, (p_off,))
+
+    def avg2(p1: jnp.ndarray, p2: jnp.ndarray) -> jnp.ndarray:
+        return 0.5 * (p1 + p2)
+
+    f32 = jnp.float32
+    state_spec = jax.ShapeDtypeStruct((lo.total,), f32)
+    pvec_spec = jax.ShapeDtypeStruct((p_size,), f32)
+    graphs = {
+        "init": (init, (jax.ShapeDtypeStruct((1,), f32),)),
+        "train_iter": (train_iter, (state_spec,)),
+        "rollout": (rollout, (state_spec,)),
+        "metrics": (metrics, (state_spec,)),
+        "get_params": (get_params, (state_spec,)),
+        "set_params": (set_params, (state_spec, pvec_spec)),
+        "avg2": (avg2, (pvec_spec, pvec_spec)),
+    }
+    return lo, graphs

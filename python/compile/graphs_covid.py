@@ -1,0 +1,290 @@
+"""L2 graph builder for the two-level COVID economy (Fig 3 workload).
+
+Same flat-store / single-output contract as :mod:`graphs`, but with two
+policies trained jointly: a parameter-shared governor policy evaluated on
+51 agent observations per environment (the paper's thread-per-agent axis)
+and a separate federal policy.  Both are updated with A2C from their own
+reward streams inside the one fused ``train_iter`` graph.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import algo, models
+from .envs import covid as cenv
+from .graphs import METRIC_NAMES, TrainConfig, _key_bits, _wrap_key
+from .layout import Layout
+
+
+def build_covid_layout(spec: cenv.CovidSpec, cfg: TrainConfig) -> Layout:
+    n, s = cfg.n_envs, spec.n_states
+    lo = Layout()
+    lo.add("env.sir", (n, s, 3), "f32", group="env")
+    lo.add("env.econ", (n, s), "f32", group="env")
+    lo.add("env.last_fed", (n,), "f32", group="env")
+    lo.add("ep_steps", (n,), "f32", group="episode")
+    lo.add("ep_return", (n,), "f32", group="episode")   # federal return
+    lo.add("ep_return_gov", (n,), "f32", group="episode")  # mean gov return
+    lo.add("rng", (2,), "u32", group="rng")
+    gshapes = models.param_shapes(spec.gov_obs_dim, cfg.hidden,
+                                  spec.n_actions, False)
+    fshapes = models.param_shapes(spec.fed_obs_dim, cfg.hidden,
+                                  spec.n_actions, False)
+    for pn in models.PARAM_ORDER:
+        lo.add(f"param.gov.{pn}", gshapes[pn], "f32", group="params")
+    for pn in models.PARAM_ORDER:
+        lo.add(f"param.fed.{pn}", fshapes[pn], "f32", group="params")
+    for side, shapes in (("gov", gshapes), ("fed", fshapes)):
+        for pn in models.PARAM_ORDER:
+            lo.add(f"adam_m.{side}.{pn}", shapes[pn], "f32", group="opt")
+    for side, shapes in (("gov", gshapes), ("fed", fshapes)):
+        for pn in models.PARAM_ORDER:
+            lo.add(f"adam_v.{side}.{pn}", shapes[pn], "f32", group="opt")
+    lo.add("adam_t", (), "f32", group="opt")
+    for st in ("iter", "env_steps", "ep_return_ema", "ep_len_ema",
+               "episodes_done", "pi_loss", "v_loss", "entropy", "grad_norm",
+               "reward_mean", "value_mean"):
+        lo.add(f"stat.{st}", (), "f32", group="stats")
+    return lo
+
+
+def _both_params(vals):
+    gov = {k.split(".", 2)[2]: v for k, v in vals.items()
+           if k.startswith("param.gov.")}
+    fed = {k.split(".", 2)[2]: v for k, v in vals.items()
+           if k.startswith("param.fed.")}
+    return gov, fed
+
+
+def build_covid_graphs(spec: cenv.CovidSpec, cfg: TrainConfig,
+                       calib_seed: int = 7):
+    """Returns (layout, dict graph_name -> (callable, example_args))."""
+    lo = build_covid_layout(spec, cfg)
+    n, s = cfg.n_envs, spec.n_states
+    calib = cenv.make_calibration(calib_seed)
+    p_off, p_size = lo.group_span("params")
+    use_pallas = cfg.use_pallas
+
+    def _fwd_gov(gov, gov_obs):
+        """gov_obs (N,S,G) -> logits (N,S,A), value (N,S) via shared policy."""
+        flat = gov_obs.reshape((-1, spec.gov_obs_dim))
+        logits, value = models.forward(gov, flat, use_pallas=use_pallas,
+                                       block=cfg.block if cfg.block else None)
+        return (logits.reshape((n, s, spec.n_actions)),
+                value.reshape((n, s)))
+
+    # ----------------------------------------------------------------- init
+    def init(seed):
+        key = jax.random.PRNGKey(seed[0].astype(jnp.int32))
+        k_env, k_gov, k_fed, k_run = jax.random.split(key, 4)
+        envf = cenv.covid_init(k_env, n, s)
+        gov = models.init_params(k_gov, spec.gov_obs_dim, cfg.hidden,
+                                 spec.n_actions, False)
+        fed = models.init_params(k_fed, spec.fed_obs_dim, cfg.hidden,
+                                 spec.n_actions, False)
+        vals: Dict[str, jnp.ndarray] = {}
+        for k, v in envf.items():
+            vals[f"env.{k}"] = v
+        vals["ep_steps"] = jnp.zeros((n,), jnp.float32)
+        vals["ep_return"] = jnp.zeros((n,), jnp.float32)
+        vals["ep_return_gov"] = jnp.zeros((n,), jnp.float32)
+        vals["rng"] = _key_bits(k_run)
+        for pn in models.PARAM_ORDER:
+            vals[f"param.gov.{pn}"] = gov[pn]
+            vals[f"param.fed.{pn}"] = fed[pn]
+            vals[f"adam_m.gov.{pn}"] = jnp.zeros_like(gov[pn])
+            vals[f"adam_m.fed.{pn}"] = jnp.zeros_like(fed[pn])
+            vals[f"adam_v.gov.{pn}"] = jnp.zeros_like(gov[pn])
+            vals[f"adam_v.fed.{pn}"] = jnp.zeros_like(fed[pn])
+        vals["adam_t"] = jnp.zeros((), jnp.float32)
+        for f in lo.group("stats"):
+            vals[f.name] = jnp.zeros((), jnp.float32)
+        return lo.pack(vals)
+
+    # --------------------------------------------------------------- rollout
+    def _scan(vals, collect):
+        envf = {k[4:]: v for k, v in vals.items() if k.startswith("env.")}
+        gov, fed = _both_params(vals)
+        key = _wrap_key(vals["rng"])
+
+        def body(carry, _):
+            envf, ep_steps, ep_ret_f, ep_ret_g, key, acc = carry
+            t_frac = ep_steps / float(spec.max_steps)
+            gov_obs, fed_obs = cenv.covid_obs(envf, t_frac)
+            key, kg, kf, kr = jax.random.split(key, 4)
+            glogits, gval = _fwd_gov(gov, gov_obs)
+            flogits, fval = models.forward(fed, fed_obs,
+                                           use_pallas=use_pallas)
+            ga = algo.categorical_sample(kg, glogits)
+            fa = algo.categorical_sample(kf, flogits)
+            envf2, gr, fr = cenv.covid_step(envf, calib, ga, fa, use_pallas)
+            ep_steps2 = ep_steps + 1.0
+            done = (ep_steps2 >= float(spec.max_steps)).astype(jnp.float32)
+            ep_ret_f2 = ep_ret_f + fr
+            ep_ret_g2 = ep_ret_g + jnp.mean(gr, axis=1)
+            sum_ret, sum_len, n_done = acc
+            acc2 = (sum_ret + jnp.sum(done * ep_ret_f2),
+                    sum_len + jnp.sum(done * ep_steps2),
+                    n_done + jnp.sum(done))
+            envf3 = cenv.covid_reset_where(envf2, kr, done)
+            ep_steps3 = ep_steps2 * (1.0 - done)
+            ys = ((gov_obs, fed_obs, ga, fa, gr, fr, done, gval, fval)
+                  if collect else None)
+            return (envf3, ep_steps3, ep_ret_f2 * (1 - done),
+                    ep_ret_g2 * (1 - done), key, acc2), ys
+
+        acc0 = (jnp.zeros(()), jnp.zeros(()), jnp.zeros(()))
+        carry0 = (envf, vals["ep_steps"], vals["ep_return"],
+                  vals["ep_return_gov"], key, acc0)
+        (envf, ep_steps, ep_ret_f, ep_ret_g, key, acc), traj = lax.scan(
+            body, carry0, None, length=cfg.t)
+        vals = dict(vals)
+        for k, v in envf.items():
+            vals[f"env.{k}"] = v
+        vals["ep_steps"] = ep_steps
+        vals["ep_return"] = ep_ret_f
+        vals["ep_return_gov"] = ep_ret_g
+        vals["rng"] = _key_bits(key)
+        t_frac = ep_steps / float(spec.max_steps)
+        return vals, traj, cenv.covid_obs(envf, t_frac), acc
+
+    def _stats(vals, acc):
+        sum_ret, sum_len, n_done = acc
+        has = (n_done > 0).astype(jnp.float32)
+        mean_ret = sum_ret / jnp.maximum(n_done, 1.0)
+        mean_len = sum_len / jnp.maximum(n_done, 1.0)
+        first = (vals["stat.episodes_done"] == 0).astype(jnp.float32)
+        blend = lambda old, new: (first * new
+                                  + (1 - first) * (cfg.ema * old
+                                                   + (1 - cfg.ema) * new))
+        vals["stat.ep_return_ema"] = jnp.where(
+            has > 0, blend(vals["stat.ep_return_ema"], mean_ret),
+            vals["stat.ep_return_ema"])
+        vals["stat.ep_len_ema"] = jnp.where(
+            has > 0, blend(vals["stat.ep_len_ema"], mean_len),
+            vals["stat.ep_len_ema"])
+        vals["stat.episodes_done"] = vals["stat.episodes_done"] + n_done
+        return vals
+
+    # ------------------------------------------------------------ train_iter
+    def train_iter(flat):
+        vals = lo.unpack(flat)
+        vals, traj, (final_gobs, final_fobs), acc = _scan(vals, collect=True)
+        gobs_t, fobs_t, ga_t, fa_t, gr_t, fr_t, done_t, gval_t, fval_t = traj
+        gov, fed = _both_params(vals)
+
+        _, gboot = _fwd_gov(gov, final_gobs)
+        _, fboot = models.forward(fed, final_fobs, use_pallas=use_pallas)
+        done_g = done_t[:, :, None] * jnp.ones((1, 1, s))
+        if cfg.use_gae:
+            gadv, grets = algo.gae_advantages(
+                gr_t, done_g, gval_t, lax.stop_gradient(gboot),
+                cfg.gamma, cfg.lam)
+            fadv, frets = algo.gae_advantages(
+                fr_t, done_t, fval_t, lax.stop_gradient(fboot),
+                cfg.gamma, cfg.lam)
+        else:
+            grets = algo.nstep_returns(gr_t, done_g,
+                                       lax.stop_gradient(gboot), cfg.gamma)
+            gadv = grets - gval_t
+            frets = algo.nstep_returns(fr_t, done_t,
+                                       lax.stop_gradient(fboot), cfg.gamma)
+            fadv = frets - fval_t
+        gadv = (gadv - jnp.mean(gadv)) / (jnp.std(gadv) + 1e-8)
+        fadv = (fadv - jnp.mean(fadv)) / (jnp.std(fadv) + 1e-8)
+
+        def loss_fn(both):
+            gov, fed = both
+            glog, gv = models.forward(
+                gov, gobs_t.reshape((-1, spec.gov_obs_dim)),
+                use_pallas=False)
+            flog, fv = models.forward(
+                fed, fobs_t.reshape((-1, spec.fed_obs_dim)),
+                use_pallas=False)
+            glp = algo.categorical_logp(glog, ga_t.reshape((-1,)))
+            flp = algo.categorical_logp(flog, fa_t.reshape((-1,)))
+            gent = algo.categorical_entropy(glog)
+            fent = algo.categorical_entropy(flog)
+            gl, (gpl, gvl, ge) = algo.a2c_loss_terms(
+                glp, gent, gv, grets.reshape((-1,)), gadv.reshape((-1,)),
+                cfg.vf_coef, cfg.ent_coef)
+            fl, (fpl, fvl, fe) = algo.a2c_loss_terms(
+                flp, fent, fv, frets.reshape((-1,)), fadv.reshape((-1,)),
+                cfg.vf_coef, cfg.ent_coef)
+            return gl + fl, (gpl + fpl, gvl + fvl, 0.5 * (ge + fe),
+                             0.5 * (jnp.mean(gv) + jnp.mean(fv)))
+
+        grads, (pi_l, v_l, ent, vmean) = jax.grad(
+            loss_fn, has_aux=True)((gov, fed))
+        grads, gnorm = algo.clip_by_global_norm(grads, cfg.max_grad_norm)
+        ggrads, fgrads = grads
+        gm = {pn: vals[f"adam_m.gov.{pn}"] for pn in models.PARAM_ORDER}
+        gv_ = {pn: vals[f"adam_v.gov.{pn}"] for pn in models.PARAM_ORDER}
+        fm = {pn: vals[f"adam_m.fed.{pn}"] for pn in models.PARAM_ORDER}
+        fv_ = {pn: vals[f"adam_v.fed.{pn}"] for pn in models.PARAM_ORDER}
+        gov, gm, gv_, t2 = algo.adam_update(gov, ggrads, gm, gv_,
+                                            vals["adam_t"], cfg.lr)
+        fed, fm, fv_, _ = algo.adam_update(fed, fgrads, fm, fv_,
+                                           vals["adam_t"], cfg.lr)
+        for pn in models.PARAM_ORDER:
+            vals[f"param.gov.{pn}"] = gov[pn]
+            vals[f"param.fed.{pn}"] = fed[pn]
+            vals[f"adam_m.gov.{pn}"] = gm[pn]
+            vals[f"adam_v.gov.{pn}"] = gv_[pn]
+            vals[f"adam_m.fed.{pn}"] = fm[pn]
+            vals[f"adam_v.fed.{pn}"] = fv_[pn]
+        vals["adam_t"] = t2
+
+        vals = _stats(vals, acc)
+        vals["stat.iter"] = vals["stat.iter"] + 1.0
+        # agent-steps: 52 agents act per env step (the paper counts env steps;
+        # we record env steps and let the harness scale by agents)
+        vals["stat.env_steps"] = vals["stat.env_steps"] + float(cfg.t * n)
+        vals["stat.pi_loss"] = pi_l
+        vals["stat.v_loss"] = v_l
+        vals["stat.entropy"] = ent
+        vals["stat.grad_norm"] = gnorm
+        vals["stat.reward_mean"] = jnp.mean(fr_t)
+        vals["stat.value_mean"] = vmean
+        return lo.pack(vals)
+
+    # --------------------------------------------------------------- rollout
+    def rollout(flat):
+        vals = lo.unpack(flat)
+        vals, _, _, acc = _scan(vals, collect=False)
+        vals = _stats(vals, acc)
+        vals["stat.env_steps"] = vals["stat.env_steps"] + float(cfg.t * n)
+        return lo.pack(vals)
+
+    def metrics(flat):
+        vals = lo.unpack(flat)
+        stats = [vals[f"stat.{st}"] for st in METRIC_NAMES if st != "adam_t"]
+        return jnp.stack(stats + [vals["adam_t"]])
+
+    def get_params(flat):
+        return lax.slice(flat, (p_off,), (p_off + p_size,))
+
+    def set_params(flat, pvec):
+        return lax.dynamic_update_slice(flat, pvec, (p_off,))
+
+    def avg2(p1, p2):
+        return 0.5 * (p1 + p2)
+
+    f32 = jnp.float32
+    state_spec = jax.ShapeDtypeStruct((lo.total,), f32)
+    pvec_spec = jax.ShapeDtypeStruct((p_size,), f32)
+    graphs = {
+        "init": (init, (jax.ShapeDtypeStruct((1,), f32),)),
+        "train_iter": (train_iter, (state_spec,)),
+        "rollout": (rollout, (state_spec,)),
+        "metrics": (metrics, (state_spec,)),
+        "get_params": (get_params, (state_spec,)),
+        "set_params": (set_params, (state_spec, pvec_spec)),
+        "avg2": (avg2, (pvec_spec, pvec_spec)),
+    }
+    return lo, graphs

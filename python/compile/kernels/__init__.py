@@ -1,0 +1,7 @@
+"""L1 Pallas kernels + pure-jnp oracles (ref)."""
+from . import ref  # noqa: F401
+from .steps import (  # noqa: F401
+    acrobot_step, cartpole_step, catalysis_step, covid_step, mb_energy,
+    pendulum_step,
+)
+from .mlp import mlp_forward  # noqa: F401

@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: fused actor-critic MLP forward (inference hot path).
+
+The roll-out loop evaluates the policy for every env every step; this kernel
+fuses both hidden layers and both heads into a single pass so intermediate
+activations never leave VMEM (on TPU; on this CPU testbed the structure is
+preserved through ``interpret=True``).
+
+TPU sizing rationale (DESIGN.md section 5 / section 6): block B envs x H=64
+hidden keeps all four weight matrices plus a (B, H) activation tile well
+under 16 MiB VMEM for B <= 2048; matmul shapes (B,obs)x(obs,H) and
+(B,H)x(H,H) feed the MXU with the batch axis as rows.  Training recomputes
+the forward pass in plain jnp under ``jax.grad`` — only inference runs the
+fused kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .steps import _env_block
+
+
+def _mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref,
+                wp_ref, bp_ref, wv_ref, bv_ref, logits_ref, value_ref):
+    h1 = jnp.tanh(x_ref[...] @ w1_ref[...] + b1_ref[...])
+    h2 = jnp.tanh(h1 @ w2_ref[...] + b2_ref[...])
+    logits_ref[...] = h2 @ wp_ref[...] + bp_ref[...]
+    value_ref[...] = (h2 @ wv_ref[...] + bv_ref[...])[:, 0]
+
+
+def mlp_forward(x: jnp.ndarray, w1, b1, w2, b2, wp, bp, wv, bv,
+                block: int | None = None) -> tuple:
+    """Fused policy+value forward.  x (N, obs) -> (logits (N,A), value (N,)).
+
+    Weights are broadcast to every grid block (the paper's "reference, not
+    copy" of the policy model shared by all env blocks).
+    """
+    n, obs = x.shape
+    h1 = w1.shape[1]
+    h2 = w2.shape[1]
+    a = wp.shape[1]
+    b = _env_block(n, block)
+    full = lambda shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+    logits, value = pl.pallas_call(
+        _mlp_kernel,
+        grid=(n // b,),
+        in_specs=[
+            pl.BlockSpec((b, obs), lambda i: (i, 0)),
+            full((obs, h1)), full((h1,)),
+            full((h1, h2)), full((h2,)),
+            full((h2, a)), full((a,)),
+            full((h2, 1)), full((1,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, a), lambda i: (i, 0)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, a), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(x, w1, b1, w2, b2, wp, bp, wv, bv)
+    return logits, value

@@ -1,0 +1,303 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the CORE correctness signal: each L1 kernel in this package must
+match its oracle to float32 round-off under pytest + hypothesis sweeps
+(``python/tests/test_kernels.py``).  They are also the ``use_pallas=False``
+fallback path used in A/B perf comparisons (EXPERIMENTS.md §Perf).
+
+All oracles are deterministic, batched over a leading env axis, and free of
+PRNG use — stochasticity (action sampling, reset noise) is injected by the
+caller so kernels stay bit-reproducible.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------
+# CartPole-v1 (gym classic_control, euler integrator)
+# --------------------------------------------------------------------------
+CARTPOLE = dict(
+    gravity=9.8, masscart=1.0, masspole=0.1, length=0.5, force_mag=10.0,
+    dt=0.02, x_threshold=2.4, theta_threshold=12 * 2 * jnp.pi / 360,
+    max_steps=500,
+)
+
+
+def cartpole_step_ref(state: jnp.ndarray, action: jnp.ndarray) -> tuple:
+    """One Euler step of CartPole.
+
+    state:  (N, 4)  [x, x_dot, theta, theta_dot]
+    action: (N,)    int {0, 1}
+    returns (next_state (N,4), reward (N,), terminated (N,) bool)
+    """
+    c = CARTPOLE
+    x, x_dot, th, th_dot = state[:, 0], state[:, 1], state[:, 2], state[:, 3]
+    force = jnp.where(action == 1, c["force_mag"], -c["force_mag"])
+    costh, sinth = jnp.cos(th), jnp.sin(th)
+    total_mass = c["masscart"] + c["masspole"]
+    polemass_length = c["masspole"] * c["length"]
+    temp = (force + polemass_length * th_dot**2 * sinth) / total_mass
+    thacc = (c["gravity"] * sinth - costh * temp) / (
+        c["length"] * (4.0 / 3.0 - c["masspole"] * costh**2 / total_mass))
+    xacc = temp - polemass_length * thacc * costh / total_mass
+    x = x + c["dt"] * x_dot
+    x_dot = x_dot + c["dt"] * xacc
+    th = th + c["dt"] * th_dot
+    th_dot = th_dot + c["dt"] * thacc
+    nxt = jnp.stack([x, x_dot, th, th_dot], axis=1)
+    terminated = ((jnp.abs(x) > c["x_threshold"])
+                  | (jnp.abs(th) > c["theta_threshold"]))
+    reward = jnp.ones_like(x)
+    return nxt, reward, terminated
+
+
+# --------------------------------------------------------------------------
+# Acrobot-v1 (gym classic_control, single RK4 step, "book" dynamics)
+# --------------------------------------------------------------------------
+ACROBOT = dict(
+    dt=0.2, l1=1.0, lc1=0.5, lc2=0.5, m1=1.0, m2=1.0, i1=1.0, i2=1.0,
+    g=9.8, max_vel1=4 * jnp.pi, max_vel2=9 * jnp.pi, max_steps=500,
+)
+
+
+def _acrobot_dsdt(s: jnp.ndarray, torque: jnp.ndarray) -> jnp.ndarray:
+    """Acrobot ODE.  s: (N, 4) [th1, th2, dth1, dth2], torque: (N,)."""
+    a = ACROBOT
+    th1, th2, dth1, dth2 = s[:, 0], s[:, 1], s[:, 2], s[:, 3]
+    m1, m2, l1, lc1, lc2, i1, i2, g = (a["m1"], a["m2"], a["l1"], a["lc1"],
+                                       a["lc2"], a["i1"], a["i2"], a["g"])
+    d1 = (m1 * lc1**2 + m2 * (l1**2 + lc2**2 + 2 * l1 * lc2 * jnp.cos(th2))
+          + i1 + i2)
+    d2 = m2 * (lc2**2 + l1 * lc2 * jnp.cos(th2)) + i2
+    phi2 = m2 * lc2 * g * jnp.cos(th1 + th2 - jnp.pi / 2.0)
+    phi1 = (-m2 * l1 * lc2 * dth2**2 * jnp.sin(th2)
+            - 2 * m2 * l1 * lc2 * dth2 * dth1 * jnp.sin(th2)
+            + (m1 * lc1 + m2 * l1) * g * jnp.cos(th1 - jnp.pi / 2.0) + phi2)
+    ddth2 = ((torque + d2 / d1 * phi1
+              - m2 * l1 * lc2 * dth1**2 * jnp.sin(th2) - phi2)
+             / (m2 * lc2**2 + i2 - d2**2 / d1))
+    ddth1 = -(d2 * ddth2 + phi1) / d1
+    return jnp.stack([dth1, dth2, ddth1, ddth2], axis=1)
+
+
+def _wrap(x, lo, hi):
+    return lo + jnp.mod(x - lo, hi - lo)
+
+
+def acrobot_step_ref(state: jnp.ndarray, action: jnp.ndarray) -> tuple:
+    """One RK4 step of Acrobot.
+
+    state:  (N, 4)  [th1, th2, dth1, dth2]
+    action: (N,)    int {0,1,2} -> torque {-1,0,+1}
+    returns (next_state, reward (N,), terminated (N,))
+    """
+    a = ACROBOT
+    torque = action.astype(jnp.float32) - 1.0
+    dt = a["dt"]
+    k1 = _acrobot_dsdt(state, torque)
+    k2 = _acrobot_dsdt(state + dt / 2.0 * k1, torque)
+    k3 = _acrobot_dsdt(state + dt / 2.0 * k2, torque)
+    k4 = _acrobot_dsdt(state + dt * k3, torque)
+    ns = state + dt / 6.0 * (k1 + 2 * k2 + 2 * k3 + k4)
+    th1 = _wrap(ns[:, 0], -jnp.pi, jnp.pi)
+    th2 = _wrap(ns[:, 1], -jnp.pi, jnp.pi)
+    dth1 = jnp.clip(ns[:, 2], -a["max_vel1"], a["max_vel1"])
+    dth2 = jnp.clip(ns[:, 3], -a["max_vel2"], a["max_vel2"])
+    nxt = jnp.stack([th1, th2, dth1, dth2], axis=1)
+    terminated = (-jnp.cos(th1) - jnp.cos(th2 + th1)) > 1.0
+    reward = jnp.where(terminated, 0.0, -1.0)
+    return nxt, reward, terminated
+
+
+def acrobot_obs_ref(state: jnp.ndarray) -> jnp.ndarray:
+    """(N,4) internal state -> (N,6) gym observation."""
+    th1, th2, dth1, dth2 = state[:, 0], state[:, 1], state[:, 2], state[:, 3]
+    return jnp.stack([jnp.cos(th1), jnp.sin(th1), jnp.cos(th2),
+                      jnp.sin(th2), dth1, dth2], axis=1)
+
+
+# --------------------------------------------------------------------------
+# Pendulum-v1 (continuous torque)
+# --------------------------------------------------------------------------
+PENDULUM = dict(dt=0.05, g=10.0, m=1.0, l=1.0, max_speed=8.0,
+                max_torque=2.0, max_steps=200)
+
+
+def pendulum_step_ref(state: jnp.ndarray, action: jnp.ndarray) -> tuple:
+    """One step of Pendulum.
+
+    state:  (N, 2)  [theta, theta_dot]
+    action: (N,)    continuous torque (clipped to +-max_torque)
+    returns (next_state, reward (N,), terminated (N,) always False)
+    """
+    p = PENDULUM
+    th, thdot = state[:, 0], state[:, 1]
+    u = jnp.clip(action, -p["max_torque"], p["max_torque"])
+    th_norm = _wrap(th, -jnp.pi, jnp.pi)
+    cost = th_norm**2 + 0.1 * thdot**2 + 0.001 * u**2
+    newthdot = thdot + (3.0 * p["g"] / (2.0 * p["l"]) * jnp.sin(th)
+                        + 3.0 / (p["m"] * p["l"] ** 2) * u) * p["dt"]
+    newthdot = jnp.clip(newthdot, -p["max_speed"], p["max_speed"])
+    newth = th + newthdot * p["dt"]
+    nxt = jnp.stack([newth, newthdot], axis=1)
+    return nxt, -cost, jnp.zeros_like(cost, dtype=bool)
+
+
+def pendulum_obs_ref(state: jnp.ndarray) -> jnp.ndarray:
+    th, thdot = state[:, 0], state[:, 1]
+    return jnp.stack([jnp.cos(th), jnp.sin(th), thdot], axis=1)
+
+
+# --------------------------------------------------------------------------
+# COVID-19 two-level economy (51 governors + 1 federal agent)
+# --------------------------------------------------------------------------
+COVID = dict(
+    n_states=51, n_agents=52, n_actions=10, max_steps=52,
+    gamma_rec=0.1,        # recovery rate / step
+    mu_mort=0.012,        # infection fatality per step among infected
+    beta_damp=0.085,      # stringency damping of transmission per level
+    econ_damp=0.065,      # stringency damping of economic output per level
+    subsidy_boost=0.045,  # federal subsidy restoring output per level
+    subsidy_cost=0.02,    # federal budget cost per subsidy level
+    death_weight=60.0,    # health term scale in rewards
+    mix=0.04,             # inter-state infection mixing fraction
+)
+
+
+def covid_step_ref(sir: jnp.ndarray, econ: jnp.ndarray,
+                   calib: jnp.ndarray, gov_action: jnp.ndarray,
+                   fed_action: jnp.ndarray) -> tuple:
+    """One week of the two-level COVID economy.
+
+    sir:        (N, S, 3)  [susceptible, infected, dead] fractions per state
+    econ:       (N, S)     economic output index per state
+    calib:      (S, 3)     per-state calibration [beta0, q0, health_weight]
+    gov_action: (N, S)     int stringency level 0..9
+    fed_action: (N,)       int subsidy level 0..9
+    returns (sir', econ', gov_reward (N,S), fed_reward (N,))
+    """
+    c = COVID
+    s, i, d = sir[..., 0], sir[..., 1], sir[..., 2]
+    beta0 = calib[:, 0][None, :]
+    q0 = calib[:, 1][None, :]
+    hw = calib[:, 2][None, :]
+    stringency = gov_action.astype(jnp.float32)
+    subsidy = fed_action.astype(jnp.float32)[:, None]
+
+    # transmission: local + national mixing, damped by stringency
+    i_nat = jnp.mean(i, axis=1, keepdims=True)
+    beta = beta0 * (1.0 - c["beta_damp"] * stringency)
+    new_inf = jnp.clip(beta * s * ((1 - c["mix"]) * i + c["mix"] * i_nat),
+                       0.0, s)
+    new_rec = c["gamma_rec"] * i
+    new_dead = c["mu_mort"] * i
+    s2 = s - new_inf
+    i2 = jnp.clip(i + new_inf - new_rec - new_dead, 0.0, 1.0)
+    d2 = d + new_dead
+
+    # economy: output damped by stringency and sickness, restored by subsidy
+    open_frac = 1.0 - c["econ_damp"] * stringency
+    q2 = q0 * open_frac * (1.0 - 0.5 * i2) + c["subsidy_boost"] * subsidy
+    econ2 = 0.5 * econ + 0.5 * q2  # smoothed output index
+
+    gov_reward = q2 - hw * c["death_weight"] * new_dead
+    fed_reward = (jnp.mean(gov_reward, axis=1)
+                  - c["subsidy_cost"] * subsidy[:, 0])
+    sir2 = jnp.stack([s2, i2, d2], axis=-1)
+    return sir2, econ2, gov_reward, fed_reward
+
+
+# --------------------------------------------------------------------------
+# Catalysis: extended Mueller-Brown potential energy surface
+# --------------------------------------------------------------------------
+# The standard reaction-path benchmark surface: 3 minima (reactant,
+# intermediate, product) and 2 saddle points.  Stands in for the paper's
+# DFT-derived Fe(111) NH2+H landscape (see DESIGN.md section 7).
+MB_A = (-200.0, -100.0, -170.0, 15.0)
+MB_a = (-1.0, -1.0, -6.5, 0.7)
+MB_b = (0.0, 0.0, 11.0, 0.6)
+MB_c = (-10.0, -10.0, -6.5, 0.7)
+MB_x0 = (1.0, 0.0, -0.5, -1.0)
+MB_y0 = (0.0, 0.5, 1.5, 1.0)
+
+# well-known stationary points
+MB_MIN_REACTANT = (0.6235, 0.0280)    # shallow minimum ("adsorbed NH2 + H")
+MB_MIN_PRODUCT = (-0.5582, 1.4417)    # deep minimum ("NH3")
+MB_MIN_INTERMEDIATE = (-0.0500, 0.4667)
+
+CATALYSIS = dict(
+    max_steps=200, step_len=0.09, n_actions=8,
+    product_radius=0.35, product_bonus=30.0, step_penalty=0.1,
+    energy_scale=30.0,   # reward shaping divisor
+    x_lo=-1.8, x_hi=1.3, y_lo=-0.6, y_hi=2.2,
+    lh_bump_amp=40.0,    # co-adsorbate repulsion (Langmuir-Hinshelwood)
+    lh_bump_x=0.35, lh_bump_y=0.85, lh_bump_w=0.12,
+)
+
+
+def mb_energy_ref(pos: jnp.ndarray, perturb: jnp.ndarray,
+                  bump_amp: float = 0.0) -> jnp.ndarray:
+    """Extended Mueller-Brown energy.
+
+    pos:     (..., 2) positions
+    perturb: (...,)   per-env multiplicative perturbation of well depths
+                      ("local variations" of the environment, paper app. B)
+    bump_amp: static co-adsorbate Gaussian (LH geometry) amplitude
+    returns  (...,) energy
+    """
+    x, y = pos[..., 0], pos[..., 1]
+    e = jnp.zeros_like(x)
+    for A, a, b, c_, x0, y0 in zip(MB_A, MB_a, MB_b, MB_c, MB_x0, MB_y0):
+        dx, dy = x - x0, y - y0
+        e = e + A * jnp.exp(a * dx * dx + b * dx * dy + c_ * dy * dy)
+    e = e * (1.0 + perturb)
+    if bump_amp:
+        cat = CATALYSIS
+        dx = x - cat["lh_bump_x"]
+        dy = y - cat["lh_bump_y"]
+        e = e + bump_amp * jnp.exp(-(dx * dx + dy * dy)
+                                   / (2.0 * cat["lh_bump_w"]))
+    return e
+
+
+def catalysis_step_ref(pos: jnp.ndarray, perturb: jnp.ndarray,
+                       action: jnp.ndarray, bump_amp: float) -> tuple:
+    """One move of the H-atom actor on the PES.
+
+    pos:     (N, 2) current positions
+    perturb: (N,)   per-env well-depth perturbation
+    action:  (N,)   int 0..7 compass direction
+    returns (next_pos, reward (N,), terminated (N,))
+    """
+    cat = CATALYSIS
+    ang = action.astype(jnp.float32) * (2.0 * jnp.pi / cat["n_actions"])
+    delta = jnp.stack([jnp.cos(ang), jnp.sin(ang)], axis=1) * cat["step_len"]
+    new = pos + delta
+    new = jnp.stack([
+        jnp.clip(new[:, 0], cat["x_lo"], cat["x_hi"]),
+        jnp.clip(new[:, 1], cat["y_lo"], cat["y_hi"]),
+    ], axis=1)
+    e_old = mb_energy_ref(pos, perturb, bump_amp)
+    e_new = mb_energy_ref(new, perturb, bump_amp)
+    dx = new[:, 0] - MB_MIN_PRODUCT[0]
+    dy = new[:, 1] - MB_MIN_PRODUCT[1]
+    in_product = (dx * dx + dy * dy) < cat["product_radius"] ** 2
+    reward = (-(e_new - e_old) / cat["energy_scale"] - cat["step_penalty"]
+              + jnp.where(in_product, cat["product_bonus"], 0.0))
+    return new, reward, in_product
+
+
+# --------------------------------------------------------------------------
+# Fused actor-critic MLP forward (policy inference hot path)
+# --------------------------------------------------------------------------
+def mlp_forward_ref(x: jnp.ndarray, w1, b1, w2, b2, wp, bp, wv, bv) -> tuple:
+    """2-hidden-layer tanh MLP with policy + value heads.
+
+    x: (N, obs)  ->  logits (N, A), value (N,)
+    """
+    h1 = jnp.tanh(x @ w1 + b1)
+    h2 = jnp.tanh(h1 @ w2 + b2)
+    logits = h2 @ wp + bp
+    value = (h2 @ wv + bv)[:, 0]
+    return logits, value

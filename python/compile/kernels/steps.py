@@ -1,0 +1,256 @@
+"""L1 Pallas kernels: batched environment-step physics.
+
+Hardware adaptation of the paper's CUDA layout (DESIGN.md section 5): the
+paper runs one environment per GPU *block* and one agent per *thread*; here
+the Pallas grid tiles the leading env axis, each program instance advancing
+a BLOCK of environments held in VMEM, and the agent axis is vectorized on
+the VPU lanes inside the block.
+
+All kernels are deterministic (sampling noise is injected by the caller),
+lower through ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls) and are oracle-checked against :mod:`.ref` by pytest.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK = 256
+
+
+def _env_block(n_envs: int, block: int | None) -> int:
+    """Largest divisor of ``n_envs`` not exceeding the requested block."""
+    b = min(block or DEFAULT_BLOCK, n_envs)
+    while n_envs % b != 0:
+        b -= 1
+    return max(b, 1)
+
+
+# --------------------------------------------------------------------------
+# CartPole
+# --------------------------------------------------------------------------
+def _cartpole_kernel(s_ref, a_ref, ns_ref, r_ref, d_ref):
+    nxt, rew, term = ref.cartpole_step_ref(s_ref[...], a_ref[...])
+    ns_ref[...] = nxt
+    r_ref[...] = rew
+    d_ref[...] = term.astype(jnp.float32)
+
+
+def cartpole_step(state: jnp.ndarray, action: jnp.ndarray,
+                  block: int | None = None) -> tuple:
+    """Pallas CartPole step.  state (N,4) f32, action (N,) i32.
+
+    Returns (next_state (N,4), reward (N,), done_f (N,) f32 0/1).
+    """
+    n = state.shape[0]
+    b = _env_block(n, block)
+    grid = (n // b,)
+    return pl.pallas_call(
+        _cartpole_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, 4), lambda i: (i, 0)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, 4), lambda i: (i, 0)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 4), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(state, action)
+
+
+# --------------------------------------------------------------------------
+# Acrobot
+# --------------------------------------------------------------------------
+def _acrobot_kernel(s_ref, a_ref, ns_ref, r_ref, d_ref):
+    nxt, rew, term = ref.acrobot_step_ref(s_ref[...], a_ref[...])
+    ns_ref[...] = nxt
+    r_ref[...] = rew
+    d_ref[...] = term.astype(jnp.float32)
+
+
+def acrobot_step(state: jnp.ndarray, action: jnp.ndarray,
+                 block: int | None = None) -> tuple:
+    """Pallas Acrobot RK4 step.  state (N,4), action (N,) i32 in {0,1,2}."""
+    n = state.shape[0]
+    b = _env_block(n, block)
+    return pl.pallas_call(
+        _acrobot_kernel,
+        grid=(n // b,),
+        in_specs=[
+            pl.BlockSpec((b, 4), lambda i: (i, 0)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, 4), lambda i: (i, 0)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 4), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(state, action)
+
+
+# --------------------------------------------------------------------------
+# Pendulum (continuous action)
+# --------------------------------------------------------------------------
+def _pendulum_kernel(s_ref, a_ref, ns_ref, r_ref, d_ref):
+    nxt, rew, term = ref.pendulum_step_ref(s_ref[...], a_ref[...])
+    ns_ref[...] = nxt
+    r_ref[...] = rew
+    d_ref[...] = term.astype(jnp.float32)
+
+
+def pendulum_step(state: jnp.ndarray, action: jnp.ndarray,
+                  block: int | None = None) -> tuple:
+    """Pallas Pendulum step.  state (N,2), action (N,) f32 torque."""
+    n = state.shape[0]
+    b = _env_block(n, block)
+    return pl.pallas_call(
+        _pendulum_kernel,
+        grid=(n // b,),
+        in_specs=[
+            pl.BlockSpec((b, 2), lambda i: (i, 0)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, 2), lambda i: (i, 0)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 2), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(state, action)
+
+
+# --------------------------------------------------------------------------
+# COVID economy (multi-agent: 51 governors + federal, inter-agent reduction
+# happens inside the block = the paper's cross-thread interaction)
+# --------------------------------------------------------------------------
+def _covid_kernel(sir_ref, econ_ref, calib_ref, ga_ref, fa_ref,
+                  nsir_ref, necon_ref, gr_ref, fr_ref):
+    sir2, econ2, gr, fr = ref.covid_step_ref(
+        sir_ref[...], econ_ref[...], calib_ref[...], ga_ref[...], fa_ref[...])
+    nsir_ref[...] = sir2
+    necon_ref[...] = econ2
+    gr_ref[...] = gr
+    fr_ref[...] = fr
+
+
+def covid_step(sir: jnp.ndarray, econ: jnp.ndarray, calib: jnp.ndarray,
+               gov_action: jnp.ndarray, fed_action: jnp.ndarray,
+               block: int | None = None) -> tuple:
+    """Pallas COVID-economy step.
+
+    sir (N,S,3), econ (N,S), calib (S,3) shared, gov_action (N,S) i32,
+    fed_action (N,) i32 -> (sir', econ', gov_reward (N,S), fed_reward (N,)).
+    """
+    n, s = sir.shape[0], sir.shape[1]
+    b = _env_block(n, block or 64)
+    return pl.pallas_call(
+        _covid_kernel,
+        grid=(n // b,),
+        in_specs=[
+            pl.BlockSpec((b, s, 3), lambda i: (i, 0, 0)),
+            pl.BlockSpec((b, s), lambda i: (i, 0)),
+            pl.BlockSpec((s, 3), lambda i: (0, 0)),
+            pl.BlockSpec((b, s), lambda i: (i, 0)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, s, 3), lambda i: (i, 0, 0)),
+            pl.BlockSpec((b, s), lambda i: (i, 0)),
+            pl.BlockSpec((b, s), lambda i: (i, 0)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, s, 3), jnp.float32),
+            jax.ShapeDtypeStruct((n, s), jnp.float32),
+            jax.ShapeDtypeStruct((n, s), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(sir, econ, calib, gov_action, fed_action)
+
+
+# --------------------------------------------------------------------------
+# Catalysis (Mueller-Brown PES walk)
+# --------------------------------------------------------------------------
+def _catalysis_kernel(bump_amp, pos_ref, pert_ref, a_ref,
+                      npos_ref, r_ref, d_ref):
+    nxt, rew, term = ref.catalysis_step_ref(
+        pos_ref[...], pert_ref[...], a_ref[...], bump_amp)
+    npos_ref[...] = nxt
+    r_ref[...] = rew
+    d_ref[...] = term.astype(jnp.float32)
+
+
+def catalysis_step(pos: jnp.ndarray, perturb: jnp.ndarray,
+                   action: jnp.ndarray, bump_amp: float = 0.0,
+                   block: int | None = None) -> tuple:
+    """Pallas PES step.  pos (N,2), perturb (N,), action (N,) i32 0..7."""
+    n = pos.shape[0]
+    b = _env_block(n, block)
+    return pl.pallas_call(
+        functools.partial(_catalysis_kernel, bump_amp),
+        grid=(n // b,),
+        in_specs=[
+            pl.BlockSpec((b, 2), lambda i: (i, 0)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, 2), lambda i: (i, 0)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 2), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(pos, perturb, action)
+
+
+def mb_energy(pos: jnp.ndarray, perturb: jnp.ndarray,
+              bump_amp: float = 0.0, block: int | None = None) -> jnp.ndarray:
+    """Pallas batched Mueller-Brown energy evaluation.  pos (N,2)."""
+    n = pos.shape[0]
+    b = _env_block(n, block)
+
+    def kern(pos_ref, pert_ref, e_ref):
+        e_ref[...] = ref.mb_energy_ref(pos_ref[...], pert_ref[...], bump_amp)
+
+    return pl.pallas_call(
+        kern,
+        grid=(n // b,),
+        in_specs=[
+            pl.BlockSpec((b, 2), lambda i: (i, 0)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_specs=[pl.BlockSpec((b,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.float32)],
+        interpret=True,
+    )(pos, perturb)[0]

@@ -1,0 +1,176 @@
+"""Unified data-store layout: the WarpSci in-place GPU store, flattened.
+
+Every persistent piece of RL state (environment physics, PRNG key, policy
+parameters, Adam moments, episode statistics) lives in ONE flat f32 device
+buffer.  Each L2 graph has signature ``f32[N] -> f32[N]`` so the rust
+coordinator can chain ``execute_b`` calls with zero host transfer (PJRT via
+xla_extension 0.5.1 returns multi-output executables as a single
+un-splittable tuple buffer; a single flat array sidesteps that entirely).
+
+Integer fields (PRNG key bits, step counters) are stored bit-exactly via
+``lax.bitcast_convert_type`` so no information is lost in the f32 container.
+
+The :class:`Layout` doubles as the manifest generator: the rust side reads
+``manifest.json`` to get named (offset, shape, dtype) views into the store.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Iterable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# dtypes representable inside the f32 container.
+_DTYPES = ("f32", "i32", "u32")
+
+
+@dataclasses.dataclass(frozen=True)
+class Field:
+    """A named view into the flat store."""
+
+    name: str
+    shape: Tuple[int, ...]
+    dtype: str  # one of _DTYPES
+    offset: int
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape)) if self.shape else 1
+
+    def to_manifest(self) -> dict:
+        return {
+            "name": self.name,
+            "shape": list(self.shape),
+            "dtype": self.dtype,
+            "offset": self.offset,
+            "size": self.size,
+        }
+
+
+class Layout:
+    """Ordered registry of fields inside the flat f32 state vector."""
+
+    def __init__(self) -> None:
+        self._fields: Dict[str, Field] = {}
+        self._total = 0
+        self._groups: Dict[str, List[str]] = {}
+
+    # ------------------------------------------------------------------ build
+    def add(self, name: str, shape: Iterable[int], dtype: str = "f32",
+            group: str = "state") -> Field:
+        if name in self._fields:
+            raise ValueError(f"duplicate field {name!r}")
+        if dtype not in _DTYPES:
+            raise ValueError(f"dtype {dtype!r} not in {_DTYPES}")
+        shape = tuple(int(s) for s in shape)
+        f = Field(name=name, shape=shape, dtype=dtype, offset=self._total)
+        self._fields[name] = f
+        self._total += f.size
+        self._groups.setdefault(group, []).append(name)
+        return f
+
+    @property
+    def total(self) -> int:
+        return self._total
+
+    def fields(self) -> List[Field]:
+        return list(self._fields.values())
+
+    def field(self, name: str) -> Field:
+        return self._fields[name]
+
+    def group(self, name: str) -> List[Field]:
+        return [self._fields[n] for n in self._groups.get(name, [])]
+
+    def group_span(self, name: str) -> Tuple[int, int]:
+        """(offset, size) of a group; fields in a group must be contiguous."""
+        fs = self.group(name)
+        if not fs:
+            return (0, 0)
+        off = fs[0].offset
+        end = off
+        for f in fs:
+            if f.offset != end:
+                raise ValueError(f"group {name!r} is not contiguous at {f.name}")
+            end = f.offset + f.size
+        return (off, end - off)
+
+    # ------------------------------------------------------------- pack/unpack
+    def pack(self, values: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        """Pack a dict of arrays into the flat f32 vector (order = layout)."""
+        parts = []
+        for f in self._fields.values():
+            v = jnp.asarray(values[f.name])
+            if v.shape != f.shape:
+                raise ValueError(
+                    f"field {f.name}: shape {v.shape} != layout {f.shape}")
+            flat = v.reshape((-1,)) if f.shape else v.reshape((1,))
+            if f.dtype == "f32":
+                flat = flat.astype(jnp.float32)
+            elif f.dtype == "i32":
+                flat = lax.bitcast_convert_type(
+                    flat.astype(jnp.int32), jnp.float32)
+            elif f.dtype == "u32":
+                flat = lax.bitcast_convert_type(
+                    flat.astype(jnp.uint32), jnp.float32)
+            parts.append(flat)
+        if not parts:
+            return jnp.zeros((0,), jnp.float32)
+        return jnp.concatenate(parts)
+
+    def unpack(self, flat: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        """Static-sliced views (bit-cast back to declared dtypes)."""
+        out: Dict[str, jnp.ndarray] = {}
+        for f in self._fields.values():
+            seg = lax.slice(flat, (f.offset,), (f.offset + f.size,))
+            if f.dtype == "i32":
+                seg = lax.bitcast_convert_type(seg, jnp.int32)
+            elif f.dtype == "u32":
+                seg = lax.bitcast_convert_type(seg, jnp.uint32)
+            out[f.name] = seg.reshape(f.shape)
+        return out
+
+    def repack(self, flat: jnp.ndarray,
+               updates: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        """Rebuild the flat vector replacing the given fields."""
+        vals = self.unpack(flat)
+        for k, v in updates.items():
+            if k not in vals:
+                raise KeyError(k)
+            vals[k] = v
+        return self.pack(vals)
+
+    # ---------------------------------------------------------------- manifest
+    def to_manifest(self) -> dict:
+        return {
+            "total": self._total,
+            "fields": [f.to_manifest() for f in self._fields.values()],
+            "groups": {g: list(ns) for g, ns in self._groups.items()},
+        }
+
+
+def tree_size(tree) -> int:
+    """Total element count of a pytree of arrays."""
+    return sum(int(math.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def flatten_tree(tree) -> jnp.ndarray:
+    """Flatten a pytree of f32 arrays into one vector (canonical leaf order)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.concatenate([x.reshape((-1,)).astype(jnp.float32)
+                            for x in leaves])
+
+
+def unflatten_like(tree, flat: jnp.ndarray):
+    """Inverse of :func:`flatten_tree` given a template pytree."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    out, off = [], 0
+    for leaf in leaves:
+        n = int(math.prod(leaf.shape)) if leaf.shape else 1
+        out.append(lax.slice(flat, (off,), (off + n,)).reshape(leaf.shape))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, out)

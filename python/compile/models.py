@@ -1,0 +1,65 @@
+"""Actor-critic model: parameter init + forward dispatch.
+
+One 2-hidden-layer tanh MLP with a policy head (categorical logits or
+Gaussian mean) and a value head.  The inference hot path runs the fused
+Pallas kernel (:mod:`.kernels.mlp`); training recomputes the forward in
+plain jnp under ``jax.grad`` (the kernel is inference-only by design —
+see kernels/mlp.py docstring).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .kernels import ref
+
+Params = Dict[str, jnp.ndarray]
+
+# canonical parameter order — the layout, get_params/set_params and the rust
+# checkpoint format all rely on this ordering
+PARAM_ORDER = ("w1", "b1", "w2", "b2", "wp", "bp", "wv", "bv")
+
+
+def param_shapes(obs_dim: int, hidden: int, n_out: int,
+                 continuous: bool) -> Dict[str, Tuple[int, ...]]:
+    shapes = {
+        "w1": (obs_dim, hidden), "b1": (hidden,),
+        "w2": (hidden, hidden), "b2": (hidden,),
+        "wp": (hidden, n_out), "bp": (n_out,),
+        "wv": (hidden, 1), "bv": (1,),
+    }
+    if continuous:
+        shapes["log_std"] = (n_out,)
+    return shapes
+
+
+def init_params(key, obs_dim: int, hidden: int, n_out: int,
+                continuous: bool = False) -> Params:
+    """Orthogonal-ish (scaled normal) init, small policy head."""
+    shapes = param_shapes(obs_dim, hidden, n_out, continuous)
+    params: Params = {}
+    for name, shape in shapes.items():
+        key, sub = jax.random.split(key)
+        if name.startswith("w"):
+            fan_in = shape[0]
+            scale = (0.01 if name == "wp" else 1.0) / jnp.sqrt(fan_in)
+            params[name] = scale * jax.random.normal(sub, shape)
+        elif name == "log_std":
+            params[name] = -0.5 * jnp.ones(shape, jnp.float32)
+        else:
+            params[name] = jnp.zeros(shape, jnp.float32)
+    return {k: v.astype(jnp.float32) for k, v in params.items()}
+
+
+def forward(params: Params, obs: jnp.ndarray,
+            use_pallas: bool = True, block: int | None = None) -> tuple:
+    """(N, obs) -> (policy_out (N, n_out), value (N,))."""
+    args = (obs, params["w1"], params["b1"], params["w2"], params["b2"],
+            params["wp"], params["bp"], params["wv"], params["bv"])
+    if use_pallas:
+        return kernels.mlp_forward(*args, block=block)
+    return ref.mlp_forward_ref(*args)

@@ -1,0 +1,162 @@
+"""From-scratch RL algorithm pieces vs numpy references."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import algo
+
+settings.register_profile("algo", max_examples=20, deadline=None)
+settings.load_profile("algo")
+
+
+def _np_nstep(rewards, dones, bootstrap, gamma):
+    T, N = rewards.shape
+    out = np.zeros_like(rewards)
+    nxt = bootstrap.copy()
+    for t in reversed(range(T)):
+        nxt = rewards[t] + gamma * (1.0 - dones[t]) * nxt
+        out[t] = nxt
+    return out
+
+
+def _np_gae(rewards, dones, values, bootstrap, gamma, lam):
+    T, N = rewards.shape
+    adv = np.zeros_like(rewards)
+    next_v = bootstrap.copy()
+    gae = np.zeros(N, np.float32)
+    for t in reversed(range(T)):
+        delta = rewards[t] + gamma * (1 - dones[t]) * next_v - values[t]
+        gae = delta + gamma * lam * (1 - dones[t]) * gae
+        adv[t] = gae
+        next_v = values[t]
+    return adv, adv + values
+
+
+@given(st.integers(1, 12), st.integers(1, 7), st.integers(0, 2**31 - 1),
+       st.floats(0.5, 0.999))
+def test_nstep_returns_match_numpy(t, n, seed, gamma):
+    rng = np.random.default_rng(seed)
+    r = rng.standard_normal((t, n)).astype(np.float32)
+    d = (rng.random((t, n)) < 0.2).astype(np.float32)
+    boot = rng.standard_normal(n).astype(np.float32)
+    got = np.asarray(algo.nstep_returns(jnp.asarray(r), jnp.asarray(d),
+                                        jnp.asarray(boot), gamma))
+    np.testing.assert_allclose(got, _np_nstep(r, d, boot, gamma),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(1, 12), st.integers(1, 7), st.integers(0, 2**31 - 1),
+       st.floats(0.5, 0.999), st.floats(0.0, 1.0))
+def test_gae_matches_numpy(t, n, seed, gamma, lam):
+    rng = np.random.default_rng(seed)
+    r = rng.standard_normal((t, n)).astype(np.float32)
+    d = (rng.random((t, n)) < 0.2).astype(np.float32)
+    v = rng.standard_normal((t, n)).astype(np.float32)
+    boot = rng.standard_normal(n).astype(np.float32)
+    adv, rets = algo.gae_advantages(jnp.asarray(r), jnp.asarray(d),
+                                    jnp.asarray(v), jnp.asarray(boot),
+                                    gamma, lam)
+    adv_np, rets_np = _np_gae(r, d, v, boot, gamma, lam)
+    np.testing.assert_allclose(np.asarray(adv), adv_np, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(rets), rets_np, rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_gae_lambda1_equals_nstep_minus_values():
+    """GAE(1) advantage == n-step return - V (textbook identity)."""
+    rng = np.random.default_rng(3)
+    r = rng.standard_normal((8, 5)).astype(np.float32)
+    d = (rng.random((8, 5)) < 0.3).astype(np.float32)
+    v = rng.standard_normal((8, 5)).astype(np.float32)
+    boot = rng.standard_normal(5).astype(np.float32)
+    adv, rets = algo.gae_advantages(jnp.asarray(r), jnp.asarray(d),
+                                    jnp.asarray(v), jnp.asarray(boot),
+                                    0.97, 1.0)
+    nstep = algo.nstep_returns(jnp.asarray(r), jnp.asarray(d),
+                               jnp.asarray(boot), 0.97)
+    np.testing.assert_allclose(np.asarray(adv), np.asarray(nstep - v),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(rets), np.asarray(nstep),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_categorical_logp_entropy_vs_numpy():
+    logits = jnp.asarray([[1.0, 2.0, 0.5], [0.0, 0.0, 0.0]])
+    a = jnp.asarray([1, 2], dtype=jnp.int32)
+    lp = np.asarray(algo.categorical_logp(logits, a))
+    z = np.asarray(logits)
+    logz = z - np.log(np.exp(z).sum(-1, keepdims=True))
+    np.testing.assert_allclose(lp, logz[[0, 1], [1, 2]], rtol=1e-5)
+    ent = np.asarray(algo.categorical_entropy(logits))
+    p = np.exp(logz)
+    np.testing.assert_allclose(ent, -(p * logz).sum(-1), rtol=1e-5)
+    # uniform logits -> entropy log(3)
+    np.testing.assert_allclose(ent[1], np.log(3.0), rtol=1e-5)
+
+
+def test_categorical_sample_distribution():
+    key = jax.random.PRNGKey(0)
+    logits = jnp.log(jnp.asarray([[0.7, 0.2, 0.1]]))
+    logits = jnp.broadcast_to(logits, (20000, 3))
+    a = np.asarray(algo.categorical_sample(key, logits))
+    freq = np.bincount(a, minlength=3) / a.size
+    np.testing.assert_allclose(freq, [0.7, 0.2, 0.1], atol=0.02)
+
+
+def test_gaussian_logp_entropy():
+    mean = jnp.zeros((4, 2))
+    log_std = jnp.zeros((2,))
+    act = jnp.zeros((4, 2))
+    lp = np.asarray(algo.gaussian_logp(mean, log_std, act))
+    np.testing.assert_allclose(lp, -np.log(2 * np.pi), rtol=1e-5)
+    ent = float(algo.gaussian_entropy(log_std))
+    np.testing.assert_allclose(ent, 2 * 0.5 * (np.log(2 * np.pi) + 1),
+                               rtol=1e-5)
+
+
+def test_adam_matches_numpy_reference():
+    params = {"w": jnp.asarray([1.0, -2.0]), "b": jnp.asarray([0.5])}
+    grads = {"w": jnp.asarray([0.1, -0.2]), "b": jnp.asarray([1.0])}
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(v_) for k, v_ in params.items()}
+    p2, m2, v2, t2 = algo.adam_update(params, grads, m, v,
+                                      jnp.zeros(()), lr=0.01)
+    # numpy reference, one step from zero moments
+    for k in params:
+        g = np.asarray(grads[k])
+        m_np = 0.1 * g
+        v_np = 0.001 * g * g
+        mh = m_np / (1 - 0.9)
+        vh = v_np / (1 - 0.999)
+        p_np = np.asarray(params[k]) - 0.01 * mh / (np.sqrt(vh) + 1e-8)
+        np.testing.assert_allclose(np.asarray(p2[k]), p_np, rtol=1e-5)
+    assert float(t2) == 1.0
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    clipped, gn = algo.clip_by_global_norm(grads, 1.0)
+    assert abs(float(gn) - 5.0) < 1e-5
+    total = np.sqrt(sum(float(jnp.sum(x * x))
+                        for x in jax.tree_util.tree_leaves(clipped)))
+    np.testing.assert_allclose(total, 1.0, rtol=1e-4)
+    # under the cap: untouched
+    clipped2, _ = algo.clip_by_global_norm(grads, 100.0)
+    np.testing.assert_allclose(np.asarray(clipped2["a"]), [3.0], rtol=1e-6)
+
+
+def test_a2c_loss_gradient_direction():
+    """Positive advantage must push the taken action's logit up."""
+    logits = jnp.zeros((1, 2))
+
+    def loss(logits):
+        lp = algo.categorical_logp(logits, jnp.asarray([0]))
+        ent = algo.categorical_entropy(logits)
+        l, _ = algo.a2c_loss_terms(lp, ent, jnp.zeros(1), jnp.zeros(1),
+                                   jnp.asarray([2.0]), 0.0, 0.0)
+        return l
+    g = jax.grad(loss)(logits)
+    assert float(g[0, 0]) < 0.0  # descending on loss raises logit of action 0
+    assert float(g[0, 1]) > 0.0

@@ -1,0 +1,86 @@
+"""AOT pipeline tests: HLO emission + manifest consistency."""
+
+import json
+import os
+
+import pytest
+
+from compile.aot import build_for, emit, tag_for, to_hlo_text
+from compile.graphs import METRIC_NAMES, TrainConfig
+
+CFG = TrainConfig(n_envs=8, t=4, hidden=16, use_pallas=False)
+
+
+@pytest.fixture(scope="module")
+def artifact_dir(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    emit("cartpole", CFG, str(out))
+    return os.path.join(str(out), tag_for("cartpole", CFG))
+
+
+def test_tag_encoding():
+    assert tag_for("cartpole", CFG) == "cartpole_n8_t4_jnp"
+    assert tag_for("acrobot", TrainConfig(n_envs=64, t=32)) \
+        == "acrobot_n64_t32"
+
+
+def test_all_graphs_emitted(artifact_dir):
+    for g in ("init", "train_iter", "rollout", "metrics", "get_params",
+              "set_params", "avg2"):
+        path = os.path.join(artifact_dir, f"{g}.hlo.txt")
+        assert os.path.exists(path), g
+        text = open(path).read()
+        assert text.startswith("HloModule"), g
+        assert "ENTRY" in text, g
+
+
+def test_manifest_consistency(artifact_dir):
+    man = json.load(open(os.path.join(artifact_dir, "manifest.json")))
+    assert man["env"] == "cartpole"
+    assert man["state_size"] == man["layout"]["total"]
+    assert man["metrics"] == list(METRIC_NAMES)
+    assert man["steps_per_iter"] == CFG.n_envs * CFG.t
+    # layout fields are contiguous and cover the state exactly
+    offset = 0
+    for f in man["layout"]["fields"]:
+        assert f["offset"] == offset
+        offset += f["size"]
+    assert offset == man["state_size"]
+    # params group span matches params_offset/params_size
+    pfields = [f for f in man["layout"]["fields"]
+               if f["name"] in man["layout"]["groups"]["params"]]
+    assert pfields[0]["offset"] == man["params_offset"]
+    assert sum(f["size"] for f in pfields) == man["params_size"]
+    # graph input shapes: init takes the seed, iter graphs take the state
+    assert man["graphs"]["init"]["inputs"] == [
+        {"shape": [1], "dtype": "f32"}]
+    assert man["graphs"]["train_iter"]["inputs"][0]["shape"] \
+        == [man["state_size"]]
+    assert man["graphs"]["set_params"]["inputs"][1]["shape"] \
+        == [man["params_size"]]
+
+
+def test_emit_is_idempotent(artifact_dir, capsys):
+    mtime = os.path.getmtime(os.path.join(artifact_dir, "train_iter.hlo.txt"))
+    emit("cartpole", CFG, os.path.dirname(artifact_dir))
+    assert os.path.getmtime(
+        os.path.join(artifact_dir, "train_iter.hlo.txt")) == mtime
+
+
+def test_hlo_text_is_single_output():
+    """Graphs must lower to a single non-tuple root (chainability)."""
+    env_lo, graphs, _ = build_for("cartpole", CFG)
+    text = to_hlo_text(*graphs["train_iter"])
+    header = text.splitlines()[0]
+    # entry layout result type is an array, not a tuple: ->f32[NNN]{0}}
+    assert "->f32[" in header.replace(" ", ""), header
+    assert "->(" not in header.replace(" ", ""), header
+
+
+def test_covid_build_for_meta():
+    lo, graphs, meta = build_for("covid_econ",
+                                 TrainConfig(n_envs=4, t=4, hidden=16,
+                                             use_pallas=False))
+    assert meta["agents_per_env"] == 52
+    assert set(graphs) == {"init", "train_iter", "rollout", "metrics",
+                           "get_params", "set_params", "avg2"}

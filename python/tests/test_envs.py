@@ -1,0 +1,177 @@
+"""Environment dynamics invariants (beyond kernel-vs-oracle equality)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.envs import (CovidSpec, covid_init, covid_obs, covid_reset_where,
+                          covid_step, make_calibration, make_env)
+from compile.kernels import ref
+
+
+def _run_env(name, steps=50, n=16, seed=0, policy=None):
+    env = make_env(name)
+    key = jax.random.PRNGKey(seed)
+    f = env.init(key, n)
+    rows = []
+    for t in range(steps):
+        key, k1, k2 = jax.random.split(key, 3)
+        if env.act_type == "discrete":
+            a = jax.random.randint(k1, (n,), 0, env.n_actions).astype(jnp.int32)
+        else:
+            a = jax.random.normal(k1, (n,))
+        f, r, d = env.step(f, a, False)
+        rows.append((f, r, d))
+        f = env.reset_where(f, k2, d)
+    return env, rows
+
+
+def test_cartpole_terminates_out_of_bounds():
+    s = jnp.asarray([[2.5, 0, 0, 0], [0, 0, 0.25, 0], [0, 0, 0, 0]],
+                    jnp.float32)
+    _, _, d = ref.cartpole_step_ref(s, jnp.zeros(3, jnp.int32))
+    assert bool(d[0]) and bool(d[1]) and not bool(d[2])
+
+
+def test_cartpole_force_direction():
+    s = jnp.zeros((2, 4), jnp.float32)
+    ns, _, _ = ref.cartpole_step_ref(s, jnp.asarray([1, 0], jnp.int32))
+    # push right accelerates the cart right (velocity after one step)
+    assert float(ns[0, 1]) > 0 > float(ns[1, 1])
+
+
+def test_acrobot_obs_ranges():
+    env, rows = _run_env("acrobot", steps=30)
+    for f, r, d in rows:
+        obs = np.asarray(env.obs(f))
+        assert np.all(np.abs(obs[:, :4]) <= 1.0 + 1e-6)  # cos/sin
+        assert np.all(np.abs(obs[:, 4]) <= ref.ACROBOT["max_vel1"] + 1e-4)
+        assert np.all(np.abs(obs[:, 5]) <= ref.ACROBOT["max_vel2"] + 1e-4)
+
+
+def test_acrobot_energy_injection():
+    """Constant torque from rest must move the system (sanity of dynamics)."""
+    s = jnp.zeros((1, 4), jnp.float32)
+    for _ in range(10):
+        s, _, _ = ref.acrobot_step_ref(s, jnp.asarray([2], jnp.int32))
+    assert abs(float(s[0, 0])) + abs(float(s[0, 2])) > 1e-3
+
+
+def test_pendulum_reward_nonpositive_and_velocity_capped():
+    env, rows = _run_env("pendulum", steps=40)
+    for f, r, d in rows:
+        assert np.all(np.asarray(r) <= 1e-6)
+        assert np.all(np.abs(np.asarray(f["phys"])[:, 1])
+                      <= ref.PENDULUM["max_speed"] + 1e-5)
+
+
+def test_reset_where_only_touches_masked():
+    env = make_env("cartpole")
+    key = jax.random.PRNGKey(1)
+    f = env.init(key, 8)
+    mask = jnp.asarray([1, 0, 1, 0, 0, 0, 0, 1], jnp.float32)
+    f2 = env.reset_where(f, jax.random.PRNGKey(2), mask)
+    old = np.asarray(f["phys"])
+    new = np.asarray(f2["phys"])
+    np.testing.assert_array_equal(new[mask == 0], old[np.asarray(mask) == 0])
+    assert not np.allclose(new[np.asarray(mask) == 1],
+                           old[np.asarray(mask) == 1])
+    assert np.all(np.abs(new) <= 0.05 + 1e-6)  # fresh cartpole init range
+
+
+def test_catalysis_positions_stay_in_box():
+    env, rows = _run_env("catalysis_lh", steps=60)
+    c = ref.CATALYSIS
+    for f, r, d in rows:
+        pos = np.asarray(f["pos"])
+        assert np.all(pos[:, 0] >= c["x_lo"] - 1e-6)
+        assert np.all(pos[:, 0] <= c["x_hi"] + 1e-6)
+        assert np.all(pos[:, 1] >= c["y_lo"] - 1e-6)
+        assert np.all(pos[:, 1] <= c["y_hi"] + 1e-6)
+
+
+def test_catalysis_product_basin_terminates_with_bonus():
+    pos = jnp.asarray([ref.MB_MIN_PRODUCT], jnp.float32) - 0.01
+    pert = jnp.zeros((1,))
+    ns, r, d = ref.catalysis_step_ref(pos, pert, jnp.asarray([0],
+                                                             jnp.int32), 0.0)
+    assert bool(d[0])
+    assert float(r[0]) > ref.CATALYSIS["product_bonus"] * 0.5
+
+
+def test_catalysis_er_vs_lh_start_distributions():
+    lh = make_env("catalysis_lh").init(jax.random.PRNGKey(0), 512)
+    er = make_env("catalysis_er").init(jax.random.PRNGKey(0), 512)
+    lh_spread = float(jnp.std(lh["pos"][:, 0]))
+    er_spread = float(jnp.std(er["pos"][:, 0]))
+    assert er_spread > 2.0 * lh_spread  # gas-phase approach is broader
+    # LH starts near the reactant minimum
+    d = np.asarray(lh["pos"]) - np.asarray(ref.MB_MIN_REACTANT)
+    assert np.percentile(np.hypot(d[:, 0], d[:, 1]), 90) < 0.2
+
+
+def test_covid_sir_invariants():
+    spec = CovidSpec()
+    calib = make_calibration()
+    key = jax.random.PRNGKey(0)
+    f = covid_init(key, 8)
+    prev_dead = np.zeros((8, spec.n_states), np.float32)
+    for t in range(spec.max_steps):
+        key, kg, kf = jax.random.split(key, 3)
+        ga = jax.random.randint(kg, (8, spec.n_states), 0, 10).astype(jnp.int32)
+        fa = jax.random.randint(kf, (8,), 0, 10).astype(jnp.int32)
+        f, gr, fr = covid_step(f, calib, ga, fa, use_pallas=False)
+        sir = np.asarray(f["sir"])
+        assert np.all(sir >= -1e-6), f"negative compartment at t={t}"
+        assert np.all(sir[..., 0] <= 1.0 + 1e-5)
+        assert np.all(sir[..., 2] + 1e-7 >= prev_dead), "deaths must be monotone"
+        prev_dead = sir[..., 2]
+
+
+def test_covid_stringency_suppresses_infection():
+    calib = make_calibration()
+    f0 = covid_init(jax.random.PRNGKey(1), 4)
+    fa = jnp.zeros((4,), jnp.int32)
+    lock = jnp.full((4, 51), 9, jnp.int32)
+    open_ = jnp.zeros((4, 51), jnp.int32)
+    f_lock, f_open = f0, f0
+    for _ in range(8):
+        f_lock, _, _ = covid_step(f_lock, calib, lock, fa, use_pallas=False)
+        f_open, _, _ = covid_step(f_open, calib, open_, fa, use_pallas=False)
+    assert (float(jnp.mean(f_lock["sir"][..., 1]))
+            < float(jnp.mean(f_open["sir"][..., 1])))
+    # ...but lockdown damps the economy
+    assert (float(jnp.mean(f_lock["econ"]))
+            < float(jnp.mean(f_open["econ"])))
+
+
+def test_covid_subsidy_boosts_economy_at_federal_cost():
+    calib = make_calibration()
+    f0 = covid_init(jax.random.PRNGKey(2), 4)
+    ga = jnp.full((4, 51), 5, jnp.int32)
+    f_sub, gr_s, fr_s = covid_step(f0, calib, ga,
+                                   jnp.full((4,), 9, jnp.int32), False)
+    f_no, gr_n, fr_n = covid_step(f0, calib, ga,
+                                  jnp.zeros((4,), jnp.int32), False)
+    assert float(jnp.mean(f_sub["econ"])) > float(jnp.mean(f_no["econ"]))
+    assert float(jnp.mean(gr_s)) > float(jnp.mean(gr_n))
+
+
+def test_covid_obs_shapes():
+    spec = CovidSpec()
+    f = covid_init(jax.random.PRNGKey(0), 6)
+    gov_obs, fed_obs = covid_obs(f, jnp.zeros((6,)))
+    assert gov_obs.shape == (6, spec.n_states, spec.gov_obs_dim)
+    assert fed_obs.shape == (6, spec.fed_obs_dim)
+
+
+def test_covid_reset_where():
+    f = covid_init(jax.random.PRNGKey(0), 4)
+    f2 = {k: v + 0.1 for k, v in f.items()}
+    mask = jnp.asarray([1, 0, 0, 1], jnp.float32)
+    f3 = covid_reset_where(f2, jax.random.PRNGKey(5), mask)
+    # untouched rows keep the +0.1 shift
+    np.testing.assert_allclose(np.asarray(f3["econ"])[1],
+                               np.asarray(f2["econ"])[1], rtol=1e-6)
+    # reset rows are re-initialized (deaths back to zero)
+    assert float(jnp.max(jnp.abs(f3["sir"][0, :, 2]))) < 1e-6

@@ -1,0 +1,159 @@
+"""Pallas kernels vs pure-jnp oracles — the L1 correctness signal.
+
+Hypothesis sweeps batch sizes and block shapes (so the grid tiling itself
+is exercised, not just the math) and asserts bit-level/allclose agreement.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+from compile.kernels.steps import _env_block
+
+settings.register_profile("kernels", max_examples=8, deadline=None)
+settings.load_profile("kernels")
+
+_N = st.sampled_from([1, 2, 16, 64, 130])
+_BLOCK = st.sampled_from([None, 1, 3, 16, 64, 256])
+
+
+def _key(seed):
+    return jax.random.PRNGKey(seed)
+
+
+# ---------------------------------------------------------------- env_block
+@given(st.integers(1, 10000), st.integers(1, 512))
+def test_env_block_divides(n, b):
+    blk = _env_block(n, b)
+    assert 1 <= blk <= n and n % blk == 0 and blk <= max(b, 1)
+
+
+# ----------------------------------------------------------------- cartpole
+@given(_N, _BLOCK, st.integers(0, 2**31 - 1))
+def test_cartpole_matches_ref(n, block, seed):
+    k1, k2 = jax.random.split(_key(seed))
+    s = jax.random.uniform(k1, (n, 4), minval=-2.0, maxval=2.0)
+    a = jax.random.randint(k2, (n,), 0, 2).astype(jnp.int32)
+    ns, r, d = kernels.cartpole_step(s, a, block=block)
+    ns2, r2, d2 = ref.cartpole_step_ref(s, a)
+    np.testing.assert_allclose(np.asarray(ns), np.asarray(ns2),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(r2))
+    np.testing.assert_array_equal(np.asarray(d),
+                                  np.asarray(d2, np.float32))
+
+
+# ------------------------------------------------------------------ acrobot
+@given(_N, _BLOCK, st.integers(0, 2**31 - 1))
+def test_acrobot_matches_ref(n, block, seed):
+    k1, k2 = jax.random.split(_key(seed))
+    s = jax.random.uniform(k1, (n, 4), minval=-3.0, maxval=3.0)
+    a = jax.random.randint(k2, (n,), 0, 3).astype(jnp.int32)
+    ns, r, d = kernels.acrobot_step(s, a, block=block)
+    ns2, r2, d2 = ref.acrobot_step_ref(s, a)
+    np.testing.assert_allclose(np.asarray(ns), np.asarray(ns2),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(d),
+                                  np.asarray(d2, np.float32))
+
+
+# ----------------------------------------------------------------- pendulum
+@given(_N, _BLOCK, st.integers(0, 2**31 - 1))
+def test_pendulum_matches_ref(n, block, seed):
+    k1, k2 = jax.random.split(_key(seed))
+    s = jax.random.uniform(k1, (n, 2), minval=-4.0, maxval=4.0)
+    a = jax.random.uniform(k2, (n,), minval=-3.0, maxval=3.0)
+    ns, r, d = kernels.pendulum_step(s, a, block=block)
+    ns2, r2, d2 = ref.pendulum_step_ref(s, a)
+    np.testing.assert_allclose(np.asarray(ns), np.asarray(ns2), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(r2), rtol=1e-5)
+    assert not np.any(np.asarray(d))
+
+
+# -------------------------------------------------------------------- covid
+@given(st.sampled_from([1, 8, 40]), st.sampled_from([None, 1, 8, 64]),
+       st.integers(0, 2**31 - 1))
+def test_covid_matches_ref(n, block, seed):
+    s = ref.COVID["n_states"]
+    ks = jax.random.split(_key(seed), 5)
+    i0 = jax.random.uniform(ks[0], (n, s), minval=0.0, maxval=0.2)
+    sir = jnp.stack([1.0 - i0, i0, jnp.zeros_like(i0)], axis=-1)
+    econ = jax.random.uniform(ks[1], (n, s), minval=0.5, maxval=1.5)
+    calib = jnp.stack([
+        jax.random.uniform(ks[2], (s,), minval=0.2, maxval=0.5),
+        jnp.ones((s,)), jnp.ones((s,))], axis=1)
+    ga = jax.random.randint(ks[3], (n, s), 0, 10).astype(jnp.int32)
+    fa = jax.random.randint(ks[4], (n,), 0, 10).astype(jnp.int32)
+    outs = kernels.covid_step(sir, econ, calib, ga, fa, block=block)
+    refs = ref.covid_step_ref(sir, econ, calib, ga, fa)
+    for o, r_ in zip(outs, refs):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r_),
+                                   rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------------------------------------------- catalysis
+@given(_N, _BLOCK, st.integers(0, 2**31 - 1),
+       st.sampled_from([0.0, 40.0]))
+def test_catalysis_matches_ref(n, block, seed, bump):
+    ks = jax.random.split(_key(seed), 3)
+    pos = jax.random.uniform(ks[0], (n, 2), minval=-1.5, maxval=1.2)
+    pert = 0.05 * jax.random.normal(ks[1], (n,))
+    a = jax.random.randint(ks[2], (n,), 0, 8).astype(jnp.int32)
+    ns, r, d = kernels.catalysis_step(pos, pert, a, bump_amp=bump,
+                                      block=block)
+    ns2, r2, d2 = ref.catalysis_step_ref(pos, pert, a, bump)
+    np.testing.assert_allclose(np.asarray(ns), np.asarray(ns2), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(r2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(d2, np.float32))
+
+
+@given(_N, st.integers(0, 2**31 - 1))
+def test_mb_energy_matches_ref(n, seed):
+    ks = jax.random.split(_key(seed), 2)
+    pos = jax.random.uniform(ks[0], (n, 2), minval=-1.5, maxval=1.2)
+    pert = 0.05 * jax.random.normal(ks[1], (n,))
+    e = kernels.mb_energy(pos, pert)
+    e2 = ref.mb_energy_ref(pos, pert)
+    np.testing.assert_allclose(np.asarray(e), np.asarray(e2),
+                               rtol=1e-5, atol=1e-3)
+
+
+def test_mb_stationary_points():
+    """The three catalogued minima must actually be low-energy points."""
+    pts = jnp.asarray([ref.MB_MIN_REACTANT, ref.MB_MIN_PRODUCT,
+                       ref.MB_MIN_INTERMEDIATE])
+    e = ref.mb_energy_ref(pts, jnp.zeros(3))
+    # product ("NH3") is the global minimum; the intermediate basin is the
+    # shallowest of the three
+    assert float(e[1]) < float(e[0]) < float(e[2]) < 0.0
+    # gradient is ~0 at each minimum
+    g = jax.vmap(jax.grad(lambda p: ref.mb_energy_ref(p, jnp.zeros(()))))(pts)
+    assert float(jnp.max(jnp.abs(g))) < 1.0  # MB units are O(100)
+
+
+# ---------------------------------------------------------------------- mlp
+@given(st.sampled_from([1, 16, 96]), st.sampled_from([None, 1, 16, 64]),
+       st.sampled_from([2, 3, 10]), st.integers(0, 2**31 - 1))
+def test_mlp_matches_ref(n, block, n_act, seed):
+    ks = jax.random.split(_key(seed), 10)
+    obs_dim, h = 6, 32
+    x = jax.random.normal(ks[0], (n, obs_dim))
+    w1 = jax.random.normal(ks[1], (obs_dim, h)) * 0.3
+    b1 = jax.random.normal(ks[2], (h,)) * 0.1
+    w2 = jax.random.normal(ks[3], (h, h)) * 0.3
+    b2 = jax.random.normal(ks[4], (h,)) * 0.1
+    wp = jax.random.normal(ks[5], (h, n_act)) * 0.3
+    bp = jax.random.normal(ks[6], (n_act,)) * 0.1
+    wv = jax.random.normal(ks[7], (h, 1)) * 0.3
+    bv = jax.random.normal(ks[8], (1,)) * 0.1
+    lo, v = kernels.mlp_forward(x, w1, b1, w2, b2, wp, bp, wv, bv,
+                                block=block)
+    lo2, v2 = ref.mlp_forward_ref(x, w1, b1, w2, b2, wp, bp, wv, bv)
+    np.testing.assert_allclose(np.asarray(lo), np.asarray(lo2),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(v2),
+                               rtol=1e-5, atol=1e-6)

@@ -1,0 +1,141 @@
+"""Unit + property tests for the unified data-store layout."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.layout import Layout, flatten_tree, tree_size, unflatten_like
+
+
+def test_offsets_are_contiguous():
+    lo = Layout()
+    lo.add("a", (4, 2))
+    lo.add("b", (3,), "i32")
+    lo.add("c", ())
+    assert lo.field("a").offset == 0
+    assert lo.field("b").offset == 8
+    assert lo.field("c").offset == 11
+    assert lo.total == 12
+
+
+def test_duplicate_field_rejected():
+    lo = Layout()
+    lo.add("a", (1,))
+    with pytest.raises(ValueError):
+        lo.add("a", (2,))
+
+
+def test_bad_dtype_rejected():
+    lo = Layout()
+    with pytest.raises(ValueError):
+        lo.add("a", (1,), "f64")
+
+
+def test_pack_unpack_roundtrip_f32():
+    lo = Layout()
+    lo.add("x", (2, 3))
+    lo.add("y", (5,))
+    vals = {"x": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "y": jnp.linspace(-1, 1, 5)}
+    flat = lo.pack(vals)
+    out = lo.unpack(flat)
+    np.testing.assert_array_equal(np.asarray(out["x"]), np.asarray(vals["x"]))
+    np.testing.assert_array_equal(np.asarray(out["y"]),
+                                  np.asarray(vals["y"], np.float32))
+
+
+def test_bitcast_roundtrip_exact_u32():
+    lo = Layout()
+    lo.add("key", (2,), "u32")
+    # extreme bit patterns incl. ones that are NaN as floats
+    vals = {"key": jnp.array([0xFFFFFFFF, 0x7FC00001], dtype=jnp.uint32)}
+    out = lo.unpack(lo.pack(vals))
+    np.testing.assert_array_equal(np.asarray(out["key"]),
+                                  np.asarray(vals["key"]))
+
+
+def test_bitcast_roundtrip_exact_i32():
+    lo = Layout()
+    lo.add("n", (4,), "i32")
+    vals = {"n": jnp.array([-2**31, -1, 0, 2**31 - 1], dtype=jnp.int32)}
+    out = lo.unpack(lo.pack(vals))
+    np.testing.assert_array_equal(np.asarray(out["n"]), np.asarray(vals["n"]))
+
+
+def test_repack_replaces_only_given_fields():
+    lo = Layout()
+    lo.add("a", (3,))
+    lo.add("b", (3,))
+    flat = lo.pack({"a": jnp.ones(3), "b": jnp.zeros(3)})
+    flat2 = lo.repack(flat, {"b": jnp.full((3,), 7.0)})
+    out = lo.unpack(flat2)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.ones(3, np.float32))
+    np.testing.assert_array_equal(np.asarray(out["b"]),
+                                  np.full(3, 7.0, np.float32))
+
+
+def test_group_span_contiguous():
+    lo = Layout()
+    lo.add("a", (3,), group="g1")
+    lo.add("p1", (4,), group="params")
+    lo.add("p2", (2, 2), group="params")
+    lo.add("z", (1,), group="g2")
+    off, size = lo.group_span("params")
+    assert (off, size) == (3, 8)
+
+
+def test_group_span_detects_gap():
+    lo = Layout()
+    lo.add("p1", (4,), group="params")
+    lo.add("gap", (1,), group="other")
+    lo.add("p2", (4,), group="params")
+    with pytest.raises(ValueError):
+        lo.group_span("params")
+
+
+def test_manifest_structure():
+    lo = Layout()
+    lo.add("a", (2,), "u32", group="rng")
+    m = lo.to_manifest()
+    assert m["total"] == 2
+    assert m["fields"][0] == {"name": "a", "shape": [2], "dtype": "u32",
+                              "offset": 0, "size": 2}
+    assert m["groups"] == {"rng": ["a"]}
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 6), st.integers(1, 5),
+                          st.sampled_from(["f32", "i32", "u32"])),
+                min_size=1, max_size=6))
+def test_prop_roundtrip_random_layouts(fields):
+    lo = Layout()
+    rng = np.random.default_rng(0)
+    vals = {}
+    for idx, (d0, d1, dt) in enumerate(fields):
+        name = f"f{idx}"
+        lo.add(name, (d0, d1), dt)
+        if dt == "f32":
+            vals[name] = jnp.asarray(
+                rng.standard_normal((d0, d1)), jnp.float32)
+        elif dt == "i32":
+            vals[name] = jnp.asarray(
+                rng.integers(-2**31, 2**31 - 1, (d0, d1)), jnp.int32)
+        else:
+            vals[name] = jnp.asarray(
+                rng.integers(0, 2**32 - 1, (d0, d1)), jnp.uint32)
+    out = lo.unpack(lo.pack(vals))
+    for k, v in vals.items():
+        np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(v))
+
+
+def test_flatten_unflatten_tree():
+    tree = {"a": jnp.ones((2, 2)), "b": jnp.arange(3, dtype=jnp.float32)}
+    flat = flatten_tree(tree)
+    assert flat.shape == (7,)
+    assert tree_size(tree) == 7
+    out = unflatten_like(tree, flat)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.ones((2, 2)))
+    np.testing.assert_array_equal(np.asarray(out["b"]),
+                                  np.arange(3, dtype=np.float32))

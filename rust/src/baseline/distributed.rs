@@ -1,0 +1,318 @@
+//! Round-based distributed-RL emulation: the Fig 3 comparator system.
+//!
+//! Each round: (1) the trainer serializes and broadcasts parameters to
+//! every worker, (2) workers deserialize, roll out `t` steps per env and
+//! serialize their trajectory batches, (3) the trainer deserializes all
+//! batches, computes n-step returns and performs one A2C/Adam update.
+//! Phases are timed separately — "rollout" / "transfer" / "train" — which
+//! regenerates the paper's Fig 3-left category bars (WarpSci's transfer
+//! bar is identically zero; this system's is not).
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::envs::make_cpu_env;
+use crate::nn::mlp::Cache;
+use crate::nn::{Adam, Mlp};
+use crate::util::{Pcg64, Timer};
+
+use super::transfer::{deserialize_params_into, serialize_params,
+                      TrajectoryBatch};
+use super::worker::RolloutWorker;
+
+/// Distributed-baseline run parameters.
+#[derive(Debug, Clone)]
+pub struct DistributedConfig {
+    pub env: String,
+    pub n_workers: usize,
+    pub envs_per_worker: usize,
+    pub t: usize,
+    pub hidden: usize,
+    pub gamma: f32,
+    pub lr: f32,
+    pub vf_coef: f32,
+    pub ent_coef: f32,
+    pub max_grad_norm: f32,
+    pub seed: u64,
+}
+
+impl Default for DistributedConfig {
+    fn default() -> Self {
+        DistributedConfig {
+            env: "cartpole".into(),
+            n_workers: 4,
+            envs_per_worker: 4,
+            t: 32,
+            hidden: 64,
+            gamma: 0.99,
+            lr: 1e-2,
+            vf_coef: 0.25,
+            ent_coef: 0.005,
+            max_grad_norm: 2.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Per-phase wall-clock totals plus counters.
+#[derive(Debug, Clone)]
+pub struct PhaseBreakdown {
+    pub rollout_secs: f64,
+    pub transfer_secs: f64,
+    pub train_secs: f64,
+    pub total_secs: f64,
+    pub env_steps: f64,
+    pub agent_steps: f64,
+    pub bytes_moved: f64,
+    pub mean_return: f64,
+    pub episodes: f64,
+}
+
+impl PhaseBreakdown {
+    pub fn steps_per_sec(&self) -> f64 {
+        self.env_steps / self.total_secs.max(1e-9)
+    }
+}
+
+/// The leader: owns the trainer policy and the worker pool.
+pub struct DistributedSystem {
+    pub cfg: DistributedConfig,
+    pub trainer: Mlp,
+    adam: Adam,
+    workers: Vec<RolloutWorker>,
+    pub timer: Timer,
+    cache: Cache,
+    bytes_moved: u64,
+    return_sum: f64,
+    episode_count: f64,
+}
+
+impl DistributedSystem {
+    pub fn new(cfg: DistributedConfig) -> Result<DistributedSystem> {
+        ensure!(cfg.n_workers > 0 && cfg.envs_per_worker > 0,
+                "need at least one worker and one env");
+        let probe = make_cpu_env(&cfg.env)?;
+        let (obs_dim, n_actions) = (probe.obs_dim(), probe.n_actions());
+        drop(probe);
+        let mut rng = Pcg64::new(cfg.seed);
+        let trainer = Mlp::init(obs_dim, cfg.hidden, n_actions, &mut rng);
+        let shapes: Vec<usize> =
+            [&trainer.w1, &trainer.b1, &trainer.w2, &trainer.b2,
+             &trainer.wp, &trainer.bp, &trainer.wv, &trainer.bv]
+            .iter()
+            .map(|v| v.len())
+            .collect();
+        let mut workers = Vec::with_capacity(cfg.n_workers);
+        for w in 0..cfg.n_workers {
+            let envs: Result<Vec<_>> = (0..cfg.envs_per_worker)
+                .map(|_| make_cpu_env(&cfg.env))
+                .collect();
+            workers.push(RolloutWorker::new(
+                envs?,
+                trainer.clone(),
+                cfg.seed.wrapping_add(w as u64 + 1),
+            ));
+        }
+        Ok(DistributedSystem {
+            adam: Adam::new(cfg.lr, &shapes),
+            cfg,
+            trainer,
+            workers,
+            timer: Timer::new(),
+            cache: Cache::default(),
+            bytes_moved: 0,
+            return_sum: 0.0,
+            episode_count: 0.0,
+        })
+    }
+
+    /// One full round (broadcast -> rollout -> collect -> update).
+    pub fn round(&mut self) -> Result<()> {
+        // 1. parameter broadcast (transfer)
+        let param_bytes = self
+            .timer
+            .time("transfer", || serialize_params(&self.trainer));
+        for w in &mut self.workers {
+            self.bytes_moved += param_bytes.len() as u64;
+            let policy = &mut w.policy;
+            let bytes = &param_bytes;
+            crate::util::Timer::time(&mut self.timer, "transfer", || {
+                deserialize_params_into(policy, bytes)
+            })?;
+        }
+        // 2. roll-outs (the workers' compute phase)
+        let t = self.cfg.t;
+        let mut wire: Vec<Vec<u8>> = Vec::with_capacity(self.workers.len());
+        for w in &mut self.workers {
+            let batch = self.timer.time("rollout", || w.rollout(t));
+            let bytes = self.timer.time("transfer", || batch.serialize());
+            self.bytes_moved += bytes.len() as u64;
+            wire.push(bytes);
+        }
+        // 3. collect (transfer) + train
+        let mut batches = Vec::with_capacity(wire.len());
+        for bytes in &wire {
+            batches.push(self.timer.time("transfer", || {
+                TrajectoryBatch::deserialize(bytes)
+            })?);
+        }
+        let t0 = Instant::now();
+        self.update(&batches)?;
+        self.timer.add("train", t0.elapsed());
+        Ok(())
+    }
+
+    /// A2C update over all collected batches (n-step returns).
+    fn update(&mut self, batches: &[TrajectoryBatch]) -> Result<()> {
+        let mut grads = self.trainer.zeros_like();
+        for b in batches {
+            let rows = (b.n_envs * b.n_agents) as usize;
+            let t = b.t as usize;
+            // trainer-side forward over every transition
+            self.trainer
+                .forward(&b.obs, rows * t, &mut self.cache);
+            // bootstrap values from the post-roll-out observations
+            let mut boot_cache = Cache::default();
+            self.trainer.forward(&b.bootstrap_obs, rows, &mut boot_cache);
+            // n-step returns per (env, agent) stream, reverse over time
+            let mut returns = vec![0f32; rows * t];
+            let na = b.n_agents as usize;
+            for e in 0..b.n_envs as usize {
+                for a in 0..na {
+                    let last_done = b.dones[(t - 1) * b.n_envs as usize + e];
+                    let mut next =
+                        (1.0 - last_done) * boot_cache.value[e * na + a];
+                    for step in (0..t).rev() {
+                        let row = step * rows + e * na + a;
+                        next = b.rewards[row] + self.cfg.gamma * next;
+                        returns[row] = next;
+                        if step > 0 {
+                            let prev_done =
+                                b.dones[(step - 1) * b.n_envs as usize + e];
+                            next *= 1.0 - prev_done;
+                        }
+                    }
+                }
+            }
+            let actions: Vec<usize> =
+                b.actions.iter().map(|&a| a as usize).collect();
+            // advantage = return - value, normalized over the batch
+            let mut adv: Vec<f32> = returns
+                .iter()
+                .zip(&self.cache.value)
+                .map(|(r, v)| r - v)
+                .collect();
+            let mean = adv.iter().sum::<f32>() / adv.len() as f32;
+            let var = adv.iter().map(|x| (x - mean).powi(2)).sum::<f32>()
+                / adv.len() as f32;
+            let std = var.sqrt().max(1e-8);
+            for x in adv.iter_mut() {
+                *x = (*x - mean) / std;
+            }
+            self.trainer.backward_a2c(&self.cache, &actions, &adv,
+                                      &returns, self.cfg.vf_coef,
+                                      self.cfg.ent_coef, &mut grads);
+            self.return_sum += b.finished_returns.iter()
+                .map(|&r| r as f64).sum::<f64>();
+            self.episode_count += b.finished_count as f64;
+        }
+        let gn = grads.global_norm();
+        if gn > self.cfg.max_grad_norm {
+            grads.scale(self.cfg.max_grad_norm / gn);
+        }
+        let gviews = grads.views();
+        self.adam.step(&mut self.trainer.params_mut(), &gviews);
+        Ok(())
+    }
+
+    /// Run `rounds` rounds and report the phase breakdown.
+    pub fn run(&mut self, rounds: usize) -> Result<PhaseBreakdown> {
+        let t0 = Instant::now();
+        for _ in 0..rounds {
+            self.round()?;
+        }
+        let total = t0.elapsed().as_secs_f64();
+        let env_steps = (rounds * self.cfg.t * self.cfg.n_workers
+            * self.cfg.envs_per_worker) as f64;
+        let n_agents = make_cpu_env(&self.cfg.env)?.n_agents() as f64;
+        Ok(PhaseBreakdown {
+            rollout_secs: self.timer.secs("rollout"),
+            transfer_secs: self.timer.secs("transfer"),
+            train_secs: self.timer.secs("train"),
+            total_secs: total,
+            env_steps,
+            agent_steps: env_steps * n_agents,
+            bytes_moved: self.bytes_moved as f64,
+            mean_return: if self.episode_count > 0.0 {
+                self.return_sum / self.episode_count
+            } else {
+                f64::NAN
+            },
+            episodes: self.episode_count,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_all_nonzero_and_sum_close_to_total() {
+        let cfg = DistributedConfig {
+            n_workers: 2,
+            envs_per_worker: 2,
+            t: 8,
+            hidden: 16,
+            ..Default::default()
+        };
+        let mut sys = DistributedSystem::new(cfg).unwrap();
+        let stats = sys.run(3).unwrap();
+        assert!(stats.rollout_secs > 0.0);
+        assert!(stats.transfer_secs > 0.0);
+        assert!(stats.train_secs > 0.0);
+        assert!(stats.bytes_moved > 0.0);
+        assert_eq!(stats.env_steps, (3 * 8 * 2 * 2) as f64);
+        let phase_sum =
+            stats.rollout_secs + stats.transfer_secs + stats.train_secs;
+        assert!(phase_sum <= stats.total_secs * 1.05);
+    }
+
+    #[test]
+    fn baseline_learns_cartpole_a_little() {
+        let cfg = DistributedConfig {
+            n_workers: 2,
+            envs_per_worker: 8,
+            t: 16,
+            hidden: 32,
+            ..Default::default()
+        };
+        let mut sys = DistributedSystem::new(cfg).unwrap();
+        sys.run(30).unwrap();
+        let early = sys.return_sum / sys.episode_count.max(1.0);
+        sys.return_sum = 0.0;
+        sys.episode_count = 0.0;
+        sys.run(60).unwrap();
+        let late = sys.return_sum / sys.episode_count.max(1.0);
+        assert!(
+            late > early,
+            "baseline did not improve: {early} -> {late}"
+        );
+    }
+
+    #[test]
+    fn covid_round_runs() {
+        let cfg = DistributedConfig {
+            env: "covid_econ".into(),
+            n_workers: 1,
+            envs_per_worker: 1,
+            t: 4,
+            hidden: 16,
+            ..Default::default()
+        };
+        let mut sys = DistributedSystem::new(cfg).unwrap();
+        let stats = sys.run(1).unwrap();
+        assert_eq!(stats.agent_steps, 4.0 * 52.0);
+    }
+}

@@ -1,0 +1,23 @@
+//! CPU-"distributed" baseline: the architecture the paper compares against.
+//!
+//! Models the classic scalable-RL design (paper Appendix A): roll-out
+//! workers simulate environments on CPUs and ship trajectory batches to a
+//! trainer; the trainer ships policy parameters back.  Every exchange pays
+//! an explicit **serialize → copy → deserialize** transfer step — the cost
+//! WarpSci's unified on-device store deletes (Fig 3-left's "data transfer"
+//! bar, which is identically zero for WarpSci).
+//!
+//! Workers run the pure-rust environments (`crate::envs`) and a local copy
+//! of the from-scratch policy net (`crate::nn`).  Execution is round-based
+//! and single-threaded by design: on this 1-core testbed, OS time-sharing
+//! across worker threads would only blur the per-phase attribution that
+//! Fig 3 needs (the paper's 16-vCPU node divides wall-clock across workers
+//! the same way).
+
+pub mod distributed;
+pub mod transfer;
+pub mod worker;
+
+pub use distributed::{DistributedConfig, DistributedSystem, PhaseBreakdown};
+pub use transfer::TrajectoryBatch;
+pub use worker::RolloutWorker;

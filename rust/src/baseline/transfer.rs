@@ -1,0 +1,252 @@
+//! Explicit data-transfer layer of the distributed baseline.
+//!
+//! Trajectory batches and parameter broadcasts are serialized to a compact
+//! little-endian wire format and copied, exactly like a real
+//! worker↔trainer hop (gRPC/plasma/shared-fs in Acme/IMPALA-style
+//! systems).  The byte volume is reported so the Fig 3 harness can relate
+//! transfer time to payload size.
+
+use anyhow::{bail, Result};
+
+use crate::nn::Mlp;
+
+/// One worker's roll-out product: `t` steps × `n_envs` envs × `n_agents`
+/// agents, layout `[step][env][agent]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrajectoryBatch {
+    pub t: u32,
+    pub n_envs: u32,
+    pub n_agents: u32,
+    pub obs_dim: u32,
+    /// (t * n_envs * n_agents * obs_dim)
+    pub obs: Vec<f32>,
+    /// (t * n_envs * n_agents)
+    pub actions: Vec<u32>,
+    /// (t * n_envs * n_agents)
+    pub rewards: Vec<f32>,
+    /// (t * n_envs) — env-level episode end (terminated or truncated)
+    pub dones: Vec<f32>,
+    /// (n_envs * n_agents * obs_dim) — observations after the last step,
+    /// for bootstrap value estimation at the trainer
+    pub bootstrap_obs: Vec<f32>,
+    /// (n_envs * n_agents) — completed-episode returns for telemetry
+    pub finished_returns: Vec<f32>,
+    pub finished_lens: Vec<f32>,
+    pub finished_count: u32,
+}
+
+const MAGIC: u32 = 0x57535442; // "WSTB"
+
+fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f32s(out: &mut Vec<u8>, vs: &[f32]) {
+    push_u32(out, vs.len() as u32);
+    for v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn push_u32s(out: &mut Vec<u8>, vs: &[u32]) {
+    push_u32(out, vs.len() as u32);
+    for v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn u32(&mut self) -> Result<u32> {
+        if self.pos + 4 > self.b.len() {
+            bail!("truncated buffer at {}", self.pos);
+        }
+        let v = u32::from_le_bytes(
+            self.b[self.pos..self.pos + 4].try_into().unwrap());
+        self.pos += 4;
+        Ok(v)
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        if self.pos + 4 * n > self.b.len() {
+            bail!("truncated f32 array of {n}");
+        }
+        let out = self.b[self.pos..self.pos + 4 * n]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        self.pos += 4 * n;
+        Ok(out)
+    }
+
+    fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.u32()? as usize;
+        if self.pos + 4 * n > self.b.len() {
+            bail!("truncated u32 array of {n}");
+        }
+        let out = self.b[self.pos..self.pos + 4 * n]
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        self.pos += 4 * n;
+        Ok(out)
+    }
+}
+
+impl TrajectoryBatch {
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(
+            24 + 4 * (self.obs.len() + self.actions.len()
+                      + self.rewards.len() + self.dones.len()
+                      + self.finished_returns.len()
+                      + self.finished_lens.len()));
+        push_u32(&mut out, MAGIC);
+        push_u32(&mut out, self.t);
+        push_u32(&mut out, self.n_envs);
+        push_u32(&mut out, self.n_agents);
+        push_u32(&mut out, self.obs_dim);
+        push_u32(&mut out, self.finished_count);
+        push_f32s(&mut out, &self.obs);
+        push_f32s(&mut out, &self.bootstrap_obs);
+        push_u32s(&mut out, &self.actions);
+        push_f32s(&mut out, &self.rewards);
+        push_f32s(&mut out, &self.dones);
+        push_f32s(&mut out, &self.finished_returns);
+        push_f32s(&mut out, &self.finished_lens);
+        out
+    }
+
+    pub fn deserialize(bytes: &[u8]) -> Result<TrajectoryBatch> {
+        let mut r = Reader { b: bytes, pos: 0 };
+        if r.u32()? != MAGIC {
+            bail!("bad trajectory magic");
+        }
+        let t = r.u32()?;
+        let n_envs = r.u32()?;
+        let n_agents = r.u32()?;
+        let obs_dim = r.u32()?;
+        let finished_count = r.u32()?;
+        let batch = TrajectoryBatch {
+            t,
+            n_envs,
+            n_agents,
+            obs_dim,
+            finished_count,
+            obs: r.f32s()?,
+            bootstrap_obs: r.f32s()?,
+            actions: r.u32s()?,
+            rewards: r.f32s()?,
+            dones: r.f32s()?,
+            finished_returns: r.f32s()?,
+            finished_lens: r.f32s()?,
+        };
+        let trans = (t * n_envs * n_agents) as usize;
+        let rows = (n_envs * n_agents) as usize;
+        if batch.obs.len() != trans * obs_dim as usize
+            || batch.bootstrap_obs.len() != rows * obs_dim as usize
+            || batch.actions.len() != trans
+            || batch.rewards.len() != trans
+            || batch.dones.len() != (t * n_envs) as usize
+        {
+            bail!("inconsistent trajectory arity");
+        }
+        Ok(batch)
+    }
+
+    pub fn transitions(&self) -> usize {
+        (self.t * self.n_envs * self.n_agents) as usize
+    }
+}
+
+/// Serialize the full parameter set of a policy (trainer -> worker hop).
+pub fn serialize_params(mlp: &Mlp) -> Vec<u8> {
+    let mut out = Vec::new();
+    push_u32(&mut out, MAGIC ^ 1);
+    for v in [&mlp.w1, &mlp.b1, &mlp.w2, &mlp.b2, &mlp.wp, &mlp.bp,
+              &mlp.wv, &mlp.bv] {
+        push_f32s(&mut out, v);
+    }
+    out
+}
+
+/// Load a parameter broadcast into a worker's local policy copy.
+pub fn deserialize_params_into(mlp: &mut Mlp, bytes: &[u8]) -> Result<()> {
+    let mut r = Reader { b: bytes, pos: 0 };
+    if r.u32()? != MAGIC ^ 1 {
+        bail!("bad params magic");
+    }
+    for slot in mlp.params_mut() {
+        let got = r.f32s()?;
+        if got.len() != slot.len() {
+            bail!("param length {} != {}", got.len(), slot.len());
+        }
+        *slot = got;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn sample_batch() -> TrajectoryBatch {
+        TrajectoryBatch {
+            t: 2,
+            n_envs: 3,
+            n_agents: 1,
+            obs_dim: 4,
+            obs: (0..24).map(|i| i as f32).collect(),
+            bootstrap_obs: (0..12).map(|i| i as f32).collect(),
+            actions: (0..6).collect(),
+            rewards: (0..6).map(|i| -(i as f32)).collect(),
+            dones: vec![0.0, 1.0, 0.0, 0.0, 0.0, 1.0],
+            finished_returns: vec![10.0],
+            finished_lens: vec![5.0],
+            finished_count: 1,
+        }
+    }
+
+    #[test]
+    fn trajectory_roundtrip() {
+        let b = sample_batch();
+        let bytes = b.serialize();
+        let back = TrajectoryBatch::deserialize(&bytes).unwrap();
+        assert_eq!(b, back);
+        assert_eq!(back.transitions(), 6);
+    }
+
+    #[test]
+    fn corrupt_buffers_rejected() {
+        let b = sample_batch();
+        let bytes = b.serialize();
+        assert!(TrajectoryBatch::deserialize(&bytes[..10]).is_err());
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xff;
+        assert!(TrajectoryBatch::deserialize(&bad).is_err());
+        // inconsistent arity: claim more steps than data carries
+        let mut bad2 = bytes;
+        bad2[4..8].copy_from_slice(&100u32.to_le_bytes());
+        assert!(TrajectoryBatch::deserialize(&bad2).is_err());
+    }
+
+    #[test]
+    fn params_roundtrip() {
+        let mut rng = Pcg64::new(0);
+        let src = Mlp::init(4, 8, 3, &mut rng);
+        let mut dst = Mlp::init(4, 8, 3, &mut rng);
+        assert_ne!(src.w1, dst.w1);
+        deserialize_params_into(&mut dst, &serialize_params(&src)).unwrap();
+        assert_eq!(src.w1, dst.w1);
+        assert_eq!(src.bv, dst.bv);
+        // shape mismatch is an error
+        let mut wrong = Mlp::init(5, 8, 3, &mut rng);
+        assert!(deserialize_params_into(&mut wrong,
+                                        &serialize_params(&src)).is_err());
+    }
+}

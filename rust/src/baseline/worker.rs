@@ -1,0 +1,164 @@
+//! Roll-out worker of the distributed baseline.
+//!
+//! Owns a batch of CPU environments and a local policy copy; each round it
+//! receives a parameter broadcast, simulates `t` steps per env (sampling
+//! actions from its local net), and produces a [`TrajectoryBatch`].
+
+use crate::envs::CpuEnv;
+use crate::nn::mlp::Cache;
+use crate::nn::Mlp;
+use crate::util::Pcg64;
+
+use super::transfer::TrajectoryBatch;
+
+/// One worker with `n_envs` environment instances.
+pub struct RolloutWorker {
+    pub envs: Vec<Box<dyn CpuEnv>>,
+    pub policy: Mlp,
+    rng: Pcg64,
+    ep_steps: Vec<usize>,
+    ep_returns: Vec<f32>, // per env, summed over agents (mean-agent return)
+    cache: Cache,
+}
+
+impl RolloutWorker {
+    pub fn new(mut envs: Vec<Box<dyn CpuEnv>>, policy: Mlp, seed: u64)
+               -> RolloutWorker {
+        let mut rng = Pcg64::with_stream(seed, 0xbeef);
+        for env in envs.iter_mut() {
+            env.reset(&mut rng);
+        }
+        let n = envs.len();
+        RolloutWorker {
+            envs,
+            policy,
+            rng,
+            ep_steps: vec![0; n],
+            ep_returns: vec![0.0; n],
+            cache: Cache::default(),
+        }
+    }
+
+    /// Simulate `t` steps in every env; auto-reset on done.
+    pub fn rollout(&mut self, t: usize) -> TrajectoryBatch {
+        let n_envs = self.envs.len();
+        let n_agents = self.envs[0].n_agents();
+        let obs_dim = self.envs[0].obs_dim();
+        let max_steps = self.envs[0].max_steps();
+        let n_actions = self.envs[0].n_actions();
+        let rows = n_envs * n_agents;
+
+        let mut batch = TrajectoryBatch {
+            t: t as u32,
+            n_envs: n_envs as u32,
+            n_agents: n_agents as u32,
+            obs_dim: obs_dim as u32,
+            obs: Vec::with_capacity(t * rows * obs_dim),
+            actions: Vec::with_capacity(t * rows),
+            rewards: Vec::with_capacity(t * rows),
+            dones: Vec::with_capacity(t * n_envs),
+            bootstrap_obs: vec![0f32; rows * obs_dim],
+            finished_returns: Vec::new(),
+            finished_lens: Vec::new(),
+            finished_count: 0,
+        };
+        let mut obs_step = vec![0f32; rows * obs_dim];
+        let mut rewards = vec![0f32; n_agents];
+        let mut actions = vec![0usize; n_agents];
+
+        for _ in 0..t {
+            // gather all observations for this step
+            for (e, env) in self.envs.iter().enumerate() {
+                env.write_obs(
+                    &mut obs_step[e * n_agents * obs_dim
+                        ..(e + 1) * n_agents * obs_dim]);
+            }
+            batch.obs.extend_from_slice(&obs_step);
+            // policy forward over the whole step batch
+            self.policy.forward(&obs_step, rows, &mut self.cache);
+            for e in 0..n_envs {
+                for a in 0..n_agents {
+                    let row = e * n_agents + a;
+                    let lp = &self.cache.logp
+                        [row * n_actions..(row + 1) * n_actions];
+                    actions[a] = self.rng.categorical(lp);
+                    batch.actions.push(actions[a] as u32);
+                }
+                let terminated =
+                    self.envs[e].step(&actions, &mut self.rng, &mut rewards);
+                batch.rewards.extend_from_slice(&rewards);
+                self.ep_steps[e] += 1;
+                self.ep_returns[e] += rewards.iter().sum::<f32>()
+                    / n_agents as f32;
+                let done = terminated || self.ep_steps[e] >= max_steps;
+                batch.dones.push(if done { 1.0 } else { 0.0 });
+                if done {
+                    batch.finished_returns.push(self.ep_returns[e]);
+                    batch.finished_lens.push(self.ep_steps[e] as f32);
+                    batch.finished_count += 1;
+                    self.envs[e].reset(&mut self.rng);
+                    self.ep_steps[e] = 0;
+                    self.ep_returns[e] = 0.0;
+                }
+            }
+        }
+        // observations after the final step, for trainer-side bootstrap
+        for (e, env) in self.envs.iter().enumerate() {
+            env.write_obs(&mut batch.bootstrap_obs
+                [e * n_agents * obs_dim..(e + 1) * n_agents * obs_dim]);
+        }
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::make_cpu_env;
+
+    fn worker(env: &str, n_envs: usize) -> RolloutWorker {
+        let envs: Vec<_> = (0..n_envs)
+            .map(|_| make_cpu_env(env).unwrap())
+            .collect();
+        let mut rng = Pcg64::new(0);
+        let policy = Mlp::init(envs[0].obs_dim(), 16, envs[0].n_actions(),
+                               &mut rng);
+        RolloutWorker::new(envs, policy, 1)
+    }
+
+    #[test]
+    fn batch_arity_matches_contract() {
+        let mut w = worker("cartpole", 3);
+        let b = w.rollout(5);
+        assert_eq!(b.t, 5);
+        assert_eq!(b.n_envs, 3);
+        assert_eq!(b.n_agents, 1);
+        assert_eq!(b.obs.len(), 5 * 3 * 4);
+        assert_eq!(b.actions.len(), 5 * 3);
+        assert_eq!(b.rewards.len(), 5 * 3);
+        assert_eq!(b.dones.len(), 5 * 3);
+        assert!(b.actions.iter().all(|&a| a < 2));
+    }
+
+    #[test]
+    fn multi_agent_batch_shapes() {
+        let mut w = worker("covid_econ", 2);
+        let b = w.rollout(3);
+        assert_eq!(b.n_agents, 52);
+        assert_eq!(b.obs.len(), 3 * 2 * 52 * 7);
+        assert_eq!(b.rewards.len(), 3 * 2 * 52);
+        assert_eq!(b.dones.len(), 3 * 2);
+    }
+
+    #[test]
+    fn cartpole_episodes_finish_under_random_policy() {
+        let mut w = worker("cartpole", 4);
+        let b = w.rollout(200);
+        assert!(b.finished_count > 0);
+        assert_eq!(b.finished_returns.len(), b.finished_count as usize);
+        // cartpole episodic return == episode length
+        for (r, l) in b.finished_returns.iter().zip(&b.finished_lens) {
+            assert!((r - l).abs() < 1e-4);
+        }
+    }
+}

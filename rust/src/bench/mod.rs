@@ -1,0 +1,112 @@
+//! In-house micro-benchmark framework (criterion is not available in the
+//! offline build).  Provides warm-up, timed sampling, and a throughput
+//! report; `benches/*.rs` are `harness = false` binaries built on this.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>,
+    pub summary: Summary,
+    /// items (steps, iterations...) processed per sample, for throughput
+    pub items_per_sample: f64,
+}
+
+impl BenchResult {
+    pub fn items_per_sec(&self) -> f64 {
+        self.items_per_sample / self.summary.mean
+    }
+
+    pub fn report(&self) -> String {
+        let s = &self.summary;
+        let mut line = format!(
+            "{:<44} {:>10.3} ms ±{:>8.3} (p50 {:.3}, p95 {:.3}, n={})",
+            self.name,
+            s.mean * 1e3,
+            s.std * 1e3,
+            s.p50 * 1e3,
+            s.p95 * 1e3,
+            s.n
+        );
+        if self.items_per_sample > 0.0 {
+            line.push_str(&format!(
+                "  [{} items/s]",
+                crate::util::csv::human(self.items_per_sec())
+            ));
+        }
+        line
+    }
+}
+
+/// Benchmark runner with fixed warm-up and sample counts.
+pub struct Bench {
+    pub warmup: usize,
+    pub samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 2, samples: 10 }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, samples: usize) -> Bench {
+        Bench { warmup, samples }
+    }
+
+    /// Quick-mode settings from the environment (`WARPSCI_BENCH_FAST=1`):
+    /// used by `cargo bench` smoke runs in CI-like settings.
+    pub fn from_env() -> Bench {
+        if std::env::var("WARPSCI_BENCH_FAST").as_deref() == Ok("1") {
+            Bench::new(1, 3)
+        } else {
+            Bench::default()
+        }
+    }
+
+    /// Run `f` repeatedly; each call processes `items` items.
+    pub fn run<F: FnMut()>(&self, name: &str, items: f64, mut f: F)
+                           -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let summary = Summary::of(&samples);
+        BenchResult {
+            name: name.to_string(),
+            samples,
+            summary,
+            items_per_sample: items,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_counts_calls_and_reports_throughput() {
+        let mut calls = 0;
+        let b = Bench::new(1, 4);
+        let r = b.run("busy", 100.0, || {
+            calls += 1;
+            std::hint::black_box((0..2000).sum::<u64>());
+        });
+        assert_eq!(calls, 5); // warmup + samples
+        assert_eq!(r.samples.len(), 4);
+        assert!(r.summary.mean > 0.0);
+        assert!(r.items_per_sec() > 0.0);
+        assert!(r.report().contains("busy"));
+    }
+}

@@ -1,0 +1,176 @@
+//! Run configuration: TOML-subset parser + typed configs.
+//!
+//! The same `configs/*.toml` files drive both the rust coordinator and
+//! (through python's stdlib `tomllib`) the AOT pipeline, so a run is fully
+//! described by one file.  The parser supports the subset we use:
+//! `[section]` headers, scalar keys (string/int/float/bool) and flat arrays.
+
+pub mod parser;
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+pub use parser::TomlValue;
+
+/// A training / benchmark run description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunConfig {
+    /// Environment name as registered in python (`cartpole`, `acrobot`,
+    /// `pendulum`, `covid_econ`, `catalysis_lh`, `catalysis_er`).
+    pub env: String,
+    /// Concurrent environment instances (the paper's headline axis).
+    pub n_envs: usize,
+    /// Roll-out length per iteration (baked into the artifact).
+    pub t: usize,
+    /// Training iterations to run.
+    pub iters: usize,
+    /// RNG seed.
+    pub seed: u64,
+    /// Fetch metrics every k iterations (host transfer cadence).
+    pub metrics_every: usize,
+    /// Data-parallel shards (the paper's multi-GPU axis).
+    pub shards: usize,
+    /// Average shard parameters every k iterations.
+    pub sync_every: usize,
+    /// Stop early once the episodic-return EMA reaches this value.
+    pub target_return: Option<f64>,
+    /// Emit per-iteration CSV to this path.
+    pub log_csv: Option<String>,
+    /// Artifact tag override (defaults to `{env}_n{n_envs}_t{t}`).
+    pub tag: Option<String>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            env: "cartpole".into(),
+            n_envs: 1024,
+            t: 32,
+            iters: 100,
+            seed: 0,
+            metrics_every: 1,
+            shards: 1,
+            sync_every: 1,
+            target_return: None,
+            log_csv: None,
+            tag: None,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Artifact tag for this run (must exist under `artifacts/`).
+    pub fn artifact_tag(&self) -> String {
+        self.tag
+            .clone()
+            .unwrap_or_else(|| format!("{}_n{}_t{}", self.env, self.n_envs, self.t))
+    }
+
+    pub fn from_file(path: &Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_toml_str(&text)
+            .with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<RunConfig> {
+        let doc = parser::parse(text)?;
+        let mut cfg = RunConfig::default();
+        if let Some(v) = doc.get("env.name") {
+            cfg.env = v.as_str()?.to_string();
+        }
+        if let Some(v) = doc.get("env.n_envs") {
+            cfg.n_envs = v.as_int()? as usize;
+        }
+        if let Some(v) = doc.get("rollout.t") {
+            cfg.t = v.as_int()? as usize;
+        }
+        if let Some(v) = doc.get("train.iters") {
+            cfg.iters = v.as_int()? as usize;
+        }
+        if let Some(v) = doc.get("train.seed") {
+            cfg.seed = v.as_int()? as u64;
+        }
+        if let Some(v) = doc.get("train.metrics_every") {
+            cfg.metrics_every = (v.as_int()? as usize).max(1);
+        }
+        if let Some(v) = doc.get("train.target_return") {
+            cfg.target_return = Some(v.as_float()?);
+        }
+        if let Some(v) = doc.get("train.log_csv") {
+            cfg.log_csv = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = doc.get("parallel.shards") {
+            cfg.shards = (v.as_int()? as usize).max(1);
+        }
+        if let Some(v) = doc.get("parallel.sync_every") {
+            cfg.sync_every = (v.as_int()? as usize).max(1);
+        }
+        if let Some(v) = doc.get("artifact.tag") {
+            cfg.tag = Some(v.as_str()?.to_string());
+        }
+        if cfg.n_envs == 0 || cfg.t == 0 {
+            return Err(anyhow!("n_envs and t must be positive"));
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_fill_missing_sections() {
+        let cfg = RunConfig::from_toml_str("[env]\nname = \"acrobot\"\n")
+            .unwrap();
+        assert_eq!(cfg.env, "acrobot");
+        assert_eq!(cfg.n_envs, 1024);
+        assert_eq!(cfg.artifact_tag(), "acrobot_n1024_t32");
+    }
+
+    #[test]
+    fn full_config_parses() {
+        let text = r#"
+# a comment
+[env]
+name = "covid_econ"
+n_envs = 60
+
+[rollout]
+t = 13
+
+[train]
+iters = 500
+seed = 3
+metrics_every = 5
+target_return = 12.5
+log_csv = "out/run.csv"
+
+[parallel]
+shards = 4
+sync_every = 2
+
+[artifact]
+tag = "covid_econ_n60_t13"
+"#;
+        let cfg = RunConfig::from_toml_str(text).unwrap();
+        assert_eq!(cfg.env, "covid_econ");
+        assert_eq!(cfg.n_envs, 60);
+        assert_eq!(cfg.t, 13);
+        assert_eq!(cfg.iters, 500);
+        assert_eq!(cfg.seed, 3);
+        assert_eq!(cfg.metrics_every, 5);
+        assert_eq!(cfg.target_return, Some(12.5));
+        assert_eq!(cfg.log_csv.as_deref(), Some("out/run.csv"));
+        assert_eq!(cfg.shards, 4);
+        assert_eq!(cfg.sync_every, 2);
+        assert_eq!(cfg.artifact_tag(), "covid_econ_n60_t13");
+    }
+
+    #[test]
+    fn zero_envs_rejected() {
+        assert!(RunConfig::from_toml_str("[env]\nn_envs = 0\n").is_err());
+    }
+}

@@ -1,0 +1,248 @@
+//! TOML-subset parser (offline build: no `toml` crate available).
+//!
+//! Supported grammar — everything the repo's `configs/*.toml` use:
+//! `[section]` / `[a.b]` headers, `key = value` with string / integer /
+//! float / bool / homogeneous array values, `#` comments, blank lines.
+//! Keys are exposed flattened as `"section.key"`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// A parsed TOML scalar or array.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            TomlValue::Int(i) => Ok(*i),
+            _ => bail!("expected integer, got {self:?}"),
+        }
+    }
+
+    /// Accepts both `1.5` and `2` (ints widen to float).
+    pub fn as_float(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            _ => bail!("expected float, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+}
+
+/// Flattened `section.key -> value` document.
+#[derive(Debug, Default, Clone)]
+pub struct TomlDoc {
+    map: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn get(&self, flat_key: &str) -> Option<&TomlValue> {
+        self.map.get(flat_key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<TomlDoc> {
+    let mut doc = TomlDoc::default();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow!("line {}: unterminated section",
+                                       lineno + 1))?
+                .trim();
+            if name.is_empty() {
+                bail!("line {}: empty section name", lineno + 1);
+            }
+            section = name.to_string();
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| {
+            anyhow!("line {}: expected key = value", lineno + 1)
+        })?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let value = parse_value(line[eq + 1..].trim())
+            .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+        let flat = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        if doc.map.insert(flat.clone(), value).is_some() {
+            bail!("line {}: duplicate key {flat}", lineno + 1);
+        }
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside a quoted string does not start a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<TomlValue> {
+    if text.is_empty() {
+        bail!("missing value");
+    }
+    if let Some(inner) = text.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("unterminated string {text:?}"))?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"")
+                                      .replace("\\\\", "\\")
+                                      .replace("\\n", "\n")));
+    }
+    if let Some(inner) = text.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated array {text:?}"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let items: Result<Vec<TomlValue>> = split_top_level(inner)
+            .into_iter()
+            .map(|s| parse_value(s.trim()))
+            .collect();
+        return Ok(TomlValue::Arr(items?));
+    }
+    match text {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    let clean = text.replace('_', "");
+    if !clean.contains('.') && !clean.contains('e') && !clean.contains('E') {
+        if let Ok(i) = clean.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value {text:?}")
+}
+
+/// Split "a, b, c" on commas not nested in quotes.
+fn split_top_level(text: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in text.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                out.push(&text[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&text[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        let d = parse("a = 1\nb = 2.5\nc = \"x\"\nd = true\ne = 1e3\n")
+            .unwrap();
+        assert_eq!(d.get("a"), Some(&TomlValue::Int(1)));
+        assert_eq!(d.get("b"), Some(&TomlValue::Float(2.5)));
+        assert_eq!(d.get("c"), Some(&TomlValue::Str("x".into())));
+        assert_eq!(d.get("d"), Some(&TomlValue::Bool(true)));
+        assert_eq!(d.get("e"), Some(&TomlValue::Float(1000.0)));
+    }
+
+    #[test]
+    fn sections_flatten() {
+        let d = parse("[env]\nname = \"cartpole\"\n[a.b]\nk = 2\n").unwrap();
+        assert_eq!(d.get("env.name").unwrap().as_str().unwrap(), "cartpole");
+        assert_eq!(d.get("a.b.k").unwrap().as_int().unwrap(), 2);
+    }
+
+    #[test]
+    fn comments_and_underscores() {
+        let d = parse("x = 10_000 # ten thousand\ns = \"a#b\"\n").unwrap();
+        assert_eq!(d.get("x").unwrap().as_int().unwrap(), 10_000);
+        assert_eq!(d.get("s").unwrap().as_str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn arrays() {
+        let d = parse("xs = [1, 2, 3]\nys = [\"a\", \"b\"]\nzs = []\n")
+            .unwrap();
+        assert_eq!(
+            d.get("xs"),
+            Some(&TomlValue::Arr(vec![
+                TomlValue::Int(1),
+                TomlValue::Int(2),
+                TomlValue::Int(3)
+            ]))
+        );
+        assert_eq!(d.get("ys").unwrap(),
+                   &TomlValue::Arr(vec![TomlValue::Str("a".into()),
+                                        TomlValue::Str("b".into())]));
+        assert_eq!(d.get("zs"), Some(&TomlValue::Arr(vec![])));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("[unclosed\n").is_err());
+        assert!(parse("novalue =\n").is_err());
+        assert!(parse("a = 1\na = 2\n").is_err());
+        assert!(parse("x = \"unterminated\n").is_err());
+        assert!(parse("x = wat\n").is_err());
+    }
+
+    #[test]
+    fn int_widens_to_float() {
+        let d = parse("x = 2\n").unwrap();
+        assert_eq!(d.get("x").unwrap().as_float().unwrap(), 2.0);
+    }
+}

@@ -1,0 +1,101 @@
+//! Convergence tracking: target detection + plateau detection.
+//!
+//! Used by the Fig 2(b,c)/Fig 4 harness to report time-to-convergence per
+//! concurrency level, and by `warpsci train` for early stopping.
+
+/// Sliding-window convergence detector over the episodic-return EMA.
+#[derive(Debug, Clone)]
+pub struct ConvergenceTracker {
+    target: Option<f64>,
+    window: usize,
+    tol: f64,
+    history: Vec<f64>,
+    reached_at: Option<f64>,
+}
+
+impl ConvergenceTracker {
+    /// `target`: return level counting as "global optimum reached"
+    /// (e.g. ~500 for CartPole-v1, ~-100 for Acrobot-v1).
+    /// `window`/`tol`: plateau = last `window` values within `tol` spread.
+    pub fn new(target: Option<f64>, window: usize, tol: f64)
+               -> ConvergenceTracker {
+        ConvergenceTracker {
+            target,
+            window: window.max(2),
+            tol,
+            history: Vec::new(),
+            reached_at: None,
+        }
+    }
+
+    /// Feed one (wall_secs, return) observation.
+    pub fn push(&mut self, wall_secs: f64, ret: f64) {
+        self.history.push(ret);
+        if self.reached_at.is_none() {
+            if let Some(t) = self.target {
+                if ret >= t {
+                    self.reached_at = Some(wall_secs);
+                }
+            }
+        }
+    }
+
+    /// Wall-clock seconds at which the target was first reached.
+    pub fn reached_at(&self) -> Option<f64> {
+        self.reached_at
+    }
+
+    /// True if the recent return history has plateaued.
+    pub fn plateaued(&self) -> bool {
+        if self.history.len() < self.window {
+            return false;
+        }
+        let tail = &self.history[self.history.len() - self.window..];
+        let lo = tail.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = tail.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        hi - lo <= self.tol
+    }
+
+    /// Best return seen so far.
+    pub fn best(&self) -> Option<f64> {
+        self.history.iter().cloned().reduce(f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detects_target_crossing_once() {
+        let mut c = ConvergenceTracker::new(Some(100.0), 3, 1.0);
+        c.push(1.0, 50.0);
+        assert_eq!(c.reached_at(), None);
+        c.push(2.0, 120.0);
+        assert_eq!(c.reached_at(), Some(2.0));
+        c.push(3.0, 130.0);
+        assert_eq!(c.reached_at(), Some(2.0)); // first crossing sticks
+    }
+
+    #[test]
+    fn plateau_needs_full_window() {
+        let mut c = ConvergenceTracker::new(None, 3, 0.5);
+        c.push(0.0, 10.0);
+        c.push(1.0, 10.1);
+        assert!(!c.plateaued());
+        c.push(2.0, 10.2);
+        assert!(c.plateaued());
+        c.push(3.0, 20.0);
+        assert!(!c.plateaued());
+    }
+
+    #[test]
+    fn best_tracks_max() {
+        let mut c = ConvergenceTracker::new(None, 2, 0.1);
+        assert_eq!(c.best(), None);
+        c.push(0.0, 1.0);
+        c.push(1.0, 5.0);
+        c.push(2.0, 3.0);
+        assert_eq!(c.best(), Some(5.0));
+    }
+}

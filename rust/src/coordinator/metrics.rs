@@ -1,0 +1,156 @@
+//! Metric telemetry: decoded metric rows + run history + CSV logging.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Manifest;
+use crate::util::csv::CsvWriter;
+
+/// One decoded metrics fetch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricRow {
+    pub wall_secs: f64,
+    pub iter: f64,
+    pub env_steps: f64,
+    pub ep_return_ema: f64,
+    pub ep_len_ema: f64,
+    pub episodes_done: f64,
+    pub pi_loss: f64,
+    pub v_loss: f64,
+    pub entropy: f64,
+    pub grad_norm: f64,
+    pub reward_mean: f64,
+    pub value_mean: f64,
+}
+
+impl MetricRow {
+    /// Decode the raw metrics vector using the manifest's name ordering.
+    pub fn decode(manifest: &Manifest, raw: &[f32], wall_secs: f64)
+                  -> Result<MetricRow> {
+        if raw.len() != manifest.metrics.len() {
+            bail!("metrics vector len {} != manifest {}", raw.len(),
+                  manifest.metrics.len());
+        }
+        let get = |name: &str| -> Result<f64> {
+            Ok(raw[manifest.metric_index(name)?] as f64)
+        };
+        Ok(MetricRow {
+            wall_secs,
+            iter: get("iter")?,
+            env_steps: get("env_steps")?,
+            ep_return_ema: get("ep_return_ema")?,
+            ep_len_ema: get("ep_len_ema")?,
+            episodes_done: get("episodes_done")?,
+            pi_loss: get("pi_loss")?,
+            v_loss: get("v_loss")?,
+            entropy: get("entropy")?,
+            grad_norm: get("grad_norm")?,
+            reward_mean: get("reward_mean")?,
+            value_mean: get("value_mean")?,
+        })
+    }
+
+    pub const CSV_HEADER: [&'static str; 12] = [
+        "wall_secs", "iter", "env_steps", "ep_return_ema", "ep_len_ema",
+        "episodes_done", "pi_loss", "v_loss", "entropy", "grad_norm",
+        "reward_mean", "value_mean",
+    ];
+
+    pub fn csv_fields(&self) -> [f64; 12] {
+        [self.wall_secs, self.iter, self.env_steps, self.ep_return_ema,
+         self.ep_len_ema, self.episodes_done, self.pi_loss, self.v_loss,
+         self.entropy, self.grad_norm, self.reward_mean, self.value_mean]
+    }
+}
+
+/// In-memory metric history with optional CSV sink.
+pub struct MetricsLog {
+    pub rows: Vec<MetricRow>,
+    csv: Option<CsvWriter>,
+}
+
+impl MetricsLog {
+    pub fn new(csv_path: Option<&Path>) -> Result<MetricsLog> {
+        let csv = match csv_path {
+            Some(p) => Some(CsvWriter::create(p, &MetricRow::CSV_HEADER)?),
+            None => None,
+        };
+        Ok(MetricsLog { rows: Vec::new(), csv })
+    }
+
+    pub fn push(&mut self, row: MetricRow) -> Result<()> {
+        if let Some(csv) = &mut self.csv {
+            csv.row_f64(&row.csv_fields())?;
+        }
+        self.rows.push(row);
+        Ok(())
+    }
+
+    pub fn last(&self) -> Option<&MetricRow> {
+        self.rows.last()
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        if let Some(csv) = &mut self.csv {
+            csv.flush()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Json;
+
+    fn manifest() -> Manifest {
+        let j = Json::parse(&crate::runtime::manifest::tests::
+            sample_manifest_json()).unwrap();
+        Manifest::from_json(&j).unwrap()
+    }
+
+    #[test]
+    fn decode_uses_manifest_order() {
+        // sample manifest's metrics = ["iter", "env_steps"]; decode of the
+        // full row requires all names, so expect an error here
+        let m = manifest();
+        assert!(MetricRow::decode(&m, &[1.0, 2.0], 0.1).is_err());
+    }
+
+    #[test]
+    fn decode_full_metrics() {
+        let mut m = manifest();
+        m.metrics = vec![
+            "iter", "env_steps", "ep_return_ema", "ep_len_ema",
+            "episodes_done", "pi_loss", "v_loss", "entropy", "grad_norm",
+            "reward_mean", "value_mean", "adam_t",
+        ].into_iter().map(String::from).collect();
+        let raw: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let row = MetricRow::decode(&m, &raw, 3.5).unwrap();
+        assert_eq!(row.iter, 0.0);
+        assert_eq!(row.env_steps, 1.0);
+        assert_eq!(row.ep_return_ema, 2.0);
+        assert_eq!(row.value_mean, 10.0);
+        assert_eq!(row.wall_secs, 3.5);
+    }
+
+    #[test]
+    fn log_appends_and_writes_csv() {
+        let mut m = manifest();
+        m.metrics = MetricRow::CSV_HEADER[1..].iter()
+            .map(|s| s.to_string()).chain(["adam_t".to_string()]).collect();
+        let dir = std::env::temp_dir().join("warpsci_metrics_test");
+        let path = dir.join("m.csv");
+        let mut log = MetricsLog::new(Some(&path)).unwrap();
+        let raw: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let row = MetricRow::decode(&m, &raw, 1.0).unwrap();
+        log.push(row.clone()).unwrap();
+        log.flush().unwrap();
+        assert_eq!(log.last(), Some(&row));
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("wall_secs,iter,"));
+        assert_eq!(text.lines().count(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,15 @@
+//! The WarpSci coordinator: the paper's system contribution, in rust.
+//!
+//! Owns the training event loop over the device-resident unified data
+//! store, metric telemetry, convergence tracking, and data-parallel
+//! multi-shard orchestration (the paper's multi-GPU axis).
+
+pub mod convergence;
+pub mod metrics;
+pub mod multi_device;
+pub mod trainer;
+
+pub use convergence::ConvergenceTracker;
+pub use metrics::{MetricRow, MetricsLog};
+pub use multi_device::MultiShardTrainer;
+pub use trainer::{RunStats, Trainer, TransferMode};

@@ -1,0 +1,263 @@
+//! The training event loop: chained `execute_b` over the resident store.
+//!
+//! This is the paper's architecture in ~one page: after `init`, the whole
+//! RL workflow is a sequence of device-side `train_iter` executions over
+//! one flat buffer; the host only ever sees `M ≈ 12` floats of metrics
+//! every `metrics_every` iterations.
+//!
+//! [`TransferMode`] exposes the ablation used for the Fig 3 "data transfer"
+//! bar: `HostRoundTrip` deliberately downloads + re-uploads the full store
+//! every iteration — the per-step/per-batch transfer a CPU-distributed
+//! architecture pays and WarpSci deletes.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::RunConfig;
+use crate::runtime::GraphSet;
+use crate::store::Checkpoint;
+use crate::util::Timer;
+
+use super::convergence::ConvergenceTracker;
+use super::metrics::{MetricRow, MetricsLog};
+
+/// How the state buffer travels between iterations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransferMode {
+    /// WarpSci: the store never leaves the device.
+    Resident,
+    /// Ablation: full store round-trips the host every iteration
+    /// (models a distributed roll-out/trainer split).
+    HostRoundTrip,
+}
+
+/// Summary of a completed run.
+#[derive(Debug, Clone)]
+pub struct RunStats {
+    pub iters_run: usize,
+    pub env_steps: f64,
+    pub agent_steps: f64,
+    pub wall_secs: f64,
+    pub steps_per_sec: f64,
+    pub final_return: f64,
+    pub final_ep_len: f64,
+    pub reached_target_at: Option<f64>,
+    /// seconds spent in each phase: "compute", "transfer", "metrics"
+    pub phase_secs: Vec<(String, f64)>,
+}
+
+/// Single-shard trainer.
+pub struct Trainer {
+    pub graphs: GraphSet,
+    pub cfg: RunConfig,
+    pub log: MetricsLog,
+    pub timer: Timer,
+    pub mode: TransferMode,
+    state: Option<xla::PjRtBuffer>,
+    tracker: ConvergenceTracker,
+    started: Instant,
+}
+
+impl Trainer {
+    pub fn new(graphs: GraphSet, cfg: RunConfig) -> Result<Trainer> {
+        let log = MetricsLog::new(
+            cfg.log_csv.as_deref().map(Path::new))?;
+        let tracker = ConvergenceTracker::new(cfg.target_return, 8, 1e-3);
+        Ok(Trainer {
+            graphs,
+            cfg,
+            log,
+            timer: Timer::new(),
+            mode: TransferMode::Resident,
+            state: None,
+            tracker,
+            started: Instant::now(),
+        })
+    }
+
+    /// Set (or change) the early-stop target return.
+    pub fn set_target_return(&mut self, target: Option<f64>) {
+        self.cfg.target_return = target;
+        self.tracker = ConvergenceTracker::new(target, 8, 1e-3);
+    }
+
+    /// Initialize (or re-initialize) the device store from the run seed.
+    pub fn init(&mut self) -> Result<()> {
+        let state = self.graphs.init_state(self.cfg.seed)?;
+        self.state = Some(state);
+        self.started = Instant::now();
+        Ok(())
+    }
+
+    fn state(&self) -> Result<&xla::PjRtBuffer> {
+        self.state.as_ref().context("trainer not initialized — call init()")
+    }
+
+    /// One fused roll-out + update iteration (honouring the transfer mode).
+    pub fn step_train(&mut self) -> Result<()> {
+        self.step(true)
+    }
+
+    /// One roll-out-only iteration (throughput benches).
+    pub fn step_rollout(&mut self) -> Result<()> {
+        self.step(false)
+    }
+
+    fn step(&mut self, train: bool) -> Result<()> {
+        let state = self.state.take().context("not initialized")?;
+        let next = {
+            let graphs = &self.graphs;
+            let run = |s: &xla::PjRtBuffer| {
+                if train { graphs.train_iter(s) } else { graphs.rollout(s) }
+            };
+            match self.mode {
+                TransferMode::Resident => {
+                    self.timer.time("compute", || run(&state))?
+                }
+                TransferMode::HostRoundTrip => {
+                    // download store -> host, re-upload, then compute: the
+                    // transfer a distributed design pays on every exchange
+                    let host = self
+                        .timer
+                        .time("transfer", || graphs.download_state(&state))?;
+                    let back = self
+                        .timer
+                        .time("transfer", || graphs.upload_state(&host))?;
+                    self.timer.time("compute", || run(&back))?
+                }
+            }
+        };
+        self.state = Some(next);
+        Ok(())
+    }
+
+    /// Fetch + record metrics now.
+    pub fn record_metrics(&mut self) -> Result<MetricRow> {
+        let wall = self.started.elapsed().as_secs_f64();
+        let raw = {
+            let graphs = &self.graphs;
+            let state = self
+                .state
+                .as_ref()
+                .context("trainer not initialized — call init()")?;
+            self.timer.time("metrics", || graphs.metrics(state))?
+        };
+        let row = MetricRow::decode(&self.graphs.artifact.manifest, &raw, wall)?;
+        self.tracker.push(wall, row.ep_return_ema);
+        self.log.push(row.clone())?;
+        Ok(row)
+    }
+
+    /// Run the configured number of training iterations.
+    pub fn run(&mut self) -> Result<RunStats> {
+        if self.state.is_none() {
+            self.init()?;
+        }
+        let t0 = Instant::now();
+        let mut iters_run = 0;
+        for i in 0..self.cfg.iters {
+            self.step_train()?;
+            iters_run = i + 1;
+            if (i + 1) % self.cfg.metrics_every == 0 {
+                let row = self.record_metrics()?;
+                if let (Some(target), true) =
+                    (self.cfg.target_return, row.ep_return_ema.is_finite())
+                {
+                    if row.ep_return_ema >= target {
+                        break;
+                    }
+                }
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let row = self.record_metrics()?;
+        self.log.flush()?;
+        let man = &self.graphs.artifact.manifest;
+        let env_steps = iters_run as f64 * man.steps_per_iter as f64;
+        Ok(RunStats {
+            iters_run,
+            env_steps,
+            agent_steps: env_steps * man.agents_per_env as f64,
+            wall_secs: wall,
+            steps_per_sec: env_steps / wall.max(1e-9),
+            final_return: row.ep_return_ema,
+            final_ep_len: row.ep_len_ema,
+            reached_target_at: self.tracker.reached_at(),
+            phase_secs: self
+                .timer
+                .phases()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect(),
+        })
+    }
+
+    /// Pure roll-out throughput over `iters` iterations (Fig 2a / T1).
+    pub fn measure_rollout_throughput(&mut self, iters: usize)
+                                      -> Result<RunStats> {
+        if self.state.is_none() {
+            self.init()?;
+        }
+        // warm-up iteration excluded from timing
+        self.step_rollout()?;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            self.step_rollout()?;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let row = self.record_metrics()?;
+        let man = &self.graphs.artifact.manifest;
+        let env_steps = iters as f64 * man.steps_per_iter as f64;
+        Ok(RunStats {
+            iters_run: iters,
+            env_steps,
+            agent_steps: env_steps * man.agents_per_env as f64,
+            wall_secs: wall,
+            steps_per_sec: env_steps / wall.max(1e-9),
+            final_return: row.ep_return_ema,
+            final_ep_len: row.ep_len_ema,
+            reached_target_at: None,
+            phase_secs: vec![],
+        })
+    }
+
+    /// Save the current policy parameters.
+    pub fn checkpoint(&mut self, dir: &Path, name: &str) -> Result<()> {
+        let params_buf = {
+            let graphs = &self.graphs;
+            let state = self.state()?;
+            graphs.get_params(state)?
+        };
+        let params = crate::runtime::executor::buffer_to_host(&params_buf)?;
+        let iter = self.log.last().map(|r| r.iter as u64).unwrap_or(0);
+        Checkpoint {
+            tag: self.graphs.artifact.manifest.tag.clone(),
+            iter,
+            params,
+        }
+        .save(dir, name)
+    }
+
+    /// Restore policy parameters from a checkpoint into the live store.
+    pub fn restore(&mut self, ck: &Checkpoint) -> Result<()> {
+        let man = &self.graphs.artifact.manifest;
+        anyhow::ensure!(
+            ck.params.len() == man.params_size,
+            "checkpoint params {} != manifest {}",
+            ck.params.len(),
+            man.params_size
+        );
+        if self.state.is_none() {
+            self.init()?;
+        }
+        let pbuf = self
+            .graphs
+            .device
+            .client()
+            .buffer_from_host_buffer(&ck.params, &[ck.params.len()], None)?;
+        let state = self.state.take().unwrap();
+        self.state = Some(self.graphs.set_params(&state, &pbuf)?);
+        Ok(())
+    }
+}

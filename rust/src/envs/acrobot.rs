@@ -1,0 +1,174 @@
+//! Acrobot-v1 (gym classic_control, single RK4 step, "book" dynamics).
+
+use std::f32::consts::PI;
+
+use crate::util::Pcg64;
+
+use super::CpuEnv;
+
+const DT: f32 = 0.2;
+const L1: f32 = 1.0;
+const LC1: f32 = 0.5;
+const LC2: f32 = 0.5;
+const M1: f32 = 1.0;
+const M2: f32 = 1.0;
+const I1: f32 = 1.0;
+const I2: f32 = 1.0;
+const G: f32 = 9.8;
+const MAX_VEL1: f32 = 4.0 * PI;
+const MAX_VEL2: f32 = 9.0 * PI;
+
+/// Two-link underactuated pendulum state.
+#[derive(Debug, Clone, Default)]
+pub struct Acrobot {
+    pub th1: f32,
+    pub th2: f32,
+    pub dth1: f32,
+    pub dth2: f32,
+}
+
+fn dsdt(s: [f32; 4], torque: f32) -> [f32; 4] {
+    let [th1, th2, dth1, dth2] = s;
+    let d1 = M1 * LC1 * LC1
+        + M2 * (L1 * L1 + LC2 * LC2 + 2.0 * L1 * LC2 * th2.cos())
+        + I1
+        + I2;
+    let d2 = M2 * (LC2 * LC2 + L1 * LC2 * th2.cos()) + I2;
+    let phi2 = M2 * LC2 * G * (th1 + th2 - PI / 2.0).cos();
+    let phi1 = -M2 * L1 * LC2 * dth2 * dth2 * th2.sin()
+        - 2.0 * M2 * L1 * LC2 * dth2 * dth1 * th2.sin()
+        + (M1 * LC1 + M2 * L1) * G * (th1 - PI / 2.0).cos()
+        + phi2;
+    let ddth2 = (torque + d2 / d1 * phi1
+        - M2 * L1 * LC2 * dth1 * dth1 * th2.sin()
+        - phi2)
+        / (M2 * LC2 * LC2 + I2 - d2 * d2 / d1);
+    let ddth1 = -(d2 * ddth2 + phi1) / d1;
+    [dth1, dth2, ddth1, ddth2]
+}
+
+fn wrap(x: f32, lo: f32, hi: f32) -> f32 {
+    lo + (x - lo).rem_euclid(hi - lo)
+}
+
+impl Acrobot {
+    pub fn new() -> Acrobot {
+        Acrobot::default()
+    }
+
+    /// One RK4 step (mirrors `acrobot_step_ref`).
+    pub fn physics_step(&mut self, action: usize) -> (f32, bool) {
+        let torque = action as f32 - 1.0;
+        let s = [self.th1, self.th2, self.dth1, self.dth2];
+        let k1 = dsdt(s, torque);
+        let k2 = dsdt(add(s, scale(k1, DT / 2.0)), torque);
+        let k3 = dsdt(add(s, scale(k2, DT / 2.0)), torque);
+        let k4 = dsdt(add(s, scale(k3, DT)), torque);
+        let mut ns = [0f32; 4];
+        for i in 0..4 {
+            ns[i] = s[i] + DT / 6.0 * (k1[i] + 2.0 * k2[i] + 2.0 * k3[i]
+                                       + k4[i]);
+        }
+        self.th1 = wrap(ns[0], -PI, PI);
+        self.th2 = wrap(ns[1], -PI, PI);
+        self.dth1 = ns[2].clamp(-MAX_VEL1, MAX_VEL1);
+        self.dth2 = ns[3].clamp(-MAX_VEL2, MAX_VEL2);
+        let terminated =
+            -self.th1.cos() - (self.th2 + self.th1).cos() > 1.0;
+        (if terminated { 0.0 } else { -1.0 }, terminated)
+    }
+}
+
+fn add(a: [f32; 4], b: [f32; 4]) -> [f32; 4] {
+    [a[0] + b[0], a[1] + b[1], a[2] + b[2], a[3] + b[3]]
+}
+
+fn scale(a: [f32; 4], k: f32) -> [f32; 4] {
+    [a[0] * k, a[1] * k, a[2] * k, a[3] * k]
+}
+
+impl CpuEnv for Acrobot {
+    fn obs_dim(&self) -> usize {
+        6
+    }
+
+    fn n_actions(&self) -> usize {
+        3
+    }
+
+    fn max_steps(&self) -> usize {
+        500
+    }
+
+    fn reset(&mut self, rng: &mut Pcg64) {
+        self.th1 = rng.uniform(-0.1, 0.1);
+        self.th2 = rng.uniform(-0.1, 0.1);
+        self.dth1 = rng.uniform(-0.1, 0.1);
+        self.dth2 = rng.uniform(-0.1, 0.1);
+    }
+
+    fn write_obs(&self, out: &mut [f32]) {
+        out[0] = self.th1.cos();
+        out[1] = self.th1.sin();
+        out[2] = self.th2.cos();
+        out[3] = self.th2.sin();
+        out[4] = self.dth1;
+        out[5] = self.dth2;
+    }
+
+    fn step(&mut self, actions: &[usize], _rng: &mut Pcg64,
+            rewards: &mut [f32]) -> bool {
+        let (r, done) = self.physics_step(actions[0]);
+        rewards[0] = r;
+        done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Golden step from the python oracle (`ref.acrobot_step_ref`):
+    /// state [0.1, -0.2, 0.5, -1.0], action 2 (torque +1).
+    #[test]
+    fn golden_step_matches_python_oracle() {
+        let mut a = Acrobot { th1: 0.1, th2: -0.2, dth1: 0.5, dth2: -1.0 };
+        let (r, done) = a.physics_step(2);
+        assert_eq!(r, -1.0);
+        assert!(!done);
+        let expect = [0.16576695442199707f32, -0.3262913227081299,
+                      0.1423930823802948, -0.2355552315711975];
+        for (got, want) in [a.th1, a.th2, a.dth1, a.dth2].iter().zip(expect) {
+            assert!((got - want).abs() < 2e-5, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn torque_injects_motion_from_rest() {
+        let mut a = Acrobot::default();
+        for _ in 0..10 {
+            a.physics_step(2);
+        }
+        assert!(a.th1.abs() + a.dth1.abs() > 1e-3);
+    }
+
+    #[test]
+    fn angles_stay_wrapped_velocities_clamped() {
+        let mut rng = Pcg64::new(2);
+        let mut a = Acrobot::default();
+        a.reset(&mut rng);
+        for i in 0..300 {
+            a.physics_step(i % 3);
+            assert!((-PI..=PI).contains(&a.th1));
+            assert!((-PI..=PI).contains(&a.th2));
+            assert!(a.dth1.abs() <= MAX_VEL1);
+            assert!(a.dth2.abs() <= MAX_VEL2);
+        }
+    }
+
+    #[test]
+    fn goal_condition_matches_height() {
+        let a = Acrobot { th1: PI, th2: 0.0, dth1: 0.0, dth2: 0.0 };
+        assert!(-a.th1.cos() - (a.th2 + a.th1).cos() > 1.0);
+    }
+}

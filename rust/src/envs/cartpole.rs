@@ -1,0 +1,131 @@
+//! CartPole-v1 (gym classic_control, Euler integrator) — rust port.
+
+use crate::util::Pcg64;
+
+use super::CpuEnv;
+
+const GRAVITY: f32 = 9.8;
+const MASSCART: f32 = 1.0;
+const MASSPOLE: f32 = 0.1;
+const TOTAL_MASS: f32 = MASSCART + MASSPOLE;
+const LENGTH: f32 = 0.5;
+const POLEMASS_LENGTH: f32 = MASSPOLE * LENGTH;
+const FORCE_MAG: f32 = 10.0;
+const DT: f32 = 0.02;
+const X_THRESHOLD: f32 = 2.4;
+const THETA_THRESHOLD: f32 = 12.0 * 2.0 * std::f32::consts::PI / 360.0;
+
+/// Cart position/velocity + pole angle/velocity.
+#[derive(Debug, Clone, Default)]
+pub struct CartPole {
+    pub x: f32,
+    pub x_dot: f32,
+    pub theta: f32,
+    pub theta_dot: f32,
+}
+
+impl CartPole {
+    pub fn new() -> CartPole {
+        CartPole::default()
+    }
+
+    /// One deterministic physics step (mirrors `cartpole_step_ref`).
+    pub fn physics_step(&mut self, action: usize) -> (f32, bool) {
+        let force = if action == 1 { FORCE_MAG } else { -FORCE_MAG };
+        let (sinth, costh) = self.theta.sin_cos();
+        let temp = (force
+            + POLEMASS_LENGTH * self.theta_dot * self.theta_dot * sinth)
+            / TOTAL_MASS;
+        let thacc = (GRAVITY * sinth - costh * temp)
+            / (LENGTH * (4.0 / 3.0 - MASSPOLE * costh * costh / TOTAL_MASS));
+        let xacc = temp - POLEMASS_LENGTH * thacc * costh / TOTAL_MASS;
+        self.x += DT * self.x_dot;
+        self.x_dot += DT * xacc;
+        self.theta += DT * self.theta_dot;
+        self.theta_dot += DT * thacc;
+        let terminated = self.x.abs() > X_THRESHOLD
+            || self.theta.abs() > THETA_THRESHOLD;
+        (1.0, terminated)
+    }
+}
+
+impl CpuEnv for CartPole {
+    fn obs_dim(&self) -> usize {
+        4
+    }
+
+    fn n_actions(&self) -> usize {
+        2
+    }
+
+    fn max_steps(&self) -> usize {
+        500
+    }
+
+    fn reset(&mut self, rng: &mut Pcg64) {
+        self.x = rng.uniform(-0.05, 0.05);
+        self.x_dot = rng.uniform(-0.05, 0.05);
+        self.theta = rng.uniform(-0.05, 0.05);
+        self.theta_dot = rng.uniform(-0.05, 0.05);
+    }
+
+    fn write_obs(&self, out: &mut [f32]) {
+        out[0] = self.x;
+        out[1] = self.x_dot;
+        out[2] = self.theta;
+        out[3] = self.theta_dot;
+    }
+
+    fn step(&mut self, actions: &[usize], _rng: &mut Pcg64,
+            rewards: &mut [f32]) -> bool {
+        let (r, done) = self.physics_step(actions[0]);
+        rewards[0] = r;
+        done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Golden step from the python oracle (`ref.cartpole_step_ref`):
+    /// state [0.1, -0.5, 0.05, 0.3], action 1.
+    #[test]
+    fn golden_step_matches_python_oracle() {
+        let mut cp = CartPole { x: 0.1, x_dot: -0.5, theta: 0.05,
+                                theta_dot: 0.3 };
+        let (r, done) = cp.physics_step(1);
+        assert_eq!(r, 1.0);
+        assert!(!done);
+        let expect = [0.09000000357627869f32, -0.3056250810623169,
+                      0.0560000017285347, 0.023495852947235107];
+        for (got, want) in [cp.x, cp.x_dot, cp.theta, cp.theta_dot]
+            .iter()
+            .zip(expect)
+        {
+            assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn terminates_out_of_bounds() {
+        let mut cp = CartPole { x: 2.39, x_dot: 10.0, ..Default::default() };
+        let (_, done) = cp.physics_step(1);
+        assert!(done);
+        let mut cp = CartPole { theta: 0.21, ..Default::default() };
+        let (_, done) = cp.physics_step(0);
+        assert!(done);
+    }
+
+    #[test]
+    fn reset_within_gym_range() {
+        let mut rng = Pcg64::new(5);
+        let mut cp = CartPole::new();
+        for _ in 0..100 {
+            cp.reset(&mut rng);
+            for v in [cp.x, cp.x_dot, cp.theta, cp.theta_dot] {
+                assert!(v.abs() <= 0.05);
+            }
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! Catalysis reaction-path environment on the extended Mueller-Brown PES —
+//! rust port of `python/compile/envs/catalysis.py` (see that module and
+//! DESIGN.md section 7 for the substitution rationale).
+
+use std::f32::consts::PI;
+
+use crate::util::Pcg64;
+
+use super::CpuEnv;
+
+const MB_A: [f32; 4] = [-200.0, -100.0, -170.0, 15.0];
+const MB_SMALL_A: [f32; 4] = [-1.0, -1.0, -6.5, 0.7];
+const MB_B: [f32; 4] = [0.0, 0.0, 11.0, 0.6];
+const MB_C: [f32; 4] = [-10.0, -10.0, -6.5, 0.7];
+const MB_X0: [f32; 4] = [1.0, 0.0, -0.5, -1.0];
+const MB_Y0: [f32; 4] = [0.0, 0.5, 1.5, 1.0];
+
+pub const MIN_REACTANT: (f32, f32) = (0.6235, 0.0280);
+pub const MIN_PRODUCT: (f32, f32) = (-0.5582, 1.4417);
+
+const MAX_STEPS: usize = 200;
+const STEP_LEN: f32 = 0.09;
+const N_ACTIONS: usize = 8;
+const PRODUCT_RADIUS: f32 = 0.35;
+const PRODUCT_BONUS: f32 = 30.0;
+const STEP_PENALTY: f32 = 0.1;
+const ENERGY_SCALE: f32 = 30.0;
+const X_LO: f32 = -1.8;
+const X_HI: f32 = 1.3;
+const Y_LO: f32 = -0.6;
+const Y_HI: f32 = 2.2;
+const LH_BUMP_AMP: f32 = 40.0;
+const LH_BUMP_X: f32 = 0.35;
+const LH_BUMP_Y: f32 = 0.85;
+const LH_BUMP_W: f32 = 0.12;
+
+/// Reaction mechanism variant (Fig 4's two panels).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mechanism {
+    /// Langmuir-Hinshelwood: both species pre-adsorbed; co-adsorbate bump.
+    Lh,
+    /// Eley-Rideal: gas-phase approach; broader, displaced start.
+    Er,
+}
+
+/// Extended Mueller-Brown energy with per-env perturbation + optional bump.
+pub fn mb_energy(x: f32, y: f32, perturb: f32, bump_amp: f32) -> f32 {
+    let mut e = 0.0;
+    for k in 0..4 {
+        let dx = x - MB_X0[k];
+        let dy = y - MB_Y0[k];
+        e += MB_A[k]
+            * (MB_SMALL_A[k] * dx * dx + MB_B[k] * dx * dy
+                + MB_C[k] * dy * dy)
+                .exp();
+    }
+    e *= 1.0 + perturb;
+    if bump_amp != 0.0 {
+        let dx = x - LH_BUMP_X;
+        let dy = y - LH_BUMP_Y;
+        e += bump_amp * (-(dx * dx + dy * dy) / (2.0 * LH_BUMP_W)).exp();
+    }
+    e
+}
+
+/// H-atom actor walking the PES.
+#[derive(Debug, Clone)]
+pub struct Catalysis {
+    pub mechanism: Mechanism,
+    pub x: f32,
+    pub y: f32,
+    pub perturb: f32,
+}
+
+impl Catalysis {
+    pub fn new(mechanism: Mechanism) -> Catalysis {
+        Catalysis { mechanism, x: MIN_REACTANT.0, y: MIN_REACTANT.1,
+                    perturb: 0.0 }
+    }
+
+    fn bump(&self) -> f32 {
+        match self.mechanism {
+            Mechanism::Lh => LH_BUMP_AMP,
+            Mechanism::Er => 0.0,
+        }
+    }
+
+    pub fn energy(&self) -> f32 {
+        mb_energy(self.x, self.y, self.perturb, self.bump())
+    }
+
+    /// One compass move (mirrors `catalysis_step_ref`).
+    pub fn physics_step(&mut self, action: usize) -> (f32, bool) {
+        let ang = action as f32 * (2.0 * PI / N_ACTIONS as f32);
+        let e_old = self.energy();
+        self.x = (self.x + ang.cos() * STEP_LEN).clamp(X_LO, X_HI);
+        self.y = (self.y + ang.sin() * STEP_LEN).clamp(Y_LO, Y_HI);
+        let e_new = self.energy();
+        let dx = self.x - MIN_PRODUCT.0;
+        let dy = self.y - MIN_PRODUCT.1;
+        let in_product = dx * dx + dy * dy < PRODUCT_RADIUS * PRODUCT_RADIUS;
+        let reward = -(e_new - e_old) / ENERGY_SCALE - STEP_PENALTY
+            + if in_product { PRODUCT_BONUS } else { 0.0 };
+        (reward, in_product)
+    }
+}
+
+impl CpuEnv for Catalysis {
+    fn obs_dim(&self) -> usize {
+        4
+    }
+
+    fn n_actions(&self) -> usize {
+        N_ACTIONS
+    }
+
+    fn max_steps(&self) -> usize {
+        MAX_STEPS
+    }
+
+    fn reset(&mut self, rng: &mut Pcg64) {
+        let (cx, cy, spread) = match self.mechanism {
+            Mechanism::Lh => (MIN_REACTANT.0, MIN_REACTANT.1, 0.05),
+            Mechanism::Er => (0.9, 0.4, 0.18),
+        };
+        self.x = cx + spread * rng.normal();
+        self.y = cy + spread * rng.normal();
+        self.perturb = 0.05 * rng.normal();
+    }
+
+    fn write_obs(&self, out: &mut [f32]) {
+        out[0] = self.x;
+        out[1] = self.y;
+        out[2] = self.x - MIN_PRODUCT.0;
+        out[3] = self.y - MIN_PRODUCT.1;
+    }
+
+    fn step(&mut self, actions: &[usize], _rng: &mut Pcg64,
+            rewards: &mut [f32]) -> bool {
+        let (r, done) = self.physics_step(actions[0]);
+        rewards[0] = r;
+        done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Golden energies from the python oracle (`ref.mb_energy_ref`).
+    #[test]
+    fn golden_energies_match_python_oracle() {
+        let pts = [(0.6235f32, 0.028f32), (-0.5582, 1.4417), (0.0, 1.0)];
+        let plain = [-108.16673278808594f32, -146.6995086669922,
+                     21.573062896728516];
+        for (p, want) in pts.iter().zip(plain) {
+            let got = mb_energy(p.0, p.1, 0.0, 0.0);
+            assert!((got - want).abs() / want.abs() < 1e-5,
+                    "{got} vs {want}");
+        }
+        let bumped = [-111.8211441040039f32, -153.73529052734375,
+                      44.512901306152344];
+        for (p, want) in pts.iter().zip(bumped) {
+            let got = mb_energy(p.0, p.1, 0.05, 40.0);
+            assert!((got - want).abs() / want.abs() < 1e-5,
+                    "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn product_basin_terminates_with_bonus() {
+        let mut c = Catalysis::new(Mechanism::Er);
+        c.x = MIN_PRODUCT.0 - 0.01;
+        c.y = MIN_PRODUCT.1 - 0.01;
+        let (r, done) = c.physics_step(0);
+        assert!(done);
+        assert!(r > PRODUCT_BONUS * 0.5);
+    }
+
+    #[test]
+    fn positions_stay_in_box() {
+        let mut rng = Pcg64::new(1);
+        let mut c = Catalysis::new(Mechanism::Lh);
+        c.reset(&mut rng);
+        for i in 0..500 {
+            c.physics_step(i % N_ACTIONS);
+            assert!((X_LO..=X_HI).contains(&c.x));
+            assert!((Y_LO..=Y_HI).contains(&c.y));
+        }
+    }
+
+    #[test]
+    fn er_start_is_broader_than_lh() {
+        let mut rng = Pcg64::new(3);
+        let spread = |mech: Mechanism, rng: &mut Pcg64| {
+            let mut c = Catalysis::new(mech);
+            let mut xs = Vec::new();
+            for _ in 0..500 {
+                c.reset(rng);
+                xs.push(c.x as f64);
+            }
+            let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+            (xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+                / xs.len() as f64)
+                .sqrt()
+        };
+        let lh = spread(Mechanism::Lh, &mut rng);
+        let er = spread(Mechanism::Er, &mut rng);
+        assert!(er > 2.0 * lh, "lh {lh} er {er}");
+    }
+}

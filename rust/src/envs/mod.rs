@@ -1,0 +1,107 @@
+//! Pure-rust reference environments.
+//!
+//! These serve two roles:
+//!  1. the simulation substrate of the CPU-"distributed" **baseline**
+//!     (`crate::baseline`) that the paper compares against in Fig 3;
+//!  2. cross-language validation — unit tests here pin golden step values
+//!     computed by the python jnp oracles (`python/compile/kernels/ref.py`),
+//!     so the rust and JAX physics provably agree.
+//!
+//! Dynamics constants mirror `ref.py` exactly (gym classic_control).
+
+pub mod acrobot;
+pub mod cartpole;
+pub mod catalysis;
+pub mod covid;
+pub mod pendulum;
+
+pub use acrobot::Acrobot;
+pub use cartpole::CartPole;
+pub use catalysis::{Catalysis, Mechanism};
+pub use covid::CovidEcon;
+pub use pendulum::Pendulum;
+
+use anyhow::{bail, Result};
+
+use crate::util::Pcg64;
+
+/// A (possibly multi-agent) CPU environment with discrete actions.
+pub trait CpuEnv: Send {
+    /// Number of acting agents (1 for single-agent envs, 52 for the
+    /// two-level COVID economy).
+    fn n_agents(&self) -> usize {
+        1
+    }
+    /// Per-agent observation width (padded to the max across agent types).
+    fn obs_dim(&self) -> usize;
+    /// Per-agent discrete action count.
+    fn n_actions(&self) -> usize;
+    /// Episode truncation horizon.
+    fn max_steps(&self) -> usize;
+    /// Reset to a fresh episode.
+    fn reset(&mut self, rng: &mut Pcg64);
+    /// Write all agents' observations into `out` (n_agents * obs_dim).
+    fn write_obs(&self, out: &mut [f32]);
+    /// Advance one step.  `actions` has n_agents entries; per-agent rewards
+    /// are written into `rewards`.  Returns `true` when the episode
+    /// terminated (truncation is the caller's job via `max_steps`).
+    fn step(&mut self, actions: &[usize], rng: &mut Pcg64,
+            rewards: &mut [f32]) -> bool;
+}
+
+/// Build a CPU environment by its registry name (same names as python).
+pub fn make_cpu_env(name: &str) -> Result<Box<dyn CpuEnv>> {
+    Ok(match name {
+        "cartpole" => Box::new(CartPole::new()),
+        "acrobot" => Box::new(Acrobot::new()),
+        "pendulum" => Box::new(Pendulum::new()),
+        "covid_econ" => Box::new(CovidEcon::new(7)),
+        "catalysis_lh" => Box::new(Catalysis::new(Mechanism::Lh)),
+        "catalysis_er" => Box::new(Catalysis::new(Mechanism::Er)),
+        other => bail!("unknown cpu env {other:?}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_all_envs() {
+        for name in ["cartpole", "acrobot", "pendulum", "covid_econ",
+                     "catalysis_lh", "catalysis_er"] {
+            let env = make_cpu_env(name).unwrap();
+            assert!(env.obs_dim() > 0);
+            assert!(env.n_actions() > 1);
+            assert!(env.max_steps() > 0);
+        }
+        assert!(make_cpu_env("nope").is_err());
+    }
+
+    #[test]
+    fn episodes_run_to_completion_under_random_policy() {
+        let mut rng = Pcg64::new(0);
+        for name in ["cartpole", "acrobot", "pendulum", "covid_econ",
+                     "catalysis_lh"] {
+            let mut env = make_cpu_env(name).unwrap();
+            env.reset(&mut rng);
+            let na = env.n_agents();
+            let mut rewards = vec![0f32; na];
+            let mut obs = vec![0f32; na * env.obs_dim()];
+            let mut steps = 0;
+            loop {
+                env.write_obs(&mut obs);
+                assert!(obs.iter().all(|x| x.is_finite()), "{name} obs");
+                let actions: Vec<usize> =
+                    (0..na).map(|_| rng.below(env.n_actions())).collect();
+                let done = env.step(&actions, &mut rng, &mut rewards);
+                assert!(rewards.iter().all(|r| r.is_finite()), "{name} rew");
+                steps += 1;
+                if done || steps >= env.max_steps() {
+                    break;
+                }
+            }
+            assert!(steps >= 1);
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Pendulum-v1 (continuous torque) — rust port.
+//!
+//! For the discrete-action CPU baseline the torque range is discretized
+//! into `N_TORQUE_BINS` levels; `physics_step` itself takes the continuous
+//! torque and mirrors `pendulum_step_ref` exactly.
+
+use std::f32::consts::PI;
+
+use crate::util::Pcg64;
+
+use super::CpuEnv;
+
+const DT: f32 = 0.05;
+const G: f32 = 10.0;
+const M: f32 = 1.0;
+const L: f32 = 1.0;
+const MAX_SPEED: f32 = 8.0;
+const MAX_TORQUE: f32 = 2.0;
+pub const N_TORQUE_BINS: usize = 5;
+
+/// Pendulum angle/velocity.
+#[derive(Debug, Clone, Default)]
+pub struct Pendulum {
+    pub theta: f32,
+    pub theta_dot: f32,
+}
+
+fn wrap(x: f32, lo: f32, hi: f32) -> f32 {
+    lo + (x - lo).rem_euclid(hi - lo)
+}
+
+impl Pendulum {
+    pub fn new() -> Pendulum {
+        Pendulum::default()
+    }
+
+    /// Continuous-torque step (mirrors `pendulum_step_ref`).
+    pub fn physics_step(&mut self, torque: f32) -> f32 {
+        let u = torque.clamp(-MAX_TORQUE, MAX_TORQUE);
+        let th_norm = wrap(self.theta, -PI, PI);
+        let cost = th_norm * th_norm
+            + 0.1 * self.theta_dot * self.theta_dot
+            + 0.001 * u * u;
+        let newthdot = (self.theta_dot
+            + (3.0 * G / (2.0 * L) * self.theta.sin()
+                + 3.0 / (M * L * L) * u)
+                * DT)
+            .clamp(-MAX_SPEED, MAX_SPEED);
+        self.theta += newthdot * DT;
+        self.theta_dot = newthdot;
+        -cost
+    }
+
+    /// Map a discrete bin to a torque level (baseline policy head).
+    pub fn bin_to_torque(bin: usize) -> f32 {
+        let frac = bin as f32 / (N_TORQUE_BINS - 1) as f32;
+        -MAX_TORQUE + 2.0 * MAX_TORQUE * frac
+    }
+}
+
+impl CpuEnv for Pendulum {
+    fn obs_dim(&self) -> usize {
+        3
+    }
+
+    fn n_actions(&self) -> usize {
+        N_TORQUE_BINS
+    }
+
+    fn max_steps(&self) -> usize {
+        200
+    }
+
+    fn reset(&mut self, rng: &mut Pcg64) {
+        self.theta = rng.uniform(-PI, PI);
+        self.theta_dot = rng.uniform(-1.0, 1.0);
+    }
+
+    fn write_obs(&self, out: &mut [f32]) {
+        out[0] = self.theta.cos();
+        out[1] = self.theta.sin();
+        out[2] = self.theta_dot;
+    }
+
+    fn step(&mut self, actions: &[usize], _rng: &mut Pcg64,
+            rewards: &mut [f32]) -> bool {
+        rewards[0] = self.physics_step(Self::bin_to_torque(actions[0]));
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Golden step from the python oracle (`ref.pendulum_step_ref`):
+    /// state [1.0, -0.5], torque 1.5.
+    #[test]
+    fn golden_step_matches_python_oracle() {
+        let mut p = Pendulum { theta: 1.0, theta_dot: -0.5 };
+        let r = p.physics_step(1.5);
+        assert!((p.theta - 1.0178052186965942).abs() < 1e-6);
+        assert!((p.theta_dot - 0.35610324144363403).abs() < 1e-6);
+        assert!((r - -1.0272504091262817).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reward_nonpositive_velocity_capped() {
+        let mut rng = Pcg64::new(0);
+        let mut p = Pendulum::new();
+        p.reset(&mut rng);
+        for i in 0..200 {
+            let r = p.physics_step(Pendulum::bin_to_torque(i % N_TORQUE_BINS));
+            assert!(r <= 0.0);
+            assert!(p.theta_dot.abs() <= MAX_SPEED);
+        }
+    }
+
+    #[test]
+    fn torque_bins_span_range() {
+        assert_eq!(Pendulum::bin_to_torque(0), -MAX_TORQUE);
+        assert_eq!(Pendulum::bin_to_torque(N_TORQUE_BINS - 1), MAX_TORQUE);
+        assert_eq!(Pendulum::bin_to_torque(N_TORQUE_BINS / 2), 0.0);
+    }
+}

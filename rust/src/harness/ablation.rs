@@ -1,0 +1,110 @@
+//! Ablations of the design choices DESIGN.md calls out.
+//!
+//! * **transfer** — the core claim isolated: the *same* compiled graph run
+//!   with (a) the resident store chained on device vs (b) a full host
+//!   round-trip per iteration.  The delta is exactly the cost the paper's
+//!   architecture eliminates.
+//! * **kernel** — fused Pallas kernels vs the pure-jnp reference lowering
+//!   (`*_jnp` artifacts), at equal semantics.
+//! * **estimator** — GAE(λ) vs n-step returns (`*_nstep` artifacts):
+//!   convergence quality per wall-clock.
+
+use anyhow::Result;
+
+use crate::coordinator::TransferMode;
+use crate::runtime::Device;
+use crate::util::csv::{human, CsvWriter};
+
+use super::{trainer_for, HarnessOpts};
+
+/// Resident vs host-round-trip execution of the same artifact.
+pub fn ablation_transfer(opts: &HarnessOpts, tag: &str) -> Result<()> {
+    let device = Device::cpu()?;
+    let mut csv = CsvWriter::create(
+        &opts.out_dir.join("ablation_transfer.csv"),
+        &["mode", "steps_per_sec", "compute_secs", "transfer_secs"],
+    )?;
+    println!("== ablation: device-resident store vs host round-trip \
+              ({tag}) ==");
+    for (mode, label) in [(TransferMode::Resident, "resident"),
+                          (TransferMode::HostRoundTrip, "host_roundtrip")] {
+        let mut tr = trainer_for(&device, opts, tag, 0, opts.iters)?;
+        tr.mode = mode;
+        tr.init()?;
+        tr.step_train()?;
+        tr.timer.reset();
+        let t0 = std::time::Instant::now();
+        for _ in 0..opts.iters {
+            tr.step_train()?;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let steps = (opts.iters
+            * tr.graphs.artifact.manifest.steps_per_iter) as f64;
+        let sps = steps / wall;
+        println!("  {:<16} {:>14} steps/s  (compute {:.3}s, transfer \
+                  {:.3}s)",
+                 label, human(sps), tr.timer.secs("compute"),
+                 tr.timer.secs("transfer"));
+        csv.row(&[label.into(), format!("{sps}"),
+                  format!("{}", tr.timer.secs("compute")),
+                  format!("{}", tr.timer.secs("transfer"))])?;
+    }
+    csv.flush()?;
+    println!("(the transfer column is the cost WarpSci deletes; scale it \
+              by PCIe vs on-package bandwidth for the GPU setting)");
+    Ok(())
+}
+
+/// Pallas-kernel vs pure-jnp lowering of the same iteration.
+pub fn ablation_kernel(opts: &HarnessOpts, base_tag: &str) -> Result<()> {
+    let device = Device::cpu()?;
+    println!("== ablation: Pallas kernels vs pure-jnp lowering ==");
+    let mut csv = CsvWriter::create(
+        &opts.out_dir.join("ablation_kernel.csv"),
+        &["variant", "steps_per_sec"],
+    )?;
+    for (tag, label) in [(base_tag.to_string(), "pallas"),
+                         (format!("{base_tag}_jnp"), "jnp")] {
+        let mut tr = trainer_for(&device, opts, &tag, 0, opts.iters)?;
+        let stats = tr.measure_rollout_throughput(opts.iters)?;
+        println!("  {:<8} {:>14} steps/s", label,
+                 human(stats.steps_per_sec));
+        csv.row(&[label.into(), format!("{}", stats.steps_per_sec)])?;
+    }
+    csv.flush()?;
+    Ok(())
+}
+
+/// GAE vs n-step return estimation: final return at equal wall budget.
+pub fn ablation_estimator(opts: &HarnessOpts, base_tag: &str) -> Result<()> {
+    let device = Device::cpu()?;
+    println!("== ablation: GAE(lambda) vs n-step returns ({}s budget) ==",
+             opts.budget_secs);
+    let mut csv = CsvWriter::create(
+        &opts.out_dir.join("ablation_estimator.csv"),
+        &["estimator", "seed", "final_return"],
+    )?;
+    for (tag, label) in [(base_tag.to_string(), "gae"),
+                         (format!("{base_tag}_nstep"), "nstep")] {
+        let mut finals = Vec::new();
+        for seed in 0..opts.seeds {
+            let mut tr = trainer_for(&device, opts, &tag, seed as u64,
+                                     usize::MAX)?;
+            tr.init()?;
+            let t0 = std::time::Instant::now();
+            while t0.elapsed().as_secs_f64() < opts.budget_secs {
+                tr.step_train()?;
+            }
+            let row = tr.record_metrics()?;
+            finals.push(row.ep_return_ema);
+            csv.row(&[label.into(), seed.to_string(),
+                      format!("{}", row.ep_return_ema)])?;
+        }
+        let mean = finals.iter().sum::<f64>() / finals.len() as f64;
+        println!("  {:<6} final return {:.1} (seeds {:?})", label, mean,
+                 finals.iter().map(|x| (*x * 10.0).round() / 10.0)
+                     .collect::<Vec<_>>());
+    }
+    csv.flush()?;
+    Ok(())
+}

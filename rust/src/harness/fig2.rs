@@ -1,0 +1,102 @@
+//! Fig 2 — classic control: (a) throughput scaling in the number of
+//! concurrent environments (log-log linear), (b)/(c) episodic reward vs
+//! wall-clock at several concurrency levels, averaged over seeds.
+
+use anyhow::Result;
+
+use crate::runtime::Device;
+use crate::util::csv::{human, CsvWriter};
+
+use super::{sweep_tags, trainer_for, HarnessOpts};
+
+/// Fig 2(a): roll-out and roll-out+train throughput vs n_envs.
+pub fn fig2a(opts: &HarnessOpts, envs: &[&str]) -> Result<()> {
+    let device = Device::cpu()?;
+    let mut csv = CsvWriter::create(
+        &opts.out_dir.join("fig2a_throughput.csv"),
+        &["env", "n_envs", "rollout_steps_per_sec", "train_steps_per_sec"],
+    )?;
+    println!("== Fig 2(a): throughput scaling (paper: linear to 10K) ==");
+    println!("{:<12} {:>8} {:>18} {:>18}", "env", "n_envs",
+             "rollout steps/s", "train steps/s");
+    for env in envs {
+        let tags = sweep_tags(opts, env, 32)?;
+        anyhow::ensure!(
+            !tags.is_empty(),
+            "no {env} t=32 artifacts — run `make artifacts-bench`"
+        );
+        let mut prev: Option<(usize, f64)> = None;
+        for (n, tag) in tags {
+            if tag.ends_with("_jnp") || tag.ends_with("_nstep") {
+                continue;
+            }
+            let mut tr = trainer_for(&device, opts, &tag, 0, opts.iters)?;
+            let roll = tr.measure_rollout_throughput(opts.iters)?;
+            let mut tr = trainer_for(&device, opts, &tag, 0, opts.iters)?;
+            tr.init()?;
+            tr.step_train()?; // warm-up / compile-cache
+            let t0 = std::time::Instant::now();
+            for _ in 0..opts.iters {
+                tr.step_train()?;
+            }
+            let train_sps = (opts.iters * tr.graphs.artifact.manifest
+                .steps_per_iter) as f64 / t0.elapsed().as_secs_f64();
+            println!("{:<12} {:>8} {:>18} {:>18}", env, n,
+                     human(roll.steps_per_sec), human(train_sps));
+            csv.row(&[env.to_string(), n.to_string(),
+                      format!("{}", roll.steps_per_sec),
+                      format!("{train_sps}")])?;
+            if let Some((pn, psps)) = prev {
+                let scale = roll.steps_per_sec / psps;
+                let ideal = n as f64 / pn as f64;
+                println!("{:<12} {:>8} scaling x{:.2} (ideal x{:.0})",
+                         "", "", scale, ideal);
+            }
+            prev = Some((n, roll.steps_per_sec));
+        }
+    }
+    csv.flush()?;
+    Ok(())
+}
+
+/// Fig 2(b)/(c): reward-vs-wallclock curves at several concurrency levels.
+pub fn fig2bc(opts: &HarnessOpts, env: &str, levels: &[usize])
+              -> Result<()> {
+    let device = Device::cpu()?;
+    let mut csv = CsvWriter::create(
+        &opts.out_dir.join(format!("fig2bc_{env}.csv")),
+        &["env", "n_envs", "seed", "wall_secs", "ep_return_ema",
+          "env_steps"],
+    )?;
+    println!("== Fig 2(b/c) {env}: convergence vs concurrency \
+              (budget {}s/run, {} seeds) ==", opts.budget_secs, opts.seeds);
+    for &n in levels {
+        let tag = format!("{env}_n{n}_t32");
+        let mut finals = Vec::new();
+        for seed in 0..opts.seeds {
+            let mut tr = trainer_for(&device, opts, &tag, seed as u64,
+                                     usize::MAX)?;
+            tr.init()?;
+            let t0 = std::time::Instant::now();
+            while t0.elapsed().as_secs_f64() < opts.budget_secs {
+                tr.step_train()?;
+                let row = tr.record_metrics()?;
+                csv.row(&[env.to_string(), n.to_string(), seed.to_string(),
+                          format!("{}", t0.elapsed().as_secs_f64()),
+                          format!("{}", row.ep_return_ema),
+                          format!("{}", row.env_steps)])?;
+            }
+            let last = tr.log.last().unwrap().ep_return_ema;
+            finals.push(last);
+        }
+        let mean = finals.iter().sum::<f64>() / finals.len() as f64;
+        println!("  n_envs {:>6}: return after {:.0}s = {:.1} \
+                  (seeds: {:?})",
+                 n, opts.budget_secs, mean,
+                 finals.iter().map(|x| (*x * 10.0).round() / 10.0)
+                     .collect::<Vec<_>>());
+    }
+    csv.flush()?;
+    println!("(paper: higher concurrency converges faster and more stably)");
+    Ok(())
+}

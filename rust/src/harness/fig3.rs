@@ -1,0 +1,140 @@
+//! Fig 3 — COVID-19 economic simulation.
+//!
+//! Left panel: WarpSci (device-resident, zero transfer) vs the
+//! CPU-distributed baseline, broken into roll-out / data-transfer /
+//! training phase times at matched environment-step counts.
+//! Right panel: env steps/s and end-to-end training speed vs n_envs.
+
+use anyhow::Result;
+
+use crate::baseline::{DistributedConfig, DistributedSystem};
+use crate::runtime::Device;
+use crate::util::csv::{human, CsvWriter};
+
+use super::{sweep_tags, trainer_for, HarnessOpts};
+
+/// Fig 3 left: phase breakdown, WarpSci vs distributed baseline.
+pub fn fig3_breakdown(opts: &HarnessOpts, n_envs: usize, n_workers: usize)
+                      -> Result<()> {
+    let device = Device::cpu()?;
+    let tag = format!("covid_econ_n{n_envs}_t13");
+
+    // ---- WarpSci: train n_envs concurrent sims, phases timed ----
+    let mut tr = trainer_for(&device, opts, &tag, 0, opts.iters)?;
+    tr.init()?;
+    tr.step_train()?; // warm-up
+    tr.timer.reset();
+    let t0 = std::time::Instant::now();
+    for _ in 0..opts.iters {
+        tr.step_train()?;
+    }
+    let ws_total = t0.elapsed().as_secs_f64();
+    let ws_steps = (opts.iters
+        * tr.graphs.artifact.manifest.steps_per_iter) as f64;
+    // the fused graph does roll-out+train in one executable; attribute by
+    // the rollout-only/train-iter time ratio measured separately
+    let mut ro = trainer_for(&device, opts, &tag, 0, opts.iters)?;
+    ro.init()?;
+    ro.step_rollout()?;
+    let t1 = std::time::Instant::now();
+    for _ in 0..opts.iters {
+        ro.step_rollout()?;
+    }
+    let ws_rollout = t1.elapsed().as_secs_f64();
+    let ws_train = (ws_total - ws_rollout).max(0.0);
+
+    // ---- distributed baseline at a matched env-step count ----
+    let envs_per_worker = (n_envs / n_workers).max(1);
+    let cfg = DistributedConfig {
+        env: "covid_econ".into(),
+        n_workers,
+        envs_per_worker,
+        t: 13,
+        ..Default::default()
+    };
+    let mut sys = DistributedSystem::new(cfg)?;
+    let base_steps_per_round = (13 * n_workers * envs_per_worker) as f64;
+    let rounds = ((ws_steps / base_steps_per_round).ceil() as usize).max(1);
+    let stats = sys.run(rounds)?;
+
+    // ---- report ----
+    let mut csv = CsvWriter::create(
+        &opts.out_dir.join("fig3_breakdown.csv"),
+        &["system", "phase", "secs", "env_steps", "steps_per_sec"],
+    )?;
+    println!("== Fig 3 (left): COVID econ, WarpSci({n_envs} envs) vs \
+              distributed baseline ({n_workers} workers x {envs_per_worker} \
+              envs) ==");
+    println!("{:<12} {:>12} {:>12} {:>12} {:>12} {:>14}", "system",
+             "rollout s", "transfer s", "train s", "total s", "steps/s");
+    let ws_sps = ws_steps / ws_total;
+    println!("{:<12} {:>12.3} {:>12.3} {:>12.3} {:>12.3} {:>14}",
+             "warpsci", ws_rollout, 0.0, ws_train, ws_total, human(ws_sps));
+    let b_sps = stats.env_steps / stats.total_secs;
+    println!("{:<12} {:>12.3} {:>12.3} {:>12.3} {:>12.3} {:>14}",
+             "distributed", stats.rollout_secs, stats.transfer_secs,
+             stats.train_secs, stats.total_secs, human(b_sps));
+    println!("speedups: total x{:.1}  rollout x{:.1}  train x{:.1}  \
+              transfer: {:.3}s -> 0 (paper: 24x total, 24x rollout, \
+              30x train, zero transfer)",
+             (b_sps > 0.0).then(|| ws_sps / b_sps).unwrap_or(0.0),
+             stats.rollout_secs / ws_rollout.max(1e-9),
+             stats.train_secs / ws_train.max(1e-9),
+             stats.transfer_secs);
+    for (system, phase, secs, steps) in [
+        ("warpsci", "rollout", ws_rollout, ws_steps),
+        ("warpsci", "transfer", 0.0, ws_steps),
+        ("warpsci", "train", ws_train, ws_steps),
+        ("warpsci", "total", ws_total, ws_steps),
+        ("distributed", "rollout", stats.rollout_secs, stats.env_steps),
+        ("distributed", "transfer", stats.transfer_secs, stats.env_steps),
+        ("distributed", "train", stats.train_secs, stats.env_steps),
+        ("distributed", "total", stats.total_secs, stats.env_steps),
+    ] {
+        csv.row(&[system.into(), phase.into(), format!("{secs}"),
+                  format!("{steps}"),
+                  format!("{}", steps / secs.max(1e-9))])?;
+    }
+    csv.flush()?;
+    Ok(())
+}
+
+/// Fig 3 right: econ throughput scaling with n_envs.
+pub fn fig3_scaling(opts: &HarnessOpts) -> Result<()> {
+    let device = Device::cpu()?;
+    let tags = sweep_tags(opts, "covid_econ", 13)?;
+    anyhow::ensure!(!tags.is_empty(),
+                    "no covid_econ artifacts — run `make artifacts-bench`");
+    let mut csv = CsvWriter::create(
+        &opts.out_dir.join("fig3_scaling.csv"),
+        &["n_envs", "rollout_steps_per_sec", "train_steps_per_sec",
+          "agent_steps_per_sec"],
+    )?;
+    println!("== Fig 3 (right): econ throughput scaling (paper: ~linear \
+              to 1K envs) ==");
+    println!("{:>8} {:>18} {:>18} {:>18}", "n_envs", "rollout steps/s",
+             "train steps/s", "agent steps/s");
+    for (n, tag) in tags {
+        let mut tr = trainer_for(&device, opts, &tag, 0, opts.iters)?;
+        let roll = tr.measure_rollout_throughput(opts.iters)?;
+        let mut tr = trainer_for(&device, opts, &tag, 0, opts.iters)?;
+        tr.init()?;
+        tr.step_train()?;
+        let t0 = std::time::Instant::now();
+        for _ in 0..opts.iters {
+            tr.step_train()?;
+        }
+        let spi = tr.graphs.artifact.manifest.steps_per_iter;
+        let train_sps = (opts.iters * spi) as f64
+            / t0.elapsed().as_secs_f64();
+        let agent_sps = roll.steps_per_sec
+            * tr.graphs.artifact.manifest.agents_per_env as f64;
+        println!("{:>8} {:>18} {:>18} {:>18}", n,
+                 human(roll.steps_per_sec), human(train_sps),
+                 human(agent_sps));
+        csv.row_f64(&[n as f64, roll.steps_per_sec, train_sps,
+                      agent_sps])?;
+    }
+    csv.flush()?;
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! Figure-regeneration harness: one module per paper table/figure
+//! (DESIGN.md section 4 maps each experiment id to its module).
+//!
+//! Every harness prints the same rows/series the paper reports and writes
+//! a CSV under `results/` so the curves can be re-plotted.  Absolute
+//! numbers differ from the paper's A100 (this substrate is CPU PJRT); the
+//! *shape* — linear concurrency scaling, zero-transfer vs transfer-bound
+//! ordering, faster convergence at higher concurrency — is the
+//! reproduction target.
+
+pub mod ablation;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod headline;
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::coordinator::Trainer;
+use crate::runtime::{Artifact, Device, GraphSet};
+
+/// Shared harness options.
+#[derive(Debug, Clone)]
+pub struct HarnessOpts {
+    pub artifacts_root: PathBuf,
+    pub out_dir: PathBuf,
+    /// Per-training-run wall-clock budget in seconds (convergence figures).
+    pub budget_secs: f64,
+    /// Seeds per configuration (paper: 8 for Fig 2, 5 for Fig 4).
+    pub seeds: usize,
+    /// Iterations for throughput measurements.
+    pub iters: usize,
+}
+
+impl Default for HarnessOpts {
+    fn default() -> Self {
+        HarnessOpts {
+            artifacts_root: crate::artifacts_dir(),
+            out_dir: "results".into(),
+            budget_secs: 20.0,
+            seeds: 3,
+            iters: 10,
+        }
+    }
+}
+
+/// Load + compile an artifact tag into a ready trainer.
+pub fn trainer_for(device: &Device, opts: &HarnessOpts, tag: &str,
+                   seed: u64, iters: usize) -> Result<Trainer> {
+    let artifact = Artifact::load(&opts.artifacts_root, tag)?;
+    let n_envs = artifact.manifest.n_envs;
+    let t = artifact.manifest.t;
+    let env = artifact.manifest.env.clone();
+    let graphs = GraphSet::compile(device, artifact)?;
+    let cfg = RunConfig {
+        env,
+        n_envs,
+        t,
+        iters,
+        seed,
+        metrics_every: 1,
+        ..Default::default()
+    };
+    Trainer::new(graphs, cfg)
+}
+
+/// Available tags matching `{env}_n{N}_t{T}` for a given env, sorted by N.
+pub fn sweep_tags(opts: &HarnessOpts, env: &str, t: usize)
+                  -> Result<Vec<(usize, String)>> {
+    let mut out = Vec::new();
+    for tag in Artifact::list(&opts.artifacts_root)? {
+        if let Some(rest) = tag.strip_prefix(&format!("{env}_n")) {
+            if let Some((n_str, t_str)) = rest.split_once("_t") {
+                if t_str == t.to_string() {
+                    if let Ok(n) = n_str.parse::<usize>() {
+                        out.push((n, tag.clone()));
+                    }
+                }
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_tags_filters_and_sorts() {
+        let dir = std::env::temp_dir().join("warpsci_sweep_test");
+        for tag in ["cartpole_n64_t32", "cartpole_n16_t32",
+                    "cartpole_n16_t8", "acrobot_n16_t32",
+                    "cartpole_n256_t32_jnp"] {
+            std::fs::create_dir_all(dir.join(tag)).unwrap();
+            std::fs::write(dir.join(tag).join("manifest.json"), "{}")
+                .unwrap();
+        }
+        let opts = HarnessOpts {
+            artifacts_root: dir.clone(),
+            ..Default::default()
+        };
+        let tags = sweep_tags(&opts, "cartpole", 32).unwrap();
+        assert_eq!(tags, vec![(16, "cartpole_n16_t32".into()),
+                              (64, "cartpole_n64_t32".into())]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

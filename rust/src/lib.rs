@@ -1,0 +1,49 @@
+//! # WarpSci — high data-throughput RL with a unified on-device data store
+//!
+//! Rust L3 coordinator of the three-layer WarpSci reproduction
+//! (paper: *Enabling High Data Throughput Reinforcement Learning on GPUs*,
+//! Lan et al., 2024 — see DESIGN.md).
+//!
+//! The entire RL workflow (roll-out, inference, reset, training) runs inside
+//! AOT-lowered XLA executables over a single flat `f32` device buffer — the
+//! paper's "unified, in-place data store".  This crate owns everything
+//! around that hot loop: artifact loading, device-buffer lifecycle, the
+//! trainer event loop, metrics, multi-shard data parallelism, the CPU
+//! "distributed" baseline the paper compares against (Fig 3), and the
+//! figure-regeneration harness.
+//!
+//! Python (`python/compile/`) runs once at build time (`make artifacts`)
+//! and never on the request path.
+
+pub mod baseline;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod envs;
+pub mod harness;
+pub mod nn;
+pub mod runtime;
+pub mod store;
+pub mod util;
+
+/// Default artifacts directory relative to the repo root.
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Resolve the artifacts directory: `$WARPSCI_ARTIFACTS` or `./artifacts`,
+/// walking up from the current directory so tests and benches work from
+/// any workspace subdirectory.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("WARPSCI_ARTIFACTS") {
+        return dir.into();
+    }
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = cur.join(ARTIFACTS_DIR);
+        if cand.is_dir() {
+            return cand;
+        }
+        if !cur.pop() {
+            return ARTIFACTS_DIR.into();
+        }
+    }
+}

@@ -1,0 +1,352 @@
+//! `warpsci` — the WarpSci leader binary.
+//!
+//! Subcommands:
+//!   train            train an environment from a TOML config or flags
+//!   bench <exp>      regenerate a paper table/figure (fig2a, fig2b, fig2c,
+//!                    fig3, fig3-scaling, fig4, headline, ablation-*)
+//!   list             list available artifact tags
+//!   info <tag>       print an artifact manifest summary
+//!
+//! Python never runs here: artifacts are produced once by `make artifacts`.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use warpsci::config::RunConfig;
+use warpsci::coordinator::{MultiShardTrainer, Trainer};
+use warpsci::harness::{self, HarnessOpts};
+use warpsci::runtime::{Artifact, Device, GraphSet};
+use warpsci::util::csv::human;
+
+/// Hand-rolled flag parser (offline build: no clap).
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len()
+                    && !argv[i + 1].starts_with("--")
+                {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { positional, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T)
+                                       -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad value for --{key}: {v}")),
+        }
+    }
+}
+
+const USAGE: &str = "\
+warpsci — high data-throughput RL with a unified on-device data store
+
+USAGE:
+  warpsci train [--config run.toml] [--env cartpole] [--n-envs N] [--t T]
+                [--iters K] [--seed S] [--shards P] [--metrics-every M]
+                [--target-return R] [--log-csv path] [--checkpoint-dir d]
+  warpsci bench <fig2a|fig2b|fig2c|fig3|fig3-scaling|fig4|headline|
+                 ablation-transfer|ablation-kernel|ablation-estimator|all>
+                [--budget-secs S] [--seeds N] [--iters K] [--out-dir d]
+  warpsci list
+  warpsci info <tag>
+  warpsci validate [tag ...]   (default: all artifacts; compiles + smoke-runs)
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    if argv.is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = argv[0].as_str();
+    let args = Args::parse(&argv[1..])?;
+    match cmd {
+        "train" => cmd_train(&args),
+        "bench" => cmd_bench(&args),
+        "list" => cmd_list(),
+        "info" => cmd_info(&args),
+        "validate" => cmd_validate(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_file(std::path::Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    if let Some(env) = args.get("env") {
+        cfg.env = env.to_string();
+    }
+    cfg.n_envs = args.get_parse("n-envs", cfg.n_envs)?;
+    cfg.t = args.get_parse("t", cfg.t)?;
+    cfg.iters = args.get_parse("iters", cfg.iters)?;
+    cfg.seed = args.get_parse("seed", cfg.seed)?;
+    cfg.shards = args.get_parse("shards", cfg.shards)?;
+    cfg.metrics_every = args.get_parse("metrics-every", cfg.metrics_every)?;
+    if let Some(r) = args.get("target-return") {
+        cfg.target_return = Some(r.parse().context("--target-return")?);
+    }
+    if let Some(p) = args.get("log-csv") {
+        cfg.log_csv = Some(p.to_string());
+    }
+
+    let root = warpsci::artifacts_dir();
+    let tag = cfg.artifact_tag();
+    println!("loading artifact {tag} from {}", root.display());
+    let artifact = Artifact::load(&root, &tag)?;
+    let device = Device::cpu()?;
+    println!("platform: {}", device.platform());
+
+    if cfg.shards > 1 {
+        return train_sharded(&device, &artifact, cfg);
+    }
+    let graphs = GraphSet::compile(&device, artifact)?;
+    println!("compiled 7 graphs in {:.2?}", graphs.compile_time);
+    let mut tr = Trainer::new(graphs, cfg.clone())?;
+    tr.init()?;
+    let report_every = (cfg.iters / 20).max(1);
+    let t0 = std::time::Instant::now();
+    for i in 0..cfg.iters {
+        tr.step_train()?;
+        if (i + 1) % cfg.metrics_every == 0 {
+            let row = tr.record_metrics()?;
+            if (i + 1) % report_every == 0 {
+                println!(
+                    "iter {:>6}  return {:>9.2}  ep_len {:>7.1}  \
+                     entropy {:>6.3}  steps/s {:>10}",
+                    row.iter as u64, row.ep_return_ema, row.ep_len_ema,
+                    row.entropy,
+                    human(row.env_steps / t0.elapsed().as_secs_f64()),
+                );
+            }
+            if let Some(target) = cfg.target_return {
+                if row.ep_return_ema >= target {
+                    println!("target return {target} reached at iter {}",
+                             i + 1);
+                    break;
+                }
+            }
+        }
+    }
+    let row = tr.record_metrics()?;
+    tr.log.flush()?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "done: {} env steps in {:.1}s ({} steps/s), final return {:.2}",
+        human(row.env_steps), wall, human(row.env_steps / wall),
+        row.ep_return_ema
+    );
+    if let Some(dir) = args.get("checkpoint-dir") {
+        tr.checkpoint(std::path::Path::new(dir), "final")?;
+        println!("checkpoint saved to {dir}/final.*");
+    }
+    Ok(())
+}
+
+fn train_sharded(device: &Device, artifact: &Artifact, cfg: RunConfig)
+                 -> Result<()> {
+    println!("multi-shard data-parallel: {} shards, sync every {}",
+             cfg.shards, cfg.sync_every);
+    let mut ms = MultiShardTrainer::new(device, artifact, cfg.clone())?;
+    let t0 = std::time::Instant::now();
+    let report_every = (cfg.iters / 10).max(1);
+    for i in 0..cfg.iters {
+        ms.step(i)?;
+        if (i + 1) % report_every == 0 {
+            let row = ms.metrics(t0.elapsed().as_secs_f64())?;
+            println!("iter {:>6}  shard0 return {:>9.2}  mean return \
+                      {:>9.2}  syncs {}",
+                     i + 1, row.ep_return_ema, ms.mean_return()?,
+                     ms.sync_count);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let steps = (cfg.iters * cfg.n_envs * cfg.t * cfg.shards) as f64;
+    println!("done: {} aggregate env steps in {:.1}s ({} steps/s across \
+              {} shards)",
+             human(steps), wall, human(steps / wall), ms.shards());
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let exp = args
+        .positional
+        .first()
+        .context("bench needs an experiment id (see --help)")?
+        .clone();
+    let opts = HarnessOpts {
+        artifacts_root: warpsci::artifacts_dir(),
+        out_dir: PathBuf::from(
+            args.get("out-dir").unwrap_or("results")),
+        budget_secs: args.get_parse("budget-secs", 20.0)?,
+        seeds: args.get_parse("seeds", 3)?,
+        iters: args.get_parse("iters", 10)?,
+    };
+    std::fs::create_dir_all(&opts.out_dir).ok();
+    match exp.as_str() {
+        "fig2a" => harness::fig2::fig2a(&opts, &["cartpole", "acrobot"])?,
+        "fig2b" => harness::fig2::fig2bc(&opts, "cartpole",
+                                         &[16, 128, 1024])?,
+        "fig2c" => harness::fig2::fig2bc(&opts, "acrobot",
+                                         &[16, 128, 1024])?,
+        "fig3" => harness::fig3::fig3_breakdown(&opts, 60, 16)?,
+        "fig3-scaling" => harness::fig3::fig3_scaling(&opts)?,
+        "fig4" => {
+            harness::fig4::fig4(&opts, "lh", &[4, 20, 100, 500])?;
+            harness::fig4::fig4(&opts, "er", &[4, 20, 100, 500])?;
+        }
+        "headline" => harness::headline::headline(&opts)?,
+        "ablation-transfer" => harness::ablation::ablation_transfer(
+            &opts, args.get("tag").unwrap_or("cartpole_n1024_t32"))?,
+        "ablation-kernel" => harness::ablation::ablation_kernel(
+            &opts, args.get("tag").unwrap_or("cartpole_n1024_t32"))?,
+        "ablation-estimator" => harness::ablation::ablation_estimator(
+            &opts, args.get("tag").unwrap_or("cartpole_n1024_t32"))?,
+        "all" => {
+            harness::headline::headline(&opts)?;
+            harness::fig2::fig2a(&opts, &["cartpole", "acrobot"])?;
+            harness::fig2::fig2bc(&opts, "cartpole", &[16, 128, 1024])?;
+            harness::fig2::fig2bc(&opts, "acrobot", &[16, 128, 1024])?;
+            harness::fig3::fig3_breakdown(&opts, 60, 16)?;
+            harness::fig3::fig3_scaling(&opts)?;
+            harness::fig4::fig4(&opts, "lh", &[4, 20, 100, 500])?;
+            harness::fig4::fig4(&opts, "er", &[4, 20, 100, 500])?;
+            harness::ablation::ablation_transfer(&opts,
+                                                 "cartpole_n1024_t32")?;
+        }
+        other => bail!("unknown experiment {other:?}\n{USAGE}"),
+    }
+    println!("CSV written under {}", opts.out_dir.display());
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    let root = warpsci::artifacts_dir();
+    let tags = Artifact::list(&root)?;
+    if tags.is_empty() {
+        println!("no artifacts under {} — run `make artifacts`",
+                 root.display());
+        return Ok(());
+    }
+    println!("artifacts under {}:", root.display());
+    for tag in tags {
+        println!("  {tag}");
+    }
+    Ok(())
+}
+
+/// Compile every graph of the given artifacts and smoke-run the full set
+/// (init -> train_iter -> rollout -> metrics -> param round-trip),
+/// checking metric finiteness and counter semantics.  The operational
+/// pre-flight before long runs on a new artifact sweep.
+fn cmd_validate(args: &Args) -> Result<()> {
+    let root = warpsci::artifacts_dir();
+    let tags = if args.positional.is_empty() {
+        Artifact::list(&root)?
+    } else {
+        args.positional.clone()
+    };
+    anyhow::ensure!(!tags.is_empty(), "no artifacts to validate");
+    let device = Device::cpu()?;
+    let mut failures = 0usize;
+    for tag in &tags {
+        let check = || -> Result<std::time::Duration> {
+            let artifact = Artifact::load(&root, tag)?;
+            let man = artifact.manifest.clone();
+            let graphs = GraphSet::compile(&device, artifact)?;
+            let compile_time = graphs.compile_time;
+            let state = graphs.init_state(0)?;
+            let state = graphs.train_iter(&state)?;
+            let state = graphs.rollout(&state)?;
+            let m = graphs.metrics(&state)?;
+            anyhow::ensure!(m.len() == man.metrics.len(),
+                            "metrics arity {} != {}", m.len(),
+                            man.metrics.len());
+            anyhow::ensure!(m.iter().all(|x| x.is_finite()),
+                            "non-finite metrics: {m:?}");
+            let iter_idx = man.metric_index("iter")?;
+            let steps_idx = man.metric_index("env_steps")?;
+            anyhow::ensure!(m[iter_idx] == 1.0, "iter counter {}",
+                            m[iter_idx]);
+            anyhow::ensure!(m[steps_idx] == (2 * man.steps_per_iter) as f32,
+                            "env_steps counter {}", m[steps_idx]);
+            let p = graphs.get_params(&state)?;
+            let restored = graphs.set_params(&state, &p)?;
+            anyhow::ensure!(
+                graphs.download_state(&state)?
+                    == graphs.download_state(&restored)?,
+                "param round-trip altered the store");
+            Ok(compile_time)
+        };
+        match check() {
+            Ok(dt) => println!("  {tag:<36} OK (compiled in {dt:.2?})"),
+            Err(e) => {
+                failures += 1;
+                println!("  {tag:<36} FAILED: {e:#}");
+            }
+        }
+    }
+    anyhow::ensure!(failures == 0, "{failures}/{} artifacts failed",
+                    tags.len());
+    println!("all {} artifacts valid", tags.len());
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let tag = args.positional.first().context("info needs a tag")?;
+    let artifact = Artifact::load(&warpsci::artifacts_dir(), tag)?;
+    let m = &artifact.manifest;
+    println!("tag:            {}", m.tag);
+    println!("env:            {} ({} agents/env)", m.env, m.agents_per_env);
+    println!("n_envs x t:     {} x {} = {} steps/iter", m.n_envs, m.t,
+             m.steps_per_iter);
+    println!("state size:     {} f32 ({} fields)", m.state_size,
+             m.fields.len());
+    println!("params:         {} f32 at offset {}", m.params_size,
+             m.params_offset);
+    println!("metrics:        {}", m.metrics.join(", "));
+    println!("graphs:         {}", m.graphs.keys().cloned()
+             .collect::<Vec<_>>().join(", "));
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! Adam optimizer (from scratch) for the baseline trainer.
+
+/// Adam state over a set of flat parameter vectors.
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub lr: f32,
+    pub b1: f32,
+    pub b2: f32,
+    pub eps: f32,
+    t: f32,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl Adam {
+    /// `shapes`: length of each parameter vector (must match `step` calls).
+    pub fn new(lr: f32, shapes: &[usize]) -> Adam {
+        Adam {
+            lr,
+            b1: 0.9,
+            b2: 0.999,
+            eps: 1e-8,
+            t: 0.0,
+            m: shapes.iter().map(|&n| vec![0.0; n]).collect(),
+            v: shapes.iter().map(|&n| vec![0.0; n]).collect(),
+        }
+    }
+
+    /// One update over parallel (params, grads) vector lists.
+    pub fn step(&mut self, params: &mut [&mut Vec<f32>], grads: &[&Vec<f32>]) {
+        assert_eq!(params.len(), self.m.len());
+        assert_eq!(grads.len(), self.m.len());
+        self.t += 1.0;
+        let bc1 = 1.0 - self.b1.powf(self.t);
+        let bc2 = 1.0 - self.b2.powf(self.t);
+        for ((p, g), (m, v)) in params
+            .iter_mut()
+            .zip(grads)
+            .zip(self.m.iter_mut().zip(self.v.iter_mut()))
+        {
+            assert_eq!(p.len(), g.len());
+            for i in 0..p.len() {
+                m[i] = self.b1 * m[i] + (1.0 - self.b1) * g[i];
+                v[i] = self.b2 * v[i] + (1.0 - self.b2) * g[i] * g[i];
+                let mh = m[i] / bc1;
+                let vh = v[i] / bc2;
+                p[i] -= self.lr * mh / (vh.sqrt() + self.eps);
+            }
+        }
+    }
+
+    pub fn t(&self) -> f32 {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// First step from zero moments: p -= lr * g/|g| (bias-corrected).
+    #[test]
+    fn first_step_matches_closed_form() {
+        let mut adam = Adam::new(0.01, &[2]);
+        let mut p = vec![1.0f32, -2.0];
+        let g = vec![0.1f32, -0.2];
+        adam.step(&mut [&mut p], &[&g]);
+        for (pi, (orig, gi)) in p.iter().zip([(1.0, 0.1f32), (-2.0, -0.2)]) {
+            let expect = orig - 0.01 * gi / (gi.abs() + 1e-8);
+            assert!((pi - expect).abs() < 1e-5, "{pi} vs {expect}");
+        }
+        assert_eq!(adam.t(), 1.0);
+    }
+
+    /// Adam must descend a simple quadratic.
+    #[test]
+    fn descends_quadratic() {
+        let mut adam = Adam::new(0.05, &[1]);
+        let mut p = vec![3.0f32];
+        for _ in 0..500 {
+            let g = vec![2.0 * p[0]];
+            adam.step(&mut [&mut p], &[&g]);
+        }
+        assert!(p[0].abs() < 0.05, "{}", p[0]);
+    }
+}

@@ -1,0 +1,352 @@
+//! Actor-critic MLP with hand-derived A2C gradients.
+//!
+//! Architecture (identical to `python/compile/models.py`):
+//! `h1 = tanh(x W1 + b1); h2 = tanh(h1 W2 + b2);
+//!  logits = h2 Wp + bp;  value = h2 Wv + bv`.
+//!
+//! Loss (identical to `algo.a2c_loss_terms`):
+//! `L = -mean(logp(a) * adv) + vf * mean((v - R)^2) - ent * mean(H)`.
+
+use crate::util::Pcg64;
+
+use super::log_softmax;
+
+/// Row-major matrix stored flat.
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    pub obs: usize,
+    pub hidden: usize,
+    pub n_out: usize,
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+    pub wp: Vec<f32>,
+    pub bp: Vec<f32>,
+    pub wv: Vec<f32>,
+    pub bv: Vec<f32>,
+}
+
+/// Gradient accumulator with the same shapes as [`Mlp`].
+#[derive(Debug, Clone)]
+pub struct MlpGrads {
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+    pub wp: Vec<f32>,
+    pub bp: Vec<f32>,
+    pub wv: Vec<f32>,
+    pub bv: Vec<f32>,
+}
+
+/// Forward activations kept for the backward pass.
+#[derive(Debug, Default, Clone)]
+pub struct Cache {
+    pub n: usize,
+    pub x: Vec<f32>,
+    pub h1: Vec<f32>,
+    pub h2: Vec<f32>,
+    pub logp: Vec<f32>,   // log-softmax rows
+    pub value: Vec<f32>,
+}
+
+impl Mlp {
+    pub fn init(obs: usize, hidden: usize, n_out: usize,
+                rng: &mut Pcg64) -> Mlp {
+        let gen = |rows: usize, cols: usize, scale: f32, rng: &mut Pcg64| {
+            (0..rows * cols)
+                .map(|_| scale * rng.normal() / (rows as f32).sqrt())
+                .collect::<Vec<f32>>()
+        };
+        Mlp {
+            obs,
+            hidden,
+            n_out,
+            w1: gen(obs, hidden, 1.0, rng),
+            b1: vec![0.0; hidden],
+            w2: gen(hidden, hidden, 1.0, rng),
+            b2: vec![0.0; hidden],
+            wp: gen(hidden, n_out, 0.01, rng),
+            bp: vec![0.0; n_out],
+            wv: gen(hidden, 1, 1.0, rng),
+            bv: vec![0.0; 1],
+        }
+    }
+
+    pub fn zeros_like(&self) -> MlpGrads {
+        MlpGrads {
+            w1: vec![0.0; self.w1.len()],
+            b1: vec![0.0; self.b1.len()],
+            w2: vec![0.0; self.w2.len()],
+            b2: vec![0.0; self.b2.len()],
+            wp: vec![0.0; self.wp.len()],
+            bp: vec![0.0; self.bp.len()],
+            wv: vec![0.0; self.wv.len()],
+            bv: vec![0.0; self.bv.len()],
+        }
+    }
+
+    /// Batched forward.  `x` is (n, obs) row-major; fills the cache and
+    /// returns it (logits are stored as log-probabilities).
+    pub fn forward(&self, x: &[f32], n: usize, cache: &mut Cache) {
+        let (o, h, a) = (self.obs, self.hidden, self.n_out);
+        debug_assert_eq!(x.len(), n * o);
+        cache.n = n;
+        cache.x.clear();
+        cache.x.extend_from_slice(x);
+        cache.h1.resize(n * h, 0.0);
+        cache.h2.resize(n * h, 0.0);
+        cache.logp.resize(n * a, 0.0);
+        cache.value.resize(n, 0.0);
+        for i in 0..n {
+            let xi = &x[i * o..(i + 1) * o];
+            {
+                let h1 = &mut cache.h1[i * h..(i + 1) * h];
+                for j in 0..h {
+                    let mut acc = self.b1[j];
+                    for k in 0..o {
+                        acc += xi[k] * self.w1[k * h + j];
+                    }
+                    h1[j] = acc.tanh();
+                }
+            }
+            let h1 = &cache.h1[i * h..(i + 1) * h];
+            let h2 = &mut cache.h2[i * h..(i + 1) * h];
+            for j in 0..h {
+                let mut acc = self.b2[j];
+                for k in 0..h {
+                    acc += h1[k] * self.w2[k * h + j];
+                }
+                h2[j] = acc.tanh();
+            }
+            let lp = &mut cache.logp[i * a..(i + 1) * a];
+            for j in 0..a {
+                let mut acc = self.bp[j];
+                for k in 0..h {
+                    acc += h2[k] * self.wp[k * a + j];
+                }
+                lp[j] = acc;
+            }
+            log_softmax(lp);
+            let mut v = self.bv[0];
+            for k in 0..h {
+                v += h2[k] * self.wv[k];
+            }
+            cache.value[i] = v;
+        }
+    }
+
+    /// A2C backward from a cached forward.  Accumulates into `grads` and
+    /// returns (pi_loss, v_loss, entropy).
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward_a2c(&self, cache: &Cache, actions: &[usize],
+                        advantages: &[f32], returns: &[f32], vf_coef: f32,
+                        ent_coef: f32, grads: &mut MlpGrads)
+                        -> (f32, f32, f32) {
+        let (o, h, a) = (self.obs, self.hidden, self.n_out);
+        let n = cache.n;
+        let inv_n = 1.0 / n as f32;
+        let (mut pi_loss, mut v_loss, mut ent_sum) = (0.0f32, 0.0, 0.0);
+        let mut dlogits = vec![0f32; a];
+        let mut dh2 = vec![0f32; h];
+        let mut dh1 = vec![0f32; h];
+        for i in 0..n {
+            let lp = &cache.logp[i * a..(i + 1) * a];
+            let h2 = &cache.h2[i * h..(i + 1) * h];
+            let h1 = &cache.h1[i * h..(i + 1) * h];
+            let xi = &cache.x[i * o..(i + 1) * o];
+            let act = actions[i];
+            let adv = advantages[i];
+            let v = cache.value[i];
+            let ret = returns[i];
+
+            let entropy: f32 = lp.iter().map(|&l| -l.exp() * l).sum();
+            pi_loss += -lp[act] * adv * inv_n;
+            v_loss += (v - ret) * (v - ret) * inv_n;
+            ent_sum += entropy * inv_n;
+
+            // d pi_loss / d logits = (p - onehot) * adv / n
+            // d (-ent*H)  / d logits = ent * p * (logp + H) / n
+            for j in 0..a {
+                let p = lp[j].exp();
+                let onehot = if j == act { 1.0 } else { 0.0 };
+                dlogits[j] = ((p - onehot) * adv
+                    + ent_coef * p * (lp[j] + entropy))
+                    * inv_n;
+            }
+            let dv = 2.0 * vf_coef * (v - ret) * inv_n;
+
+            // heads -> dh2
+            for k in 0..h {
+                let mut acc = self.wv[k] * dv;
+                for j in 0..a {
+                    acc += self.wp[k * a + j] * dlogits[j];
+                }
+                dh2[k] = acc * (1.0 - h2[k] * h2[k]); // through tanh
+            }
+            for j in 0..a {
+                grads.bp[j] += dlogits[j];
+                for k in 0..h {
+                    grads.wp[k * a + j] += h2[k] * dlogits[j];
+                }
+            }
+            grads.bv[0] += dv;
+            for k in 0..h {
+                grads.wv[k] += h2[k] * dv;
+            }
+            // layer 2 -> dh1
+            for k in 0..h {
+                let mut acc = 0.0;
+                for j in 0..h {
+                    acc += self.w2[k * h + j] * dh2[j];
+                }
+                dh1[k] = acc * (1.0 - h1[k] * h1[k]);
+            }
+            for j in 0..h {
+                grads.b2[j] += dh2[j];
+                for k in 0..h {
+                    grads.w2[k * h + j] += h1[k] * dh2[j];
+                }
+            }
+            // layer 1
+            for j in 0..h {
+                grads.b1[j] += dh1[j];
+                for k in 0..o {
+                    grads.w1[k * h + j] += xi[k] * dh1[j];
+                }
+            }
+        }
+        (pi_loss, v_loss, ent_sum)
+    }
+
+    /// Total A2C loss for gradient checking.
+    pub fn loss_a2c(&self, x: &[f32], n: usize, actions: &[usize],
+                    advantages: &[f32], returns: &[f32], vf_coef: f32,
+                    ent_coef: f32) -> f32 {
+        let mut cache = Cache::default();
+        self.forward(x, n, &mut cache);
+        let inv_n = 1.0 / n as f32;
+        let mut loss = 0.0;
+        for i in 0..n {
+            let lp = &cache.logp[i * self.n_out..(i + 1) * self.n_out];
+            let entropy: f32 = lp.iter().map(|&l| -l.exp() * l).sum();
+            loss += (-lp[actions[i]] * advantages[i]
+                + vf_coef * (cache.value[i] - returns[i]).powi(2)
+                - ent_coef * entropy)
+                * inv_n;
+        }
+        loss
+    }
+
+    /// Flat mutable references over all parameter vectors (Adam plumbing).
+    pub fn params_mut(&mut self) -> [&mut Vec<f32>; 8] {
+        [&mut self.w1, &mut self.b1, &mut self.w2, &mut self.b2,
+         &mut self.wp, &mut self.bp, &mut self.wv, &mut self.bv]
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.w1.len() + self.b1.len() + self.w2.len() + self.b2.len()
+            + self.wp.len() + self.bp.len() + self.wv.len() + self.bv.len()
+    }
+}
+
+impl MlpGrads {
+    pub fn views(&self) -> [&Vec<f32>; 8] {
+        [&self.w1, &self.b1, &self.w2, &self.b2, &self.wp, &self.bp,
+         &self.wv, &self.bv]
+    }
+
+    pub fn global_norm(&self) -> f32 {
+        self.views()
+            .iter()
+            .flat_map(|v| v.iter())
+            .map(|g| g * g)
+            .sum::<f32>()
+            .sqrt()
+    }
+
+    pub fn scale(&mut self, k: f32) {
+        for v in [&mut self.w1, &mut self.b1, &mut self.w2, &mut self.b2,
+                  &mut self.wp, &mut self.bp, &mut self.wv, &mut self.bv] {
+            for g in v.iter_mut() {
+                *g *= k;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_setup() -> (Mlp, Vec<f32>, Vec<usize>, Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg64::new(11);
+        let mlp = Mlp::init(3, 5, 4, &mut rng);
+        let n = 6;
+        let x: Vec<f32> = (0..n * 3).map(|_| rng.normal()).collect();
+        let actions: Vec<usize> = (0..n).map(|_| rng.below(4)).collect();
+        let adv: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let ret: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        (mlp, x, actions, adv, ret)
+    }
+
+    #[test]
+    fn forward_logp_normalized_and_finite() {
+        let (mlp, x, ..) = tiny_setup();
+        let mut cache = Cache::default();
+        mlp.forward(&x, 6, &mut cache);
+        for i in 0..6 {
+            let total: f32 = cache.logp[i * 4..(i + 1) * 4]
+                .iter()
+                .map(|l| l.exp())
+                .sum();
+            assert!((total - 1.0).abs() < 1e-5);
+            assert!(cache.value[i].is_finite());
+        }
+    }
+
+    /// Analytic A2C gradients vs central finite differences on every
+    /// parameter tensor.
+    #[test]
+    fn gradients_match_finite_differences() {
+        let (mut mlp, x, actions, adv, ret) = tiny_setup();
+        let (vf, ec) = (0.5f32, 0.01f32);
+        let mut grads = mlp.zeros_like();
+        let mut cache = Cache::default();
+        mlp.forward(&x, 6, &mut cache);
+        mlp.backward_a2c(&cache, &actions, &adv, &ret, vf, ec, &mut grads);
+        let eps = 2e-3;
+        // sample a few coordinates from each tensor
+        for tensor_idx in 0..8 {
+            let len = mlp.params_mut()[tensor_idx].len();
+            for &coord in &[0, len / 2, len - 1] {
+                let orig = mlp.params_mut()[tensor_idx][coord];
+                mlp.params_mut()[tensor_idx][coord] = orig + eps;
+                let lp = mlp.loss_a2c(&x, 6, &actions, &adv, &ret, vf, ec);
+                mlp.params_mut()[tensor_idx][coord] = orig - eps;
+                let lm = mlp.loss_a2c(&x, 6, &actions, &adv, &ret, vf, ec);
+                mlp.params_mut()[tensor_idx][coord] = orig;
+                let fd = (lp - lm) / (2.0 * eps);
+                let an = grads.views()[tensor_idx][coord];
+                assert!(
+                    (fd - an).abs() < 2e-3 + 0.05 * fd.abs(),
+                    "tensor {tensor_idx} coord {coord}: fd {fd} vs an {an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn grad_norm_and_scale() {
+        let (mlp, x, actions, adv, ret) = tiny_setup();
+        let mut grads = mlp.zeros_like();
+        let mut cache = Cache::default();
+        mlp.forward(&x, 6, &mut cache);
+        mlp.backward_a2c(&cache, &actions, &adv, &ret, 0.5, 0.01, &mut grads);
+        let n0 = grads.global_norm();
+        assert!(n0 > 0.0);
+        grads.scale(0.5);
+        assert!((grads.global_norm() - 0.5 * n0).abs() < 1e-4);
+    }
+}

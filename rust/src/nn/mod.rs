@@ -1,0 +1,44 @@
+//! From-scratch neural network for the CPU baseline trainer.
+//!
+//! Mirrors the JAX model exactly (2 hidden tanh layers, categorical policy
+//! head + value head) with a hand-derived A2C backward pass and Adam.
+//! Unit tests validate the analytic gradients against finite differences.
+
+pub mod adam;
+pub mod mlp;
+
+pub use adam::Adam;
+pub use mlp::{Mlp, MlpGrads};
+
+/// Numerically stable log-softmax over a row.
+pub fn log_softmax(row: &mut [f32]) {
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for x in row.iter_mut() {
+        *x -= max;
+        sum += x.exp();
+    }
+    let logz = sum.ln();
+    for x in row.iter_mut() {
+        *x -= logz;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let mut row = vec![1.0f32, 2.0, 3.0];
+        log_softmax(&mut row);
+        let total: f32 = row.iter().map(|x| x.exp()).sum();
+        assert!((total - 1.0).abs() < 1e-6);
+        // shift invariance
+        let mut row2 = vec![101.0f32, 102.0, 103.0];
+        log_softmax(&mut row2);
+        for (a, b) in row.iter().zip(&row2) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,83 @@
+//! Artifact discovery: an artifact directory = manifest + HLO text files.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::Manifest;
+
+/// A located (not yet compiled) artifact set for one (env, config) tag.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl Artifact {
+    /// Load `artifacts/<tag>` under the given artifacts root.
+    pub fn load(root: &Path, tag: &str) -> Result<Artifact> {
+        let dir = root.join(tag);
+        if !dir.is_dir() {
+            bail!(
+                "artifact {tag:?} not found under {} — run `make artifacts` \
+                 (or `make artifacts-bench` for benchmark tags)",
+                root.display()
+            );
+        }
+        let manifest = Manifest::from_file(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest for {tag}"))?;
+        // all HLO files referenced by the manifest must exist
+        for (name, sig) in &manifest.graphs {
+            let p = dir.join(&sig.file);
+            if !p.is_file() {
+                bail!("artifact {tag}: graph {name} file missing: {}",
+                      p.display());
+            }
+        }
+        Ok(Artifact { dir, manifest })
+    }
+
+    /// Enumerate all artifact tags under a root directory.
+    pub fn list(root: &Path) -> Result<Vec<String>> {
+        let mut tags = Vec::new();
+        if !root.is_dir() {
+            return Ok(tags);
+        }
+        for entry in std::fs::read_dir(root)? {
+            let entry = entry?;
+            if entry.path().join("manifest.json").is_file() {
+                tags.push(entry.file_name().to_string_lossy().into_owned());
+            }
+        }
+        tags.sort();
+        Ok(tags)
+    }
+
+    pub fn hlo_path(&self, graph: &str) -> Result<PathBuf> {
+        let sig = self
+            .manifest
+            .graphs
+            .get(graph)
+            .with_context(|| format!("no graph {graph} in {}", self.manifest.tag))?;
+        Ok(self.dir.join(&sig.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_artifact_is_a_clear_error() {
+        let err = Artifact::load(Path::new("/nonexistent"), "nope")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn list_empty_root_is_empty() {
+        let tags = Artifact::list(Path::new("/nonexistent")).unwrap();
+        assert!(tags.is_empty());
+    }
+}

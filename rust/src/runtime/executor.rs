@@ -1,0 +1,172 @@
+//! Compiled graph set: the executable half of an artifact.
+//!
+//! `GraphSet::compile` turns the seven HLO files of an artifact into PJRT
+//! executables once; afterwards the hot loop is pure `execute_b` chaining
+//! over the resident state buffer.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::{Artifact, Device};
+
+/// One compiled executable plus its provenance.
+pub struct Executor {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executor {
+    /// Execute with host literals (used at init / checkpoint restore).
+    pub fn run_lit(&self, args: &[xla::Literal]) -> Result<xla::PjRtBuffer> {
+        let mut out = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        take_single(&mut out, &self.name)
+    }
+
+    /// Execute with device buffers (the zero-host-transfer hot path).
+    pub fn run_buf(&self, args: &[&xla::PjRtBuffer]) -> Result<xla::PjRtBuffer> {
+        let mut out = self
+            .exe
+            .execute_b(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        take_single(&mut out, &self.name)
+    }
+
+    /// Execute and copy the (small) result to host.
+    pub fn run_to_host(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<f32>> {
+        buffer_to_host(&self.run_buf(args)?)
+    }
+}
+
+fn take_single(
+    out: &mut Vec<Vec<xla::PjRtBuffer>>,
+    name: &str,
+) -> Result<xla::PjRtBuffer> {
+    if out.len() != 1 || out[0].len() != 1 {
+        bail!(
+            "graph {name}: expected 1 replica x 1 output, got {}x{}",
+            out.len(),
+            out.first().map(|v| v.len()).unwrap_or(0)
+        );
+    }
+    Ok(out.remove(0).remove(0))
+}
+
+/// Copy a device buffer to a host f32 vector.
+pub fn buffer_to_host(buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+    let lit = buf.to_literal_sync().context("device->host copy")?;
+    lit.to_vec::<f32>().context("literal to f32 vec")
+}
+
+/// All seven executables of one artifact, compiled and ready.
+pub struct GraphSet {
+    pub device: Device,
+    pub artifact: Artifact,
+    pub compile_time: Duration,
+    init: Executor,
+    train_iter: Executor,
+    rollout: Executor,
+    metrics: Executor,
+    get_params: Executor,
+    set_params: Executor,
+    avg2: Executor,
+}
+
+impl GraphSet {
+    pub fn compile(device: &Device, artifact: Artifact) -> Result<GraphSet> {
+        let t0 = Instant::now();
+        let build = |name: &str| -> Result<Executor> {
+            let path = artifact.hlo_path(name)?;
+            Ok(Executor {
+                name: format!("{}/{}", artifact.manifest.tag, name),
+                exe: device.compile_hlo_file(&path)?,
+            })
+        };
+        let init = build("init")?;
+        let train_iter = build("train_iter")?;
+        let rollout = build("rollout")?;
+        let metrics = build("metrics")?;
+        let get_params = build("get_params")?;
+        let set_params = build("set_params")?;
+        let avg2 = build("avg2")?;
+        Ok(GraphSet {
+            device: device.clone(),
+            artifact,
+            compile_time: t0.elapsed(),
+            init,
+            train_iter,
+            rollout,
+            metrics,
+            get_params,
+            set_params,
+            avg2,
+        })
+    }
+
+    /// Build the initial packed state on device from a seed.
+    pub fn init_state(&self, seed: u64) -> Result<xla::PjRtBuffer> {
+        let lit = xla::Literal::vec1(&[seed as f32]);
+        self.init.run_lit(&[lit])
+    }
+
+    /// One fused roll-out + A2C update (state stays on device).
+    pub fn train_iter(&self, state: &xla::PjRtBuffer) -> Result<xla::PjRtBuffer> {
+        self.train_iter.run_buf(&[state])
+    }
+
+    /// Roll-out only (throughput benches).
+    pub fn rollout(&self, state: &xla::PjRtBuffer) -> Result<xla::PjRtBuffer> {
+        self.rollout.run_buf(&[state])
+    }
+
+    /// Fetch the small metrics vector (the only recurring host transfer).
+    pub fn metrics(&self, state: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        self.metrics.run_to_host(&[state])
+    }
+
+    /// Extract the policy/value parameter vector (device-resident).
+    pub fn get_params(&self, state: &xla::PjRtBuffer) -> Result<xla::PjRtBuffer> {
+        self.get_params.run_buf(&[state])
+    }
+
+    /// Inject a parameter vector into a state.
+    pub fn set_params(
+        &self,
+        state: &xla::PjRtBuffer,
+        params: &xla::PjRtBuffer,
+    ) -> Result<xla::PjRtBuffer> {
+        self.set_params.run_buf(&[state, params])
+    }
+
+    /// Average two parameter vectors (tree-reduction building block).
+    pub fn avg2(
+        &self,
+        a: &xla::PjRtBuffer,
+        b: &xla::PjRtBuffer,
+    ) -> Result<xla::PjRtBuffer> {
+        self.avg2.run_buf(&[a, b])
+    }
+
+    /// Upload a host state vector (checkpoint restore / ablation modes).
+    pub fn upload_state(&self, state: &[f32]) -> Result<xla::PjRtBuffer> {
+        if state.len() != self.artifact.manifest.state_size {
+            bail!(
+                "state length {} != manifest state_size {}",
+                state.len(),
+                self.artifact.manifest.state_size
+            );
+        }
+        self.device
+            .client()
+            .buffer_from_host_buffer(state, &[state.len()], None)
+            .context("uploading state vector")
+    }
+
+    /// Download the full state (checkpoints / ablation round-trip mode).
+    pub fn download_state(&self, state: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        buffer_to_host(state)
+    }
+}

@@ -1,0 +1,259 @@
+//! Artifact manifest: the typed bridge between the python AOT pipeline and
+//! the rust coordinator.
+//!
+//! `python/compile/aot.py` writes `manifest.json` next to the HLO files;
+//! this module parses it into named views over the flat state vector (the
+//! rust half of the unified data store).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::Json;
+
+/// One named field inside the flat f32 state vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FieldView {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "f32" | "i32" | "u32" (integers are bit-cast into the f32 container).
+    pub dtype: String,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// Static description of one graph's inputs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphSig {
+    pub file: String,
+    pub input_shapes: Vec<Vec<usize>>,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub tag: String,
+    pub env: String,
+    pub state_size: usize,
+    pub params_offset: usize,
+    pub params_size: usize,
+    pub steps_per_iter: usize,
+    pub agents_per_env: usize,
+    pub n_envs: usize,
+    pub t: usize,
+    pub max_steps: usize,
+    pub metrics: Vec<String>,
+    pub fields: Vec<FieldView>,
+    pub groups: BTreeMap<String, Vec<String>>,
+    pub graphs: BTreeMap<String, GraphSig>,
+}
+
+impl Manifest {
+    pub fn from_file(path: &Path) -> Result<Manifest> {
+        let json = Json::from_file(path)?;
+        Self::from_json(&json)
+            .map_err(|e| anyhow!("{}: {e}", path.display()))
+    }
+
+    pub fn from_json(json: &Json) -> Result<Manifest> {
+        let fields = json
+            .at(&["layout", "fields"])?
+            .as_arr()?
+            .iter()
+            .map(|f| {
+                Ok(FieldView {
+                    name: f.at(&["name"])?.as_str()?.to_string(),
+                    shape: f
+                        .at(&["shape"])?
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Result<_>>()?,
+                    dtype: f.at(&["dtype"])?.as_str()?.to_string(),
+                    offset: f.at(&["offset"])?.as_usize()?,
+                    size: f.at(&["size"])?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let groups = json
+            .at(&["layout", "groups"])?
+            .as_obj()?
+            .iter()
+            .map(|(k, v)| {
+                Ok((
+                    k.clone(),
+                    v.as_arr()?
+                        .iter()
+                        .map(|s| Ok(s.as_str()?.to_string()))
+                        .collect::<Result<Vec<_>>>()?,
+                ))
+            })
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        let graphs = json
+            .at(&["graphs"])?
+            .as_obj()?
+            .iter()
+            .map(|(k, v)| {
+                Ok((
+                    k.clone(),
+                    GraphSig {
+                        file: v.at(&["file"])?.as_str()?.to_string(),
+                        input_shapes: v
+                            .at(&["inputs"])?
+                            .as_arr()?
+                            .iter()
+                            .map(|i| {
+                                i.at(&["shape"])?
+                                    .as_arr()?
+                                    .iter()
+                                    .map(|d| d.as_usize())
+                                    .collect::<Result<Vec<_>>>()
+                            })
+                            .collect::<Result<_>>()?,
+                    },
+                ))
+            })
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        let man = Manifest {
+            tag: json.at(&["tag"])?.as_str()?.to_string(),
+            env: json.at(&["env"])?.as_str()?.to_string(),
+            state_size: json.at(&["state_size"])?.as_usize()?,
+            params_offset: json.at(&["params_offset"])?.as_usize()?,
+            params_size: json.at(&["params_size"])?.as_usize()?,
+            steps_per_iter: json.at(&["steps_per_iter"])?.as_usize()?,
+            agents_per_env: json.at(&["agents_per_env"])?.as_usize()?,
+            n_envs: json.at(&["config", "n_envs"])?.as_usize()?,
+            t: json.at(&["config", "t"])?.as_usize()?,
+            max_steps: json.at(&["max_steps"])?.as_usize()?,
+            metrics: json
+                .at(&["metrics"])?
+                .as_arr()?
+                .iter()
+                .map(|m| Ok(m.as_str()?.to_string()))
+                .collect::<Result<_>>()?,
+            fields,
+            groups,
+            graphs,
+        };
+        man.validate()?;
+        Ok(man)
+    }
+
+    /// Internal-consistency checks (mirrors python/tests/test_aot.py).
+    pub fn validate(&self) -> Result<()> {
+        let mut offset = 0;
+        for f in &self.fields {
+            if f.offset != offset {
+                bail!("field {} offset {} != expected {}", f.name, f.offset,
+                      offset);
+            }
+            let prod: usize = f.shape.iter().product::<usize>().max(1);
+            if prod != f.size {
+                bail!("field {} size {} != shape product {}", f.name, f.size,
+                      prod);
+            }
+            offset += f.size;
+        }
+        if offset != self.state_size {
+            bail!("layout covers {offset} != state_size {}", self.state_size);
+        }
+        if self.steps_per_iter != self.n_envs * self.t {
+            bail!("steps_per_iter mismatch");
+        }
+        for required in ["init", "train_iter", "rollout", "metrics",
+                         "get_params", "set_params", "avg2"] {
+            if !self.graphs.contains_key(required) {
+                bail!("manifest missing graph {required}");
+            }
+        }
+        Ok(())
+    }
+
+    pub fn field(&self, name: &str) -> Result<&FieldView> {
+        self.fields
+            .iter()
+            .find(|f| f.name == name)
+            .ok_or_else(|| anyhow!("no field {name} in manifest {}", self.tag))
+    }
+
+    /// Index of a named metric in the metrics vector.
+    pub fn metric_index(&self, name: &str) -> Result<usize> {
+        self.metrics
+            .iter()
+            .position(|m| m == name)
+            .ok_or_else(|| anyhow!("no metric {name}"))
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    pub(crate) fn sample_manifest_json() -> String {
+        r#"{
+  "schema": 1, "tag": "cartpole_n8_t4", "env": "cartpole",
+  "config": {"n_envs": 8, "t": 4},
+  "state_size": 20, "params_offset": 10, "params_size": 6,
+  "steps_per_iter": 32, "agents_per_env": 1, "max_steps": 500,
+  "obs_dim": 4, "n_actions": 2, "act_type": "discrete",
+  "metrics": ["iter", "env_steps"],
+  "layout": {
+    "total": 20,
+    "fields": [
+      {"name": "env.phys", "shape": [5, 2], "dtype": "f32", "offset": 0, "size": 10},
+      {"name": "param.w", "shape": [6], "dtype": "f32", "offset": 10, "size": 6},
+      {"name": "rng", "shape": [2], "dtype": "u32", "offset": 16, "size": 2},
+      {"name": "stat.iter", "shape": [], "dtype": "f32", "offset": 18, "size": 1},
+      {"name": "stat.env_steps", "shape": [], "dtype": "f32", "offset": 19, "size": 1}
+    ],
+    "groups": {"params": ["param.w"]}
+  },
+  "graphs": {
+    "init": {"file": "init.hlo.txt", "inputs": [{"shape": [1], "dtype": "f32"}]},
+    "train_iter": {"file": "train_iter.hlo.txt", "inputs": [{"shape": [20], "dtype": "f32"}]},
+    "rollout": {"file": "rollout.hlo.txt", "inputs": [{"shape": [20], "dtype": "f32"}]},
+    "metrics": {"file": "metrics.hlo.txt", "inputs": [{"shape": [20], "dtype": "f32"}]},
+    "get_params": {"file": "get_params.hlo.txt", "inputs": [{"shape": [20], "dtype": "f32"}]},
+    "set_params": {"file": "set_params.hlo.txt", "inputs": [{"shape": [20], "dtype": "f32"}, {"shape": [6], "dtype": "f32"}]},
+    "avg2": {"file": "avg2.hlo.txt", "inputs": [{"shape": [6], "dtype": "f32"}, {"shape": [6], "dtype": "f32"}]}
+  }
+}"#.to_string()
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let j = Json::parse(&sample_manifest_json()).unwrap();
+        let m = Manifest::from_json(&j).unwrap();
+        assert_eq!(m.tag, "cartpole_n8_t4");
+        assert_eq!(m.state_size, 20);
+        assert_eq!(m.field("rng").unwrap().dtype, "u32");
+        assert_eq!(m.metric_index("env_steps").unwrap(), 1);
+        assert_eq!(m.graphs["set_params"].input_shapes.len(), 2);
+    }
+
+    #[test]
+    fn rejects_offset_gap() {
+        let bad = sample_manifest_json().replace(
+            r#""offset": 16, "size": 2"#,
+            r#""offset": 17, "size": 2"#,
+        );
+        let j = Json::parse(&bad).unwrap();
+        assert!(Manifest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_graph() {
+        let bad = sample_manifest_json().replace(r#""avg2":"#, r#""zzz":"#);
+        let j = Json::parse(&bad).unwrap();
+        assert!(Manifest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_total() {
+        let bad = sample_manifest_json()
+            .replace(r#""state_size": 20"#, r#""state_size": 21"#);
+        let j = Json::parse(&bad).unwrap();
+        assert!(Manifest::from_json(&j).is_err());
+    }
+}

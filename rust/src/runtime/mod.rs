@@ -1,0 +1,68 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (PJRT C API, xla_extension 0.5.1 CPU plugin):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute` / `execute_b`.
+//!
+//! Everything on the WarpSci hot path chains **device buffers**
+//! (`execute_b`) — host literals only appear at init, checkpoints, and the
+//! tiny metrics fetch.
+
+pub mod artifact;
+pub mod executor;
+pub mod manifest;
+
+pub use artifact::Artifact;
+pub use executor::{Executor, GraphSet};
+pub use manifest::{FieldView, Manifest};
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+/// Shared PJRT client handle.
+///
+/// One client per process is the normal mode; the multi-shard orchestrator
+/// clones the `Arc` so all shards share the device pool (on CPU PJRT this
+/// is one logical device; on a real multi-GPU host each shard would bind
+/// its own device — the orchestration code path is identical).
+#[derive(Clone)]
+pub struct Device {
+    client: Arc<xla::PjRtClient>,
+}
+
+impl Device {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Device> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Device { client: Arc::new(client) })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile HLO text (already read into memory) into an executable.
+    pub fn compile_hlo_file(
+        &self,
+        path: &std::path::Path,
+    ) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+
+    /// Upload a host f32 vector as a device literal.
+    pub fn literal_f32(&self, data: &[f32]) -> xla::Literal {
+        xla::Literal::vec1(data)
+    }
+}

@@ -1,0 +1,87 @@
+//! Checkpointing: persist the policy parameter vector + run metadata.
+//!
+//! Format: a small JSON header file (`<name>.json`) plus a raw
+//! little-endian f32 blob (`<name>.params`).  Only parameters are saved —
+//! env state is cheap to re-initialize, which is also what the paper's
+//! framework does between experiments.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+/// A saved parameter vector with provenance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub tag: String,
+    pub iter: u64,
+    pub params: Vec<f32>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, dir: &Path, name: &str) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("tag".into(), Json::Str(self.tag.clone()));
+        obj.insert("iter".into(), Json::Num(self.iter as f64));
+        obj.insert("params_len".into(), Json::Num(self.params.len() as f64));
+        std::fs::write(dir.join(format!("{name}.json")),
+                       Json::Obj(obj).to_string())?;
+        let mut blob = std::fs::File::create(dir.join(format!("{name}.params")))?;
+        for x in &self.params {
+            blob.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    pub fn load(dir: &Path, name: &str) -> Result<Checkpoint> {
+        let meta = Json::from_file(&dir.join(format!("{name}.json")))?;
+        let tag = meta.at(&["tag"])?.as_str()?.to_string();
+        let iter = meta.at(&["iter"])?.as_f64()? as u64;
+        let len = meta.at(&["params_len"])?.as_usize()?;
+        let mut blob = Vec::new();
+        std::fs::File::open(dir.join(format!("{name}.params")))
+            .with_context(|| format!("opening {name}.params"))?
+            .read_to_end(&mut blob)?;
+        if blob.len() != len * 4 {
+            bail!("checkpoint blob {} bytes, expected {}", blob.len(), len * 4);
+        }
+        let params = blob
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        Ok(Checkpoint { tag, iter, params })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("warpsci_ckpt_test");
+        let ck = Checkpoint {
+            tag: "cartpole_n8_t4".into(),
+            iter: 42,
+            params: vec![1.0, -2.5, f32::MIN_POSITIVE, 0.0],
+        };
+        ck.save(&dir, "best").unwrap();
+        let back = Checkpoint::load(&dir, "best").unwrap();
+        assert_eq!(ck, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncated_blob_rejected() {
+        let dir = std::env::temp_dir().join("warpsci_ckpt_trunc");
+        let ck = Checkpoint { tag: "t".into(), iter: 1,
+                              params: vec![1.0, 2.0] };
+        ck.save(&dir, "x").unwrap();
+        std::fs::write(dir.join("x.params"), [0u8; 4]).unwrap();
+        assert!(Checkpoint::load(&dir, "x").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

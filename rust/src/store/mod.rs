@@ -1,0 +1,161 @@
+//! Host-side views over the unified data store.
+//!
+//! The hot loop never touches this module — state lives on device.  These
+//! helpers exist for the cold paths: checkpointing, debugging, numeric
+//! cross-validation against the pure-rust environments, and the Fig 3
+//! "data transfer" ablation where the store is deliberately round-tripped.
+
+pub mod checkpoint;
+
+pub use checkpoint::Checkpoint;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{FieldView, Manifest};
+
+/// Read-only named views over a downloaded state vector.
+pub struct StoreView<'a> {
+    manifest: &'a Manifest,
+    data: &'a [f32],
+}
+
+impl<'a> StoreView<'a> {
+    pub fn new(manifest: &'a Manifest, data: &'a [f32]) -> Result<StoreView<'a>> {
+        if data.len() != manifest.state_size {
+            bail!(
+                "state vector length {} != manifest state_size {}",
+                data.len(),
+                manifest.state_size
+            );
+        }
+        Ok(StoreView { manifest, data })
+    }
+
+    fn field(&self, name: &str) -> Result<&FieldView> {
+        self.manifest.field(name)
+    }
+
+    /// Raw f32 view of any field (integers still bit-packed).
+    pub fn raw(&self, name: &str) -> Result<&[f32]> {
+        let f = self.field(name)?;
+        Ok(&self.data[f.offset..f.offset + f.size])
+    }
+
+    /// f32 field contents.
+    pub fn f32(&self, name: &str) -> Result<&[f32]> {
+        let f = self.field(name)?;
+        if f.dtype != "f32" {
+            bail!("field {name} is {}, not f32", f.dtype);
+        }
+        Ok(&self.data[f.offset..f.offset + f.size])
+    }
+
+    /// Decode a bit-cast u32 field.
+    pub fn u32(&self, name: &str) -> Result<Vec<u32>> {
+        let f = self.field(name)?;
+        if f.dtype != "u32" {
+            bail!("field {name} is {}, not u32", f.dtype);
+        }
+        Ok(self.data[f.offset..f.offset + f.size]
+            .iter()
+            .map(|x| x.to_bits())
+            .collect())
+    }
+
+    /// Decode a bit-cast i32 field.
+    pub fn i32(&self, name: &str) -> Result<Vec<i32>> {
+        let f = self.field(name)?;
+        if f.dtype != "i32" {
+            bail!("field {name} is {}, not i32", f.dtype);
+        }
+        Ok(self.data[f.offset..f.offset + f.size]
+            .iter()
+            .map(|x| x.to_bits() as i32)
+            .collect())
+    }
+
+    /// Scalar f32 stat (shape []).
+    pub fn scalar(&self, name: &str) -> Result<f32> {
+        let v = self.f32(name)?;
+        if v.len() != 1 {
+            bail!("field {name} is not a scalar (size {})", v.len());
+        }
+        Ok(v[0])
+    }
+
+    /// The parameter segment.
+    pub fn params(&self) -> &[f32] {
+        &self.data[self.manifest.params_offset
+            ..self.manifest.params_offset + self.manifest.params_size]
+    }
+}
+
+/// Write a field into a host state vector (checkpoint surgery, tests).
+pub fn write_field(
+    manifest: &Manifest,
+    data: &mut [f32],
+    name: &str,
+    values: &[f32],
+) -> Result<()> {
+    let f = manifest.field(name)?;
+    if values.len() != f.size {
+        bail!("field {name}: {} values for size {}", values.len(), f.size);
+    }
+    data[f.offset..f.offset + f.size].copy_from_slice(values);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Json;
+
+    fn manifest() -> Manifest {
+        let j = Json::parse(&crate::runtime::manifest::tests::
+            sample_manifest_json()).unwrap();
+        Manifest::from_json(&j).unwrap()
+    }
+
+    #[test]
+    fn views_slice_correctly() {
+        let m = manifest();
+        let mut data = vec![0f32; m.state_size];
+        for (i, x) in data.iter_mut().enumerate() {
+            *x = i as f32;
+        }
+        let v = StoreView::new(&m, &data).unwrap();
+        assert_eq!(v.f32("env.phys").unwrap(), &data[0..10]);
+        assert_eq!(v.params(), &data[10..16]);
+        assert_eq!(v.scalar("stat.iter").unwrap(), 18.0);
+    }
+
+    #[test]
+    fn u32_bitcast_roundtrip() {
+        let m = manifest();
+        let mut data = vec![0f32; m.state_size];
+        data[16] = f32::from_bits(0xdeadbeef);
+        data[17] = f32::from_bits(7);
+        let v = StoreView::new(&m, &data).unwrap();
+        assert_eq!(v.u32("rng").unwrap(), vec![0xdeadbeef, 7]);
+        // wrong-dtype access is an error
+        assert!(v.f32("rng").is_err());
+        assert!(v.u32("env.phys").is_err());
+    }
+
+    #[test]
+    fn length_mismatch_rejected() {
+        let m = manifest();
+        let data = vec![0f32; 3];
+        assert!(StoreView::new(&m, &data).is_err());
+    }
+
+    #[test]
+    fn write_field_bounds() {
+        let m = manifest();
+        let mut data = vec![0f32; m.state_size];
+        write_field(&m, &mut data, "param.w", &[1., 2., 3., 4., 5., 6.])
+            .unwrap();
+        assert_eq!(&data[10..16], &[1., 2., 3., 4., 5., 6.]);
+        assert!(write_field(&m, &mut data, "param.w", &[1.0]).is_err());
+    }
+}

@@ -1,0 +1,77 @@
+//! Tiny CSV writer for figure-regeneration output (one file per figure).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::Result;
+
+/// Buffered CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create(path: &Path, header: &[&str]) -> Result<CsvWriter> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, cols: header.len() })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> Result<()> {
+        debug_assert_eq!(fields.len(), self.cols, "csv row arity");
+        writeln!(self.out, "{}", fields.join(","))?;
+        Ok(())
+    }
+
+    pub fn row_f64(&mut self, fields: &[f64]) -> Result<()> {
+        let strs: Vec<String> = fields.iter().map(|x| format!("{x}")).collect();
+        self.row(&strs)
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Format a float with engineering-style thousands separators for tables.
+pub fn human(x: f64) -> String {
+    if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.1}K", x / 1e3)
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("warpsci_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row_f64(&[1.0, 2.5]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2.5\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn human_scales() {
+        assert_eq!(human(8_600_000.0), "8.60M");
+        assert_eq!(human(12_500.0), "12.5K");
+        assert_eq!(human(42.0), "42.0");
+    }
+}

@@ -1,0 +1,15 @@
+//! In-house plumbing: JSON, RNG, CSV, stats, timers.
+//!
+//! The build environment is offline with only the `xla`/`anyhow`/`thiserror`
+//! crates vendored, so serialization, randomness and benchmarking utilities
+//! are implemented from scratch here (and unit-tested like everything else).
+
+pub mod csv;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use json::Json;
+pub use rng::Pcg64;
+pub use timer::Timer;

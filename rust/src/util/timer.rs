@@ -1,0 +1,67 @@
+//! Phase timer: accumulates wall-clock per named phase.
+//!
+//! Used to regenerate Fig 3-left's per-category bars (roll-out / data
+//! transfer / training) for both WarpSci and the distributed baseline.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Accumulating multi-phase stopwatch.
+#[derive(Debug, Default, Clone)]
+pub struct Timer {
+    acc: BTreeMap<&'static str, Duration>,
+}
+
+impl Timer {
+    pub fn new() -> Timer {
+        Timer::default()
+    }
+
+    /// Time a closure under a phase label.
+    pub fn time<T>(&mut self, phase: &'static str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        *self.acc.entry(phase).or_default() += t0.elapsed();
+        out
+    }
+
+    pub fn add(&mut self, phase: &'static str, d: Duration) {
+        *self.acc.entry(phase).or_default() += d;
+    }
+
+    pub fn secs(&self, phase: &str) -> f64 {
+        self.acc
+            .get(phase)
+            .map(|d| d.as_secs_f64())
+            .unwrap_or(0.0)
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.acc.values().map(|d| d.as_secs_f64()).sum()
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&'static str, f64)> + '_ {
+        self.acc.iter().map(|(k, v)| (*k, v.as_secs_f64()))
+    }
+
+    pub fn reset(&mut self) {
+        self.acc.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_phases() {
+        let mut t = Timer::new();
+        t.time("a", || std::thread::sleep(Duration::from_millis(5)));
+        t.time("a", || std::thread::sleep(Duration::from_millis(5)));
+        t.add("b", Duration::from_millis(3));
+        assert!(t.secs("a") >= 0.009);
+        assert!((t.secs("b") - 0.003).abs() < 1e-9);
+        assert!(t.total_secs() >= t.secs("a") + t.secs("b") - 1e-9);
+        assert_eq!(t.secs("missing"), 0.0);
+    }
+}

@@ -1,0 +1,88 @@
+//! Integration: the distributed baseline end-to-end, and the headline
+//! architectural comparison — the device-resident WarpSci path must beat
+//! the transfer-paying baseline on the same workload (the Fig 3 ordering).
+
+use warpsci::baseline::{DistributedConfig, DistributedSystem};
+use warpsci::config::RunConfig;
+use warpsci::coordinator::Trainer;
+use warpsci::runtime::{Artifact, Device, GraphSet};
+
+#[test]
+fn distributed_covid_full_phase_breakdown() {
+    let cfg = DistributedConfig {
+        env: "covid_econ".into(),
+        n_workers: 4,
+        envs_per_worker: 2,
+        t: 13,
+        hidden: 32,
+        ..Default::default()
+    };
+    let mut sys = DistributedSystem::new(cfg).unwrap();
+    let stats = sys.run(2).unwrap();
+    assert_eq!(stats.env_steps, (2 * 13 * 4 * 2) as f64);
+    assert_eq!(stats.agent_steps, stats.env_steps * 52.0);
+    assert!(stats.rollout_secs > 0.0);
+    assert!(stats.transfer_secs > 0.0, "baseline must pay transfer");
+    assert!(stats.train_secs > 0.0);
+    assert!(stats.bytes_moved > 1000.0);
+}
+
+#[test]
+fn warpsci_beats_distributed_baseline_on_matched_econ_workload() {
+    // Fig 3's qualitative claim on this testbed: same env count, same
+    // roll-out length, same nominal work — the device-resident fused
+    // path must deliver more env steps per second than the
+    // serialize/transfer/train-split baseline.
+    let root = warpsci::artifacts_dir();
+    let artifact = Artifact::load(&root, "covid_econ_n32_t13").expect(
+        "artifacts missing — run `make artifacts` before `cargo test`");
+    let device = Device::cpu().unwrap();
+    let graphs = GraphSet::compile(&device, artifact).unwrap();
+    let cfg = RunConfig {
+        env: "covid_econ".into(),
+        n_envs: 32,
+        t: 13,
+        iters: 4,
+        seed: 0,
+        ..Default::default()
+    };
+    let mut tr = Trainer::new(graphs, cfg).unwrap();
+    let ws = tr.measure_rollout_throughput(4).unwrap();
+
+    let bcfg = DistributedConfig {
+        env: "covid_econ".into(),
+        n_workers: 4,
+        envs_per_worker: 8, // 32 envs total, matched
+        t: 13,
+        ..Default::default()
+    };
+    let mut sys = DistributedSystem::new(bcfg).unwrap();
+    let base = sys.run(4).unwrap();
+
+    assert_eq!(ws.env_steps, base.env_steps);
+    assert!(
+        ws.steps_per_sec > base.steps_per_sec(),
+        "warpsci {} steps/s should exceed baseline {} steps/s",
+        ws.steps_per_sec,
+        base.steps_per_sec()
+    );
+}
+
+#[test]
+fn baseline_cartpole_round_counts_episodes() {
+    let cfg = DistributedConfig {
+        env: "cartpole".into(),
+        n_workers: 2,
+        envs_per_worker: 4,
+        t: 64,
+        hidden: 16,
+        ..Default::default()
+    };
+    let mut sys = DistributedSystem::new(cfg).unwrap();
+    let stats = sys.run(3).unwrap();
+    // random cartpole episodes last ~20 steps; 3*64 steps per env must
+    // finish several episodes
+    assert!(stats.episodes > 0.0);
+    assert!(stats.mean_return.is_finite());
+    assert!(stats.mean_return > 5.0);
+}

@@ -1,0 +1,150 @@
+//! Integration: artifact loading + PJRT execution of the real AOT graphs.
+//!
+//! Requires `make artifacts` (the default suite includes
+//! `cartpole_n64_t16`, used here because it compiles fastest).
+
+use warpsci::runtime::{executor::buffer_to_host, Artifact, Device,
+                       GraphSet};
+use warpsci::store::StoreView;
+
+const TAG: &str = "cartpole_n64_t16";
+
+fn graphs() -> GraphSet {
+    let root = warpsci::artifacts_dir();
+    let artifact = Artifact::load(&root, TAG).expect(
+        "artifacts missing — run `make artifacts` before `cargo test`");
+    let device = Device::cpu().unwrap();
+    GraphSet::compile(&device, artifact).unwrap()
+}
+
+#[test]
+fn artifact_discovery_lists_tag() {
+    let root = warpsci::artifacts_dir();
+    let tags = Artifact::list(&root).unwrap();
+    assert!(tags.iter().any(|t| t == TAG),
+            "expected {TAG} in {tags:?} — run `make artifacts`");
+}
+
+#[test]
+fn init_is_deterministic_per_seed() {
+    let g = graphs();
+    let a = buffer_to_host(&g.init_state(7).unwrap()).unwrap();
+    let b = buffer_to_host(&g.init_state(7).unwrap()).unwrap();
+    let c = buffer_to_host(&g.init_state(8).unwrap()).unwrap();
+    assert_eq!(a, b);
+    assert_ne!(a, c);
+    assert_eq!(a.len(), g.artifact.manifest.state_size);
+}
+
+#[test]
+fn train_iter_chain_advances_counters() {
+    let g = graphs();
+    let mut state = g.init_state(0).unwrap();
+    for _ in 0..3 {
+        state = g.train_iter(&state).unwrap();
+    }
+    let m = g.metrics(&state).unwrap();
+    let man = &g.artifact.manifest;
+    assert_eq!(m[man.metric_index("iter").unwrap()], 3.0);
+    assert_eq!(m[man.metric_index("env_steps").unwrap()],
+               (3 * man.steps_per_iter) as f32);
+    assert!(m.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn store_view_decodes_downloaded_state() {
+    let g = graphs();
+    let state = g.init_state(3).unwrap();
+    let host = g.download_state(&state).unwrap();
+    let man = &g.artifact.manifest;
+    let view = StoreView::new(man, &host).unwrap();
+    // fresh cartpole physics state is within the gym init range
+    let phys = view.f32("env.phys").unwrap();
+    assert_eq!(phys.len(), 64 * 4);
+    assert!(phys.iter().all(|x| x.abs() <= 0.05 + 1e-6));
+    // episode counters start at zero
+    assert!(view.f32("ep_steps").unwrap().iter().all(|&x| x == 0.0));
+    // rng key is a valid (nonzero) bit pattern
+    let key = view.u32("rng").unwrap();
+    assert_eq!(key.len(), 2);
+    assert!(key[0] != 0 || key[1] != 0);
+    // stats zeroed
+    assert_eq!(view.scalar("stat.iter").unwrap(), 0.0);
+}
+
+#[test]
+fn get_set_params_roundtrip_on_device() {
+    let g = graphs();
+    let state = g.init_state(1).unwrap();
+    let params = g.get_params(&state).unwrap();
+    let pv = buffer_to_host(&params).unwrap();
+    assert_eq!(pv.len(), g.artifact.manifest.params_size);
+    // zero the params, verify, then restore
+    let zeros = g
+        .device
+        .client()
+        .buffer_from_host_buffer(&vec![0f32; pv.len()], &[pv.len()], None)
+        .unwrap();
+    let state2 = g.set_params(&state, &zeros).unwrap();
+    let pv2 = buffer_to_host(&g.get_params(&state2).unwrap()).unwrap();
+    assert!(pv2.iter().all(|&x| x == 0.0));
+    let back = g.set_params(&state2, &params).unwrap();
+    let pv3 = buffer_to_host(&g.get_params(&back).unwrap()).unwrap();
+    assert_eq!(pv, pv3);
+    // and the rest of the state is untouched by the round-trip
+    assert_eq!(g.download_state(&state).unwrap(),
+               g.download_state(&back).unwrap());
+}
+
+#[test]
+fn avg2_averages_on_device() {
+    let g = graphs();
+    let s1 = g.init_state(1).unwrap();
+    let s2 = g.init_state(2).unwrap();
+    let p1 = g.get_params(&s1).unwrap();
+    let p2 = g.get_params(&s2).unwrap();
+    let avg = buffer_to_host(&g.avg2(&p1, &p2).unwrap()).unwrap();
+    let h1 = buffer_to_host(&p1).unwrap();
+    let h2 = buffer_to_host(&p2).unwrap();
+    for i in 0..avg.len() {
+        assert!((avg[i] - 0.5 * (h1[i] + h2[i])).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn upload_download_roundtrip_is_exact() {
+    let g = graphs();
+    let state = g.init_state(9).unwrap();
+    let host = g.download_state(&state).unwrap();
+    let re = g.upload_state(&host).unwrap();
+    assert_eq!(host, g.download_state(&re).unwrap());
+    // and the uploaded buffer is executable: chain one iteration
+    let next = g.train_iter(&re).unwrap();
+    let m = g.metrics(&next).unwrap();
+    assert_eq!(m[0], 1.0);
+    // wrong-length upload is rejected
+    assert!(g.upload_state(&host[1..]).is_err());
+}
+
+#[test]
+fn rollout_only_leaves_params_untouched() {
+    let g = graphs();
+    let state = g.init_state(5).unwrap();
+    let p0 = buffer_to_host(&g.get_params(&state).unwrap()).unwrap();
+    let state2 = g.rollout(&state).unwrap();
+    let p1 = buffer_to_host(&g.get_params(&state2).unwrap()).unwrap();
+    assert_eq!(p0, p1);
+    // but env steps advanced
+    let m = g.metrics(&state2).unwrap();
+    let man = &g.artifact.manifest;
+    assert_eq!(m[man.metric_index("env_steps").unwrap()],
+               man.steps_per_iter as f32);
+}
+
+#[test]
+fn missing_artifact_has_actionable_error() {
+    let err = Artifact::load(&warpsci::artifacts_dir(), "no_such_tag")
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("make artifacts"));
+}

@@ -1,0 +1,151 @@
+//! Integration: the coordinator event loop over real compiled graphs —
+//! training progress, transfer-mode equivalence, checkpoints, and the
+//! multi-shard orchestrator.
+
+use warpsci::config::RunConfig;
+use warpsci::coordinator::{MultiShardTrainer, Trainer, TransferMode};
+use warpsci::runtime::{Artifact, Device, GraphSet};
+use warpsci::store::Checkpoint;
+
+const TAG: &str = "cartpole_n64_t16";
+
+fn setup(iters: usize, seed: u64) -> Trainer {
+    let root = warpsci::artifacts_dir();
+    let artifact = Artifact::load(&root, TAG).expect(
+        "artifacts missing — run `make artifacts` before `cargo test`");
+    let device = Device::cpu().unwrap();
+    let graphs = GraphSet::compile(&device, artifact).unwrap();
+    let cfg = RunConfig {
+        env: "cartpole".into(),
+        n_envs: 64,
+        t: 16,
+        iters,
+        seed,
+        ..Default::default()
+    };
+    Trainer::new(graphs, cfg).unwrap()
+}
+
+#[test]
+fn run_reports_consistent_stats() {
+    let mut tr = setup(5, 0);
+    let stats = tr.run().unwrap();
+    assert_eq!(stats.iters_run, 5);
+    assert_eq!(stats.env_steps, (5 * 64 * 16) as f64);
+    assert_eq!(stats.agent_steps, stats.env_steps);
+    assert!(stats.steps_per_sec > 0.0);
+    assert!(stats.final_return.is_finite());
+    // phases recorded: compute + metrics, no transfer in resident mode
+    let phases: std::collections::BTreeMap<_, _> =
+        stats.phase_secs.iter().cloned().collect();
+    assert!(phases["compute"] > 0.0);
+    assert!(!phases.contains_key("transfer"));
+}
+
+#[test]
+fn training_improves_cartpole_return() {
+    let mut tr = setup(120, 0);
+    tr.init().unwrap();
+    for _ in 0..10 {
+        tr.step_train().unwrap();
+    }
+    let early = tr.record_metrics().unwrap().ep_return_ema;
+    for _ in 0..110 {
+        tr.step_train().unwrap();
+    }
+    let late = tr.record_metrics().unwrap().ep_return_ema;
+    assert!(late > early + 15.0,
+            "no learning through the AOT path: {early} -> {late}");
+}
+
+#[test]
+fn transfer_modes_compute_identical_states() {
+    // the host round-trip must be semantically invisible — only slower
+    let mut a = setup(3, 4);
+    a.mode = TransferMode::Resident;
+    a.run().unwrap();
+    let mut b = setup(3, 4);
+    b.mode = TransferMode::HostRoundTrip;
+    b.run().unwrap();
+    assert_eq!(a.log.last().unwrap().ep_return_ema,
+               b.log.last().unwrap().ep_return_ema);
+    assert_eq!(a.log.last().unwrap().env_steps,
+               b.log.last().unwrap().env_steps);
+    // and the round-trip mode actually paid a transfer cost
+    assert!(b.timer.secs("transfer") > 0.0);
+    assert_eq!(a.timer.secs("transfer"), 0.0);
+}
+
+#[test]
+fn early_stop_on_target_return() {
+    let mut tr = setup(100_000, 0);
+    tr.set_target_return(Some(5.0)); // trivially reachable
+    let stats = tr.run().unwrap();
+    assert!(stats.iters_run < 100_000);
+    assert!(stats.reached_target_at.is_some());
+}
+
+#[test]
+fn checkpoint_roundtrip_restores_params() {
+    let dir = std::env::temp_dir().join("warpsci_int_ckpt");
+    let mut tr = setup(3, 2);
+    tr.run().unwrap();
+    tr.checkpoint(&dir, "t").unwrap();
+    let ck = Checkpoint::load(&dir, "t").unwrap();
+    assert_eq!(ck.tag, TAG);
+    assert_eq!(ck.params.len(),
+               tr.graphs.artifact.manifest.params_size);
+
+    // restore into a fresh trainer: params must match exactly
+    let mut tr2 = setup(1, 99);
+    tr2.init().unwrap();
+    tr2.restore(&ck).unwrap();
+    tr2.checkpoint(&dir, "t2").unwrap();
+    let ck2 = Checkpoint::load(&dir, "t2").unwrap();
+    assert_eq!(ck.params, ck2.params);
+
+    // arity mismatch is rejected
+    let bad = Checkpoint { tag: ck.tag.clone(), iter: 0,
+                           params: vec![0.0; 3] };
+    assert!(tr2.restore(&bad).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn rollout_throughput_measurement_is_sane() {
+    let mut tr = setup(1, 0);
+    let stats = tr.measure_rollout_throughput(3).unwrap();
+    assert_eq!(stats.env_steps, (3 * 64 * 16) as f64);
+    assert!(stats.steps_per_sec > 1000.0, "{}", stats.steps_per_sec);
+}
+
+#[test]
+fn multi_shard_sync_equalizes_params() {
+    let root = warpsci::artifacts_dir();
+    let artifact = Artifact::load(&root, TAG).unwrap();
+    let device = Device::cpu().unwrap();
+    let cfg = RunConfig {
+        env: "cartpole".into(),
+        n_envs: 64,
+        t: 16,
+        iters: 4,
+        seed: 0,
+        shards: 4,
+        sync_every: 2,
+        ..Default::default()
+    };
+    let mut ms = MultiShardTrainer::new(&device, &artifact, cfg).unwrap();
+    // distinct seeds -> shards start with different params
+    let before = ms.shard_params().unwrap();
+    assert!(before.windows(2).any(|w| w[0] != w[1]));
+    for i in 0..4 {
+        ms.step(i).unwrap();
+    }
+    // step 1 and 3 triggered syncs; immediately after a sync+train the
+    // shards diverge again, so force one more sync and check equality
+    ms.sync_params().unwrap();
+    let after = ms.shard_params().unwrap();
+    assert!(after.windows(2).all(|w| w[0] == w[1]));
+    assert!(ms.sync_count >= 3);
+    assert!(ms.mean_return().unwrap().is_finite());
+}

@@ -1,0 +1,259 @@
+//! Property-style tests (seeded random sweeps — the offline build has no
+//! proptest crate, so generation is explicit over many seeds).
+//!
+//! Invariants covered: wire-format round-trips under random payloads,
+//! JSON/TOML parser round-trips, store-view slicing over random layouts,
+//! return-computation identity between the rust baseline and a scalar
+//! reference, and environment physics invariants under random action
+//! sequences.
+
+use warpsci::baseline::TrajectoryBatch;
+use warpsci::config::parser as toml;
+use warpsci::envs::make_cpu_env;
+use warpsci::util::{Json, Pcg64};
+
+const CASES: usize = 50;
+
+#[test]
+fn prop_trajectory_wire_roundtrip() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Pcg64::new(seed);
+        let t = 1 + rng.below(6) as u32;
+        let n_envs = 1 + rng.below(5) as u32;
+        let n_agents = 1 + rng.below(3) as u32;
+        let obs_dim = 1 + rng.below(8) as u32;
+        let rows = (n_envs * n_agents) as usize;
+        let trans = rows * t as usize;
+        let fin = rng.below(4) as u32;
+        let b = TrajectoryBatch {
+            t,
+            n_envs,
+            n_agents,
+            obs_dim,
+            obs: (0..trans * obs_dim as usize)
+                .map(|_| rng.normal())
+                .collect(),
+            bootstrap_obs: (0..rows * obs_dim as usize)
+                .map(|_| rng.normal())
+                .collect(),
+            actions: (0..trans).map(|_| rng.below(10) as u32).collect(),
+            rewards: (0..trans).map(|_| rng.normal()).collect(),
+            dones: (0..(t * n_envs) as usize)
+                .map(|_| if rng.next_f32() < 0.2 { 1.0 } else { 0.0 })
+                .collect(),
+            finished_returns: (0..fin).map(|_| rng.normal()).collect(),
+            finished_lens: (0..fin).map(|_| rng.below(500) as f32)
+                .collect(),
+            finished_count: fin,
+        };
+        let back = TrajectoryBatch::deserialize(&b.serialize()).unwrap();
+        assert_eq!(b, back, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_trees() {
+    fn gen(rng: &mut Pcg64, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_f32() < 0.5),
+            2 => Json::Num((rng.normal() * 100.0).round() as f64),
+            3 => Json::Str(format!("s{}", rng.below(1000))),
+            4 => Json::Arr((0..rng.below(4))
+                .map(|_| gen(rng, depth - 1))
+                .collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.below(4) {
+                    m.insert(format!("k{i}"), gen(rng, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    for seed in 0..CASES as u64 {
+        let mut rng = Pcg64::new(seed);
+        let tree = gen(&mut rng, 3);
+        let text = tree.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(tree, back, "seed {seed}: {text}");
+    }
+}
+
+#[test]
+fn prop_toml_random_docs_parse_back() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Pcg64::new(seed);
+        let mut text = String::new();
+        let mut expected = Vec::new();
+        for s in 0..1 + rng.below(3) {
+            let section = format!("sec{s}");
+            text.push_str(&format!("[{section}]\n"));
+            for k in 0..1 + rng.below(4) {
+                let key = format!("key{k}");
+                let flat = format!("{section}.{key}");
+                match rng.below(4) {
+                    0 => {
+                        let v = rng.below(100000) as i64;
+                        text.push_str(&format!("{key} = {v}\n"));
+                        expected.push((flat, toml::TomlValue::Int(v)));
+                    }
+                    1 => {
+                        let v = (rng.normal() * 10.0) as f64;
+                        text.push_str(&format!("{key} = {v:.4}\n"));
+                    }
+                    2 => {
+                        let v = rng.next_f32() < 0.5;
+                        text.push_str(&format!("{key} = {v}\n"));
+                        expected.push((flat, toml::TomlValue::Bool(v)));
+                    }
+                    _ => {
+                        let v = format!("v{}", rng.below(100));
+                        text.push_str(&format!("{key} = \"{v}\"\n"));
+                        expected.push((flat, toml::TomlValue::Str(v)));
+                    }
+                }
+            }
+        }
+        let doc = toml::parse(&text).unwrap();
+        for (key, value) in expected {
+            assert_eq!(doc.get(&key), Some(&value), "seed {seed}\n{text}");
+        }
+    }
+}
+
+/// n-step returns computed the baseline's way must match a scalar
+/// single-stream reference on random reward/done sequences.
+#[test]
+fn prop_nstep_returns_match_scalar_reference() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Pcg64::new(seed);
+        let t = 1 + rng.below(12);
+        let gamma = 0.9f32;
+        let rewards: Vec<f32> = (0..t).map(|_| rng.normal()).collect();
+        let dones: Vec<f32> = (0..t)
+            .map(|_| if rng.next_f32() < 0.25 { 1.0 } else { 0.0 })
+            .collect();
+        let boot = rng.normal();
+
+        // baseline-style computation (mirrors distributed.rs update())
+        let mut returns = vec![0f32; t];
+        let mut next = (1.0 - dones[t - 1]) * boot;
+        for step in (0..t).rev() {
+            next = rewards[step] + gamma * next;
+            returns[step] = next;
+            if step > 0 {
+                next *= 1.0 - dones[step - 1];
+            }
+        }
+
+        // scalar reference: forward accumulation per suffix
+        for s in 0..t {
+            let mut expect = 0.0f32;
+            let mut discount = 1.0f32;
+            for j in s..t {
+                expect += discount * rewards[j];
+                if dones[j] == 1.0 {
+                    break;
+                }
+                discount *= gamma;
+                if j == t - 1 {
+                    expect += discount * boot;
+                }
+            }
+            assert!((returns[s] - expect).abs() < 1e-4,
+                    "seed {seed} step {s}: {} vs {expect}", returns[s]);
+        }
+    }
+}
+
+/// Environment physics invariants under random action sequences.
+#[test]
+fn prop_env_invariants_random_actions() {
+    for seed in 0..10u64 {
+        let mut rng = Pcg64::new(seed);
+        for name in ["cartpole", "acrobot", "pendulum", "catalysis_lh",
+                     "covid_econ"] {
+            let mut env = make_cpu_env(name).unwrap();
+            env.reset(&mut rng);
+            let na = env.n_agents();
+            let mut obs = vec![0f32; na * env.obs_dim()];
+            let mut rewards = vec![0f32; na];
+            for _ in 0..50 {
+                let actions: Vec<usize> =
+                    (0..na).map(|_| rng.below(env.n_actions())).collect();
+                let done = env.step(&actions, &mut rng, &mut rewards);
+                env.write_obs(&mut obs);
+                for x in &obs {
+                    assert!(x.is_finite(), "{name}: non-finite obs");
+                    assert!(x.abs() < 1e4, "{name}: exploding obs {x}");
+                }
+                for r in &rewards {
+                    assert!(r.is_finite(), "{name}: non-finite reward");
+                }
+                if done {
+                    env.reset(&mut rng);
+                }
+            }
+        }
+    }
+}
+
+/// Store views over randomly generated manifests slice correctly.
+#[test]
+fn prop_store_views_random_layouts() {
+    use warpsci::runtime::Manifest;
+    use warpsci::store::StoreView;
+    for seed in 0..CASES as u64 {
+        let mut rng = Pcg64::new(seed);
+        // build a manifest json with random contiguous fields
+        let n_fields = 1 + rng.below(6);
+        let mut fields = Vec::new();
+        let mut offset = 0usize;
+        for i in 0..n_fields {
+            let d0 = 1 + rng.below(4);
+            let d1 = 1 + rng.below(4);
+            let dtype = ["f32", "i32", "u32"][rng.below(3)];
+            fields.push(format!(
+                r#"{{"name": "f{i}", "shape": [{d0}, {d1}], "dtype": "{dtype}", "offset": {offset}, "size": {}}}"#,
+                d0 * d1));
+            offset += d0 * d1;
+        }
+        // params group covers field 0
+        let f0_size: usize = {
+            let j = Json::parse(&fields[0]).unwrap();
+            j.at(&["size"]).unwrap().as_usize().unwrap()
+        };
+        let manifest_json = format!(
+            r#"{{
+  "tag": "prop", "env": "cartpole", "config": {{"n_envs": 1, "t": {offset}}},
+  "state_size": {offset}, "params_offset": 0, "params_size": {f0_size},
+  "steps_per_iter": {offset}, "agents_per_env": 1, "max_steps": 1,
+  "metrics": ["iter"],
+  "layout": {{"total": {offset}, "fields": [{}], "groups": {{}}}},
+  "graphs": {{
+    "init": {{"file": "x", "inputs": []}},
+    "train_iter": {{"file": "x", "inputs": []}},
+    "rollout": {{"file": "x", "inputs": []}},
+    "metrics": {{"file": "x", "inputs": []}},
+    "get_params": {{"file": "x", "inputs": []}},
+    "set_params": {{"file": "x", "inputs": []}},
+    "avg2": {{"file": "x", "inputs": []}}
+  }}
+}}"#,
+            fields.join(","));
+        let man = Manifest::from_json(&Json::parse(&manifest_json)
+            .unwrap()).unwrap();
+        let data: Vec<f32> = (0..offset).map(|i| i as f32).collect();
+        let view = StoreView::new(&man, &data).unwrap();
+        // every field's raw view must see exactly its slice
+        let mut at = 0usize;
+        for f in &man.fields {
+            let raw = view.raw(&f.name).unwrap();
+            assert_eq!(raw.len(), f.size);
+            assert_eq!(raw[0], at as f32);
+            at += f.size;
+        }
+        assert_eq!(view.params().len(), f0_size);
+    }
+}
