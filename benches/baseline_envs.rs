@@ -1,8 +1,10 @@
-//! Bench: pure-rust environment step rates (the baseline's substrate)
-//! and the serialization layer's cost per megabyte.
+//! Bench: pure-rust environment step rates (the baseline's substrate),
+//! the scalar-vs-SoA stepping gap, and the serialization layer's cost
+//! per megabyte.
 
 use warpsci::baseline::RolloutWorker;
 use warpsci::bench::Bench;
+use warpsci::engine::BatchEngine;
 use warpsci::envs::make_cpu_env;
 use warpsci::nn::Mlp;
 use warpsci::util::Pcg64;
@@ -10,7 +12,9 @@ use warpsci::util::Pcg64;
 fn main() -> anyhow::Result<()> {
     let bench = Bench::from_env();
 
-    // raw env physics throughput (no policy)
+    // raw scalar env physics throughput (no policy): the per-instance
+    // `Box<dyn CpuEnv>` path, for comparison against engine_throughput's
+    // SoA numbers
     for name in ["cartpole", "acrobot", "pendulum", "covid_econ",
                  "catalysis_lh"] {
         let mut env = make_cpu_env(name)?;
@@ -21,26 +25,42 @@ fn main() -> anyhow::Result<()> {
         let mut rewards = vec![0f32; na];
         let actions: Vec<usize> = (0..na).map(|i| i % n_act).collect();
         let iters = 20_000usize;
-        let mut steps_done = 0usize;
         let r = bench.run(&format!("env_step/{name}"), iters as f64, || {
             for _ in 0..iters {
                 if env.step(&actions, &mut rng, &mut rewards) {
                     env.reset(&mut rng);
                 }
-                steps_done += 1;
             }
         });
         println!("{}", r.report());
     }
 
+    // SoA engine at the same tiny batch size the worker uses, single
+    // shard — isolates the dispatch win from the parallelism win
+    for name in ["cartpole", "covid_econ"] {
+        let n_envs = 4;
+        let mut eng = BatchEngine::by_name(name, n_envs, 1, 0)?;
+        let rows = n_envs * eng.n_agents();
+        let n_act = eng.n_actions() as u32;
+        let actions: Vec<u32> =
+            (0..rows).map(|i| i as u32 % n_act).collect();
+        let ticks = 5_000usize;
+        let r = bench.run(&format!("engine_step/{name}/4envs"),
+                          (ticks * n_envs) as f64, || {
+                              for _ in 0..ticks {
+                                  eng.step(&actions);
+                              }
+                          });
+        println!("{}", r.report());
+    }
+
     // worker roll-out incl. policy inference (the baseline hot loop)
     for name in ["cartpole", "covid_econ"] {
-        let envs: Vec<_> = (0..4).map(|_| make_cpu_env(name).unwrap())
-            .collect();
+        let probe = make_cpu_env(name)?;
         let mut rng = Pcg64::new(1);
-        let policy = Mlp::init(envs[0].obs_dim(), 64, envs[0].n_actions(),
+        let policy = Mlp::init(probe.obs_dim(), 64, probe.n_actions(),
                                &mut rng);
-        let mut worker = RolloutWorker::new(envs, policy, 0);
+        let mut worker = RolloutWorker::new(name, 4, policy, 0)?;
         let t = 16usize;
         let r = bench.run(&format!("worker_rollout/{name}/4envs"),
                           (t * 4) as f64, || {
@@ -50,11 +70,9 @@ fn main() -> anyhow::Result<()> {
     }
 
     // serialization cost
-    let envs: Vec<_> = (0..8).map(|_| make_cpu_env("covid_econ").unwrap())
-        .collect();
     let mut rng = Pcg64::new(2);
     let policy = Mlp::init(7, 64, 10, &mut rng);
-    let mut worker = RolloutWorker::new(envs, policy, 0);
+    let mut worker = RolloutWorker::new("covid_econ", 8, policy, 0)?;
     let batch = worker.rollout(13);
     let bytes = batch.serialize();
     let mb = bytes.len() as f64 / 1e6;

@@ -1,0 +1,87 @@
+//! Bench: the SoA batch engine — raw vector stepping and the full
+//! policy-in-the-loop roll-out, across replica counts and shard threads.
+//!
+//! The headline configuration steps 4096 cartpole replicas across 4 shard
+//! threads, i.e. the paper's "thousands of concurrent environments on one
+//! device" axis realized on CPU.  Each result is printed human-readably
+//! and as one JSON line (the `bench` module's machine-readable output).
+//!
+//! Env overrides: `WARPSCI_BENCH_FAST=1` for a smoke run.
+
+use warpsci::bench::Bench;
+use warpsci::coordinator::{Backend, CpuEngine, CpuEngineConfig};
+use warpsci::engine::BatchEngine;
+
+fn main() -> anyhow::Result<()> {
+    let bench = Bench::from_env();
+
+    // raw SoA stepping (no policy): constant action pattern per lane
+    for (n_envs, threads) in [(4096usize, 1usize), (4096, 2), (4096, 4),
+                              (16384, 4)] {
+        let mut eng = BatchEngine::by_name("cartpole", n_envs, threads, 0)?;
+        let actions: Vec<u32> =
+            (0..n_envs).map(|i| (i % 2) as u32).collect();
+        let ticks = 50usize;
+        let r = bench.run(
+            &format!("engine_step/cartpole/n{n_envs}/threads{threads}"),
+            (ticks * n_envs) as f64,
+            || {
+                for _ in 0..ticks {
+                    eng.step(&actions);
+                }
+            });
+        println!("{}", r.report());
+        println!("{}", r.to_json());
+    }
+
+    // other envs at the headline shard count
+    for env in ["acrobot", "pendulum", "catalysis_lh", "covid_econ"] {
+        let n_envs = if env == "covid_econ" { 512 } else { 4096 };
+        let mut eng = BatchEngine::by_name(env, n_envs, 4, 0)?;
+        let rows = n_envs * eng.n_agents();
+        let n_act = eng.n_actions() as u32;
+        let actions: Vec<u32> =
+            (0..rows).map(|i| i as u32 % n_act).collect();
+        let ticks = if env == "covid_econ" { 10 } else { 50 };
+        let r = bench.run(
+            &format!("engine_step/{env}/n{n_envs}/threads4"),
+            (ticks * n_envs) as f64,
+            || {
+                for _ in 0..ticks {
+                    eng.step(&actions);
+                }
+            });
+        println!("{}", r.report());
+        println!("{}", r.to_json());
+    }
+
+    // full backend roll-out: policy inference + sampling + engine step
+    for threads in [1usize, 4] {
+        let mut eng = CpuEngine::new(CpuEngineConfig {
+            threads,
+            ..CpuEngineConfig::new("cartpole", 4096, 8)
+        })?;
+        let r = bench.run(
+            &format!("cpu_engine_rollout/cartpole/n4096/threads{threads}"),
+            eng.steps_per_iter() as f64,
+            || {
+                eng.rollout_iter().unwrap();
+            });
+        println!("{}", r.report());
+        println!("{}", r.to_json());
+    }
+
+    // fused roll-out + A2C train iteration
+    let mut eng = CpuEngine::new(CpuEngineConfig {
+        threads: 4,
+        ..CpuEngineConfig::new("cartpole", 4096, 8)
+    })?;
+    let r = bench.run("cpu_engine_train/cartpole/n4096/threads4",
+                      eng.steps_per_iter() as f64,
+                      || {
+                          eng.train_iter().unwrap();
+                      });
+    println!("{}", r.report());
+    println!("{}", r.to_json());
+    Ok(())
+}

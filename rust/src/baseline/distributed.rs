@@ -105,14 +105,12 @@ impl DistributedSystem {
             .collect();
         let mut workers = Vec::with_capacity(cfg.n_workers);
         for w in 0..cfg.n_workers {
-            let envs: Result<Vec<_>> = (0..cfg.envs_per_worker)
-                .map(|_| make_cpu_env(&cfg.env))
-                .collect();
             workers.push(RolloutWorker::new(
-                envs?,
+                &cfg.env,
+                cfg.envs_per_worker,
                 trainer.clone(),
                 cfg.seed.wrapping_add(w as u64 + 1),
-            ));
+            )?);
         }
         Ok(DistributedSystem {
             adam: Adam::new(cfg.lr, &shapes),
@@ -175,41 +173,14 @@ impl DistributedSystem {
             // bootstrap values from the post-roll-out observations
             let mut boot_cache = Cache::default();
             self.trainer.forward(&b.bootstrap_obs, rows, &mut boot_cache);
-            // n-step returns per (env, agent) stream, reverse over time
-            let mut returns = vec![0f32; rows * t];
-            let na = b.n_agents as usize;
-            for e in 0..b.n_envs as usize {
-                for a in 0..na {
-                    let last_done = b.dones[(t - 1) * b.n_envs as usize + e];
-                    let mut next =
-                        (1.0 - last_done) * boot_cache.value[e * na + a];
-                    for step in (0..t).rev() {
-                        let row = step * rows + e * na + a;
-                        next = b.rewards[row] + self.cfg.gamma * next;
-                        returns[row] = next;
-                        if step > 0 {
-                            let prev_done =
-                                b.dones[(step - 1) * b.n_envs as usize + e];
-                            next *= 1.0 - prev_done;
-                        }
-                    }
-                }
-            }
+            // n-step returns per (env, agent) stream (shared estimator)
+            let returns = crate::nn::nstep_returns(
+                &b.rewards, &b.dones, &boot_cache.value,
+                b.n_envs as usize, b.n_agents as usize, t, self.cfg.gamma);
             let actions: Vec<usize> =
                 b.actions.iter().map(|&a| a as usize).collect();
-            // advantage = return - value, normalized over the batch
-            let mut adv: Vec<f32> = returns
-                .iter()
-                .zip(&self.cache.value)
-                .map(|(r, v)| r - v)
-                .collect();
-            let mean = adv.iter().sum::<f32>() / adv.len() as f32;
-            let var = adv.iter().map(|x| (x - mean).powi(2)).sum::<f32>()
-                / adv.len() as f32;
-            let std = var.sqrt().max(1e-8);
-            for x in adv.iter_mut() {
-                *x = (*x - mean) / std;
-            }
+            let adv = crate::nn::normalized_advantages(&returns,
+                                                       &self.cache.value);
             self.trainer.backward_a2c(&self.cache, &actions, &adv,
                                       &returns, self.cfg.vf_coef,
                                       self.cfg.ent_coef, &mut grads);

@@ -7,12 +7,14 @@
 //! WarpSci's unified on-device store deletes (Fig 3-left's "data transfer"
 //! bar, which is identically zero for WarpSci).
 //!
-//! Workers run the pure-rust environments (`crate::envs`) and a local copy
-//! of the from-scratch policy net (`crate::nn`).  Execution is round-based
-//! and single-threaded by design: on this 1-core testbed, OS time-sharing
-//! across worker threads would only blur the per-phase attribution that
-//! Fig 3 needs (the paper's 16-vCPU node divides wall-clock across workers
-//! the same way).
+//! Workers step their replicas through the SoA batch engine
+//! (`crate::engine`, single-sharded) and a local copy of the from-scratch
+//! policy net (`crate::nn`).  Execution is round-based and single-threaded
+//! by design: OS time-sharing across worker threads would only blur the
+//! per-phase attribution that Fig 3 needs (the paper's 16-vCPU node
+//! divides wall-clock across workers the same way).  The system that
+//! *does* exploit shared memory and threads is `coordinator::CpuEngine` —
+//! the comparison between the two is exactly Fig 3's claim.
 
 pub mod distributed;
 pub mod transfer;

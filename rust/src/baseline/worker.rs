@@ -1,51 +1,51 @@
 //! Roll-out worker of the distributed baseline.
 //!
-//! Owns a batch of CPU environments and a local policy copy; each round it
-//! receives a parameter broadcast, simulates `t` steps per env (sampling
-//! actions from its local net), and produces a [`TrajectoryBatch`].
+//! Owns a batch of CPU environments — stepped through the SoA batch
+//! engine (`crate::engine`), single-sharded by design so Fig 3's
+//! per-phase attribution stays clean — and a local policy copy; each
+//! round it receives a parameter broadcast, simulates `t` steps per env
+//! (sampling actions from its local net), and produces a
+//! [`TrajectoryBatch`].
 
-use crate::envs::CpuEnv;
+use anyhow::Result;
+
+use crate::engine::BatchEngine;
 use crate::nn::mlp::Cache;
 use crate::nn::Mlp;
 use crate::util::Pcg64;
 
 use super::transfer::TrajectoryBatch;
 
-/// One worker with `n_envs` environment instances.
+/// One worker with `n_envs` environment replicas.
 pub struct RolloutWorker {
-    pub envs: Vec<Box<dyn CpuEnv>>,
+    pub engine: BatchEngine,
     pub policy: Mlp,
     rng: Pcg64,
-    ep_steps: Vec<usize>,
-    ep_returns: Vec<f32>, // per env, summed over agents (mean-agent return)
     cache: Cache,
+    actions: Vec<u32>,
 }
 
 impl RolloutWorker {
-    pub fn new(mut envs: Vec<Box<dyn CpuEnv>>, policy: Mlp, seed: u64)
-               -> RolloutWorker {
-        let mut rng = Pcg64::with_stream(seed, 0xbeef);
-        for env in envs.iter_mut() {
-            env.reset(&mut rng);
-        }
-        let n = envs.len();
-        RolloutWorker {
-            envs,
+    pub fn new(env: &str, n_envs: usize, policy: Mlp, seed: u64)
+               -> Result<RolloutWorker> {
+        let engine = BatchEngine::by_name(env, n_envs, 1, seed)?;
+        let rows = n_envs * engine.n_agents();
+        Ok(RolloutWorker {
+            engine,
             policy,
-            rng,
-            ep_steps: vec![0; n],
-            ep_returns: vec![0.0; n],
+            // top-of-id-space stream: never collides with per-lane streams
+            rng: Pcg64::with_stream(seed, u64::MAX - 3),
             cache: Cache::default(),
-        }
+            actions: vec![0; rows],
+        })
     }
 
     /// Simulate `t` steps in every env; auto-reset on done.
     pub fn rollout(&mut self, t: usize) -> TrajectoryBatch {
-        let n_envs = self.envs.len();
-        let n_agents = self.envs[0].n_agents();
-        let obs_dim = self.envs[0].obs_dim();
-        let max_steps = self.envs[0].max_steps();
-        let n_actions = self.envs[0].n_actions();
+        let n_envs = self.engine.n_envs();
+        let n_agents = self.engine.n_agents();
+        let obs_dim = self.engine.obs_dim();
+        let n_actions = self.engine.n_actions();
         let rows = n_envs * n_agents;
 
         let mut batch = TrajectoryBatch {
@@ -62,51 +62,26 @@ impl RolloutWorker {
             finished_lens: Vec::new(),
             finished_count: 0,
         };
-        let mut obs_step = vec![0f32; rows * obs_dim];
-        let mut rewards = vec![0f32; n_agents];
-        let mut actions = vec![0usize; n_agents];
-
         for _ in 0..t {
-            // gather all observations for this step
-            for (e, env) in self.envs.iter().enumerate() {
-                env.write_obs(
-                    &mut obs_step[e * n_agents * obs_dim
-                        ..(e + 1) * n_agents * obs_dim]);
-            }
-            batch.obs.extend_from_slice(&obs_step);
+            batch.obs.extend_from_slice(&self.engine.obs);
             // policy forward over the whole step batch
-            self.policy.forward(&obs_step, rows, &mut self.cache);
-            for e in 0..n_envs {
-                for a in 0..n_agents {
-                    let row = e * n_agents + a;
-                    let lp = &self.cache.logp
-                        [row * n_actions..(row + 1) * n_actions];
-                    actions[a] = self.rng.categorical(lp);
-                    batch.actions.push(actions[a] as u32);
-                }
-                let terminated =
-                    self.envs[e].step(&actions, &mut self.rng, &mut rewards);
-                batch.rewards.extend_from_slice(&rewards);
-                self.ep_steps[e] += 1;
-                self.ep_returns[e] += rewards.iter().sum::<f32>()
-                    / n_agents as f32;
-                let done = terminated || self.ep_steps[e] >= max_steps;
-                batch.dones.push(if done { 1.0 } else { 0.0 });
-                if done {
-                    batch.finished_returns.push(self.ep_returns[e]);
-                    batch.finished_lens.push(self.ep_steps[e] as f32);
-                    batch.finished_count += 1;
-                    self.envs[e].reset(&mut self.rng);
-                    self.ep_steps[e] = 0;
-                    self.ep_returns[e] = 0.0;
-                }
+            self.policy.forward(&self.engine.obs, rows, &mut self.cache);
+            for row in 0..rows {
+                let lp = &self.cache.logp
+                    [row * n_actions..(row + 1) * n_actions];
+                self.actions[row] = self.rng.categorical(lp) as u32;
             }
+            batch.actions.extend_from_slice(&self.actions);
+            self.engine.step(&self.actions);
+            batch.rewards.extend_from_slice(&self.engine.rewards);
+            batch.dones.extend_from_slice(&self.engine.dones);
+            let (rets, lens) = self.engine.drain_finished();
+            batch.finished_count += rets.len() as u32;
+            batch.finished_returns.extend(rets);
+            batch.finished_lens.extend(lens);
         }
         // observations after the final step, for trainer-side bootstrap
-        for (e, env) in self.envs.iter().enumerate() {
-            env.write_obs(&mut batch.bootstrap_obs
-                [e * n_agents * obs_dim..(e + 1) * n_agents * obs_dim]);
-        }
+        batch.bootstrap_obs.copy_from_slice(&self.engine.obs);
         batch
     }
 }
@@ -117,13 +92,11 @@ mod tests {
     use crate::envs::make_cpu_env;
 
     fn worker(env: &str, n_envs: usize) -> RolloutWorker {
-        let envs: Vec<_> = (0..n_envs)
-            .map(|_| make_cpu_env(env).unwrap())
-            .collect();
+        let probe = make_cpu_env(env).unwrap();
         let mut rng = Pcg64::new(0);
-        let policy = Mlp::init(envs[0].obs_dim(), 16, envs[0].n_actions(),
+        let policy = Mlp::init(probe.obs_dim(), 16, probe.n_actions(),
                                &mut rng);
-        RolloutWorker::new(envs, policy, 1)
+        RolloutWorker::new(env, n_envs, policy, 1).unwrap()
     }
 
     #[test]

@@ -2,9 +2,11 @@
 //! offline build).  Provides warm-up, timed sampling, and a throughput
 //! report; `benches/*.rs` are `harness = false` binaries built on this.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use crate::util::stats::Summary;
+use crate::util::Json;
 
 /// One benchmark result.
 #[derive(Debug, Clone)]
@@ -39,6 +41,24 @@ impl BenchResult {
             ));
         }
         line
+    }
+
+    /// Machine-readable record (one JSON object per result, suitable for
+    /// `println!("{}", r.to_json())` line-oriented logs).
+    pub fn to_json(&self) -> Json {
+        let s = &self.summary;
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("mean_secs".to_string(), Json::Num(s.mean));
+        m.insert("std_secs".to_string(), Json::Num(s.std));
+        m.insert("p50_secs".to_string(), Json::Num(s.p50));
+        m.insert("p95_secs".to_string(), Json::Num(s.p95));
+        m.insert("samples".to_string(), Json::Num(s.n as f64));
+        m.insert("items_per_sample".to_string(),
+                 Json::Num(self.items_per_sample));
+        m.insert("items_per_sec".to_string(),
+                 Json::Num(self.items_per_sec()));
+        Json::Obj(m)
     }
 }
 
@@ -108,5 +128,20 @@ mod tests {
         assert!(r.summary.mean > 0.0);
         assert!(r.items_per_sec() > 0.0);
         assert!(r.report().contains("busy"));
+    }
+
+    #[test]
+    fn json_record_roundtrips_and_carries_throughput() {
+        let b = Bench::new(0, 3);
+        let r = b.run("jsonable", 10.0, || {
+            std::hint::black_box((0..500).sum::<u64>());
+        });
+        let j = r.to_json();
+        let back = crate::util::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.at(&["name"]).unwrap().as_str().unwrap(),
+                   "jsonable");
+        assert_eq!(back.at(&["samples"]).unwrap().as_usize().unwrap(), 3);
+        assert!(back.at(&["items_per_sec"]).unwrap().as_f64().unwrap()
+                > 0.0);
     }
 }

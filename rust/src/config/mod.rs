@@ -33,6 +33,8 @@ pub struct RunConfig {
     pub shards: usize,
     /// Average shard parameters every k iterations.
     pub sync_every: usize,
+    /// CPU-engine shard worker threads (0 = all available cores).
+    pub threads: usize,
     /// Stop early once the episodic-return EMA reaches this value.
     pub target_return: Option<f64>,
     /// Emit per-iteration CSV to this path.
@@ -52,6 +54,7 @@ impl Default for RunConfig {
             metrics_every: 1,
             shards: 1,
             sync_every: 1,
+            threads: 0,
             target_return: None,
             log_csv: None,
             tag: None,
@@ -106,6 +109,9 @@ impl RunConfig {
         }
         if let Some(v) = doc.get("parallel.sync_every") {
             cfg.sync_every = (v.as_int()? as usize).max(1);
+        }
+        if let Some(v) = doc.get("parallel.threads") {
+            cfg.threads = v.as_int()? as usize;
         }
         if let Some(v) = doc.get("artifact.tag") {
             cfg.tag = Some(v.as_str()?.to_string());

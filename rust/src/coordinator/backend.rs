@@ -1,0 +1,102 @@
+//! Execution-backend abstraction over the paper's training loop.
+//!
+//! A [`Backend`] owns N concurrent environment replicas plus a policy and
+//! exposes the loop the rest of the system (harness, benches, CLI) is
+//! written against: `init → {train_iter | rollout_iter}* → metrics_row`.
+//!
+//! Implementations:
+//! * [`crate::coordinator::CpuEngine`] — the default: the SoA batch engine
+//!   (`crate::engine`) plus the from-scratch A2C trainer, all in-process
+//!   shared memory, zero serialization.
+//! * `crate::coordinator::Trainer` (cargo feature `pjrt`) — AOT XLA
+//!   executables chained over a device-resident PJRT buffer.
+
+use anyhow::Result;
+
+use super::metrics::MetricRow;
+
+/// Summary of a completed run (shared by every backend).
+#[derive(Debug, Clone)]
+pub struct RunStats {
+    pub iters_run: usize,
+    pub env_steps: f64,
+    pub agent_steps: f64,
+    pub wall_secs: f64,
+    pub steps_per_sec: f64,
+    pub final_return: f64,
+    pub final_ep_len: f64,
+    pub reached_target_at: Option<f64>,
+    /// seconds spent in each phase, e.g. "rollout", "transfer", "train"
+    pub phase_secs: Vec<(String, f64)>,
+}
+
+/// One execution backend: N replicas + policy + optimizer state.
+pub trait Backend {
+    /// Human-readable backend id ("cpu-engine", "pjrt").
+    fn backend_name(&self) -> &'static str;
+    /// Environment registry name.
+    fn env_name(&self) -> &str;
+    /// Concurrent environment replicas.
+    fn n_envs(&self) -> usize;
+    /// Acting agents per replica.
+    fn agents_per_env(&self) -> usize;
+    /// Environment steps per `train_iter`/`rollout_iter` (`n_envs * t`).
+    fn steps_per_iter(&self) -> usize;
+    /// (Re-)initialize replicas, policy and optimizer from a seed.
+    fn init(&mut self, seed: u64) -> Result<()>;
+    /// One fused roll-out + update iteration.
+    fn train_iter(&mut self) -> Result<()>;
+    /// One roll-out-only iteration (throughput benches).
+    fn rollout_iter(&mut self) -> Result<()>;
+    /// Fetch the current metrics row.
+    fn metrics_row(&mut self, wall_secs: f64) -> Result<MetricRow>;
+    /// Accumulated per-phase wall-clock since the last reset.
+    fn phase_secs(&self) -> Vec<(String, f64)>;
+    /// Reset the phase timer.
+    fn reset_phase_timer(&mut self);
+}
+
+/// Pure roll-out throughput over `iters` iterations (one warm-up excluded).
+pub fn measure_rollout_throughput(backend: &mut dyn Backend, iters: usize)
+                                  -> Result<RunStats> {
+    measure(backend, iters, false)
+}
+
+/// Fused roll-out + train throughput over `iters` iterations.
+pub fn measure_train_throughput(backend: &mut dyn Backend, iters: usize)
+                                -> Result<RunStats> {
+    measure(backend, iters, true)
+}
+
+fn measure(backend: &mut dyn Backend, iters: usize, train: bool)
+           -> Result<RunStats> {
+    // warm-up iteration excluded from timing
+    if train {
+        backend.train_iter()?;
+    } else {
+        backend.rollout_iter()?;
+    }
+    backend.reset_phase_timer();
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        if train {
+            backend.train_iter()?;
+        } else {
+            backend.rollout_iter()?;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let row = backend.metrics_row(wall)?;
+    let env_steps = (iters * backend.steps_per_iter()) as f64;
+    Ok(RunStats {
+        iters_run: iters,
+        env_steps,
+        agent_steps: env_steps * backend.agents_per_env() as f64,
+        wall_secs: wall,
+        steps_per_sec: env_steps / wall.max(1e-9),
+        final_return: row.ep_return_ema,
+        final_ep_len: row.ep_len_ema,
+        reached_target_at: None,
+        phase_secs: backend.phase_secs(),
+    })
+}

@@ -1,0 +1,408 @@
+//! The default execution backend: the SoA batch engine plus the
+//! from-scratch A2C trainer, entirely in shared memory.
+//!
+//! This is the CPU counterpart of the paper's fused device graph: one
+//! `train_iter` rolls all N replicas `t` ticks forward (policy inference +
+//! vector env step, no serialization anywhere) and applies one A2C/Adam
+//! update.  The environment state never leaves the engine's flat arrays —
+//! the in-process analogue of the unified on-device store, and the system
+//! the distributed baseline (`crate::baseline`) is compared against.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::engine::BatchEngine;
+use crate::nn::mlp::Cache;
+use crate::nn::{Adam, Mlp};
+use crate::util::{Pcg64, Timer};
+
+use super::backend::Backend;
+use super::metrics::MetricRow;
+
+/// CPU-engine run parameters (environment + A2C hyper-parameters).
+#[derive(Debug, Clone)]
+pub struct CpuEngineConfig {
+    pub env: String,
+    /// Concurrent environment replicas.
+    pub n_envs: usize,
+    /// Roll-out length per iteration.
+    pub t: usize,
+    /// Shard worker threads (0 = all available cores).
+    pub threads: usize,
+    pub hidden: usize,
+    pub gamma: f32,
+    pub lr: f32,
+    pub vf_coef: f32,
+    pub ent_coef: f32,
+    pub max_grad_norm: f32,
+    pub seed: u64,
+}
+
+impl Default for CpuEngineConfig {
+    fn default() -> Self {
+        CpuEngineConfig {
+            env: "cartpole".into(),
+            n_envs: 1024,
+            t: 32,
+            threads: 0,
+            hidden: 64,
+            gamma: 0.99,
+            lr: 1e-2,
+            vf_coef: 0.25,
+            ent_coef: 0.005,
+            max_grad_norm: 2.0,
+            seed: 0,
+        }
+    }
+}
+
+impl CpuEngineConfig {
+    pub fn new(env: &str, n_envs: usize, t: usize) -> CpuEngineConfig {
+        CpuEngineConfig {
+            env: env.to_string(),
+            n_envs,
+            t,
+            ..Default::default()
+        }
+    }
+
+    /// Explicit `threads` is honored verbatim.  `0` (auto) caps the
+    /// worker count so every shard owns at least ~512 agent-rows —
+    /// otherwise the engine's per-tick thread spawn/join would dominate
+    /// small workloads and distort throughput scaling curves.
+    fn resolved_threads(&self, rows: usize) -> usize {
+        if self.threads > 0 {
+            return self.threads;
+        }
+        let hw = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        hw.min((rows / 512).max(1))
+    }
+}
+
+/// Backend over [`BatchEngine`] + [`Mlp`] + [`Adam`].
+pub struct CpuEngine {
+    pub cfg: CpuEngineConfig,
+    engine: BatchEngine,
+    policy: Mlp,
+    adam: Adam,
+    cache: Cache,
+    boot_cache: Cache,
+    action_rng: Pcg64,
+    timer: Timer,
+    iter: u64,
+    env_steps: u64,
+    ret_ema: f64,
+    len_ema: f64,
+    episodes_done: f64,
+    pi_loss: f64,
+    v_loss: f64,
+    entropy: f64,
+    grad_norm: f64,
+    reward_mean: f64,
+    value_mean: f64,
+    // reusable per-iteration buffers
+    traj_obs: Vec<f32>,
+    traj_actions: Vec<usize>,
+    traj_rewards: Vec<f32>,
+    traj_dones: Vec<f32>,
+    actions_buf: Vec<u32>,
+}
+
+impl CpuEngine {
+    pub fn new(cfg: CpuEngineConfig) -> Result<CpuEngine> {
+        let kernel = crate::engine::make_batch_env(&cfg.env)?;
+        let rows = cfg.n_envs * kernel.n_agents();
+        let threads = cfg.resolved_threads(rows);
+        let engine = BatchEngine::new(kernel, cfg.n_envs, threads,
+                                      cfg.seed);
+        // fixed streams sit at the top of the id space so they can never
+        // collide with the engine's per-lane streams (= global lane index)
+        let mut init_rng = Pcg64::with_stream(cfg.seed, u64::MAX - 1);
+        let policy = Mlp::init(engine.obs_dim(), cfg.hidden,
+                               engine.n_actions(), &mut init_rng);
+        Ok(CpuEngine {
+            adam: Adam::new(cfg.lr, &policy.param_shapes()),
+            action_rng: Pcg64::with_stream(cfg.seed, u64::MAX - 2),
+            engine,
+            policy,
+            cache: Cache::default(),
+            boot_cache: Cache::default(),
+            timer: Timer::new(),
+            iter: 0,
+            env_steps: 0,
+            ret_ema: f64::NAN,
+            len_ema: f64::NAN,
+            episodes_done: 0.0,
+            pi_loss: 0.0,
+            v_loss: 0.0,
+            entropy: 0.0,
+            grad_norm: 0.0,
+            reward_mean: 0.0,
+            value_mean: 0.0,
+            traj_obs: Vec::new(),
+            traj_actions: Vec::new(),
+            traj_rewards: Vec::new(),
+            traj_dones: Vec::new(),
+            actions_buf: vec![0; rows],
+            cfg,
+        })
+    }
+
+    /// Shard worker threads in use.
+    pub fn threads(&self) -> usize {
+        self.engine.threads()
+    }
+
+    /// Borrow the underlying batch engine (tests, debugging).
+    pub fn engine(&self) -> &BatchEngine {
+        &self.engine
+    }
+
+    /// Current policy (tests, greedy replay).
+    pub fn policy(&self) -> &Mlp {
+        &self.policy
+    }
+
+    /// Forward the current observations and sample one action per row
+    /// into `actions_buf`.
+    fn sample_actions(&mut self) {
+        let rows = self.engine.n_envs() * self.engine.n_agents();
+        let n_actions = self.engine.n_actions();
+        self.policy.forward(&self.engine.obs, rows, &mut self.cache);
+        for row in 0..rows {
+            let lp = &self.cache.logp[row * n_actions..(row + 1) * n_actions];
+            self.actions_buf[row] = self.action_rng.categorical(lp) as u32;
+        }
+    }
+
+    /// Fold freshly finished episodes into the telemetry EMAs.
+    fn absorb_finished(&mut self) {
+        let (rets, lens) = self.engine.drain_finished();
+        for (r, l) in rets.iter().zip(&lens) {
+            if self.episodes_done == 0.0 {
+                self.ret_ema = *r as f64;
+                self.len_ema = *l as f64;
+            } else {
+                self.ret_ema = 0.95 * self.ret_ema + 0.05 * *r as f64;
+                self.len_ema = 0.95 * self.len_ema + 0.05 * *l as f64;
+            }
+            self.episodes_done += 1.0;
+        }
+    }
+
+    /// A2C update over the recorded trajectory.
+    fn update(&mut self) {
+        let t = self.cfg.t;
+        let n_envs = self.engine.n_envs();
+        let na = self.engine.n_agents();
+        let rows = n_envs * na;
+        let total = rows * t;
+
+        // trainer forward over every transition + bootstrap values
+        self.policy.forward(&self.traj_obs, total, &mut self.cache);
+        self.policy.forward(&self.engine.obs, rows, &mut self.boot_cache);
+
+        let returns = crate::nn::nstep_returns(
+            &self.traj_rewards, &self.traj_dones, &self.boot_cache.value,
+            n_envs, na, t, self.cfg.gamma);
+        let adv =
+            crate::nn::normalized_advantages(&returns, &self.cache.value);
+
+        let mut grads = self.policy.zeros_like();
+        let (pi_loss, v_loss, entropy) = self.policy.backward_a2c(
+            &self.cache, &self.traj_actions, &adv, &returns,
+            self.cfg.vf_coef, self.cfg.ent_coef, &mut grads);
+        let gn = grads.global_norm();
+        if gn > self.cfg.max_grad_norm {
+            grads.scale(self.cfg.max_grad_norm / gn);
+        }
+        let gviews = grads.views();
+        self.adam.step(&mut self.policy.params_mut(), &gviews);
+
+        self.pi_loss = pi_loss as f64;
+        self.v_loss = v_loss as f64;
+        self.entropy = entropy as f64;
+        self.grad_norm = gn as f64;
+        self.reward_mean = self.traj_rewards.iter().map(|r| *r as f64)
+            .sum::<f64>() / total as f64;
+        self.value_mean = self.cache.value.iter().map(|v| *v as f64)
+            .sum::<f64>() / total as f64;
+    }
+
+    fn iterate(&mut self, train: bool) -> Result<()> {
+        let t = self.cfg.t;
+        let n_envs = self.engine.n_envs();
+        if train {
+            self.traj_obs.clear();
+            self.traj_actions.clear();
+            self.traj_rewards.clear();
+            self.traj_dones.clear();
+        }
+        let t0 = Instant::now();
+        for _ in 0..t {
+            if train {
+                self.traj_obs.extend_from_slice(&self.engine.obs);
+            }
+            self.sample_actions();
+            self.engine.step(&self.actions_buf);
+            if train {
+                self.traj_actions
+                    .extend(self.actions_buf.iter().map(|a| *a as usize));
+                self.traj_rewards.extend_from_slice(&self.engine.rewards);
+                self.traj_dones.extend_from_slice(&self.engine.dones);
+            }
+        }
+        self.timer.add("rollout", t0.elapsed());
+        if train {
+            let t1 = Instant::now();
+            self.update();
+            self.timer.add("train", t1.elapsed());
+        }
+        self.absorb_finished();
+        self.iter += 1;
+        self.env_steps += (n_envs * t) as u64;
+        Ok(())
+    }
+}
+
+impl Backend for CpuEngine {
+    fn backend_name(&self) -> &'static str {
+        "cpu-engine"
+    }
+
+    fn env_name(&self) -> &str {
+        &self.cfg.env
+    }
+
+    fn n_envs(&self) -> usize {
+        self.engine.n_envs()
+    }
+
+    fn agents_per_env(&self) -> usize {
+        self.engine.n_agents()
+    }
+
+    fn steps_per_iter(&self) -> usize {
+        self.engine.n_envs() * self.cfg.t
+    }
+
+    fn init(&mut self, seed: u64) -> Result<()> {
+        let mut cfg = self.cfg.clone();
+        cfg.seed = seed;
+        *self = CpuEngine::new(cfg)?;
+        Ok(())
+    }
+
+    fn train_iter(&mut self) -> Result<()> {
+        self.iterate(true)
+    }
+
+    fn rollout_iter(&mut self) -> Result<()> {
+        self.iterate(false)
+    }
+
+    fn metrics_row(&mut self, wall_secs: f64) -> Result<MetricRow> {
+        Ok(MetricRow {
+            wall_secs,
+            iter: self.iter as f64,
+            env_steps: self.env_steps as f64,
+            ep_return_ema: self.ret_ema,
+            ep_len_ema: self.len_ema,
+            episodes_done: self.episodes_done,
+            pi_loss: self.pi_loss,
+            v_loss: self.v_loss,
+            entropy: self.entropy,
+            grad_norm: self.grad_norm,
+            reward_mean: self.reward_mean,
+            value_mean: self.value_mean,
+        })
+    }
+
+    fn phase_secs(&self) -> Vec<(String, f64)> {
+        self.timer.phases().map(|(k, v)| (k.to_string(), v)).collect()
+    }
+
+    fn reset_phase_timer(&mut self) {
+        self.timer.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(env: &str, n_envs: usize, t: usize, threads: usize)
+            -> CpuEngine {
+        CpuEngine::new(CpuEngineConfig {
+            threads,
+            hidden: 32,
+            ..CpuEngineConfig::new(env, n_envs, t)
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn train_iter_advances_counters_and_metrics_finite() {
+        let mut eng = tiny("cartpole", 8, 16, 2);
+        for _ in 0..3 {
+            eng.train_iter().unwrap();
+        }
+        let row = eng.metrics_row(1.0).unwrap();
+        assert_eq!(row.iter, 3.0);
+        assert_eq!(row.env_steps, (3 * 8 * 16) as f64);
+        assert!(row.pi_loss.is_finite());
+        assert!(row.v_loss.is_finite());
+        assert!(row.entropy > 0.0);
+        assert!(row.grad_norm > 0.0);
+        // 8 envs * 48 random-ish cartpole steps must finish episodes
+        assert!(row.episodes_done > 0.0);
+        assert!(row.ep_return_ema.is_finite());
+        let phases: std::collections::BTreeMap<_, _> =
+            eng.phase_secs().into_iter().collect();
+        assert!(phases["rollout"] > 0.0);
+        assert!(phases["train"] > 0.0);
+    }
+
+    #[test]
+    fn rollout_iter_skips_update() {
+        let mut eng = tiny("covid_econ", 2, 4, 1);
+        eng.rollout_iter().unwrap();
+        let row = eng.metrics_row(0.5).unwrap();
+        assert_eq!(row.iter, 1.0);
+        assert_eq!(row.env_steps, 8.0);
+        assert_eq!(row.grad_norm, 0.0, "no update in rollout mode");
+    }
+
+    #[test]
+    fn learns_cartpole_a_little() {
+        let mut eng = tiny("cartpole", 16, 16, 2);
+        for _ in 0..30 {
+            eng.train_iter().unwrap();
+        }
+        let early = eng.metrics_row(0.0).unwrap().ep_return_ema;
+        for _ in 0..60 {
+            eng.train_iter().unwrap();
+        }
+        let late = eng.metrics_row(0.0).unwrap().ep_return_ema;
+        assert!(late > early,
+                "cpu engine did not improve: {early} -> {late}");
+    }
+
+    #[test]
+    fn init_reseeds_deterministically() {
+        let mut a = tiny("pendulum", 4, 8, 1);
+        let mut b = tiny("pendulum", 4, 8, 2);
+        a.init(9).unwrap();
+        b.init(9).unwrap();
+        for _ in 0..2 {
+            a.train_iter().unwrap();
+            b.train_iter().unwrap();
+        }
+        assert_eq!(a.policy().w1, b.policy().w1,
+                   "same seed must give identical policies across thread \
+                    counts");
+    }
+}

@@ -1,15 +1,29 @@
 //! The WarpSci coordinator: the paper's system contribution, in rust.
 //!
-//! Owns the training event loop over the device-resident unified data
-//! store, metric telemetry, convergence tracking, and data-parallel
-//! multi-shard orchestration (the paper's multi-GPU axis).
+//! Owns the training event loop over the resident unified data store,
+//! metric telemetry, convergence tracking, and data-parallel multi-shard
+//! orchestration (the paper's multi-GPU axis).
+//!
+//! The loop itself is abstracted behind [`Backend`] with two
+//! implementations: [`CpuEngine`] (default — the SoA batch engine) and
+//! `Trainer`/`MultiShardTrainer` (PJRT device execution, behind the
+//! `pjrt` cargo feature while the `xla` binding is unavailable offline).
 
+pub mod backend;
 pub mod convergence;
+pub mod cpu_engine;
 pub mod metrics;
+#[cfg(feature = "pjrt")]
 pub mod multi_device;
+#[cfg(feature = "pjrt")]
 pub mod trainer;
 
+pub use backend::{measure_rollout_throughput, measure_train_throughput,
+                  Backend, RunStats};
 pub use convergence::ConvergenceTracker;
+pub use cpu_engine::{CpuEngine, CpuEngineConfig};
 pub use metrics::{MetricRow, MetricsLog};
+#[cfg(feature = "pjrt")]
 pub use multi_device::MultiShardTrainer;
-pub use trainer::{RunStats, Trainer, TransferMode};
+#[cfg(feature = "pjrt")]
+pub use trainer::{Trainer, TransferMode};

@@ -20,6 +20,7 @@ use crate::runtime::GraphSet;
 use crate::store::Checkpoint;
 use crate::util::Timer;
 
+use super::backend::{Backend, RunStats};
 use super::convergence::ConvergenceTracker;
 use super::metrics::{MetricRow, MetricsLog};
 
@@ -31,21 +32,6 @@ pub enum TransferMode {
     /// Ablation: full store round-trips the host every iteration
     /// (models a distributed roll-out/trainer split).
     HostRoundTrip,
-}
-
-/// Summary of a completed run.
-#[derive(Debug, Clone)]
-pub struct RunStats {
-    pub iters_run: usize,
-    pub env_steps: f64,
-    pub agent_steps: f64,
-    pub wall_secs: f64,
-    pub steps_per_sec: f64,
-    pub final_return: f64,
-    pub final_ep_len: f64,
-    pub reached_target_at: Option<f64>,
-    /// seconds spent in each phase: "compute", "transfer", "metrics"
-    pub phase_secs: Vec<(String, f64)>,
 }
 
 /// Single-shard trainer.
@@ -259,5 +245,52 @@ impl Trainer {
         let state = self.state.take().unwrap();
         self.state = Some(self.graphs.set_params(&state, &pbuf)?);
         Ok(())
+    }
+}
+
+impl Backend for Trainer {
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn env_name(&self) -> &str {
+        &self.cfg.env
+    }
+
+    fn n_envs(&self) -> usize {
+        self.graphs.artifact.manifest.n_envs
+    }
+
+    fn agents_per_env(&self) -> usize {
+        self.graphs.artifact.manifest.agents_per_env
+    }
+
+    fn steps_per_iter(&self) -> usize {
+        self.graphs.artifact.manifest.steps_per_iter
+    }
+
+    fn init(&mut self, seed: u64) -> Result<()> {
+        self.cfg.seed = seed;
+        Trainer::init(self)
+    }
+
+    fn train_iter(&mut self) -> Result<()> {
+        self.step_train()
+    }
+
+    fn rollout_iter(&mut self) -> Result<()> {
+        self.step_rollout()
+    }
+
+    fn metrics_row(&mut self, _wall_secs: f64) -> Result<MetricRow> {
+        self.record_metrics()
+    }
+
+    fn phase_secs(&self) -> Vec<(String, f64)> {
+        self.timer.phases().map(|(k, v)| (k.to_string(), v)).collect()
+    }
+
+    fn reset_phase_timer(&mut self) {
+        self.timer.reset();
     }
 }

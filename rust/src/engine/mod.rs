@@ -1,0 +1,402 @@
+//! Vectorized structure-of-arrays batch environment engine.
+//!
+//! The CPU realisation of the paper's unified in-place data store: one
+//! engine owns N environment replicas whose state lives in flat per-field
+//! `f32` arrays (`state[field * n + lane]`), stepped in lockstep once per
+//! tick.  Kernels ([`BatchEnv`]) are stateless descriptors dispatched
+//! **once per shard per tick**, so the per-replica hot loop is straight
+//! scalar math over contiguous lanes — no `Box<dyn CpuEnv>` virtual call
+//! per step, no per-replica allocation.
+//!
+//! Replicas are partitioned into contiguous shards, one per worker thread;
+//! every [`BatchEngine::step`] is one round: shard workers step their lanes
+//! in parallel (scoped threads = the round barrier), then control returns
+//! to the caller with `obs`/`rewards`/`dones` freshly written.
+//!
+//! Determinism: every lane owns its own [`Pcg64`] stream seeded by
+//! `(seed, global lane index)`, and lane math never reads a neighbouring
+//! lane's RNG, so results are **bit-identical for any thread count** —
+//! pinned by `tests/engine_determinism.rs`.
+//!
+//! Workers are scoped threads spawned per tick, so the spawn/join cost
+//! (~tens of µs) must be amortized over enough lanes per shard to be
+//! negligible; callers that auto-size (`CpuEngineConfig`) cap the worker
+//! count accordingly.  A persistent pool is a ROADMAP item.
+
+use anyhow::{bail, Result};
+
+use crate::envs;
+use crate::util::Pcg64;
+
+/// A stateless vector-step kernel over shard-local SoA state.
+///
+/// `state` is field-major over `n` lanes: field `f` of lane `i` lives at
+/// `state[f * n + i]`.  All lane math must stay lane-local so sharding
+/// cannot change results.
+pub trait BatchEnv: Send + Sync {
+    /// Registry name (same names as [`crate::envs::make_cpu_env`]).
+    fn name(&self) -> &'static str;
+    /// Acting agents per replica (1 except for the COVID economy's 52).
+    fn n_agents(&self) -> usize {
+        1
+    }
+    /// Per-agent observation width.
+    fn obs_dim(&self) -> usize;
+    /// Per-agent discrete action count.
+    fn n_actions(&self) -> usize;
+    /// Episode truncation horizon.
+    fn max_steps(&self) -> u32;
+    /// Per-lane `f32` state slots.
+    fn state_dim(&self) -> usize;
+    /// Reset lane `i` of an `n`-lane shard to a fresh episode.
+    fn reset_lane(&self, state: &mut [f32], n: usize, i: usize,
+                  rng: &mut Pcg64);
+    /// Write lane `i`'s observation (`n_agents * obs_dim` floats).
+    fn write_obs_lane(&self, state: &[f32], n: usize, i: usize,
+                      out: &mut [f32]);
+    /// Advance every lane one step.  `actions` is `[lane][agent]`,
+    /// `rewards` is `[lane][agent]`; `dones[i]` is set to 1.0 on
+    /// termination (truncation is the engine's job).
+    fn step_all(&self, state: &mut [f32], n: usize, actions: &[u32],
+                rngs: &mut [Pcg64], rewards: &mut [f32], dones: &mut [f32]);
+    /// Write every lane's observation.  One virtual call per shard-tick;
+    /// the default loops the (statically dispatched) per-lane writer.
+    fn write_obs_all(&self, state: &[f32], n: usize, out: &mut [f32]) {
+        let w = self.n_agents() * self.obs_dim();
+        for (i, chunk) in out.chunks_exact_mut(w).enumerate().take(n) {
+            self.write_obs_lane(state, n, i, chunk);
+        }
+    }
+}
+
+/// Build a batch kernel by registry name.
+pub fn make_batch_env(name: &str) -> Result<Box<dyn BatchEnv>> {
+    Ok(match name {
+        "cartpole" => Box::new(envs::cartpole::BatchCartPole),
+        "acrobot" => Box::new(envs::acrobot::BatchAcrobot),
+        "pendulum" => Box::new(envs::pendulum::BatchPendulum),
+        "covid_econ" => {
+            Box::new(envs::covid::BatchCovidEcon::new(
+                envs::covid::CALIB_SEED))
+        }
+        "catalysis_lh" => {
+            Box::new(envs::catalysis::BatchCatalysis::new(
+                envs::Mechanism::Lh))
+        }
+        "catalysis_er" => {
+            Box::new(envs::catalysis::BatchCatalysis::new(
+                envs::Mechanism::Er))
+        }
+        other => bail!("unknown batch env {other:?}"),
+    })
+}
+
+/// One contiguous range of lanes owned by one worker thread.
+struct Shard {
+    /// Global index of this shard's first lane.
+    lo: usize,
+    /// Lane count.
+    n: usize,
+    /// Field-major SoA state: `[state_dim][n]`.
+    state: Vec<f32>,
+    /// Per-lane RNG streams (seeded by global lane index).
+    rngs: Vec<Pcg64>,
+    /// Per-lane episode step counters.
+    steps: Vec<u32>,
+    /// Per-lane running episodic return (mean over agents).
+    ep_return: Vec<f32>,
+    /// Completed-episode stats since the last drain.
+    finished_returns: Vec<f32>,
+    finished_lens: Vec<f32>,
+}
+
+/// N replicas of one environment, stepped in lockstep across shard threads.
+pub struct BatchEngine {
+    env: Box<dyn BatchEnv>,
+    shards: Vec<Shard>,
+    threads: usize,
+    n_envs: usize,
+    /// Current observations, `[env][agent][obs_dim]` row-major.
+    pub obs: Vec<f32>,
+    /// Rewards of the last step, `[env][agent]`.
+    pub rewards: Vec<f32>,
+    /// 1.0 where the last step ended an episode (terminated or truncated);
+    /// those lanes have already been auto-reset and `obs` holds the fresh
+    /// episode's first observation.
+    pub dones: Vec<f32>,
+    total_steps: u64,
+}
+
+impl BatchEngine {
+    /// Build and reset `n_envs` replicas sharded across `threads` workers.
+    pub fn new(env: Box<dyn BatchEnv>, n_envs: usize, threads: usize,
+               seed: u64) -> BatchEngine {
+        assert!(n_envs > 0, "need at least one replica");
+        let threads = threads.clamp(1, n_envs);
+        let sd = env.state_dim();
+        let mut shards = Vec::with_capacity(threads);
+        let base = n_envs / threads;
+        let extra = n_envs % threads;
+        let mut lo = 0;
+        for s in 0..threads {
+            let n = base + usize::from(s < extra);
+            let mut shard = Shard {
+                lo,
+                n,
+                state: vec![0.0; sd * n],
+                rngs: (0..n)
+                    .map(|i| Pcg64::with_stream(seed, (lo + i) as u64))
+                    .collect(),
+                steps: vec![0; n],
+                ep_return: vec![0.0; n],
+                finished_returns: Vec::new(),
+                finished_lens: Vec::new(),
+            };
+            for i in 0..n {
+                env.reset_lane(&mut shard.state, n, i, &mut shard.rngs[i]);
+            }
+            shards.push(shard);
+            lo += n;
+        }
+        let rows = n_envs * env.n_agents();
+        let mut engine = BatchEngine {
+            obs: vec![0.0; rows * env.obs_dim()],
+            rewards: vec![0.0; rows],
+            dones: vec![0.0; n_envs],
+            env,
+            shards,
+            threads,
+            n_envs,
+            total_steps: 0,
+        };
+        engine.write_all_obs();
+        engine
+    }
+
+    /// Build by registry name.
+    pub fn by_name(name: &str, n_envs: usize, threads: usize, seed: u64)
+                   -> Result<BatchEngine> {
+        Ok(BatchEngine::new(make_batch_env(name)?, n_envs, threads, seed))
+    }
+
+    pub fn n_envs(&self) -> usize {
+        self.n_envs
+    }
+
+    pub fn n_agents(&self) -> usize {
+        self.env.n_agents()
+    }
+
+    pub fn obs_dim(&self) -> usize {
+        self.env.obs_dim()
+    }
+
+    pub fn n_actions(&self) -> usize {
+        self.env.n_actions()
+    }
+
+    pub fn max_steps(&self) -> u32 {
+        self.env.max_steps()
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn env_name(&self) -> &'static str {
+        self.env.name()
+    }
+
+    /// Environment steps executed so far (`ticks * n_envs`).
+    pub fn total_steps(&self) -> u64 {
+        self.total_steps
+    }
+
+    /// Step every replica once.  `actions` is `[env][agent]` row-major.
+    pub fn step(&mut self, actions: &[u32]) {
+        let na = self.env.n_agents();
+        let od = self.env.obs_dim();
+        assert_eq!(actions.len(), self.n_envs * na, "action arity");
+        let env = self.env.as_ref();
+        let max_steps = env.max_steps();
+        if self.threads <= 1 || self.shards.len() <= 1 {
+            let mut off = 0;
+            for shard in self.shards.iter_mut() {
+                let sn = shard.n;
+                let rows = sn * na;
+                step_shard(
+                    env,
+                    shard,
+                    max_steps,
+                    &actions[off * na..off * na + rows],
+                    &mut self.obs[off * na * od..(off * na + rows) * od],
+                    &mut self.rewards[off * na..off * na + rows],
+                    &mut self.dones[off..off + sn],
+                );
+                off += sn;
+            }
+        } else {
+            let mut obs_rest = self.obs.as_mut_slice();
+            let mut rew_rest = self.rewards.as_mut_slice();
+            let mut done_rest = self.dones.as_mut_slice();
+            let mut act_rest = actions;
+            std::thread::scope(|scope| {
+                for shard in self.shards.iter_mut() {
+                    let rows = shard.n * na;
+                    let (obs, o2) =
+                        std::mem::take(&mut obs_rest).split_at_mut(rows * od);
+                    obs_rest = o2;
+                    let (rew, r2) =
+                        std::mem::take(&mut rew_rest).split_at_mut(rows);
+                    rew_rest = r2;
+                    let (done, d2) =
+                        std::mem::take(&mut done_rest).split_at_mut(shard.n);
+                    done_rest = d2;
+                    let (act, a2) = act_rest.split_at(rows);
+                    act_rest = a2;
+                    scope.spawn(move || {
+                        step_shard(env, shard, max_steps, act, obs, rew,
+                                   done);
+                    });
+                }
+            });
+        }
+        self.total_steps += self.n_envs as u64;
+    }
+
+    /// Drain completed-episode (return, length) pairs accumulated since
+    /// the last call.
+    pub fn drain_finished(&mut self) -> (Vec<f32>, Vec<f32>) {
+        let mut rets = Vec::new();
+        let mut lens = Vec::new();
+        for shard in self.shards.iter_mut() {
+            rets.append(&mut shard.finished_returns);
+            lens.append(&mut shard.finished_lens);
+        }
+        (rets, lens)
+    }
+
+    /// Assemble the global field-major state `[state_dim][n_envs]`
+    /// (determinism tests, debugging; not on the hot path).
+    pub fn snapshot_state(&self) -> Vec<f32> {
+        let sd = self.env.state_dim();
+        let mut out = vec![0.0; sd * self.n_envs];
+        for shard in &self.shards {
+            for f in 0..sd {
+                for i in 0..shard.n {
+                    out[f * self.n_envs + shard.lo + i] =
+                        shard.state[f * shard.n + i];
+                }
+            }
+        }
+        out
+    }
+
+    fn write_all_obs(&mut self) {
+        let na = self.env.n_agents();
+        let od = self.env.obs_dim();
+        let mut off = 0;
+        for shard in &self.shards {
+            let rows = shard.n * na;
+            self.env.write_obs_all(
+                &shard.state,
+                shard.n,
+                &mut self.obs[off * na * od..(off * na + rows) * od],
+            );
+            off += shard.n;
+        }
+    }
+}
+
+/// One shard's tick: vector step, truncation + episode accounting +
+/// auto-reset, observation refresh.
+fn step_shard(env: &dyn BatchEnv, shard: &mut Shard, max_steps: u32,
+              actions: &[u32], obs: &mut [f32], rewards: &mut [f32],
+              dones: &mut [f32]) {
+    let na = env.n_agents();
+    env.step_all(&mut shard.state, shard.n, actions, &mut shard.rngs,
+                 rewards, dones);
+    for i in 0..shard.n {
+        shard.steps[i] += 1;
+        let rsum: f32 = rewards[i * na..(i + 1) * na].iter().sum();
+        shard.ep_return[i] += rsum / na as f32;
+        let done = dones[i] != 0.0 || shard.steps[i] >= max_steps;
+        if done {
+            shard.finished_returns.push(shard.ep_return[i]);
+            shard.finished_lens.push(shard.steps[i] as f32);
+            env.reset_lane(&mut shard.state, shard.n, i,
+                           &mut shard.rngs[i]);
+            shard.steps[i] = 0;
+            shard.ep_return[i] = 0.0;
+            dones[i] = 1.0;
+        }
+    }
+    env.write_obs_all(&shard.state, shard.n, obs);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_all_envs() {
+        for name in ["cartpole", "acrobot", "pendulum", "covid_econ",
+                     "catalysis_lh", "catalysis_er"] {
+            let env = make_batch_env(name).unwrap();
+            assert_eq!(env.name(), name);
+            assert!(env.obs_dim() > 0);
+            assert!(env.n_actions() > 1);
+            assert!(env.state_dim() > 0);
+            assert!(env.max_steps() > 0);
+        }
+        assert!(make_batch_env("nope").is_err());
+    }
+
+    #[test]
+    fn uneven_shard_split_covers_all_lanes() {
+        let eng = BatchEngine::by_name("cartpole", 7, 3, 0).unwrap();
+        assert_eq!(eng.n_envs(), 7);
+        let snap = eng.snapshot_state();
+        assert_eq!(snap.len(), 4 * 7);
+        // every lane was reset into the gym init range
+        assert!(snap.iter().all(|x| x.abs() <= 0.05));
+    }
+
+    #[test]
+    fn stepping_advances_and_autoresets() {
+        let mut eng = BatchEngine::by_name("cartpole", 8, 2, 1).unwrap();
+        let actions = vec![1u32; 8];
+        let mut saw_done = false;
+        for _ in 0..400 {
+            eng.step(&actions);
+            assert!(eng.obs.iter().all(|x| x.is_finite()));
+            assert!(eng.rewards.iter().all(|r| *r == 1.0));
+            if eng.dones.iter().any(|d| *d == 1.0) {
+                saw_done = true;
+            }
+        }
+        assert!(saw_done, "constant-right cartpole must topple");
+        let (rets, lens) = eng.drain_finished();
+        assert!(!rets.is_empty());
+        assert_eq!(rets.len(), lens.len());
+        // cartpole return == episode length
+        for (r, l) in rets.iter().zip(&lens) {
+            assert!((r - l).abs() < 1e-4);
+        }
+        assert_eq!(eng.total_steps(), 400 * 8);
+        // drained once — the second drain is empty
+        assert!(eng.drain_finished().0.is_empty());
+    }
+
+    #[test]
+    fn multi_agent_layout() {
+        let mut eng = BatchEngine::by_name("covid_econ", 3, 2, 0).unwrap();
+        assert_eq!(eng.n_agents(), 52);
+        assert_eq!(eng.obs.len(), 3 * 52 * 7);
+        assert_eq!(eng.rewards.len(), 3 * 52);
+        let actions = vec![0u32; 3 * 52];
+        eng.step(&actions);
+        assert!(eng.rewards.iter().all(|r| r.is_finite()));
+        assert!(eng.dones.iter().all(|d| *d == 0.0));
+    }
+}

@@ -1,7 +1,12 @@
 //! Acrobot-v1 (gym classic_control, single RK4 step, "book" dynamics).
+//!
+//! Provides both the scalar [`Acrobot`] ([`CpuEnv`]) and the SoA vector
+//! kernel [`BatchAcrobot`] (`crate::engine::BatchEnv`); both share
+//! [`dsdt`] so the physics cannot drift apart.
 
 use std::f32::consts::PI;
 
+use crate::engine::BatchEnv;
 use crate::util::Pcg64;
 
 use super::CpuEnv;
@@ -51,6 +56,26 @@ fn wrap(x: f32, lo: f32, hi: f32) -> f32 {
     lo + (x - lo).rem_euclid(hi - lo)
 }
 
+/// One wrapped + velocity-clamped RK4 step, shared by the scalar env and
+/// the batch kernel (mirrors `acrobot_step_ref`).
+fn rk4_step(s: [f32; 4], torque: f32) -> [f32; 4] {
+    let k1 = dsdt(s, torque);
+    let k2 = dsdt(add(s, scale(k1, DT / 2.0)), torque);
+    let k3 = dsdt(add(s, scale(k2, DT / 2.0)), torque);
+    let k4 = dsdt(add(s, scale(k3, DT)), torque);
+    let mut ns = [0f32; 4];
+    for i in 0..4 {
+        ns[i] = s[i] + DT / 6.0 * (k1[i] + 2.0 * k2[i] + 2.0 * k3[i]
+                                   + k4[i]);
+    }
+    [wrap(ns[0], -PI, PI), wrap(ns[1], -PI, PI),
+     ns[2].clamp(-MAX_VEL1, MAX_VEL1), ns[3].clamp(-MAX_VEL2, MAX_VEL2)]
+}
+
+fn goal_reached(th1: f32, th2: f32) -> bool {
+    -th1.cos() - (th2 + th1).cos() > 1.0
+}
+
 impl Acrobot {
     pub fn new() -> Acrobot {
         Acrobot::default()
@@ -59,22 +84,10 @@ impl Acrobot {
     /// One RK4 step (mirrors `acrobot_step_ref`).
     pub fn physics_step(&mut self, action: usize) -> (f32, bool) {
         let torque = action as f32 - 1.0;
-        let s = [self.th1, self.th2, self.dth1, self.dth2];
-        let k1 = dsdt(s, torque);
-        let k2 = dsdt(add(s, scale(k1, DT / 2.0)), torque);
-        let k3 = dsdt(add(s, scale(k2, DT / 2.0)), torque);
-        let k4 = dsdt(add(s, scale(k3, DT)), torque);
-        let mut ns = [0f32; 4];
-        for i in 0..4 {
-            ns[i] = s[i] + DT / 6.0 * (k1[i] + 2.0 * k2[i] + 2.0 * k3[i]
-                                       + k4[i]);
-        }
-        self.th1 = wrap(ns[0], -PI, PI);
-        self.th2 = wrap(ns[1], -PI, PI);
-        self.dth1 = ns[2].clamp(-MAX_VEL1, MAX_VEL1);
-        self.dth2 = ns[3].clamp(-MAX_VEL2, MAX_VEL2);
-        let terminated =
-            -self.th1.cos() - (self.th2 + self.th1).cos() > 1.0;
+        let ns = rk4_step([self.th1, self.th2, self.dth1, self.dth2],
+                          torque);
+        [self.th1, self.th2, self.dth1, self.dth2] = ns;
+        let terminated = goal_reached(self.th1, self.th2);
         (if terminated { 0.0 } else { -1.0 }, terminated)
     }
 }
@@ -124,6 +137,66 @@ impl CpuEnv for Acrobot {
     }
 }
 
+/// SoA vector kernel: lanes `[th1][th2][dth1][dth2]`, field-major.
+pub struct BatchAcrobot;
+
+impl BatchEnv for BatchAcrobot {
+    fn name(&self) -> &'static str {
+        "acrobot"
+    }
+
+    fn obs_dim(&self) -> usize {
+        6
+    }
+
+    fn n_actions(&self) -> usize {
+        3
+    }
+
+    fn max_steps(&self) -> u32 {
+        500
+    }
+
+    fn state_dim(&self) -> usize {
+        4
+    }
+
+    fn reset_lane(&self, state: &mut [f32], n: usize, i: usize,
+                  rng: &mut Pcg64) {
+        // same draw order as Acrobot::reset
+        for f in 0..4 {
+            state[f * n + i] = rng.uniform(-0.1, 0.1);
+        }
+    }
+
+    fn write_obs_lane(&self, state: &[f32], n: usize, i: usize,
+                      out: &mut [f32]) {
+        let (th1, th2) = (state[i], state[n + i]);
+        out[0] = th1.cos();
+        out[1] = th1.sin();
+        out[2] = th2.cos();
+        out[3] = th2.sin();
+        out[4] = state[2 * n + i];
+        out[5] = state[3 * n + i];
+    }
+
+    fn step_all(&self, state: &mut [f32], n: usize, actions: &[u32],
+                _rngs: &mut [Pcg64], rewards: &mut [f32],
+                dones: &mut [f32]) {
+        let (th1s, rest) = state.split_at_mut(n);
+        let (th2s, rest) = rest.split_at_mut(n);
+        let (d1s, d2s) = rest.split_at_mut(n);
+        for i in 0..n {
+            let torque = actions[i] as f32 - 1.0;
+            let ns = rk4_step([th1s[i], th2s[i], d1s[i], d2s[i]], torque);
+            [th1s[i], th2s[i], d1s[i], d2s[i]] = ns;
+            let terminated = goal_reached(th1s[i], th2s[i]);
+            rewards[i] = if terminated { 0.0 } else { -1.0 };
+            dones[i] = if terminated { 1.0 } else { 0.0 };
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,6 +213,43 @@ mod tests {
                       0.1423930823802948, -0.2355552315711975];
         for (got, want) in [a.th1, a.th2, a.dth1, a.dth2].iter().zip(expect) {
             assert!((got - want).abs() < 2e-5, "{got} vs {want}");
+        }
+    }
+
+    /// 5-step trajectory pinned against the python oracle
+    /// (`ref.acrobot_step_ref` iterated from [0.1, -0.2, 0.5, -1.0]
+    /// under actions [2, 2, 0, 1, 2]).
+    #[test]
+    fn golden_trajectory_matches_python_oracle() {
+        const ACTIONS: [usize; 5] = [2, 2, 0, 1, 2];
+        const TRAJ: [[f32; 4]; 5] = [
+            [0.16576695442199707, -0.3262913227081299,
+             0.1423930823802948, -0.2355552315711975],
+            [0.15423107147216797, -0.2897684574127197,
+             -0.25441083312034607, 0.5932186245918274],
+            [0.0953209400177002, -0.16698646545410156,
+             -0.3189569413661957, 0.6047149896621704],
+            [0.020251035690307617, -0.026201248168945312,
+             -0.4120595157146454, 0.7671220302581787],
+            [-0.07391524314880371, 0.15792083740234375,
+             -0.5041631460189819, 1.026343822479248],
+        ];
+        let mut a = Acrobot { th1: 0.1, th2: -0.2, dth1: 0.5, dth2: -1.0 };
+        for (act, want) in ACTIONS.iter().zip(TRAJ) {
+            let (r, done) = a.physics_step(*act);
+            assert_eq!(r, -1.0);
+            assert!(!done);
+            for (got, w) in [a.th1, a.th2, a.dth1, a.dth2].iter().zip(want) {
+                assert!((got - w).abs() < 5e-4, "{got} vs {w}");
+            }
+        }
+        // the batch kernel shares rk4_step, so one agreement step suffices
+        let kernel = BatchAcrobot;
+        let mut state = [0.1f32, -0.2, 0.5, -1.0];
+        let (mut rew, mut done) = ([0f32], [0f32]);
+        kernel.step_all(&mut state, 1, &[2], &mut [], &mut rew, &mut done);
+        for (got, w) in state.iter().zip(TRAJ[0]) {
+            assert!((got - w).abs() < 5e-4, "{got} vs {w}");
         }
     }
 

@@ -1,5 +1,11 @@
 //! CartPole-v1 (gym classic_control, Euler integrator) — rust port.
+//!
+//! Two step paths share the same constants and formulas: the scalar
+//! [`CartPole`] used by the per-instance [`CpuEnv`] interface, and the
+//! SoA vector kernel [`BatchCartPole`] used by the batch engine
+//! (`crate::engine`).  `tests/engine_determinism.rs` pins their agreement.
 
+use crate::engine::BatchEnv;
 use crate::util::Pcg64;
 
 use super::CpuEnv;
@@ -84,6 +90,77 @@ impl CpuEnv for CartPole {
     }
 }
 
+/// SoA vector kernel: lanes `[x][x_dot][theta][theta_dot]`, field-major.
+pub struct BatchCartPole;
+
+impl BatchEnv for BatchCartPole {
+    fn name(&self) -> &'static str {
+        "cartpole"
+    }
+
+    fn obs_dim(&self) -> usize {
+        4
+    }
+
+    fn n_actions(&self) -> usize {
+        2
+    }
+
+    fn max_steps(&self) -> u32 {
+        500
+    }
+
+    fn state_dim(&self) -> usize {
+        4
+    }
+
+    fn reset_lane(&self, state: &mut [f32], n: usize, i: usize,
+                  rng: &mut Pcg64) {
+        // same draw order as CartPole::reset
+        state[i] = rng.uniform(-0.05, 0.05);
+        state[n + i] = rng.uniform(-0.05, 0.05);
+        state[2 * n + i] = rng.uniform(-0.05, 0.05);
+        state[3 * n + i] = rng.uniform(-0.05, 0.05);
+    }
+
+    fn write_obs_lane(&self, state: &[f32], n: usize, i: usize,
+                      out: &mut [f32]) {
+        out[0] = state[i];
+        out[1] = state[n + i];
+        out[2] = state[2 * n + i];
+        out[3] = state[3 * n + i];
+    }
+
+    fn step_all(&self, state: &mut [f32], n: usize, actions: &[u32],
+                _rngs: &mut [Pcg64], rewards: &mut [f32],
+                dones: &mut [f32]) {
+        let (xs, rest) = state.split_at_mut(n);
+        let (xds, rest) = rest.split_at_mut(n);
+        let (ths, thds) = rest.split_at_mut(n);
+        for i in 0..n {
+            let (x, x_dot, th, th_dot) = (xs[i], xds[i], ths[i], thds[i]);
+            let force = if actions[i] == 1 { FORCE_MAG } else { -FORCE_MAG };
+            let (sinth, costh) = th.sin_cos();
+            let temp = (force + POLEMASS_LENGTH * th_dot * th_dot * sinth)
+                / TOTAL_MASS;
+            let thacc = (GRAVITY * sinth - costh * temp)
+                / (LENGTH
+                    * (4.0 / 3.0 - MASSPOLE * costh * costh / TOTAL_MASS));
+            let xacc = temp - POLEMASS_LENGTH * thacc * costh / TOTAL_MASS;
+            let nx = x + DT * x_dot;
+            let nth = th + DT * th_dot;
+            xs[i] = nx;
+            xds[i] = x_dot + DT * xacc;
+            ths[i] = nth;
+            thds[i] = th_dot + DT * thacc;
+            rewards[i] = 1.0;
+            let terminated =
+                nx.abs() > X_THRESHOLD || nth.abs() > THETA_THRESHOLD;
+            dones[i] = if terminated { 1.0 } else { 0.0 };
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -104,6 +181,53 @@ mod tests {
             .zip(expect)
         {
             assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+        }
+    }
+
+    /// 5-step trajectory pinned against the python oracle
+    /// (`ref.cartpole_step_ref` iterated from [0.1, -0.5, 0.05, 0.3]
+    /// under actions [1, 0, 1, 1, 0]), through both step paths.
+    #[test]
+    fn golden_trajectory_matches_python_oracle() {
+        const ACTIONS: [usize; 5] = [1, 0, 1, 1, 0];
+        const TRAJ: [[f32; 4]; 5] = [
+            [0.09000000357627869, -0.3056250810623169,
+             0.0560000017285347, 0.023495852947235107],
+            [0.0838875025510788, -0.5015035271644592,
+             0.05646991729736328, 0.3333083391189575],
+            [0.07385743409395218, -0.30722886323928833,
+             0.06313608586788177, 0.05895423889160156],
+            [0.06771285831928253, -0.11306633055210114,
+             0.06431517004966736, -0.21315959095954895],
+            [0.06545153260231018, -0.30904603004455566,
+             0.06005197763442993, 0.09909781813621521],
+        ];
+        // scalar path
+        let mut cp = CartPole { x: 0.1, x_dot: -0.5, theta: 0.05,
+                                theta_dot: 0.3 };
+        for (a, want) in ACTIONS.iter().zip(TRAJ) {
+            let (r, done) = cp.physics_step(*a);
+            assert_eq!(r, 1.0);
+            assert!(!done);
+            for (got, w) in [cp.x, cp.x_dot, cp.theta, cp.theta_dot]
+                .iter()
+                .zip(want)
+            {
+                assert!((got - w).abs() < 1e-5, "{got} vs {w}");
+            }
+        }
+        // batch SoA path (one lane)
+        let kernel = BatchCartPole;
+        let mut state = [0.1f32, -0.5, 0.05, 0.3];
+        let (mut rew, mut done) = ([0f32], [0f32]);
+        for (a, want) in ACTIONS.iter().zip(TRAJ) {
+            kernel.step_all(&mut state, 1, &[*a as u32], &mut [],
+                            &mut rew, &mut done);
+            assert_eq!(rew[0], 1.0);
+            assert_eq!(done[0], 0.0);
+            for (got, w) in state.iter().zip(want) {
+                assert!((got - w).abs() < 1e-5, "{got} vs {w}");
+            }
         }
     }
 

@@ -4,6 +4,7 @@
 
 use std::f32::consts::PI;
 
+use crate::engine::BatchEnv;
 use crate::util::Pcg64;
 
 use super::CpuEnv;
@@ -140,6 +141,93 @@ impl CpuEnv for Catalysis {
         let (r, done) = self.physics_step(actions[0]);
         rewards[0] = r;
         done
+    }
+}
+
+/// SoA vector kernel: lanes `[x][y][perturb]`, field-major.  The
+/// mechanism (and so the co-adsorbate bump and the reset distribution)
+/// is fixed per kernel, mirroring [`Catalysis`].
+pub struct BatchCatalysis {
+    mechanism: Mechanism,
+    bump: f32,
+}
+
+impl BatchCatalysis {
+    pub fn new(mechanism: Mechanism) -> BatchCatalysis {
+        BatchCatalysis {
+            mechanism,
+            bump: match mechanism {
+                Mechanism::Lh => LH_BUMP_AMP,
+                Mechanism::Er => 0.0,
+            },
+        }
+    }
+}
+
+impl BatchEnv for BatchCatalysis {
+    fn name(&self) -> &'static str {
+        match self.mechanism {
+            Mechanism::Lh => "catalysis_lh",
+            Mechanism::Er => "catalysis_er",
+        }
+    }
+
+    fn obs_dim(&self) -> usize {
+        4
+    }
+
+    fn n_actions(&self) -> usize {
+        N_ACTIONS
+    }
+
+    fn max_steps(&self) -> u32 {
+        MAX_STEPS as u32
+    }
+
+    fn state_dim(&self) -> usize {
+        3
+    }
+
+    fn reset_lane(&self, state: &mut [f32], n: usize, i: usize,
+                  rng: &mut Pcg64) {
+        // same draw order as Catalysis::reset
+        let (cx, cy, spread) = match self.mechanism {
+            Mechanism::Lh => (MIN_REACTANT.0, MIN_REACTANT.1, 0.05),
+            Mechanism::Er => (0.9, 0.4, 0.18),
+        };
+        state[i] = cx + spread * rng.normal();
+        state[n + i] = cy + spread * rng.normal();
+        state[2 * n + i] = 0.05 * rng.normal();
+    }
+
+    fn write_obs_lane(&self, state: &[f32], n: usize, i: usize,
+                      out: &mut [f32]) {
+        out[0] = state[i];
+        out[1] = state[n + i];
+        out[2] = state[i] - MIN_PRODUCT.0;
+        out[3] = state[n + i] - MIN_PRODUCT.1;
+    }
+
+    fn step_all(&self, state: &mut [f32], n: usize, actions: &[u32],
+                _rngs: &mut [Pcg64], rewards: &mut [f32],
+                dones: &mut [f32]) {
+        let (xs, rest) = state.split_at_mut(n);
+        let (ys, ps) = rest.split_at_mut(n);
+        for i in 0..n {
+            let perturb = ps[i];
+            let ang = actions[i] as f32 * (2.0 * PI / N_ACTIONS as f32);
+            let e_old = mb_energy(xs[i], ys[i], perturb, self.bump);
+            xs[i] = (xs[i] + ang.cos() * STEP_LEN).clamp(X_LO, X_HI);
+            ys[i] = (ys[i] + ang.sin() * STEP_LEN).clamp(Y_LO, Y_HI);
+            let e_new = mb_energy(xs[i], ys[i], perturb, self.bump);
+            let dx = xs[i] - MIN_PRODUCT.0;
+            let dy = ys[i] - MIN_PRODUCT.1;
+            let in_product =
+                dx * dx + dy * dy < PRODUCT_RADIUS * PRODUCT_RADIUS;
+            rewards[i] = -(e_new - e_old) / ENERGY_SCALE - STEP_PENALTY
+                + if in_product { PRODUCT_BONUS } else { 0.0 };
+            dones[i] = if in_product { 1.0 } else { 0.0 };
+        }
     }
 }
 

@@ -5,9 +5,15 @@
 //! the governors, agent `51` is the federal government.  Observations are
 //! padded to the governor width (7); both levels use 10 action levels.
 
+use crate::engine::BatchEnv;
 use crate::util::Pcg64;
 
 use super::CpuEnv;
+
+/// Calibration-table seed shared by the scalar and batch registries —
+/// the engine's bit-exact scalar/batch agreement depends on both using
+/// the same table.
+pub const CALIB_SEED: u64 = 7;
 
 pub const N_STATES: usize = 51;
 pub const N_AGENTS: usize = N_STATES + 1;
@@ -164,6 +170,148 @@ impl CpuEnv for CovidEcon {
         rewards[..N_STATES].copy_from_slice(&gov_r);
         rewards[N_STATES] = fed_r;
         false // horizon truncation only
+    }
+}
+
+/// SoA vector kernel for the two-level economy.  Per-lane state layout
+/// (field-major over `n` lanes):
+/// `[s_0..s_50][i_0..i_50][d_0..d_50][econ_0..econ_50][last_fed][t]`.
+/// All lanes share one calibration table (mirroring [`CovidEcon::new`],
+/// which seeds every instance identically).
+pub struct BatchCovidEcon {
+    calib: Vec<[f32; 3]>,
+}
+
+const F_S: usize = 0;
+const F_I: usize = N_STATES;
+const F_D: usize = 2 * N_STATES;
+const F_Q: usize = 3 * N_STATES;
+const F_FED: usize = 4 * N_STATES;
+const F_T: usize = 4 * N_STATES + 1;
+
+impl BatchCovidEcon {
+    pub fn new(calib_seed: u64) -> BatchCovidEcon {
+        let mut rng = Pcg64::with_stream(calib_seed, 77);
+        BatchCovidEcon { calib: make_calibration(&mut rng) }
+    }
+}
+
+impl BatchEnv for BatchCovidEcon {
+    fn name(&self) -> &'static str {
+        "covid_econ"
+    }
+
+    fn n_agents(&self) -> usize {
+        N_AGENTS
+    }
+
+    fn obs_dim(&self) -> usize {
+        GOV_OBS
+    }
+
+    fn n_actions(&self) -> usize {
+        N_ACTIONS
+    }
+
+    fn max_steps(&self) -> u32 {
+        MAX_STEPS as u32
+    }
+
+    fn state_dim(&self) -> usize {
+        4 * N_STATES + 2
+    }
+
+    fn reset_lane(&self, state: &mut [f32], n: usize, i: usize,
+                  rng: &mut Pcg64) {
+        // same draw order as CovidEcon::reset
+        for j in 0..N_STATES {
+            let i0 = rng.uniform(0.002, 0.02);
+            state[(F_S + j) * n + i] = 1.0 - i0;
+            state[(F_I + j) * n + i] = i0;
+            state[(F_D + j) * n + i] = 0.0;
+            state[(F_Q + j) * n + i] = 1.0 + 0.05 * rng.normal();
+        }
+        state[F_FED * n + i] = 0.0;
+        state[F_T * n + i] = 0.0;
+    }
+
+    fn write_obs_lane(&self, state: &[f32], n: usize, i: usize,
+                      out: &mut [f32]) {
+        let t_frac = state[F_T * n + i] / MAX_STEPS as f32;
+        let last_fed = state[F_FED * n + i];
+        let ns = N_STATES as f32;
+        let (mut i_sum, mut d_sum, mut q_sum) = (0.0f32, 0.0f32, 0.0f32);
+        let mut i_max = f32::NEG_INFINITY;
+        for j in 0..N_STATES {
+            let inf = state[(F_I + j) * n + i];
+            i_sum += inf;
+            d_sum += state[(F_D + j) * n + i];
+            q_sum += state[(F_Q + j) * n + i];
+            i_max = i_max.max(inf);
+        }
+        let (i_nat, d_nat, q_nat) = (i_sum / ns, d_sum / ns, q_sum / ns);
+        for j in 0..N_STATES {
+            let o = &mut out[j * GOV_OBS..(j + 1) * GOV_OBS];
+            o[0] = state[(F_S + j) * n + i];
+            o[1] = state[(F_I + j) * n + i];
+            o[2] = state[(F_D + j) * n + i];
+            o[3] = state[(F_Q + j) * n + i];
+            o[4] = last_fed / 9.0;
+            o[5] = i_nat;
+            o[6] = t_frac;
+        }
+        let o = &mut out[N_STATES * GOV_OBS..N_AGENTS * GOV_OBS];
+        o[0] = i_nat;
+        o[1] = d_nat;
+        o[2] = q_nat;
+        o[3] = i_max;
+        o[4] = last_fed / 9.0;
+        o[5] = t_frac;
+        o[6] = 0.0; // pad
+    }
+
+    fn step_all(&self, state: &mut [f32], n: usize, actions: &[u32],
+                _rngs: &mut [Pcg64], rewards: &mut [f32],
+                dones: &mut [f32]) {
+        for i in 0..n {
+            let acts = &actions[i * N_AGENTS..(i + 1) * N_AGENTS];
+            let subsidy = acts[N_STATES] as f32;
+            let mut i_sum = 0.0f32;
+            for j in 0..N_STATES {
+                i_sum += state[(F_I + j) * n + i];
+            }
+            let i_nat = i_sum / N_STATES as f32;
+            let mut reward_sum = 0.0f32;
+            for j in 0..N_STATES {
+                let s = state[(F_S + j) * n + i];
+                let inf = state[(F_I + j) * n + i];
+                let [beta0, q0, hw] = self.calib[j];
+                let stringency = acts[j] as f32;
+                let beta = beta0 * (1.0 - BETA_DAMP * stringency);
+                let new_inf = (beta * s
+                    * ((1.0 - MIX) * inf + MIX * i_nat))
+                    .clamp(0.0, s);
+                let new_rec = GAMMA_REC * inf;
+                let new_dead = MU_MORT * inf;
+                let i2 = (inf + new_inf - new_rec - new_dead).clamp(0.0, 1.0);
+                state[(F_S + j) * n + i] = s - new_inf;
+                state[(F_I + j) * n + i] = i2;
+                state[(F_D + j) * n + i] += new_dead;
+                let open_frac = 1.0 - ECON_DAMP * stringency;
+                let q2 = q0 * open_frac * (1.0 - 0.5 * i2)
+                    + SUBSIDY_BOOST * subsidy;
+                let q = &mut state[(F_Q + j) * n + i];
+                *q = 0.5 * *q + 0.5 * q2;
+                let r = q2 - hw * DEATH_WEIGHT * new_dead;
+                rewards[i * N_AGENTS + j] = r;
+                reward_sum += r;
+            }
+            rewards[i * N_AGENTS + N_STATES] =
+                reward_sum / N_STATES as f32 - SUBSIDY_COST * subsidy;
+            state[F_FED * n + i] = subsidy;
+            state[F_T * n + i] += 1.0;
+            dones[i] = 0.0; // horizon truncation only
+        }
     }
 }
 

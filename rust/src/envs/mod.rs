@@ -4,8 +4,12 @@
 //!  1. the simulation substrate of the CPU-"distributed" **baseline**
 //!     (`crate::baseline`) that the paper compares against in Fig 3;
 //!  2. cross-language validation — unit tests here pin golden step values
-//!     computed by the python jnp oracles (`python/compile/kernels/ref.py`),
-//!     so the rust and JAX physics provably agree.
+//!     and multi-step trajectories computed by the python jnp oracles
+//!     (`python/compile/kernels/ref.py`), so the rust and JAX physics
+//!     provably agree;
+//!  3. the SoA vector kernels (`Batch*`) consumed by the batch engine
+//!     (`crate::engine`), which step all replicas of an environment per
+//!     tick with no per-replica virtual dispatch.
 //!
 //! Dynamics constants mirror `ref.py` exactly (gym classic_control).
 
@@ -15,11 +19,11 @@ pub mod catalysis;
 pub mod covid;
 pub mod pendulum;
 
-pub use acrobot::Acrobot;
-pub use cartpole::CartPole;
-pub use catalysis::{Catalysis, Mechanism};
-pub use covid::CovidEcon;
-pub use pendulum::Pendulum;
+pub use acrobot::{Acrobot, BatchAcrobot};
+pub use cartpole::{BatchCartPole, CartPole};
+pub use catalysis::{BatchCatalysis, Catalysis, Mechanism};
+pub use covid::{BatchCovidEcon, CovidEcon};
+pub use pendulum::{BatchPendulum, Pendulum};
 
 use anyhow::{bail, Result};
 
@@ -55,7 +59,7 @@ pub fn make_cpu_env(name: &str) -> Result<Box<dyn CpuEnv>> {
         "cartpole" => Box::new(CartPole::new()),
         "acrobot" => Box::new(Acrobot::new()),
         "pendulum" => Box::new(Pendulum::new()),
-        "covid_econ" => Box::new(CovidEcon::new(7)),
+        "covid_econ" => Box::new(CovidEcon::new(covid::CALIB_SEED)),
         "catalysis_lh" => Box::new(Catalysis::new(Mechanism::Lh)),
         "catalysis_er" => Box::new(Catalysis::new(Mechanism::Er)),
         other => bail!("unknown cpu env {other:?}"),

@@ -6,6 +6,7 @@
 
 use std::f32::consts::PI;
 
+use crate::engine::BatchEnv;
 use crate::util::Pcg64;
 
 use super::CpuEnv;
@@ -89,6 +90,67 @@ impl CpuEnv for Pendulum {
     }
 }
 
+/// SoA vector kernel: lanes `[theta][theta_dot]`, field-major.
+pub struct BatchPendulum;
+
+impl BatchEnv for BatchPendulum {
+    fn name(&self) -> &'static str {
+        "pendulum"
+    }
+
+    fn obs_dim(&self) -> usize {
+        3
+    }
+
+    fn n_actions(&self) -> usize {
+        N_TORQUE_BINS
+    }
+
+    fn max_steps(&self) -> u32 {
+        200
+    }
+
+    fn state_dim(&self) -> usize {
+        2
+    }
+
+    fn reset_lane(&self, state: &mut [f32], n: usize, i: usize,
+                  rng: &mut Pcg64) {
+        // same draw order as Pendulum::reset
+        state[i] = rng.uniform(-PI, PI);
+        state[n + i] = rng.uniform(-1.0, 1.0);
+    }
+
+    fn write_obs_lane(&self, state: &[f32], n: usize, i: usize,
+                      out: &mut [f32]) {
+        out[0] = state[i].cos();
+        out[1] = state[i].sin();
+        out[2] = state[n + i];
+    }
+
+    fn step_all(&self, state: &mut [f32], n: usize, actions: &[u32],
+                _rngs: &mut [Pcg64], rewards: &mut [f32],
+                dones: &mut [f32]) {
+        let (ths, thds) = state.split_at_mut(n);
+        for i in 0..n {
+            let (th, th_dot) = (ths[i], thds[i]);
+            let u = Pendulum::bin_to_torque(actions[i] as usize)
+                .clamp(-MAX_TORQUE, MAX_TORQUE);
+            let th_norm = wrap(th, -PI, PI);
+            let cost = th_norm * th_norm + 0.1 * th_dot * th_dot
+                + 0.001 * u * u;
+            let newthdot = (th_dot
+                + (3.0 * G / (2.0 * L) * th.sin() + 3.0 / (M * L * L) * u)
+                    * DT)
+                .clamp(-MAX_SPEED, MAX_SPEED);
+            ths[i] = th + newthdot * DT;
+            thds[i] = newthdot;
+            rewards[i] = -cost;
+            dones[i] = 0.0;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -102,6 +164,41 @@ mod tests {
         assert!((p.theta - 1.0178052186965942).abs() < 1e-6);
         assert!((p.theta_dot - 0.35610324144363403).abs() < 1e-6);
         assert!((r - -1.0272504091262817).abs() < 1e-6);
+    }
+
+    /// 5-step trajectory pinned against the python oracle
+    /// (`ref.pendulum_step_ref` iterated from [1.0, -0.5] under torques
+    /// [2, -2, 0, 1, -1] — bins [4, 0, 2, 3, 1]), through both step paths.
+    #[test]
+    fn golden_trajectory_matches_python_oracle() {
+        const BINS: [usize; 5] = [4, 0, 2, 3, 1];
+        const TRAJ: [(f32, f32, f32); 5] = [
+            (1.0215551853179932, 0.4311032295227051, -1.0290004014968872),
+            (1.0600948333740234, 0.7707939743995667, -1.066159963607788),
+            (1.1313495635986328, 1.4250953197479248, -1.1832139492034912),
+            (1.2440413236618042, 2.253835678100586, -1.4840421676635742),
+            (1.384748935699463, 2.814152240753174, -2.0566160678863525),
+        ];
+        let mut p = Pendulum { theta: 1.0, theta_dot: -0.5 };
+        for (bin, (th, thd, rew)) in BINS.iter().zip(TRAJ) {
+            let r = p.physics_step(Pendulum::bin_to_torque(*bin));
+            assert!((p.theta - th).abs() < 1e-5, "{} vs {th}", p.theta);
+            assert!((p.theta_dot - thd).abs() < 1e-5,
+                    "{} vs {thd}", p.theta_dot);
+            assert!((r - rew).abs() < 1e-5, "{r} vs {rew}");
+        }
+        // batch SoA path (one lane)
+        let kernel = BatchPendulum;
+        let mut state = [1.0f32, -0.5];
+        let (mut rew, mut done) = ([0f32], [0f32]);
+        for (bin, (th, thd, want)) in BINS.iter().zip(TRAJ) {
+            kernel.step_all(&mut state, 1, &[*bin as u32], &mut [],
+                            &mut rew, &mut done);
+            assert!((state[0] - th).abs() < 1e-5);
+            assert!((state[1] - thd).abs() < 1e-5);
+            assert!((rew[0] - want).abs() < 1e-5);
+            assert_eq!(done[0], 0.0);
+        }
     }
 
     #[test]

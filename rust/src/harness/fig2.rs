@@ -4,14 +4,15 @@
 
 use anyhow::Result;
 
-use crate::runtime::Device;
+use crate::coordinator::{measure_rollout_throughput,
+                         measure_train_throughput};
 use crate::util::csv::{human, CsvWriter};
 
-use super::{sweep_tags, trainer_for, HarnessOpts};
+use super::{make_backend, HarnessOpts};
 
 /// Fig 2(a): roll-out and roll-out+train throughput vs n_envs.
-pub fn fig2a(opts: &HarnessOpts, envs: &[&str]) -> Result<()> {
-    let device = Device::cpu()?;
+pub fn fig2a(opts: &HarnessOpts, envs: &[&str], levels: &[usize])
+             -> Result<()> {
     let mut csv = CsvWriter::create(
         &opts.out_dir.join("fig2a_throughput.csv"),
         &["env", "n_envs", "rollout_steps_per_sec", "train_steps_per_sec"],
@@ -20,32 +21,20 @@ pub fn fig2a(opts: &HarnessOpts, envs: &[&str]) -> Result<()> {
     println!("{:<12} {:>8} {:>18} {:>18}", "env", "n_envs",
              "rollout steps/s", "train steps/s");
     for env in envs {
-        let tags = sweep_tags(opts, env, 32)?;
-        anyhow::ensure!(
-            !tags.is_empty(),
-            "no {env} t=32 artifacts — run `make artifacts-bench`"
-        );
         let mut prev: Option<(usize, f64)> = None;
-        for (n, tag) in tags {
-            if tag.ends_with("_jnp") || tag.ends_with("_nstep") {
-                continue;
-            }
-            let mut tr = trainer_for(&device, opts, &tag, 0, opts.iters)?;
-            let roll = tr.measure_rollout_throughput(opts.iters)?;
-            let mut tr = trainer_for(&device, opts, &tag, 0, opts.iters)?;
-            tr.init()?;
-            tr.step_train()?; // warm-up / compile-cache
-            let t0 = std::time::Instant::now();
-            for _ in 0..opts.iters {
-                tr.step_train()?;
-            }
-            let train_sps = (opts.iters * tr.graphs.artifact.manifest
-                .steps_per_iter) as f64 / t0.elapsed().as_secs_f64();
+        for &n in levels {
+            let mut backend = make_backend(opts, env, n, 32, 0)?;
+            let roll = measure_rollout_throughput(backend.as_mut(),
+                                                  opts.iters)?;
+            backend.init(0)?;
+            let train = measure_train_throughput(backend.as_mut(),
+                                                 opts.iters)?;
             println!("{:<12} {:>8} {:>18} {:>18}", env, n,
-                     human(roll.steps_per_sec), human(train_sps));
+                     human(roll.steps_per_sec),
+                     human(train.steps_per_sec));
             csv.row(&[env.to_string(), n.to_string(),
                       format!("{}", roll.steps_per_sec),
-                      format!("{train_sps}")])?;
+                      format!("{}", train.steps_per_sec)])?;
             if let Some((pn, psps)) = prev {
                 let scale = roll.steps_per_sec / psps;
                 let ideal = n as f64 / pn as f64;
@@ -62,7 +51,6 @@ pub fn fig2a(opts: &HarnessOpts, envs: &[&str]) -> Result<()> {
 /// Fig 2(b)/(c): reward-vs-wallclock curves at several concurrency levels.
 pub fn fig2bc(opts: &HarnessOpts, env: &str, levels: &[usize])
               -> Result<()> {
-    let device = Device::cpu()?;
     let mut csv = CsvWriter::create(
         &opts.out_dir.join(format!("fig2bc_{env}.csv")),
         &["env", "n_envs", "seed", "wall_secs", "ep_return_ema",
@@ -71,22 +59,21 @@ pub fn fig2bc(opts: &HarnessOpts, env: &str, levels: &[usize])
     println!("== Fig 2(b/c) {env}: convergence vs concurrency \
               (budget {}s/run, {} seeds) ==", opts.budget_secs, opts.seeds);
     for &n in levels {
-        let tag = format!("{env}_n{n}_t32");
         let mut finals = Vec::new();
         for seed in 0..opts.seeds {
-            let mut tr = trainer_for(&device, opts, &tag, seed as u64,
-                                     usize::MAX)?;
-            tr.init()?;
+            let mut backend = make_backend(opts, env, n, 32, seed as u64)?;
             let t0 = std::time::Instant::now();
+            let mut last = f64::NAN;
             while t0.elapsed().as_secs_f64() < opts.budget_secs {
-                tr.step_train()?;
-                let row = tr.record_metrics()?;
+                backend.train_iter()?;
+                let wall = t0.elapsed().as_secs_f64();
+                let row = backend.metrics_row(wall)?;
+                last = row.ep_return_ema;
                 csv.row(&[env.to_string(), n.to_string(), seed.to_string(),
-                          format!("{}", t0.elapsed().as_secs_f64()),
+                          format!("{wall}"),
                           format!("{}", row.ep_return_ema),
                           format!("{}", row.env_steps)])?;
             }
-            let last = tr.log.last().unwrap().ep_return_ema;
             finals.push(last);
         }
         let mean = finals.iter().sum::<f64>() / finals.len() as f64;

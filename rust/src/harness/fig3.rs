@@ -1,47 +1,41 @@
 //! Fig 3 — COVID-19 economic simulation.
 //!
-//! Left panel: WarpSci (device-resident, zero transfer) vs the
-//! CPU-distributed baseline, broken into roll-out / data-transfer /
+//! Left panel: the WarpSci-style shared-memory backend (zero transfer)
+//! vs the CPU-distributed baseline, broken into roll-out / data-transfer /
 //! training phase times at matched environment-step counts.
 //! Right panel: env steps/s and end-to-end training speed vs n_envs.
 
 use anyhow::Result;
 
 use crate::baseline::{DistributedConfig, DistributedSystem};
-use crate::runtime::Device;
+use crate::coordinator::{measure_rollout_throughput,
+                         measure_train_throughput};
 use crate::util::csv::{human, CsvWriter};
 
-use super::{sweep_tags, trainer_for, HarnessOpts};
+use super::{make_backend, HarnessOpts};
 
-/// Fig 3 left: phase breakdown, WarpSci vs distributed baseline.
+/// Fig 3 left: phase breakdown, WarpSci-style backend vs distributed
+/// baseline.
 pub fn fig3_breakdown(opts: &HarnessOpts, n_envs: usize, n_workers: usize)
                       -> Result<()> {
-    let device = Device::cpu()?;
-    let tag = format!("covid_econ_n{n_envs}_t13");
-
-    // ---- WarpSci: train n_envs concurrent sims, phases timed ----
-    let mut tr = trainer_for(&device, opts, &tag, 0, opts.iters)?;
-    tr.init()?;
-    tr.step_train()?; // warm-up
-    tr.timer.reset();
+    // ---- WarpSci-style backend: n_envs concurrent sims, phases timed ----
+    let mut backend = make_backend(opts, "covid_econ", n_envs, 13, 0)?;
+    backend.train_iter()?; // warm-up
+    backend.reset_phase_timer();
     let t0 = std::time::Instant::now();
     for _ in 0..opts.iters {
-        tr.step_train()?;
+        backend.train_iter()?;
     }
     let ws_total = t0.elapsed().as_secs_f64();
-    let ws_steps = (opts.iters
-        * tr.graphs.artifact.manifest.steps_per_iter) as f64;
-    // the fused graph does roll-out+train in one executable; attribute by
-    // the rollout-only/train-iter time ratio measured separately
-    let mut ro = trainer_for(&device, opts, &tag, 0, opts.iters)?;
-    ro.init()?;
-    ro.step_rollout()?;
-    let t1 = std::time::Instant::now();
-    for _ in 0..opts.iters {
-        ro.step_rollout()?;
-    }
-    let ws_rollout = t1.elapsed().as_secs_f64();
-    let ws_train = (ws_total - ws_rollout).max(0.0);
+    let ws_steps = (opts.iters * backend.steps_per_iter()) as f64;
+    let phases: std::collections::BTreeMap<String, f64> =
+        backend.phase_secs().into_iter().collect();
+    // the pjrt backend reports the fused graph under "compute"; fold it
+    // into the train column so both backends fill the same three bars
+    let ws_rollout = phases.get("rollout").copied().unwrap_or(0.0);
+    let ws_transfer = phases.get("transfer").copied().unwrap_or(0.0);
+    let ws_train = phases.get("train").copied().unwrap_or(0.0)
+        + phases.get("compute").copied().unwrap_or(0.0);
 
     // ---- distributed baseline at a matched env-step count ----
     let envs_per_worker = (n_envs / n_workers).max(1);
@@ -62,28 +56,38 @@ pub fn fig3_breakdown(opts: &HarnessOpts, n_envs: usize, n_workers: usize)
         &opts.out_dir.join("fig3_breakdown.csv"),
         &["system", "phase", "secs", "env_steps", "steps_per_sec"],
     )?;
-    println!("== Fig 3 (left): COVID econ, WarpSci({n_envs} envs) vs \
+    println!("== Fig 3 (left): COVID econ, {}({n_envs} envs) vs \
               distributed baseline ({n_workers} workers x {envs_per_worker} \
-              envs) ==");
+              envs) ==", backend.backend_name());
     println!("{:<12} {:>12} {:>12} {:>12} {:>12} {:>14}", "system",
              "rollout s", "transfer s", "train s", "total s", "steps/s");
     let ws_sps = ws_steps / ws_total;
     println!("{:<12} {:>12.3} {:>12.3} {:>12.3} {:>12.3} {:>14}",
-             "warpsci", ws_rollout, 0.0, ws_train, ws_total, human(ws_sps));
+             "warpsci", ws_rollout, ws_transfer, ws_train, ws_total,
+             human(ws_sps));
     let b_sps = stats.env_steps / stats.total_secs;
     println!("{:<12} {:>12.3} {:>12.3} {:>12.3} {:>12.3} {:>14}",
              "distributed", stats.rollout_secs, stats.transfer_secs,
              stats.train_secs, stats.total_secs, human(b_sps));
-    println!("speedups: total x{:.1}  rollout x{:.1}  train x{:.1}  \
-              transfer: {:.3}s -> 0 (paper: 24x total, 24x rollout, \
+    // per-phase speedups are only meaningful when the backend attributes
+    // them (the fused pjrt graph reports everything as one phase)
+    let per_phase = |ours: f64, theirs: f64| {
+        if ours > 0.0 {
+            format!("x{:.1}", theirs / ours)
+        } else {
+            "n/a (fused)".to_string()
+        }
+    };
+    println!("speedups: total x{:.1}  rollout {}  train {}  \
+              transfer: {:.3}s -> {:.3}s (paper: 24x total, 24x rollout, \
               30x train, zero transfer)",
              (b_sps > 0.0).then(|| ws_sps / b_sps).unwrap_or(0.0),
-             stats.rollout_secs / ws_rollout.max(1e-9),
-             stats.train_secs / ws_train.max(1e-9),
-             stats.transfer_secs);
+             per_phase(ws_rollout, stats.rollout_secs),
+             per_phase(ws_train, stats.train_secs),
+             stats.transfer_secs, ws_transfer);
     for (system, phase, secs, steps) in [
         ("warpsci", "rollout", ws_rollout, ws_steps),
-        ("warpsci", "transfer", 0.0, ws_steps),
+        ("warpsci", "transfer", ws_transfer, ws_steps),
         ("warpsci", "train", ws_train, ws_steps),
         ("warpsci", "total", ws_total, ws_steps),
         ("distributed", "rollout", stats.rollout_secs, stats.env_steps),
@@ -100,11 +104,7 @@ pub fn fig3_breakdown(opts: &HarnessOpts, n_envs: usize, n_workers: usize)
 }
 
 /// Fig 3 right: econ throughput scaling with n_envs.
-pub fn fig3_scaling(opts: &HarnessOpts) -> Result<()> {
-    let device = Device::cpu()?;
-    let tags = sweep_tags(opts, "covid_econ", 13)?;
-    anyhow::ensure!(!tags.is_empty(),
-                    "no covid_econ artifacts — run `make artifacts-bench`");
+pub fn fig3_scaling(opts: &HarnessOpts, levels: &[usize]) -> Result<()> {
     let mut csv = CsvWriter::create(
         &opts.out_dir.join("fig3_scaling.csv"),
         &["n_envs", "rollout_steps_per_sec", "train_steps_per_sec",
@@ -114,25 +114,19 @@ pub fn fig3_scaling(opts: &HarnessOpts) -> Result<()> {
               to 1K envs) ==");
     println!("{:>8} {:>18} {:>18} {:>18}", "n_envs", "rollout steps/s",
              "train steps/s", "agent steps/s");
-    for (n, tag) in tags {
-        let mut tr = trainer_for(&device, opts, &tag, 0, opts.iters)?;
-        let roll = tr.measure_rollout_throughput(opts.iters)?;
-        let mut tr = trainer_for(&device, opts, &tag, 0, opts.iters)?;
-        tr.init()?;
-        tr.step_train()?;
-        let t0 = std::time::Instant::now();
-        for _ in 0..opts.iters {
-            tr.step_train()?;
-        }
-        let spi = tr.graphs.artifact.manifest.steps_per_iter;
-        let train_sps = (opts.iters * spi) as f64
-            / t0.elapsed().as_secs_f64();
-        let agent_sps = roll.steps_per_sec
-            * tr.graphs.artifact.manifest.agents_per_env as f64;
+    for &n in levels {
+        let mut backend = make_backend(opts, "covid_econ", n, 13, 0)?;
+        let roll = measure_rollout_throughput(backend.as_mut(),
+                                              opts.iters)?;
+        backend.init(0)?;
+        let train = measure_train_throughput(backend.as_mut(),
+                                             opts.iters)?;
+        let agent_sps =
+            roll.steps_per_sec * backend.agents_per_env() as f64;
         println!("{:>8} {:>18} {:>18} {:>18}", n,
-                 human(roll.steps_per_sec), human(train_sps),
+                 human(roll.steps_per_sec), human(train.steps_per_sec),
                  human(agent_sps));
-        csv.row_f64(&[n as f64, roll.steps_per_sec, train_sps,
+        csv.row_f64(&[n as f64, roll.steps_per_sec, train.steps_per_sec,
                       agent_sps])?;
     }
     csv.flush()?;

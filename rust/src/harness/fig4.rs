@@ -4,15 +4,13 @@
 
 use anyhow::Result;
 
-use crate::runtime::Device;
 use crate::util::csv::CsvWriter;
 
-use super::{trainer_for, HarnessOpts};
+use super::{make_backend, HarnessOpts};
 
 /// Run the Fig 4 sweep for one mechanism ("lh" or "er").
 pub fn fig4(opts: &HarnessOpts, mechanism: &str, levels: &[usize])
             -> Result<()> {
-    let device = Device::cpu()?;
     let env = format!("catalysis_{mechanism}");
     let mut csv = CsvWriter::create(
         &opts.out_dir.join(format!("fig4_{mechanism}.csv")),
@@ -27,25 +25,24 @@ pub fn fig4(opts: &HarnessOpts, mechanism: &str, levels: &[usize])
     println!("{:>8} {:>16} {:>16}", "n_envs", "final reward",
              "final ep steps");
     for &n in levels {
-        let tag = format!("{env}_n{n}_t32");
         let (mut rets, mut lens) = (Vec::new(), Vec::new());
         for seed in 0..opts.seeds {
-            let mut tr = trainer_for(&device, opts, &tag, seed as u64,
-                                     usize::MAX)?;
-            tr.init()?;
+            let mut backend = make_backend(opts, &env, n, 32, seed as u64)?;
             let t0 = std::time::Instant::now();
+            let (mut last_ret, mut last_len) = (f64::NAN, f64::NAN);
             while t0.elapsed().as_secs_f64() < opts.budget_secs {
-                tr.step_train()?;
-                let row = tr.record_metrics()?;
+                backend.train_iter()?;
+                let wall = t0.elapsed().as_secs_f64();
+                let row = backend.metrics_row(wall)?;
+                last_ret = row.ep_return_ema;
+                last_len = row.ep_len_ema;
                 csv.row(&[mechanism.into(), n.to_string(),
-                          seed.to_string(),
-                          format!("{}", t0.elapsed().as_secs_f64()),
+                          seed.to_string(), format!("{wall}"),
                           format!("{}", row.ep_return_ema),
                           format!("{}", row.ep_len_ema)])?;
             }
-            let last = tr.log.last().unwrap();
-            rets.push(last.ep_return_ema);
-            lens.push(last.ep_len_ema);
+            rets.push(last_ret);
+            lens.push(last_len);
         }
         let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
         println!("{:>8} {:>16.2} {:>16.1}", n, mean(&rets), mean(&lens));

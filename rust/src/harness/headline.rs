@@ -1,66 +1,59 @@
 //! T1 — the paper's section-3 headline throughput table:
 //! "8.6M env steps/s @10K CartPole, 0.12M @1K econ sims, 0.95M @2K
 //! catalysis" on an A100.  We report the analogous measurements on this
-//! CPU-PJRT testbed next to the paper's numbers.
+//! CPU testbed next to the paper's numbers.
 
 use anyhow::Result;
 
-use crate::runtime::Device;
+use crate::coordinator::measure_rollout_throughput;
 use crate::util::csv::{human, CsvWriter};
 
-use super::{sweep_tags, trainer_for, HarnessOpts};
+use super::{make_backend, HarnessOpts};
 
 struct Row {
     workload: &'static str,
     env: &'static str,
     t: usize,
+    our_envs: usize,
     paper_envs: usize,
     paper_sps: f64,
 }
 
 const ROWS: [Row; 3] = [
     Row { workload: "classic control (CartPole)", env: "cartpole", t: 32,
-          paper_envs: 10_000, paper_sps: 8.6e6 },
+          our_envs: 4096, paper_envs: 10_000, paper_sps: 8.6e6 },
     Row { workload: "economic simulation", env: "covid_econ", t: 13,
-          paper_envs: 1_000, paper_sps: 0.12e6 },
+          our_envs: 256, paper_envs: 1_000, paper_sps: 0.12e6 },
     Row { workload: "catalytic reactions (LH)", env: "catalysis_lh", t: 32,
-          paper_envs: 2_000, paper_sps: 0.95e6 },
+          our_envs: 2_000, paper_envs: 2_000, paper_sps: 0.95e6 },
 ];
 
-/// Measure the highest-concurrency artifact available per workload.
+/// Measure each workload at a fixed high concurrency level.
 pub fn headline(opts: &HarnessOpts) -> Result<()> {
-    let device = Device::cpu()?;
     let mut csv = CsvWriter::create(
         &opts.out_dir.join("headline.csv"),
         &["workload", "paper_n_envs", "paper_steps_per_sec", "our_n_envs",
           "our_steps_per_sec", "our_agent_steps_per_sec"],
     )?;
     println!("== T1: headline throughput (paper numbers are single-A100; \
-              ours are single CPU core via PJRT) ==");
+              ours are CPU) ==");
     println!("{:<28} {:>16} {:>12} {:>16} {:>16}", "workload",
              "paper steps/s", "our n_envs", "our steps/s",
              "our agent steps/s");
     for row in &ROWS {
-        let tags = sweep_tags(opts, row.env, row.t)?;
-        let Some((n, tag)) = tags
-            .iter()
-            .filter(|(_, t)| !t.ends_with("_jnp") && !t.ends_with("_nstep"))
-            .max_by_key(|(n, _)| *n)
-            .cloned()
-        else {
-            println!("{:<28} (no artifacts — run `make artifacts-bench`)",
-                     row.workload);
-            continue;
-        };
-        let mut tr = trainer_for(&device, opts, &tag, 0, opts.iters)?;
-        let stats = tr.measure_rollout_throughput(opts.iters)?;
-        let agent_sps = stats.steps_per_sec
-            * tr.graphs.artifact.manifest.agents_per_env as f64;
+        let mut backend =
+            make_backend(opts, row.env, row.our_envs, row.t, 0)?;
+        let stats = measure_rollout_throughput(backend.as_mut(),
+                                               opts.iters)?;
+        let agent_sps =
+            stats.steps_per_sec * backend.agents_per_env() as f64;
         println!("{:<28} {:>16} {:>12} {:>16} {:>16}", row.workload,
                  format!("{} @{}", human(row.paper_sps), row.paper_envs),
-                 n, human(stats.steps_per_sec), human(agent_sps));
+                 backend.n_envs(), human(stats.steps_per_sec),
+                 human(agent_sps));
         csv.row(&[row.workload.into(), row.paper_envs.to_string(),
-                  format!("{}", row.paper_sps), n.to_string(),
+                  format!("{}", row.paper_sps),
+                  backend.n_envs().to_string(),
                   format!("{}", stats.steps_per_sec),
                   format!("{agent_sps}")])?;
     }

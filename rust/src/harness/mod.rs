@@ -1,13 +1,17 @@
-//! Figure-regeneration harness: one module per paper table/figure
-//! (DESIGN.md section 4 maps each experiment id to its module).
+//! Figure-regeneration harness: one module per paper table/figure.
 //!
 //! Every harness prints the same rows/series the paper reports and writes
 //! a CSV under `results/` so the curves can be re-plotted.  Absolute
-//! numbers differ from the paper's A100 (this substrate is CPU PJRT); the
-//! *shape* — linear concurrency scaling, zero-transfer vs transfer-bound
-//! ordering, faster convergence at higher concurrency — is the
-//! reproduction target.
+//! numbers differ from the paper's A100; the *shape* — linear concurrency
+//! scaling, zero-transfer vs transfer-bound ordering, faster convergence
+//! at higher concurrency — is the reproduction target.
+//!
+//! All figures run against the [`Backend`] abstraction: the default build
+//! drives the SoA [`crate::coordinator::CpuEngine`]; with the `pjrt`
+//! feature, [`make_backend`] prefers a compiled artifact when one matching
+//! `{env}_n{N}_t{T}` exists under the artifacts root.
 
+#[cfg(feature = "pjrt")]
 pub mod ablation;
 pub mod fig2;
 pub mod fig3;
@@ -18,9 +22,8 @@ use std::path::PathBuf;
 
 use anyhow::Result;
 
-use crate::config::RunConfig;
-use crate::coordinator::Trainer;
-use crate::runtime::{Artifact, Device, GraphSet};
+use crate::coordinator::{Backend, CpuEngine, CpuEngineConfig};
+use crate::runtime::Artifact;
 
 /// Shared harness options.
 #[derive(Debug, Clone)]
@@ -33,6 +36,8 @@ pub struct HarnessOpts {
     pub seeds: usize,
     /// Iterations for throughput measurements.
     pub iters: usize,
+    /// Shard worker threads for the CPU engine (0 = all cores).
+    pub threads: usize,
 }
 
 impl Default for HarnessOpts {
@@ -43,13 +48,46 @@ impl Default for HarnessOpts {
             budget_secs: 20.0,
             seeds: 3,
             iters: 10,
+            threads: 0,
         }
     }
 }
 
-/// Load + compile an artifact tag into a ready trainer.
-pub fn trainer_for(device: &Device, opts: &HarnessOpts, tag: &str,
-                   seed: u64, iters: usize) -> Result<Trainer> {
+/// Build the preferred backend for an `(env, n_envs, t)` workload.
+///
+/// Default build: always the CPU engine.  With the `pjrt` feature, a
+/// matching AOT artifact is compiled and used when present; otherwise the
+/// CPU engine is the fallback (with a note on stderr).
+pub fn make_backend(opts: &HarnessOpts, env: &str, n_envs: usize, t: usize,
+                    seed: u64) -> Result<Box<dyn Backend>> {
+    #[cfg(feature = "pjrt")]
+    {
+        let tag = format!("{env}_n{n_envs}_t{t}");
+        if Artifact::load(&opts.artifacts_root, &tag).is_ok() {
+            let device = crate::runtime::Device::cpu()?;
+            let mut tr = trainer_for(&device, opts, &tag, seed, opts.iters)?;
+            Backend::init(&mut tr, seed)?;
+            return Ok(Box::new(tr));
+        }
+        eprintln!("note: no artifact {tag}; using the cpu engine backend");
+    }
+    let cfg = CpuEngineConfig {
+        threads: opts.threads,
+        seed,
+        ..CpuEngineConfig::new(env, n_envs, t)
+    };
+    Ok(Box::new(CpuEngine::new(cfg)?))
+}
+
+/// Load + compile an artifact tag into a ready trainer (pjrt builds).
+#[cfg(feature = "pjrt")]
+pub fn trainer_for(device: &crate::runtime::Device, opts: &HarnessOpts,
+                   tag: &str, seed: u64, iters: usize)
+                   -> Result<crate::coordinator::Trainer> {
+    use crate::config::RunConfig;
+    use crate::coordinator::Trainer;
+    use crate::runtime::GraphSet;
+
     let artifact = Artifact::load(&opts.artifacts_root, tag)?;
     let n_envs = artifact.manifest.n_envs;
     let t = artifact.manifest.t;
@@ -108,5 +146,20 @@ mod tests {
         assert_eq!(tags, vec![(16, "cartpole_n16_t32".into()),
                               (64, "cartpole_n64_t32".into())]);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn make_backend_defaults_to_cpu_engine() {
+        let opts = HarnessOpts {
+            artifacts_root: "/nonexistent".into(),
+            threads: 1,
+            ..Default::default()
+        };
+        let mut b = make_backend(&opts, "cartpole", 4, 8, 0).unwrap();
+        assert_eq!(b.backend_name(), "cpu-engine");
+        assert_eq!(b.n_envs(), 4);
+        assert_eq!(b.steps_per_iter(), 32);
+        b.train_iter().unwrap();
+        assert!(b.metrics_row(0.1).unwrap().entropy > 0.0);
     }
 }

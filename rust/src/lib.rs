@@ -1,13 +1,23 @@
-//! # WarpSci — high data-throughput RL with a unified on-device data store
+//! # WarpSci — high data-throughput RL with a unified in-place data store
 //!
 //! Rust L3 coordinator of the three-layer WarpSci reproduction
 //! (paper: *Enabling High Data Throughput Reinforcement Learning on GPUs*,
-//! Lan et al., 2024 — see DESIGN.md).
+//! Lan et al., 2024 — see `rust/README.md` for the architecture tour).
 //!
-//! The entire RL workflow (roll-out, inference, reset, training) runs inside
-//! AOT-lowered XLA executables over a single flat `f32` device buffer — the
-//! paper's "unified, in-place data store".  This crate owns everything
-//! around that hot loop: artifact loading, device-buffer lifecycle, the
+//! Two execution backends implement the paper's "step thousands of
+//! concurrent replicas over one flat `f32` store" design
+//! (`coordinator::Backend`):
+//!
+//! * [`coordinator::CpuEngine`] (default) — the [`engine`] module's
+//!   structure-of-arrays batch environment engine: every replica's state
+//!   lives in flat per-field arrays, stepped in lockstep across shard
+//!   worker threads with a round barrier.  Zero serialization, zero
+//!   per-step virtual dispatch, runs everywhere.
+//! * `coordinator::Trainer` (behind the `pjrt` cargo feature) — AOT-lowered
+//!   XLA executables chained over a device-resident buffer via PJRT.  The
+//!   `xla` binding is not vendored offline, so this path is feature-gated.
+//!
+//! This crate owns everything around the hot loop: artifact loading, the
 //! trainer event loop, metrics, multi-shard data parallelism, the CPU
 //! "distributed" baseline the paper compares against (Fig 3), and the
 //! figure-regeneration harness.
@@ -19,6 +29,7 @@ pub mod baseline;
 pub mod bench;
 pub mod config;
 pub mod coordinator;
+pub mod engine;
 pub mod envs;
 pub mod harness;
 pub mod nn;
@@ -29,21 +40,65 @@ pub mod util;
 /// Default artifacts directory relative to the repo root.
 pub const ARTIFACTS_DIR: &str = "artifacts";
 
-/// Resolve the artifacts directory: `$WARPSCI_ARTIFACTS` or `./artifacts`,
-/// walking up from the current directory so tests and benches work from
-/// any workspace subdirectory.
-pub fn artifacts_dir() -> std::path::PathBuf {
+/// Resolve the artifacts directory: `$WARPSCI_ARTIFACTS` or an `artifacts/`
+/// directory found by walking up from the current directory (so tests and
+/// benches work from any workspace subdirectory).
+///
+/// Errors name every directory searched, so a missing `make artifacts`
+/// shows up as itself instead of as a downstream "file not found".
+pub fn try_artifacts_dir() -> anyhow::Result<std::path::PathBuf> {
     if let Ok(dir) = std::env::var("WARPSCI_ARTIFACTS") {
-        return dir.into();
+        return Ok(dir.into());
     }
     let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    let mut searched = Vec::new();
     loop {
         let cand = cur.join(ARTIFACTS_DIR);
         if cand.is_dir() {
-            return cand;
+            return Ok(cand);
         }
+        searched.push(cand.display().to_string());
         if !cur.pop() {
-            return ARTIFACTS_DIR.into();
+            anyhow::bail!(
+                "no artifacts directory found (searched: {}); run \
+                 `make artifacts` or set $WARPSCI_ARTIFACTS",
+                searched.join(", ")
+            );
         }
+    }
+}
+
+/// Infallible variant of [`try_artifacts_dir`] for call sites that only
+/// need a default path (harness options, CLI defaults).  When the walk-up
+/// fails it warns on stderr — naming the directories searched — and falls
+/// back to the relative `"artifacts"` path.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    match try_artifacts_dir() {
+        Ok(dir) => dir,
+        Err(e) => {
+            eprintln!("warning: {e}; falling back to ./{ARTIFACTS_DIR}");
+            ARTIFACTS_DIR.into()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // NOTE: no set_var here — mutating the environment races with
+    // concurrent env reads in the parallel test harness (UB on glibc).
+    #[test]
+    fn artifacts_dir_error_names_searched_directories() {
+        // The walk either finds a real artifacts/ directory or reports
+        // every directory it searched.
+        match super::try_artifacts_dir() {
+            Ok(dir) => assert!(dir.is_dir()),
+            Err(e) => {
+                let msg = e.to_string();
+                assert!(msg.contains("searched"), "{msg}");
+                assert!(msg.contains("artifacts"), "{msg}");
+            }
+        }
+        // The infallible variant never panics and returns *some* path.
+        let _ = super::artifacts_dir();
     }
 }

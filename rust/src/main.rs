@@ -2,10 +2,13 @@
 //!
 //! Subcommands:
 //!   train            train an environment from a TOML config or flags
+//!                    (default build: the SoA cpu-engine backend; with the
+//!                    `pjrt` feature: compiled AOT artifacts)
 //!   bench <exp>      regenerate a paper table/figure (fig2a, fig2b, fig2c,
 //!                    fig3, fig3-scaling, fig4, headline, ablation-*)
 //!   list             list available artifact tags
 //!   info <tag>       print an artifact manifest summary
+//!   validate [tag]   compile + smoke-run artifacts (pjrt builds only)
 //!
 //! Python never runs here: artifacts are produced once by `make artifacts`.
 
@@ -14,9 +17,8 @@ use std::path::PathBuf;
 use anyhow::{bail, Context, Result};
 
 use warpsci::config::RunConfig;
-use warpsci::coordinator::{MultiShardTrainer, Trainer};
 use warpsci::harness::{self, HarnessOpts};
-use warpsci::runtime::{Artifact, Device, GraphSet};
+use warpsci::runtime::Artifact;
 use warpsci::util::csv::human;
 
 /// Hand-rolled flag parser (offline build: no clap).
@@ -67,18 +69,20 @@ impl Args {
 }
 
 const USAGE: &str = "\
-warpsci — high data-throughput RL with a unified on-device data store
+warpsci — high data-throughput RL with a unified in-place data store
 
 USAGE:
   warpsci train [--config run.toml] [--env cartpole] [--n-envs N] [--t T]
-                [--iters K] [--seed S] [--shards P] [--metrics-every M]
-                [--target-return R] [--log-csv path] [--checkpoint-dir d]
+                [--iters K] [--seed S] [--threads P] [--shards P]
+                [--metrics-every M] [--target-return R] [--log-csv path]
+                [--checkpoint-dir d]
   warpsci bench <fig2a|fig2b|fig2c|fig3|fig3-scaling|fig4|headline|
                  ablation-transfer|ablation-kernel|ablation-estimator|all>
-                [--budget-secs S] [--seeds N] [--iters K] [--out-dir d]
+                [--budget-secs S] [--seeds N] [--iters K] [--threads P]
+                [--out-dir d]
   warpsci list
   warpsci info <tag>
-  warpsci validate [tag ...]   (default: all artifacts; compiles + smoke-runs)
+  warpsci validate [tag ...]   (pjrt builds: compiles + smoke-runs)
 ";
 
 fn main() {
@@ -110,7 +114,7 @@ fn run(argv: &[String]) -> Result<()> {
     }
 }
 
-fn cmd_train(args: &Args) -> Result<()> {
+fn parse_run_config(args: &Args) -> Result<RunConfig> {
     let mut cfg = match args.get("config") {
         Some(path) => RunConfig::from_file(std::path::Path::new(path))?,
         None => RunConfig::default(),
@@ -123,6 +127,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.iters = args.get_parse("iters", cfg.iters)?;
     cfg.seed = args.get_parse("seed", cfg.seed)?;
     cfg.shards = args.get_parse("shards", cfg.shards)?;
+    cfg.threads = args.get_parse("threads", cfg.threads)?;
     cfg.metrics_every = args.get_parse("metrics-every", cfg.metrics_every)?;
     if let Some(r) = args.get("target-return") {
         cfg.target_return = Some(r.parse().context("--target-return")?);
@@ -130,8 +135,80 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(p) = args.get("log-csv") {
         cfg.log_csv = Some(p.to_string());
     }
+    Ok(cfg)
+}
 
-    let root = warpsci::artifacts_dir();
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(args: &Args) -> Result<()> {
+    use warpsci::coordinator::{Backend, CpuEngine, CpuEngineConfig};
+
+    let cfg = parse_run_config(args)?;
+    if cfg.shards > 1 {
+        bail!("--shards > 1 is the multi-device PJRT path — rebuild with \
+               `--features pjrt`");
+    }
+    if args.get("checkpoint-dir").is_some() {
+        bail!("--checkpoint-dir is only supported by the pjrt backend for \
+               now — rebuild with `--features pjrt`");
+    }
+    let ecfg = CpuEngineConfig {
+        threads: cfg.threads,
+        seed: cfg.seed,
+        ..CpuEngineConfig::new(&cfg.env, cfg.n_envs, cfg.t)
+    };
+    let mut eng = CpuEngine::new(ecfg)?;
+    println!("backend: cpu-engine ({} replicas x t={} across {} shard \
+              threads)", cfg.n_envs, cfg.t, eng.threads());
+    let mut log = warpsci::coordinator::MetricsLog::new(
+        cfg.log_csv.as_deref().map(std::path::Path::new))?;
+    let report_every = (cfg.iters / 20).max(1);
+    let t0 = std::time::Instant::now();
+    let mut last_logged_iter = 0u64;
+    for i in 0..cfg.iters {
+        eng.train_iter()?;
+        if (i + 1) % cfg.metrics_every == 0 {
+            let row = eng.metrics_row(t0.elapsed().as_secs_f64())?;
+            last_logged_iter = row.iter as u64;
+            log.push(row.clone())?;
+            if (i + 1) % report_every == 0 {
+                println!(
+                    "iter {:>6}  return {:>9.2}  ep_len {:>7.1}  \
+                     entropy {:>6.3}  steps/s {:>10}",
+                    row.iter as u64, row.ep_return_ema, row.ep_len_ema,
+                    row.entropy,
+                    human(row.env_steps / t0.elapsed().as_secs_f64()),
+                );
+            }
+            if let Some(target) = cfg.target_return {
+                if row.ep_return_ema >= target {
+                    println!("target return {target} reached at iter {}",
+                             i + 1);
+                    break;
+                }
+            }
+        }
+    }
+    let row = eng.metrics_row(t0.elapsed().as_secs_f64())?;
+    if row.iter as u64 != last_logged_iter {
+        log.push(row.clone())?;
+    }
+    log.flush()?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "done: {} env steps in {:.1}s ({} steps/s), final return {:.2}",
+        human(row.env_steps), wall, human(row.env_steps / wall),
+        row.ep_return_ema
+    );
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_train(args: &Args) -> Result<()> {
+    use warpsci::coordinator::Trainer;
+    use warpsci::runtime::{Device, GraphSet};
+
+    let cfg = parse_run_config(args)?;
+    let root = warpsci::try_artifacts_dir()?;
     let tag = cfg.artifact_tag();
     println!("loading artifact {tag} from {}", root.display());
     let artifact = Artifact::load(&root, &tag)?;
@@ -184,8 +261,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn train_sharded(device: &Device, artifact: &Artifact, cfg: RunConfig)
-                 -> Result<()> {
+#[cfg(feature = "pjrt")]
+fn train_sharded(device: &warpsci::runtime::Device, artifact: &Artifact,
+                 cfg: RunConfig) -> Result<()> {
+    use warpsci::coordinator::MultiShardTrainer;
+
     println!("multi-shard data-parallel: {} shards, sync every {}",
              cfg.shards, cfg.sync_every);
     let mut ms = MultiShardTrainer::new(device, artifact, cfg.clone())?;
@@ -222,43 +302,65 @@ fn cmd_bench(args: &Args) -> Result<()> {
         budget_secs: args.get_parse("budget-secs", 20.0)?,
         seeds: args.get_parse("seeds", 3)?,
         iters: args.get_parse("iters", 10)?,
+        threads: args.get_parse("threads", 0)?,
     };
     std::fs::create_dir_all(&opts.out_dir).ok();
+    const FIG2A_LEVELS: [usize; 4] = [64, 256, 1024, 4096];
+    const ECON_LEVELS: [usize; 4] = [15, 60, 250, 1000];
     match exp.as_str() {
-        "fig2a" => harness::fig2::fig2a(&opts, &["cartpole", "acrobot"])?,
+        "fig2a" => harness::fig2::fig2a(&opts, &["cartpole", "acrobot"],
+                                        &FIG2A_LEVELS)?,
         "fig2b" => harness::fig2::fig2bc(&opts, "cartpole",
                                          &[16, 128, 1024])?,
         "fig2c" => harness::fig2::fig2bc(&opts, "acrobot",
                                          &[16, 128, 1024])?,
         "fig3" => harness::fig3::fig3_breakdown(&opts, 60, 16)?,
-        "fig3-scaling" => harness::fig3::fig3_scaling(&opts)?,
+        "fig3-scaling" => harness::fig3::fig3_scaling(&opts,
+                                                      &ECON_LEVELS)?,
         "fig4" => {
             harness::fig4::fig4(&opts, "lh", &[4, 20, 100, 500])?;
             harness::fig4::fig4(&opts, "er", &[4, 20, 100, 500])?;
         }
         "headline" => harness::headline::headline(&opts)?,
-        "ablation-transfer" => harness::ablation::ablation_transfer(
-            &opts, args.get("tag").unwrap_or("cartpole_n1024_t32"))?,
-        "ablation-kernel" => harness::ablation::ablation_kernel(
-            &opts, args.get("tag").unwrap_or("cartpole_n1024_t32"))?,
-        "ablation-estimator" => harness::ablation::ablation_estimator(
-            &opts, args.get("tag").unwrap_or("cartpole_n1024_t32"))?,
         "all" => {
             harness::headline::headline(&opts)?;
-            harness::fig2::fig2a(&opts, &["cartpole", "acrobot"])?;
+            harness::fig2::fig2a(&opts, &["cartpole", "acrobot"],
+                                 &FIG2A_LEVELS)?;
             harness::fig2::fig2bc(&opts, "cartpole", &[16, 128, 1024])?;
             harness::fig2::fig2bc(&opts, "acrobot", &[16, 128, 1024])?;
             harness::fig3::fig3_breakdown(&opts, 60, 16)?;
-            harness::fig3::fig3_scaling(&opts)?;
+            harness::fig3::fig3_scaling(&opts, &ECON_LEVELS)?;
             harness::fig4::fig4(&opts, "lh", &[4, 20, 100, 500])?;
             harness::fig4::fig4(&opts, "er", &[4, 20, 100, 500])?;
-            harness::ablation::ablation_transfer(&opts,
-                                                 "cartpole_n1024_t32")?;
         }
-        other => bail!("unknown experiment {other:?}\n{USAGE}"),
+        other => cmd_bench_ablation(&opts, args, other)?,
     }
     println!("CSV written under {}", opts.out_dir.display());
     Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_bench_ablation(opts: &HarnessOpts, args: &Args, exp: &str)
+                      -> Result<()> {
+    match exp {
+        "ablation-transfer" => harness::ablation::ablation_transfer(
+            opts, args.get("tag").unwrap_or("cartpole_n1024_t32")),
+        "ablation-kernel" => harness::ablation::ablation_kernel(
+            opts, args.get("tag").unwrap_or("cartpole_n1024_t32")),
+        "ablation-estimator" => harness::ablation::ablation_estimator(
+            opts, args.get("tag").unwrap_or("cartpole_n1024_t32")),
+        other => bail!("unknown experiment {other:?}\n{USAGE}"),
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_bench_ablation(_opts: &HarnessOpts, _args: &Args, exp: &str)
+                      -> Result<()> {
+    if exp.starts_with("ablation-") {
+        bail!("experiment {exp:?} needs compiled artifacts — rebuild with \
+               `--features pjrt`");
+    }
+    bail!("unknown experiment {exp:?}\n{USAGE}");
 }
 
 fn cmd_list() -> Result<()> {
@@ -280,8 +382,11 @@ fn cmd_list() -> Result<()> {
 /// (init -> train_iter -> rollout -> metrics -> param round-trip),
 /// checking metric finiteness and counter semantics.  The operational
 /// pre-flight before long runs on a new artifact sweep.
+#[cfg(feature = "pjrt")]
 fn cmd_validate(args: &Args) -> Result<()> {
-    let root = warpsci::artifacts_dir();
+    use warpsci::runtime::{Device, GraphSet};
+
+    let root = warpsci::try_artifacts_dir()?;
     let tags = if args.positional.is_empty() {
         Artifact::list(&root)?
     } else {
@@ -333,9 +438,15 @@ fn cmd_validate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_validate(_args: &Args) -> Result<()> {
+    bail!("`validate` compiles PJRT artifacts — rebuild with \
+           `--features pjrt`");
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
     let tag = args.positional.first().context("info needs a tag")?;
-    let artifact = Artifact::load(&warpsci::artifacts_dir(), tag)?;
+    let artifact = Artifact::load(&warpsci::try_artifacts_dir()?, tag)?;
     let m = &artifact.manifest;
     println!("tag:            {}", m.tag);
     println!("env:            {} ({} agents/env)", m.env, m.agents_per_env);

@@ -239,6 +239,13 @@ impl Mlp {
         loss
     }
 
+    /// Lengths of each parameter vector, in [`Mlp::params_mut`] order
+    /// (Adam sizing).
+    pub fn param_shapes(&self) -> [usize; 8] {
+        [self.w1.len(), self.b1.len(), self.w2.len(), self.b2.len(),
+         self.wp.len(), self.bp.len(), self.wv.len(), self.bv.len()]
+    }
+
     /// Flat mutable references over all parameter vectors (Adam plumbing).
     pub fn params_mut(&mut self) -> [&mut Vec<f32>; 8] {
         [&mut self.w1, &mut self.b1, &mut self.w2, &mut self.b2,

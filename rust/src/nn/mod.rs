@@ -10,6 +10,59 @@ pub mod mlp;
 pub use adam::Adam;
 pub use mlp::{Mlp, MlpGrads};
 
+/// Reverse-time n-step returns over a `[step][env][agent]` batch.
+///
+/// `rewards` is `t * n_envs * n_agents`, `dones` is `t * n_envs`
+/// (env-level, 1.0 = the episode ended after that step), `boot_values` is
+/// `n_envs * n_agents` (value estimates of the post-roll-out
+/// observations, masked out when the final step ended the episode).
+/// Shared by the distributed baseline's trainer and `CpuEngine` so the
+/// two estimators cannot drift apart.
+pub fn nstep_returns(rewards: &[f32], dones: &[f32], boot_values: &[f32],
+                     n_envs: usize, n_agents: usize, t: usize,
+                     gamma: f32) -> Vec<f32> {
+    let rows = n_envs * n_agents;
+    debug_assert_eq!(rewards.len(), t * rows);
+    debug_assert_eq!(dones.len(), t * n_envs);
+    debug_assert_eq!(boot_values.len(), rows);
+    let mut returns = vec![0f32; t * rows];
+    for e in 0..n_envs {
+        for a in 0..n_agents {
+            let last_done = dones[(t - 1) * n_envs + e];
+            let mut next =
+                (1.0 - last_done) * boot_values[e * n_agents + a];
+            for step in (0..t).rev() {
+                let row = step * rows + e * n_agents + a;
+                next = rewards[row] + gamma * next;
+                returns[row] = next;
+                if step > 0 {
+                    next *= 1.0 - dones[(step - 1) * n_envs + e];
+                }
+            }
+        }
+    }
+    returns
+}
+
+/// Batch-normalized advantages: `returns - values`, shifted and scaled
+/// to zero mean / unit std over the whole batch.
+pub fn normalized_advantages(returns: &[f32], values: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(returns.len(), values.len());
+    let mut adv: Vec<f32> = returns
+        .iter()
+        .zip(values)
+        .map(|(r, v)| r - v)
+        .collect();
+    let mean = adv.iter().sum::<f32>() / adv.len() as f32;
+    let var = adv.iter().map(|x| (x - mean).powi(2)).sum::<f32>()
+        / adv.len() as f32;
+    let std = var.sqrt().max(1e-8);
+    for x in adv.iter_mut() {
+        *x = (*x - mean) / std;
+    }
+    adv
+}
+
 /// Numerically stable log-softmax over a row.
 pub fn log_softmax(row: &mut [f32]) {
     let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);

@@ -1,23 +1,32 @@
-//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//! Artifact runtime: locate AOT artifacts and (with the `pjrt` feature)
+//! execute them.
 //!
-//! Wraps the `xla` crate (PJRT C API, xla_extension 0.5.1 CPU plugin):
-//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
-//! `client.compile` → `execute` / `execute_b`.
+//! Artifact discovery ([`Artifact`]) and the manifest schema ([`Manifest`])
+//! are dependency-free and always available — the store views, metrics
+//! decoding and the CLI's `list`/`info` commands build on them.
 //!
-//! Everything on the WarpSci hot path chains **device buffers**
-//! (`execute_b`) — host literals only appear at init, checkpoints, and the
-//! tiny metrics fetch.
+//! The execution half wraps the `xla` crate (PJRT C API, xla_extension
+//! 0.5.1 CPU plugin): `PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//! → `client.compile` → `execute` / `execute_b`.  Everything on the WarpSci
+//! hot path chains **device buffers** (`execute_b`) — host literals only
+//! appear at init, checkpoints, and the tiny metrics fetch.  The binding is
+//! not vendored in the offline build, so this half sits behind the `pjrt`
+//! cargo feature.
 
 pub mod artifact;
+#[cfg(feature = "pjrt")]
 pub mod executor;
 pub mod manifest;
 
 pub use artifact::Artifact;
+#[cfg(feature = "pjrt")]
 pub use executor::{Executor, GraphSet};
 pub use manifest::{FieldView, Manifest};
 
+#[cfg(feature = "pjrt")]
 use std::sync::Arc;
 
+#[cfg(feature = "pjrt")]
 use anyhow::{Context, Result};
 
 /// Shared PJRT client handle.
@@ -26,11 +35,13 @@ use anyhow::{Context, Result};
 /// clones the `Arc` so all shards share the device pool (on CPU PJRT this
 /// is one logical device; on a real multi-GPU host each shard would bind
 /// its own device — the orchestration code path is identical).
+#[cfg(feature = "pjrt")]
 #[derive(Clone)]
 pub struct Device {
     client: Arc<xla::PjRtClient>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Device {
     /// Create the CPU PJRT client.
     pub fn cpu() -> Result<Device> {

@@ -68,7 +68,10 @@ impl Pcg64 {
         let mut best = 0;
         let mut best_v = f32::NEG_INFINITY;
         for (i, &l) in logits.iter().enumerate() {
-            let g = -(-(self.next_f32() + 1e-12).ln() + 1e-12).ln();
+            // G = -ln(-ln(U)) with U clamped into (0, 1): next_f32() is
+            // already < 1, so only the U = 0 edge needs the guard.
+            let u = self.next_f32().max(1e-12);
+            let g = -(-u.ln()).ln();
             let v = l + g;
             if v > best_v {
                 best_v = v;
@@ -135,6 +138,30 @@ mod tests {
             seen[i] = true;
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    /// Empirical draw frequencies must match the softmax of the logits —
+    /// the Gumbel-max identity the sampler implements.
+    #[test]
+    fn categorical_frequencies_match_softmax() {
+        let logits = [0.5f32, 1.5, 0.0, -1.0];
+        let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let z: f32 = logits.iter().map(|l| (l - max).exp()).sum();
+        let probs: Vec<f32> =
+            logits.iter().map(|l| (l - max).exp() / z).collect();
+        let n = 40_000usize;
+        let mut counts = [0usize; 4];
+        let mut r = Pcg64::new(17);
+        for _ in 0..n {
+            counts[r.categorical(&logits)] += 1;
+        }
+        for (i, (&c, &p)) in counts.iter().zip(&probs).enumerate() {
+            let freq = c as f32 / n as f32;
+            assert!(
+                (freq - p).abs() < 0.02,
+                "class {i}: empirical {freq} vs softmax {p}"
+            );
+        }
     }
 
     #[test]

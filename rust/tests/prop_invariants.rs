@@ -122,7 +122,8 @@ fn prop_toml_random_docs_parse_back() {
     }
 }
 
-/// n-step returns computed the baseline's way must match a scalar
+/// The shared n-step return estimator (`nn::nstep_returns`, used by both
+/// the distributed baseline and the cpu engine) must match a scalar
 /// single-stream reference on random reward/done sequences.
 #[test]
 fn prop_nstep_returns_match_scalar_reference() {
@@ -136,16 +137,8 @@ fn prop_nstep_returns_match_scalar_reference() {
             .collect();
         let boot = rng.normal();
 
-        // baseline-style computation (mirrors distributed.rs update())
-        let mut returns = vec![0f32; t];
-        let mut next = (1.0 - dones[t - 1]) * boot;
-        for step in (0..t).rev() {
-            next = rewards[step] + gamma * next;
-            returns[step] = next;
-            if step > 0 {
-                next *= 1.0 - dones[step - 1];
-            }
-        }
+        let returns = warpsci::nn::nstep_returns(&rewards, &dones, &[boot],
+                                                 1, 1, t, gamma);
 
         // scalar reference: forward accumulation per suffix
         for s in 0..t {
