@@ -1,19 +1,81 @@
-//! Bench: the SoA batch engine — raw vector stepping and the full
-//! policy-in-the-loop roll-out, across replica counts and shard threads.
+//! Bench: the SoA batch engine — raw vector stepping, plus a
+//! thread-count × environment sweep of the fused in-worker roll-out
+//! against the seed architecture (serial inference + per-tick engine
+//! step), i.e. the paper's "thousands of concurrent environments on one
+//! device" axis realized on CPU.
 //!
-//! The headline configuration steps 4096 cartpole replicas across 4 shard
-//! threads, i.e. the paper's "thousands of concurrent environments on one
-//! device" axis realized on CPU.  Each result is printed human-readably
-//! and as one JSON line (the `bench` module's machine-readable output).
+//! Each result is printed human-readably and as one JSON line, and the
+//! whole run is written as a JSON array to `BENCH_engine.json` at the
+//! repo root — the perf-trajectory baseline for future changes.
 //!
 //! Env overrides: `WARPSCI_BENCH_FAST=1` for a smoke run.
 
 use warpsci::bench::Bench;
 use warpsci::coordinator::{Backend, CpuEngine, CpuEngineConfig};
 use warpsci::engine::BatchEngine;
+use warpsci::nn::mlp::Cache;
+use warpsci::nn::Mlp;
+use warpsci::util::{Json, Pcg64};
+
+/// The roll-out structure of the seed architecture: policy forward +
+/// categorical sampling run *serially* on the caller thread from one
+/// shared action stream, then one engine round per tick — the
+/// serial-inference / parallel-step alternation the fused roll-out
+/// eliminates.  Note the per-tick rounds here already run on the
+/// persistent pool (the seed's scoped spawn/join no longer exists in
+/// the tree), so this sweep isolates the *fusion* win; the
+/// spawn-elimination win comes on top when comparing against a real
+/// seed checkout.
+struct UnfusedRollout {
+    engine: BatchEngine,
+    policy: Mlp,
+    rng: Pcg64,
+    cache: Cache,
+    actions: Vec<u32>,
+}
+
+impl UnfusedRollout {
+    fn new(env: &str, n_envs: usize, threads: usize) -> UnfusedRollout {
+        let engine = BatchEngine::by_name(env, n_envs, threads, 0)
+            .expect("engine");
+        let mut init_rng = Pcg64::with_stream(0, u64::MAX - 1);
+        let policy = Mlp::init(engine.obs_dim(), 64, engine.n_actions(),
+                               &mut init_rng);
+        let rows = n_envs * engine.n_agents();
+        UnfusedRollout {
+            engine,
+            policy,
+            rng: Pcg64::with_stream(0, u64::MAX - 2),
+            cache: Cache::default(),
+            actions: vec![0; rows],
+        }
+    }
+
+    fn rollout(&mut self, t: usize) {
+        let rows = self.engine.n_envs() * self.engine.n_agents();
+        let n_actions = self.engine.n_actions();
+        for _ in 0..t {
+            self.policy.forward(&self.engine.obs, rows, &mut self.cache);
+            for row in 0..rows {
+                let lp = &self.cache.logp
+                    [row * n_actions..(row + 1) * n_actions];
+                self.actions[row] = self.rng.categorical(lp) as u32;
+            }
+            self.engine.step(&self.actions);
+        }
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     let bench = Bench::from_env();
+    let mut records: Vec<Json> = Vec::new();
+    let emit = |records: &mut Vec<Json>,
+                r: &warpsci::bench::BenchResult| {
+        println!("{}", r.report());
+        let json = r.to_json();
+        println!("{json}");
+        records.push(json);
+    };
 
     // raw SoA stepping (no policy): constant action pattern per lane
     for (n_envs, threads) in [(4096usize, 1usize), (4096, 2), (4096, 4),
@@ -30,8 +92,7 @@ fn main() -> anyhow::Result<()> {
                     eng.step(&actions);
                 }
             });
-        println!("{}", r.report());
-        println!("{}", r.to_json());
+        emit(&mut records, &r);
     }
 
     // other envs at the headline shard count
@@ -51,37 +112,62 @@ fn main() -> anyhow::Result<()> {
                     eng.step(&actions);
                 }
             });
-        println!("{}", r.report());
-        println!("{}", r.to_json());
+        emit(&mut records, &r);
     }
 
-    // full backend roll-out: policy inference + sampling + engine step
-    for threads in [1usize, 4] {
-        let mut eng = CpuEngine::new(CpuEngineConfig {
-            threads,
-            ..CpuEngineConfig::new("cartpole", 4096, 8)
-        })?;
-        let r = bench.run(
-            &format!("cpu_engine_rollout/cartpole/n4096/threads{threads}"),
-            eng.steps_per_iter() as f64,
-            || {
-                eng.rollout_iter().unwrap();
-            });
-        println!("{}", r.report());
-        println!("{}", r.to_json());
+    // the headline sweep: fused in-worker roll-out vs the seed's
+    // serial-inference roll-out structure (on the same pooled engine),
+    // across thread counts and envs — fused must win everywhere, most
+    // at high thread counts, where the unfused path is bound by its
+    // serial phase and per-tick rounds
+    for (env, n_envs, t) in [("cartpole", 4096usize, 8usize),
+                             ("covid_econ", 128, 4)] {
+        for threads in [1usize, 2, 4, 8] {
+            let mut eng = CpuEngine::new(CpuEngineConfig {
+                threads,
+                ..CpuEngineConfig::new(env, n_envs, t)
+            })?;
+            let r = bench.run(
+                &format!("fused_rollout/{env}/n{n_envs}/t{t}/\
+                          threads{threads}"),
+                eng.steps_per_iter() as f64,
+                || {
+                    eng.rollout_iter().unwrap();
+                });
+            emit(&mut records, &r);
+
+            let mut unfused = UnfusedRollout::new(env, n_envs, threads);
+            let r = bench.run(
+                &format!("unfused_rollout/{env}/n{n_envs}/t{t}/\
+                          threads{threads}"),
+                (n_envs * t) as f64,
+                || {
+                    unfused.rollout(t);
+                });
+            emit(&mut records, &r);
+        }
     }
 
     // fused roll-out + A2C train iteration
-    let mut eng = CpuEngine::new(CpuEngineConfig {
-        threads: 4,
-        ..CpuEngineConfig::new("cartpole", 4096, 8)
-    })?;
-    let r = bench.run("cpu_engine_train/cartpole/n4096/threads4",
-                      eng.steps_per_iter() as f64,
-                      || {
-                          eng.train_iter().unwrap();
-                      });
-    println!("{}", r.report());
-    println!("{}", r.to_json());
+    for (env, n_envs, t) in [("cartpole", 4096usize, 8usize),
+                             ("covid_econ", 128, 4)] {
+        let mut eng = CpuEngine::new(CpuEngineConfig {
+            threads: 4,
+            ..CpuEngineConfig::new(env, n_envs, t)
+        })?;
+        let r = bench.run(
+            &format!("cpu_engine_train/{env}/n{n_envs}/t{t}/threads4"),
+            eng.steps_per_iter() as f64,
+            || {
+                eng.train_iter().unwrap();
+            });
+        emit(&mut records, &r);
+    }
+
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_engine.json");
+    std::fs::write(&out, format!("{}\n", Json::Arr(records)))?;
+    println!("wrote {}", out.display());
     Ok(())
 }

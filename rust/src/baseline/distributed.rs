@@ -177,11 +177,9 @@ impl DistributedSystem {
             let returns = crate::nn::nstep_returns(
                 &b.rewards, &b.dones, &boot_cache.value,
                 b.n_envs as usize, b.n_agents as usize, t, self.cfg.gamma);
-            let actions: Vec<usize> =
-                b.actions.iter().map(|&a| a as usize).collect();
             let adv = crate::nn::normalized_advantages(&returns,
                                                        &self.cache.value);
-            self.trainer.backward_a2c(&self.cache, &actions, &adv,
+            self.trainer.backward_a2c(&self.cache, &b.actions, &adv,
                                       &returns, self.cfg.vf_coef,
                                       self.cfg.ent_coef, &mut grads);
             self.return_sum += b.finished_returns.iter()

@@ -3,16 +3,17 @@
 //! Owns a batch of CPU environments — stepped through the SoA batch
 //! engine (`crate::engine`), single-sharded by design so Fig 3's
 //! per-phase attribution stays clean — and a local policy copy; each
-//! round it receives a parameter broadcast, simulates `t` steps per env
-//! (sampling actions from its local net), and produces a
-//! [`TrajectoryBatch`].
+//! round it receives a parameter broadcast, runs the engine's fused
+//! roll-out (`t` steps per env, actions sampled in-engine from per-lane
+//! streams) and produces a [`TrajectoryBatch`].  What the baseline pays
+//! that the shared-memory backend does not is everything *around* this
+//! call: parameter deserialization before it and trajectory
+//! serialization after it.
 
 use anyhow::Result;
 
-use crate::engine::BatchEngine;
-use crate::nn::mlp::Cache;
+use crate::engine::{BatchEngine, TrajectorySlices};
 use crate::nn::Mlp;
-use crate::util::Pcg64;
 
 use super::transfer::TrajectoryBatch;
 
@@ -20,24 +21,13 @@ use super::transfer::TrajectoryBatch;
 pub struct RolloutWorker {
     pub engine: BatchEngine,
     pub policy: Mlp,
-    rng: Pcg64,
-    cache: Cache,
-    actions: Vec<u32>,
 }
 
 impl RolloutWorker {
     pub fn new(env: &str, n_envs: usize, policy: Mlp, seed: u64)
                -> Result<RolloutWorker> {
         let engine = BatchEngine::by_name(env, n_envs, 1, seed)?;
-        let rows = n_envs * engine.n_agents();
-        Ok(RolloutWorker {
-            engine,
-            policy,
-            // top-of-id-space stream: never collides with per-lane streams
-            rng: Pcg64::with_stream(seed, u64::MAX - 3),
-            cache: Cache::default(),
-            actions: vec![0; rows],
-        })
+        Ok(RolloutWorker { engine, policy })
     }
 
     /// Simulate `t` steps in every env; auto-reset on done.
@@ -45,7 +35,6 @@ impl RolloutWorker {
         let n_envs = self.engine.n_envs();
         let n_agents = self.engine.n_agents();
         let obs_dim = self.engine.obs_dim();
-        let n_actions = self.engine.n_actions();
         let rows = n_envs * n_agents;
 
         let mut batch = TrajectoryBatch {
@@ -53,35 +42,26 @@ impl RolloutWorker {
             n_envs: n_envs as u32,
             n_agents: n_agents as u32,
             obs_dim: obs_dim as u32,
-            obs: Vec::with_capacity(t * rows * obs_dim),
-            actions: Vec::with_capacity(t * rows),
-            rewards: Vec::with_capacity(t * rows),
-            dones: Vec::with_capacity(t * n_envs),
+            obs: vec![0f32; t * rows * obs_dim],
+            actions: vec![0u32; t * rows],
+            rewards: vec![0f32; t * rows],
+            dones: vec![0f32; t * n_envs],
             bootstrap_obs: vec![0f32; rows * obs_dim],
             finished_returns: Vec::new(),
             finished_lens: Vec::new(),
             finished_count: 0,
         };
-        for _ in 0..t {
-            batch.obs.extend_from_slice(&self.engine.obs);
-            // policy forward over the whole step batch
-            self.policy.forward(&self.engine.obs, rows, &mut self.cache);
-            for row in 0..rows {
-                let lp = &self.cache.logp
-                    [row * n_actions..(row + 1) * n_actions];
-                self.actions[row] = self.rng.categorical(lp) as u32;
-            }
-            batch.actions.extend_from_slice(&self.actions);
-            self.engine.step(&self.actions);
-            batch.rewards.extend_from_slice(&self.engine.rewards);
-            batch.dones.extend_from_slice(&self.engine.dones);
-            let (rets, lens) = self.engine.drain_finished();
-            batch.finished_count += rets.len() as u32;
-            batch.finished_returns.extend(rets);
-            batch.finished_lens.extend(lens);
-        }
+        self.engine.fused_rollout(&self.policy, t, Some(TrajectorySlices {
+            obs: &mut batch.obs,
+            actions: &mut batch.actions,
+            rewards: &mut batch.rewards,
+            dones: &mut batch.dones,
+        }));
         // observations after the final step, for trainer-side bootstrap
         batch.bootstrap_obs.copy_from_slice(&self.engine.obs);
+        self.engine.drain_finished(&mut batch.finished_returns,
+                                   &mut batch.finished_lens);
+        batch.finished_count = batch.finished_returns.len() as u32;
         batch
     }
 }
@@ -90,6 +70,7 @@ impl RolloutWorker {
 mod tests {
     use super::*;
     use crate::envs::make_cpu_env;
+    use crate::util::Pcg64;
 
     fn worker(env: &str, n_envs: usize) -> RolloutWorker {
         let probe = make_cpu_env(env).unwrap();
@@ -133,5 +114,15 @@ mod tests {
         for (r, l) in b.finished_returns.iter().zip(&b.finished_lens) {
             assert!((r - l).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn repeated_rollouts_are_a_contiguous_stream() {
+        // the fused path keeps the engine's lane state across calls: the
+        // first obs of roll-out k+1 is the bootstrap obs of roll-out k
+        let mut w = worker("cartpole", 2);
+        let a = w.rollout(4);
+        let b = w.rollout(4);
+        assert_eq!(&a.bootstrap_obs[..], &b.obs[..a.bootstrap_obs.len()]);
     }
 }

@@ -26,7 +26,9 @@ pub struct RunStats {
     pub final_return: f64,
     pub final_ep_len: f64,
     pub reached_target_at: Option<f64>,
-    /// seconds spent in each phase, e.g. "rollout", "transfer", "train"
+    /// seconds spent in each phase, e.g. the cpu engine's "inference" /
+    /// "env_step" / "train", the baseline's "rollout" / "transfer" /
+    /// "train", or the pjrt backend's fused "compute"
     pub phase_secs: Vec<(String, f64)>,
 }
 

@@ -2,17 +2,25 @@
 //! from-scratch A2C trainer, entirely in shared memory.
 //!
 //! This is the CPU counterpart of the paper's fused device graph: one
-//! `train_iter` rolls all N replicas `t` ticks forward (policy inference +
-//! vector env step, no serialization anywhere) and applies one A2C/Adam
-//! update.  The environment state never leaves the engine's flat arrays —
-//! the in-process analogue of the unified on-device store, and the system
-//! the distributed baseline (`crate::baseline`) is compared against.
+//! `train_iter` hands the whole roll-out to the engine's persistent shard
+//! workers — policy inference, per-lane action sampling, env stepping and
+//! trajectory capture all run **inside** the workers
+//! ([`BatchEngine::fused_rollout`]), writing straight into this backend's
+//! preallocated SoA trajectory buffers — then applies one A2C/Adam update
+//! on the coordinator thread.  The environment state never leaves the
+//! engine's flat arrays — the in-process analogue of the unified
+//! on-device store, and the system the distributed baseline
+//! (`crate::baseline`) is compared against.
+//!
+//! Phase timers: the fused roll-out reports its critical-path split
+//! (max across shards, capture copies included) as `inference` /
+//! `env_step`; the coordinator-side update is `train`.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::engine::BatchEngine;
+use crate::engine::{BatchEngine, TrajectorySlices};
 use crate::nn::mlp::Cache;
 use crate::nn::{Adam, Mlp};
 use crate::util::{Pcg64, Timer};
@@ -67,18 +75,19 @@ impl CpuEngineConfig {
         }
     }
 
-    /// Explicit `threads` is honored verbatim.  `0` (auto) caps the
-    /// worker count so every shard owns at least ~512 agent-rows —
-    /// otherwise the engine's per-tick thread spawn/join would dominate
-    /// small workloads and distort throughput scaling curves.
-    fn resolved_threads(&self, rows: usize) -> usize {
+    /// Explicit `threads` is honored verbatim.  `0` (auto) uses every
+    /// available core: with the persistent pool a roll-out round costs
+    /// one condvar handshake per worker instead of a thread spawn/join
+    /// per tick, so there is no spawn cost to amortize and no minimum
+    /// rows-per-shard floor (the engine still clamps to one lane per
+    /// shard).
+    fn resolved_threads(&self) -> usize {
         if self.threads > 0 {
             return self.threads;
         }
-        let hw = std::thread::available_parallelism()
+        std::thread::available_parallelism()
             .map(|n| n.get())
-            .unwrap_or(1);
-        hw.min((rows / 512).max(1))
+            .unwrap_or(1)
     }
 }
 
@@ -90,7 +99,6 @@ pub struct CpuEngine {
     adam: Adam,
     cache: Cache,
     boot_cache: Cache,
-    action_rng: Pcg64,
     timer: Timer,
     iter: u64,
     env_steps: u64,
@@ -103,29 +111,33 @@ pub struct CpuEngine {
     grad_norm: f64,
     reward_mean: f64,
     value_mean: f64,
-    // reusable per-iteration buffers
+    // reusable per-iteration SoA trajectory buffers, filled in-worker by
+    // the fused roll-out
     traj_obs: Vec<f32>,
-    traj_actions: Vec<usize>,
+    traj_actions: Vec<u32>,
     traj_rewards: Vec<f32>,
     traj_dones: Vec<f32>,
-    actions_buf: Vec<u32>,
+    // reusable completed-episode drain buffers
+    finished_rets: Vec<f32>,
+    finished_lens: Vec<f32>,
 }
 
 impl CpuEngine {
     pub fn new(cfg: CpuEngineConfig) -> Result<CpuEngine> {
         let kernel = crate::engine::make_batch_env(&cfg.env)?;
-        let rows = cfg.n_envs * kernel.n_agents();
-        let threads = cfg.resolved_threads(rows);
+        let threads = cfg.resolved_threads();
         let engine = BatchEngine::new(kernel, cfg.n_envs, threads,
                                       cfg.seed);
         // fixed streams sit at the top of the id space so they can never
-        // collide with the engine's per-lane streams (= global lane index)
+        // collide with the engine's per-lane env/action stream ranges
+        // (`u64::MAX - 2` belonged to the retired single-stream action
+        // sampler; action sampling is per-lane now, see
+        // `engine::ACTION_STREAM_BASE`)
         let mut init_rng = Pcg64::with_stream(cfg.seed, u64::MAX - 1);
         let policy = Mlp::init(engine.obs_dim(), cfg.hidden,
                                engine.n_actions(), &mut init_rng);
         Ok(CpuEngine {
             adam: Adam::new(cfg.lr, &policy.param_shapes()),
-            action_rng: Pcg64::with_stream(cfg.seed, u64::MAX - 2),
             engine,
             policy,
             cache: Cache::default(),
@@ -146,7 +158,8 @@ impl CpuEngine {
             traj_actions: Vec::new(),
             traj_rewards: Vec::new(),
             traj_dones: Vec::new(),
-            actions_buf: vec![0; rows],
+            finished_rets: Vec::new(),
+            finished_lens: Vec::new(),
             cfg,
         })
     }
@@ -166,22 +179,15 @@ impl CpuEngine {
         &self.policy
     }
 
-    /// Forward the current observations and sample one action per row
-    /// into `actions_buf`.
-    fn sample_actions(&mut self) {
-        let rows = self.engine.n_envs() * self.engine.n_agents();
-        let n_actions = self.engine.n_actions();
-        self.policy.forward(&self.engine.obs, rows, &mut self.cache);
-        for row in 0..rows {
-            let lp = &self.cache.logp[row * n_actions..(row + 1) * n_actions];
-            self.actions_buf[row] = self.action_rng.categorical(lp) as u32;
-        }
-    }
-
-    /// Fold freshly finished episodes into the telemetry EMAs.
+    /// Fold freshly finished episodes into the telemetry EMAs.  The
+    /// engine drains in global `(tick, lane)` order, so the fold is
+    /// bit-identical for any thread count.
     fn absorb_finished(&mut self) {
-        let (rets, lens) = self.engine.drain_finished();
-        for (r, l) in rets.iter().zip(&lens) {
+        self.finished_rets.clear();
+        self.finished_lens.clear();
+        self.engine.drain_finished(&mut self.finished_rets,
+                                   &mut self.finished_lens);
+        for (r, l) in self.finished_rets.iter().zip(&self.finished_lens) {
             if self.episodes_done == 0.0 {
                 self.ret_ema = *r as f64;
                 self.len_ema = *l as f64;
@@ -235,27 +241,27 @@ impl CpuEngine {
     fn iterate(&mut self, train: bool) -> Result<()> {
         let t = self.cfg.t;
         let n_envs = self.engine.n_envs();
-        if train {
-            self.traj_obs.clear();
-            self.traj_actions.clear();
-            self.traj_rewards.clear();
-            self.traj_dones.clear();
-        }
-        let t0 = Instant::now();
-        for _ in 0..t {
-            if train {
-                self.traj_obs.extend_from_slice(&self.engine.obs);
-            }
-            self.sample_actions();
-            self.engine.step(&self.actions_buf);
-            if train {
-                self.traj_actions
-                    .extend(self.actions_buf.iter().map(|a| *a as usize));
-                self.traj_rewards.extend_from_slice(&self.engine.rewards);
-                self.traj_dones.extend_from_slice(&self.engine.dones);
-            }
-        }
-        self.timer.add("rollout", t0.elapsed());
+        let rows = n_envs * self.engine.n_agents();
+        let od = self.engine.obs_dim();
+        let phases = if train {
+            self.traj_obs.resize(t * rows * od, 0.0);
+            self.traj_actions.resize(t * rows, 0);
+            self.traj_rewards.resize(t * rows, 0.0);
+            self.traj_dones.resize(t * n_envs, 0.0);
+            self.engine.fused_rollout(&self.policy, t,
+                                      Some(TrajectorySlices {
+                                          obs: &mut self.traj_obs,
+                                          actions: &mut self.traj_actions,
+                                          rewards: &mut self.traj_rewards,
+                                          dones: &mut self.traj_dones,
+                                      }))
+        } else {
+            self.engine.fused_rollout(&self.policy, t, None)
+        };
+        self.timer.add("inference",
+                       Duration::from_secs_f64(phases.inference_secs));
+        self.timer.add("env_step",
+                       Duration::from_secs_f64(phases.env_step_secs));
         if train {
             let t1 = Instant::now();
             self.update();
@@ -362,7 +368,8 @@ mod tests {
         assert!(row.ep_return_ema.is_finite());
         let phases: std::collections::BTreeMap<_, _> =
             eng.phase_secs().into_iter().collect();
-        assert!(phases["rollout"] > 0.0);
+        assert!(phases["env_step"] > 0.0);
+        assert!(phases.contains_key("inference"));
         assert!(phases["train"] > 0.0);
     }
 

@@ -8,25 +8,47 @@
 //! scalar math over contiguous lanes — no `Box<dyn CpuEnv>` virtual call
 //! per step, no per-replica allocation.
 //!
-//! Replicas are partitioned into contiguous shards, one per worker thread;
-//! every [`BatchEngine::step`] is one round: shard workers step their lanes
-//! in parallel (scoped threads = the round barrier), then control returns
-//! to the caller with `obs`/`rewards`/`dones` freshly written.
+//! Replicas are partitioned into contiguous shards, one per worker of a
+//! **persistent worker pool** ([`pool::WorkerPool`]) spawned once in
+//! [`BatchEngine::new`] and coordinated by a round barrier; the caller
+//! itself executes shard 0, so `threads` shards cost `threads - 1` parked
+//! threads.  Two round kinds exist:
 //!
-//! Determinism: every lane owns its own [`Pcg64`] stream seeded by
-//! `(seed, global lane index)`, and lane math never reads a neighbouring
-//! lane's RNG, so results are **bit-identical for any thread count** —
-//! pinned by `tests/engine_determinism.rs`.
+//! * [`BatchEngine::step`] — one tick: every shard steps its lanes, then
+//!   control returns with `obs`/`rewards`/`dones` freshly written.
+//! * [`BatchEngine::fused_rollout`] — the hot path: **t ticks of policy
+//!   inference, per-lane action sampling, env stepping and trajectory
+//!   capture run entirely inside the workers**, one parallel region for
+//!   the whole roll-out.  Lanes never interact during a roll-out (the
+//!   policy is frozen, resets are lane-local), so no cross-shard barrier
+//!   is needed between ticks and the serial-inference / parallel-step /
+//!   join alternation of the per-tick path disappears.
 //!
-//! Workers are scoped threads spawned per tick, so the spawn/join cost
-//! (~tens of µs) must be amortized over enough lanes per shard to be
-//! negligible; callers that auto-size (`CpuEngineConfig`) cap the worker
-//! count accordingly.  A persistent pool is a ROADMAP item.
+//! Determinism: every lane owns its own [`Pcg64`] *environment* stream
+//! seeded by `(seed, global lane index)` plus its own *action-sampling*
+//! stream at `(seed, ACTION_STREAM_BASE + global lane index)`, and lane
+//! math never reads a neighbouring lane's RNG — so results are
+//! **bit-identical for any thread count**, pinned by
+//! `tests/engine_determinism.rs` and `tests/fused_rollout.rs`.
+//! Completed-episode telemetry is drained in global `(tick, lane)` order
+//! for the same reason.
+
+pub mod pool;
 
 use anyhow::{bail, Result};
 
 use crate::envs;
+use crate::nn::{Mlp, SampleScratch};
 use crate::util::Pcg64;
+
+use pool::{SendConstPtr, SendPtr, WorkerPool};
+
+/// Base of the reserved per-lane *action-sampling* stream id range:
+/// lane `i` samples from `(seed, ACTION_STREAM_BASE + i)`.  Environment
+/// streams occupy `[0, n_envs)` and the fixed coordinator streams sit at
+/// the top of the id space (`u64::MAX - {1, 2, 3}`), so the three ranges
+/// can never collide for any realistic replica count.
+pub const ACTION_STREAM_BASE: u64 = 1 << 40;
 
 /// A stateless vector-step kernel over shard-local SoA state.
 ///
@@ -99,19 +121,65 @@ struct Shard {
     n: usize,
     /// Field-major SoA state: `[state_dim][n]`.
     state: Vec<f32>,
-    /// Per-lane RNG streams (seeded by global lane index).
+    /// Per-lane environment RNG streams (seeded by global lane index).
     rngs: Vec<Pcg64>,
+    /// Per-lane action-sampling streams
+    /// (`ACTION_STREAM_BASE + global lane index`).
+    act_rngs: Vec<Pcg64>,
     /// Per-lane episode step counters.
     steps: Vec<u32>,
     /// Per-lane running episodic return (mean over agents).
     ep_return: Vec<f32>,
-    /// Completed-episode stats since the last drain.
+    /// Completed-episode stats since the last drain, with global
+    /// `(tick, lane)` sort keys so the drain order is thread-count
+    /// independent.
+    finished_keys: Vec<u64>,
     finished_returns: Vec<f32>,
     finished_lens: Vec<f32>,
+    /// Engine ticks executed (identical across shards: lockstep rounds).
+    tick: u64,
+    /// Fused-rollout action scratch, `[lane][agent]` (`n * n_agents`).
+    actions: Vec<u32>,
+    /// Fused-rollout inference scratch (policy-only forward rows).
+    scratch: SampleScratch,
+    /// Wall-clock split of the last fused round, written by the owning
+    /// worker and read by the coordinator after the barrier.
+    inference_secs: f64,
+    env_secs: f64,
 }
 
-/// N replicas of one environment, stepped in lockstep across shard threads.
+/// Borrowed per-iteration trajectory buffers filled in-worker by
+/// [`BatchEngine::fused_rollout`]:
+/// `obs` is `[step][env][agent][obs_dim]`, `actions`/`rewards` are
+/// `[step][env][agent]`, `dones` is `[step][env]` — all row-major over
+/// the *global* replica index, so each shard writes disjoint strided
+/// slices and no post-roll-out gather is needed.
+pub struct TrajectorySlices<'a> {
+    pub obs: &'a mut [f32],
+    pub actions: &'a mut [u32],
+    pub rewards: &'a mut [f32],
+    pub dones: &'a mut [f32],
+}
+
+/// Per-phase wall-clock split of one fused roll-out.  Shards run the
+/// whole roll-out concurrently, so each phase reports the **maximum
+/// per-shard busy time** — the critical-path estimate closest to the
+/// wall clock the caller observes (capture copies are included in the
+/// phase that produced the data; only pool wake/join latency, ~µs per
+/// round, is unattributed).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RolloutPhases {
+    pub inference_secs: f64,
+    pub env_step_secs: f64,
+}
+
+/// N replicas of one environment, stepped in lockstep across the shards
+/// of a persistent worker pool.
 pub struct BatchEngine {
+    /// Declared first so it drops (and joins its workers) before the
+    /// buffers below — defense in depth on top of the pool's own
+    /// guarantee that `run` never returns (or unwinds) mid-round.
+    pool: WorkerPool,
     env: Box<dyn BatchEnv>,
     shards: Vec<Shard>,
     threads: usize,
@@ -125,15 +193,56 @@ pub struct BatchEngine {
     /// episode's first observation.
     pub dones: Vec<f32>,
     total_steps: u64,
+    /// Reused (key, return, length) merge buffer for `drain_finished`.
+    drain_scratch: Vec<(u64, f32, f32)>,
+}
+
+/// Pointer bundle for one [`BatchEngine::step`] round.
+#[derive(Clone, Copy)]
+struct StepRound {
+    env: SendConstPtr<dyn BatchEnv>,
+    shards: SendPtr<Shard>,
+    actions: SendConstPtr<u32>,
+    obs: SendPtr<f32>,
+    rewards: SendPtr<f32>,
+    dones: SendPtr<f32>,
+    na: usize,
+    od: usize,
+    n_envs: usize,
+    max_steps: u32,
+}
+
+/// Pointer bundle for one [`BatchEngine::fused_rollout`] round.
+#[derive(Clone, Copy)]
+struct FusedRound {
+    env: SendConstPtr<dyn BatchEnv>,
+    policy: SendConstPtr<Mlp>,
+    shards: SendPtr<Shard>,
+    obs: SendPtr<f32>,
+    rewards: SendPtr<f32>,
+    dones: SendPtr<f32>,
+    traj_obs: SendPtr<f32>,
+    traj_actions: SendPtr<u32>,
+    traj_rewards: SendPtr<f32>,
+    traj_dones: SendPtr<f32>,
+    recording: bool,
+    t: usize,
+    na: usize,
+    od: usize,
+    n_envs: usize,
+    max_steps: u32,
 }
 
 impl BatchEngine {
-    /// Build and reset `n_envs` replicas sharded across `threads` workers.
+    /// Build and reset `n_envs` replicas sharded across `threads` workers;
+    /// spawns the persistent pool (`threads - 1` threads) once.
     pub fn new(env: Box<dyn BatchEnv>, n_envs: usize, threads: usize,
                seed: u64) -> BatchEngine {
         assert!(n_envs > 0, "need at least one replica");
+        debug_assert!((n_envs as u64) < ACTION_STREAM_BASE);
         let threads = threads.clamp(1, n_envs);
         let sd = env.state_dim();
+        let na = env.n_agents();
         let mut shards = Vec::with_capacity(threads);
         let base = n_envs / threads;
         let extra = n_envs % threads;
@@ -147,10 +256,20 @@ impl BatchEngine {
                 rngs: (0..n)
                     .map(|i| Pcg64::with_stream(seed, (lo + i) as u64))
                     .collect(),
+                act_rngs: (0..n)
+                    .map(|i| Pcg64::with_stream(
+                        seed, ACTION_STREAM_BASE + (lo + i) as u64))
+                    .collect(),
                 steps: vec![0; n],
                 ep_return: vec![0.0; n],
+                finished_keys: Vec::new(),
                 finished_returns: Vec::new(),
                 finished_lens: Vec::new(),
+                tick: 0,
+                actions: vec![0; n * na],
+                scratch: SampleScratch::default(),
+                inference_secs: 0.0,
+                env_secs: 0.0,
             };
             for i in 0..n {
                 env.reset_lane(&mut shard.state, n, i, &mut shard.rngs[i]);
@@ -158,16 +277,18 @@ impl BatchEngine {
             shards.push(shard);
             lo += n;
         }
-        let rows = n_envs * env.n_agents();
+        let rows = n_envs * na;
         let mut engine = BatchEngine {
             obs: vec![0.0; rows * env.obs_dim()],
             rewards: vec![0.0; rows],
             dones: vec![0.0; n_envs],
+            pool: WorkerPool::new(threads - 1),
             env,
             shards,
             threads,
             n_envs,
             total_steps: 0,
+            drain_scratch: Vec::new(),
         };
         engine.write_all_obs();
         engine
@@ -212,68 +333,133 @@ impl BatchEngine {
         self.total_steps
     }
 
-    /// Step every replica once.  `actions` is `[env][agent]` row-major.
+    /// Step every replica once with caller-provided actions
+    /// (`[env][agent]` row-major): one pool round.
     pub fn step(&mut self, actions: &[u32]) {
         let na = self.env.n_agents();
-        let od = self.env.obs_dim();
         assert_eq!(actions.len(), self.n_envs * na, "action arity");
-        let env = self.env.as_ref();
-        let max_steps = env.max_steps();
-        if self.threads <= 1 || self.shards.len() <= 1 {
-            let mut off = 0;
-            for shard in self.shards.iter_mut() {
-                let sn = shard.n;
-                let rows = sn * na;
-                step_shard(
-                    env,
-                    shard,
-                    max_steps,
-                    &actions[off * na..off * na + rows],
-                    &mut self.obs[off * na * od..(off * na + rows) * od],
-                    &mut self.rewards[off * na..off * na + rows],
-                    &mut self.dones[off..off + sn],
-                );
-                off += sn;
-            }
-        } else {
-            let mut obs_rest = self.obs.as_mut_slice();
-            let mut rew_rest = self.rewards.as_mut_slice();
-            let mut done_rest = self.dones.as_mut_slice();
-            let mut act_rest = actions;
-            std::thread::scope(|scope| {
-                for shard in self.shards.iter_mut() {
-                    let rows = shard.n * na;
-                    let (obs, o2) =
-                        std::mem::take(&mut obs_rest).split_at_mut(rows * od);
-                    obs_rest = o2;
-                    let (rew, r2) =
-                        std::mem::take(&mut rew_rest).split_at_mut(rows);
-                    rew_rest = r2;
-                    let (done, d2) =
-                        std::mem::take(&mut done_rest).split_at_mut(shard.n);
-                    done_rest = d2;
-                    let (act, a2) = act_rest.split_at(rows);
-                    act_rest = a2;
-                    scope.spawn(move || {
-                        step_shard(env, shard, max_steps, act, obs, rew,
-                                   done);
-                    });
-                }
-            });
-        }
+        let round = StepRound {
+            env: SendConstPtr(self.env.as_ref() as *const dyn BatchEnv),
+            shards: SendPtr(self.shards.as_mut_ptr()),
+            actions: SendConstPtr(actions.as_ptr()),
+            obs: SendPtr(self.obs.as_mut_ptr()),
+            rewards: SendPtr(self.rewards.as_mut_ptr()),
+            dones: SendPtr(self.dones.as_mut_ptr()),
+            na,
+            od: self.env.obs_dim(),
+            n_envs: self.n_envs,
+            max_steps: self.env.max_steps(),
+        };
+        // SAFETY: `run` blocks until every worker finishes the round, so
+        // the raw pointers in `round` outlive every access; worker `w`
+        // touches only shard `w` and its disjoint buffer ranges.
+        self.pool.run(move |w| unsafe { step_shard_round(&round, w) });
         self.total_steps += self.n_envs as u64;
     }
 
-    /// Drain completed-episode (return, length) pairs accumulated since
-    /// the last call.
-    pub fn drain_finished(&mut self) -> (Vec<f32>, Vec<f32>) {
-        let mut rets = Vec::new();
-        let mut lens = Vec::new();
-        for shard in self.shards.iter_mut() {
-            rets.append(&mut shard.finished_returns);
-            lens.append(&mut shard.finished_lens);
+    /// The fused hot path: roll every replica `t` ticks forward with
+    /// policy inference, per-lane action sampling, env stepping and
+    /// (optionally) trajectory capture all executed inside the shard
+    /// workers — one parallel region for the whole roll-out, no per-tick
+    /// spawn/join or serial-inference phase.  On return `obs` holds the
+    /// post-roll-out observations (bootstrap values), `rewards`/`dones`
+    /// the final tick's values, and `traj` (when given) the full
+    /// `[step][env][agent]` record.  Returns the critical-path phase
+    /// split (max across shards, see [`RolloutPhases`]).
+    pub fn fused_rollout(&mut self, policy: &Mlp, t: usize,
+                         mut traj: Option<TrajectorySlices<'_>>)
+                         -> RolloutPhases {
+        if t == 0 {
+            return RolloutPhases::default();
         }
-        (rets, lens)
+        let na = self.env.n_agents();
+        let od = self.env.obs_dim();
+        let rows_total = self.n_envs * na;
+        assert_eq!(policy.obs, od, "policy obs width");
+        assert_eq!(policy.n_out, self.env.n_actions(),
+                   "policy action arity");
+        let (traj_obs, traj_actions, traj_rewards, traj_dones, recording) =
+            match traj.as_mut() {
+                Some(tr) => {
+                    assert_eq!(tr.obs.len(), t * rows_total * od,
+                               "traj obs arity");
+                    assert_eq!(tr.actions.len(), t * rows_total,
+                               "traj actions arity");
+                    assert_eq!(tr.rewards.len(), t * rows_total,
+                               "traj rewards arity");
+                    assert_eq!(tr.dones.len(), t * self.n_envs,
+                               "traj dones arity");
+                    (SendPtr(tr.obs.as_mut_ptr()),
+                     SendPtr(tr.actions.as_mut_ptr()),
+                     SendPtr(tr.rewards.as_mut_ptr()),
+                     SendPtr(tr.dones.as_mut_ptr()),
+                     true)
+                }
+                None => (SendPtr(std::ptr::null_mut()),
+                         SendPtr(std::ptr::null_mut()),
+                         SendPtr(std::ptr::null_mut()),
+                         SendPtr(std::ptr::null_mut()),
+                         false),
+            };
+        let round = FusedRound {
+            env: SendConstPtr(self.env.as_ref() as *const dyn BatchEnv),
+            policy: SendConstPtr(policy as *const Mlp),
+            shards: SendPtr(self.shards.as_mut_ptr()),
+            obs: SendPtr(self.obs.as_mut_ptr()),
+            rewards: SendPtr(self.rewards.as_mut_ptr()),
+            dones: SendPtr(self.dones.as_mut_ptr()),
+            traj_obs,
+            traj_actions,
+            traj_rewards,
+            traj_dones,
+            recording,
+            t,
+            na,
+            od,
+            n_envs: self.n_envs,
+            max_steps: self.env.max_steps(),
+        };
+        // SAFETY: as in `step` — `run` is the round barrier, shard `w` and
+        // every strided trajectory range it writes are exclusive to
+        // worker `w`, and `traj` (the live `&mut` borrows) outlives the
+        // round because it is still in scope below.
+        self.pool.run(move |w| unsafe { fused_shard_round(&round, w) });
+        self.total_steps += (self.n_envs * t) as u64;
+        let mut phases = RolloutPhases::default();
+        for shard in &self.shards {
+            phases.inference_secs =
+                phases.inference_secs.max(shard.inference_secs);
+            phases.env_step_secs =
+                phases.env_step_secs.max(shard.env_secs);
+        }
+        phases
+    }
+
+    /// Append completed-episode (return, length) pairs accumulated since
+    /// the last drain into caller-provided buffers — no per-call
+    /// allocation.  Pairs are merged into global `(tick, lane)` order so
+    /// downstream order-sensitive folds (telemetry EMAs) are identical
+    /// for any thread count.
+    pub fn drain_finished(&mut self, rets: &mut Vec<f32>,
+                          lens: &mut Vec<f32>) {
+        self.drain_scratch.clear();
+        for shard in self.shards.iter_mut() {
+            for ((k, r), l) in shard
+                .finished_keys
+                .drain(..)
+                .zip(shard.finished_returns.drain(..))
+                .zip(shard.finished_lens.drain(..))
+            {
+                self.drain_scratch.push((k, r, l));
+            }
+        }
+        self.drain_scratch.sort_unstable_by_key(|e| e.0);
+        rets.reserve(self.drain_scratch.len());
+        lens.reserve(self.drain_scratch.len());
+        for &(_, r, l) in &self.drain_scratch {
+            rets.push(r);
+            lens.push(l);
+        }
     }
 
     /// Assemble the global field-major state `[state_dim][n_envs]`
@@ -308,12 +494,96 @@ impl BatchEngine {
     }
 }
 
+/// One shard's [`BatchEngine::step`] round.
+///
+/// # Safety
+/// Shard `w` must be exclusively owned by this call for the round, and
+/// every pointer in `r` must stay valid until the round barrier.
+unsafe fn step_shard_round(r: &StepRound, w: usize) {
+    let shard = &mut *r.shards.0.add(w);
+    let env = &*r.env.0;
+    let rows = shard.n * r.na;
+    let row_off = shard.lo * r.na;
+    let actions =
+        std::slice::from_raw_parts(r.actions.0.add(row_off), rows);
+    let obs = std::slice::from_raw_parts_mut(
+        r.obs.0.add(row_off * r.od), rows * r.od);
+    let rewards =
+        std::slice::from_raw_parts_mut(r.rewards.0.add(row_off), rows);
+    let dones =
+        std::slice::from_raw_parts_mut(r.dones.0.add(shard.lo), shard.n);
+    step_shard(env, shard, r.max_steps, r.n_envs, actions, obs, rewards,
+               dones);
+}
+
+/// One shard's [`BatchEngine::fused_rollout`] round: `t` ticks of
+/// forward + sample + step + capture over this shard's lanes only.
+///
+/// # Safety
+/// As [`step_shard_round`]; additionally the trajectory pointers must
+/// cover the full `[t][n_envs * na]` layout when `r.recording`.
+unsafe fn fused_shard_round(r: &FusedRound, w: usize) {
+    let shard = &mut *r.shards.0.add(w);
+    let env = &*r.env.0;
+    let policy = &*r.policy.0;
+    let rows = shard.n * r.na;
+    let row_off = shard.lo * r.na;
+    let rows_total = r.n_envs * r.na;
+    let obs = std::slice::from_raw_parts_mut(
+        r.obs.0.add(row_off * r.od), rows * r.od);
+    let rewards =
+        std::slice::from_raw_parts_mut(r.rewards.0.add(row_off), rows);
+    let dones =
+        std::slice::from_raw_parts_mut(r.dones.0.add(shard.lo), shard.n);
+    // phase attribution covers the whole loop: trajectory-capture copies
+    // are charged to the phase that produced the data (obs+actions ->
+    // inference, rewards+dones -> env_step), so the two phases sum to
+    // this shard's busy time
+    let mut inference = std::time::Duration::ZERO;
+    let mut env_step = std::time::Duration::ZERO;
+    for s in 0..r.t {
+        let t0 = std::time::Instant::now();
+        if r.recording {
+            std::slice::from_raw_parts_mut(
+                r.traj_obs.0.add((s * rows_total + row_off) * r.od),
+                rows * r.od)
+                .copy_from_slice(obs);
+        }
+        let mut actions = std::mem::take(&mut shard.actions);
+        policy.sample_actions_lanes(obs, r.na, &mut shard.act_rngs,
+                                    &mut shard.scratch, &mut actions);
+        if r.recording {
+            std::slice::from_raw_parts_mut(
+                r.traj_actions.0.add(s * rows_total + row_off), rows)
+                .copy_from_slice(&actions);
+        }
+        let t1 = std::time::Instant::now();
+        inference += t1 - t0;
+        step_shard(env, shard, r.max_steps, r.n_envs, &actions, obs,
+                   rewards, dones);
+        shard.actions = actions;
+        if r.recording {
+            std::slice::from_raw_parts_mut(
+                r.traj_rewards.0.add(s * rows_total + row_off), rows)
+                .copy_from_slice(rewards);
+            std::slice::from_raw_parts_mut(
+                r.traj_dones.0.add(s * r.n_envs + shard.lo), shard.n)
+                .copy_from_slice(dones);
+        }
+        env_step += t1.elapsed();
+    }
+    shard.inference_secs = inference.as_secs_f64();
+    shard.env_secs = env_step.as_secs_f64();
+}
+
 /// One shard's tick: vector step, truncation + episode accounting +
 /// auto-reset, observation refresh.
+#[allow(clippy::too_many_arguments)]
 fn step_shard(env: &dyn BatchEnv, shard: &mut Shard, max_steps: u32,
-              actions: &[u32], obs: &mut [f32], rewards: &mut [f32],
-              dones: &mut [f32]) {
+              n_envs_total: usize, actions: &[u32], obs: &mut [f32],
+              rewards: &mut [f32], dones: &mut [f32]) {
     let na = env.n_agents();
+    shard.tick += 1;
     env.step_all(&mut shard.state, shard.n, actions, &mut shard.rngs,
                  rewards, dones);
     for i in 0..shard.n {
@@ -322,6 +592,8 @@ fn step_shard(env: &dyn BatchEnv, shard: &mut Shard, max_steps: u32,
         shard.ep_return[i] += rsum / na as f32;
         let done = dones[i] != 0.0 || shard.steps[i] >= max_steps;
         if done {
+            shard.finished_keys.push(
+                shard.tick * n_envs_total as u64 + (shard.lo + i) as u64);
             shard.finished_returns.push(shard.ep_return[i]);
             shard.finished_lens.push(shard.steps[i] as f32);
             env.reset_lane(&mut shard.state, shard.n, i,
@@ -376,7 +648,8 @@ mod tests {
             }
         }
         assert!(saw_done, "constant-right cartpole must topple");
-        let (rets, lens) = eng.drain_finished();
+        let (mut rets, mut lens) = (Vec::new(), Vec::new());
+        eng.drain_finished(&mut rets, &mut lens);
         assert!(!rets.is_empty());
         assert_eq!(rets.len(), lens.len());
         // cartpole return == episode length
@@ -384,8 +657,31 @@ mod tests {
             assert!((r - l).abs() < 1e-4);
         }
         assert_eq!(eng.total_steps(), 400 * 8);
-        // drained once — the second drain is empty
-        assert!(eng.drain_finished().0.is_empty());
+        // drained once — the second drain appends nothing
+        rets.clear();
+        lens.clear();
+        eng.drain_finished(&mut rets, &mut lens);
+        assert!(rets.is_empty());
+    }
+
+    #[test]
+    fn drain_order_is_thread_count_invariant() {
+        let run = |threads: usize| -> (Vec<f32>, Vec<f32>) {
+            let mut eng =
+                BatchEngine::by_name("cartpole", 9, threads, 3).unwrap();
+            let actions = vec![1u32; 9];
+            for _ in 0..300 {
+                eng.step(&actions);
+            }
+            let (mut rets, mut lens) = (Vec::new(), Vec::new());
+            eng.drain_finished(&mut rets, &mut lens);
+            assert!(!rets.is_empty());
+            (rets, lens)
+        };
+        let reference = run(1);
+        for threads in [2, 3, 4] {
+            assert_eq!(run(threads), reference, "threads {threads}");
+        }
     }
 
     #[test]
@@ -398,5 +694,34 @@ mod tests {
         eng.step(&actions);
         assert!(eng.rewards.iter().all(|r| r.is_finite()));
         assert!(eng.dones.iter().all(|d| *d == 0.0));
+    }
+
+    #[test]
+    fn fused_rollout_records_full_trajectory() {
+        let mut rng = Pcg64::new(0);
+        let mut eng = BatchEngine::by_name("cartpole", 6, 2, 5).unwrap();
+        let policy = Mlp::init(eng.obs_dim(), 16, eng.n_actions(),
+                               &mut rng);
+        let (t, rows, od) = (10usize, 6usize, 4usize);
+        let mut obs = vec![f32::NAN; t * rows * od];
+        let mut actions = vec![u32::MAX; t * rows];
+        let mut rewards = vec![f32::NAN; t * rows];
+        let mut dones = vec![f32::NAN; t * 6];
+        let first_obs = eng.obs.clone();
+        let phases = eng.fused_rollout(&policy, t, Some(TrajectorySlices {
+            obs: &mut obs,
+            actions: &mut actions,
+            rewards: &mut rewards,
+            dones: &mut dones,
+        }));
+        assert_eq!(eng.total_steps(), (t * 6) as u64);
+        assert!(phases.inference_secs >= 0.0);
+        assert!(phases.env_step_secs > 0.0);
+        // tick 0's recorded obs are the pre-roll-out observations
+        assert_eq!(&obs[..rows * od], &first_obs[..]);
+        assert!(obs.iter().all(|x| x.is_finite()));
+        assert!(actions.iter().all(|&a| a < 2));
+        assert!(rewards.iter().all(|r| *r == 1.0));
+        assert!(dones.iter().all(|d| *d == 0.0 || *d == 1.0));
     }
 }

@@ -1,0 +1,312 @@
+//! Persistent shard worker pool with a round barrier.
+//!
+//! One pool is spawned per [`crate::engine::BatchEngine`] and lives as
+//! long as the engine: `threads - 1` parked worker threads plus the
+//! caller, which executes shard 0 itself.  A *round* publishes one job —
+//! a closure executed once per shard index — wakes every worker, and
+//! blocks the caller until the last worker checks in.  Compared with the
+//! seed's per-tick `std::thread::scope` spawn/join (~tens of µs per
+//! tick), a round costs one mutex/condvar handshake per worker (~1 µs),
+//! and the fused roll-out amortizes even that over `t` ticks.
+//!
+//! The pool itself is lifetime-safe Rust: jobs must be `'static`, so
+//! callers that need a round to touch borrowed engine state (the engine
+//! does) capture raw pointers and carry the safety argument themselves —
+//! `run` does not return until every worker has finished the round, so a
+//! pointed-to buffer outlives every access.  That holds even under
+//! panics: a panicking shard job (the caller's own shard 0 or a
+//! worker's) is caught, the barrier is waited out, and the panic is
+//! re-raised from `run` afterwards — never a deadlock, never an unwind
+//! past live raw pointers.
+//!
+//! Shutdown: dropping the pool flags every worker and joins them; a
+//! dropped engine never leaks threads (pinned by `tests/fused_rollout.rs`).
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// One round's work: called once per shard index in `0..n_shards`.
+type Job = Arc<dyn Fn(usize) + Send + Sync>;
+
+struct Ctrl {
+    /// Round counter; workers run one job per observed increment.
+    epoch: u64,
+    /// Workers that have not yet finished the current round.
+    remaining: usize,
+    /// A worker's job panicked this round; re-raised by the coordinator
+    /// at the barrier so a shard bug fails the round like the scoped
+    /// spawn it replaces did, instead of deadlocking or being swallowed.
+    panicked: bool,
+    job: Option<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    ctrl: Mutex<Ctrl>,
+    /// Coordinator -> workers: a new round (or shutdown) is available.
+    start: Condvar,
+    /// Workers -> coordinator: the last worker finished the round.
+    done: Condvar,
+}
+
+/// Persistent pool of shard workers coordinated by a round barrier.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `n_workers` parked threads (shard indices `1..=n_workers`;
+    /// the caller runs shard 0 inside [`WorkerPool::run`]).
+    pub fn new(n_workers: usize) -> WorkerPool {
+        let shared = Arc::new(Shared {
+            ctrl: Mutex::new(Ctrl {
+                epoch: 0,
+                remaining: 0,
+                panicked: false,
+                job: None,
+                shutdown: false,
+            }),
+            start: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let workers = (0..n_workers)
+            .map(|w| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("warpsci-shard-{}", w + 1))
+                    .spawn(move || worker_loop(&shared, w + 1))
+                    .expect("spawn shard worker")
+            })
+            .collect();
+        WorkerPool { shared, workers }
+    }
+
+    /// Worker threads owned by the pool (`shards - 1`).
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run one round: `job(i)` for every shard index `i` in
+    /// `0..=n_workers`, with `job(0)` executed on the calling thread in
+    /// parallel with the workers.  Returns only after every worker has
+    /// finished, so `job` may (unsafely) reference buffers borrowed for
+    /// the duration of the call.
+    pub fn run<F>(&self, job: F)
+    where
+        F: Fn(usize) + Send + Sync + 'static,
+    {
+        if self.workers.is_empty() {
+            job(0);
+            return;
+        }
+        let job: Job = Arc::new(job);
+        {
+            let mut ctrl = self.shared.ctrl.lock().unwrap();
+            ctrl.epoch += 1;
+            ctrl.remaining = self.workers.len();
+            ctrl.job = Some(Arc::clone(&job));
+            self.shared.start.notify_all();
+        }
+        // the caller's own shard-0 work must not unwind past the
+        // barrier: the workers are still writing through the round's
+        // raw pointers into caller-borrowed buffers, so a premature
+        // return (normal or panicking) would be a use-after-free race —
+        // catch, ride out the barrier, then resume the unwind
+        let caller = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| job(0)));
+        let mut ctrl = self.shared.ctrl.lock().unwrap();
+        while ctrl.remaining > 0 {
+            ctrl = self.shared.done.wait(ctrl).unwrap();
+        }
+        // drop the round's closure (and any captured pointers) eagerly
+        ctrl.job = None;
+        let worker_panicked = std::mem::take(&mut ctrl.panicked);
+        drop(ctrl);
+        if let Err(payload) = caller {
+            std::panic::resume_unwind(payload);
+        }
+        if worker_panicked {
+            panic!("shard worker panicked during pool round");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut ctrl = self.shared.ctrl.lock().unwrap();
+            ctrl.shutdown = true;
+            self.shared.start.notify_all();
+        }
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, index: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut ctrl = shared.ctrl.lock().unwrap();
+            loop {
+                if ctrl.shutdown {
+                    return;
+                }
+                if ctrl.epoch != seen {
+                    seen = ctrl.epoch;
+                    break Arc::clone(ctrl.job.as_ref().expect("round job"));
+                }
+                ctrl = shared.start.wait(ctrl).unwrap();
+            }
+        };
+        // a panicking job must still check in at the barrier — otherwise
+        // the coordinator waits on `remaining` forever; the panic is
+        // recorded and re-raised by `run` instead, and this worker stays
+        // alive for later rounds
+        let outcome = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| job(index)));
+        let mut ctrl = shared.ctrl.lock().unwrap();
+        if outcome.is_err() {
+            ctrl.panicked = true;
+        }
+        ctrl.remaining -= 1;
+        if ctrl.remaining == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// `Send + Sync` wrapper for a raw mutable pointer captured by a round
+/// job.  Safety contract: each shard index touches only its own disjoint
+/// region, and [`WorkerPool::run`] keeps the allocation alive by not
+/// returning until the round is over.
+pub(crate) struct SendPtr<T: ?Sized>(pub *mut T);
+
+// manual impls: a derive would (wrongly) require `T: Copy`, which the
+// unsized `dyn BatchEnv` payload can never satisfy
+impl<T: ?Sized> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T: ?Sized> Copy for SendPtr<T> {}
+unsafe impl<T: ?Sized> Send for SendPtr<T> {}
+unsafe impl<T: ?Sized> Sync for SendPtr<T> {}
+
+/// Read-only counterpart of [`SendPtr`].
+pub(crate) struct SendConstPtr<T: ?Sized>(pub *const T);
+
+impl<T: ?Sized> Clone for SendConstPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T: ?Sized> Copy for SendConstPtr<T> {}
+unsafe impl<T: ?Sized> Send for SendConstPtr<T> {}
+unsafe impl<T: ?Sized> Sync for SendConstPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn every_shard_index_runs_exactly_once_per_round() {
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.n_workers(), 3);
+        let hits = Arc::new([
+            AtomicUsize::new(0),
+            AtomicUsize::new(0),
+            AtomicUsize::new(0),
+            AtomicUsize::new(0),
+        ]);
+        for round in 1..=5usize {
+            let h = Arc::clone(&hits);
+            pool.run(move |i| {
+                h[i].fetch_add(1, Ordering::SeqCst);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), round, "shard {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_inline() {
+        let pool = WorkerPool::new(0);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = Arc::clone(&hits);
+        pool.run(move |i| {
+            assert_eq!(i, 0);
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn drop_joins_workers_and_releases_the_job() {
+        let sentinel = Arc::new(());
+        let pool = WorkerPool::new(2);
+        let s = Arc::clone(&sentinel);
+        pool.run(move |_| {
+            let _ = &s;
+        });
+        drop(pool);
+        // both the stored job and every worker-held clone are gone
+        assert_eq!(Arc::strong_count(&sentinel), 1);
+    }
+
+    #[test]
+    fn worker_panic_propagates_at_the_barrier_without_deadlock() {
+        let pool = WorkerPool::new(2);
+        let outcome = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                pool.run(|i| {
+                    assert_ne!(i, 1, "injected shard failure");
+                });
+            }));
+        assert!(outcome.is_err(), "worker panic must re-raise in run()");
+        // the pool survives the failed round and runs later rounds
+        let n = Arc::new(AtomicUsize::new(0));
+        let m = Arc::clone(&n);
+        pool.run(move |_| {
+            m.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(n.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn caller_shard_panic_still_waits_out_the_round() {
+        let pool = WorkerPool::new(2);
+        let witness = Arc::new(AtomicUsize::new(0));
+        let w = Arc::clone(&witness);
+        let outcome = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                pool.run(move |i| {
+                    assert_ne!(i, 0, "injected caller-shard failure");
+                    std::thread::sleep(
+                        std::time::Duration::from_millis(20));
+                    w.fetch_add(1, Ordering::SeqCst);
+                });
+            }));
+        assert!(outcome.is_err(), "caller panic must propagate");
+        // run() rode out the barrier: both (slower) workers finished
+        // before the unwind escaped
+        assert_eq!(witness.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn repeated_create_drop_does_not_hang() {
+        for _ in 0..20 {
+            let pool = WorkerPool::new(4);
+            let n = Arc::new(AtomicUsize::new(0));
+            let m = Arc::clone(&n);
+            pool.run(move |_| {
+                m.fetch_add(1, Ordering::SeqCst);
+            });
+            assert_eq!(n.load(Ordering::SeqCst), 5);
+        }
+    }
+}

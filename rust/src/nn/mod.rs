@@ -8,7 +8,7 @@ pub mod adam;
 pub mod mlp;
 
 pub use adam::Adam;
-pub use mlp::{Mlp, MlpGrads};
+pub use mlp::{Mlp, MlpGrads, SampleScratch};
 
 /// Reverse-time n-step returns over a `[step][env][agent]` batch.
 ///

@@ -2,12 +2,16 @@
 //!
 //! 1. sharded stepping is **bit-identical for any thread count** at a
 //!    fixed seed (per-lane RNG streams, lane-local math);
-//! 2. the SoA vector kernels agree step-for-step with the scalar
+//! 2. the fused in-worker roll-out (inference + per-lane sampling +
+//!    stepping + trajectory capture) upholds the same bit-identity,
+//!    including the recorded trajectories and drained episode stats;
+//! 3. the SoA vector kernels agree step-for-step with the scalar
 //!    `CpuEnv` implementations (same RNG stream ⇒ same resets ⇒ same
 //!    trajectories, bitwise).
 
-use warpsci::engine::BatchEngine;
+use warpsci::engine::{BatchEngine, TrajectorySlices};
 use warpsci::envs::make_cpu_env;
+use warpsci::nn::Mlp;
 use warpsci::util::Pcg64;
 
 const ENVS: [&str; 6] = ["cartpole", "acrobot", "pendulum", "covid_econ",
@@ -46,6 +50,60 @@ fn sharded_stepping_is_bit_identical_across_thread_counts() {
             assert_eq!(reference, got,
                        "{name}: {threads}-thread run diverged from \
                         single-thread run");
+        }
+    }
+}
+
+/// Run `rounds` fused roll-outs of length `t`; return the bit patterns
+/// of every recorded trajectory element, the drained episode stats and
+/// the final state.
+fn run_fused(name: &str, n_envs: usize, threads: usize, seed: u64,
+             t: usize, rounds: usize) -> Vec<u32> {
+    let mut eng = BatchEngine::by_name(name, n_envs, threads, seed)
+        .unwrap();
+    let mut prng = Pcg64::with_stream(seed, u64::MAX - 1);
+    let policy = Mlp::init(eng.obs_dim(), 24, eng.n_actions(), &mut prng);
+    let rows = n_envs * eng.n_agents();
+    let od = eng.obs_dim();
+    let mut obs = vec![0f32; t * rows * od];
+    let mut actions = vec![0u32; t * rows];
+    let mut rewards = vec![0f32; t * rows];
+    let mut dones = vec![0f32; t * n_envs];
+    let (mut rets, mut lens) = (Vec::new(), Vec::new());
+    let mut bits = Vec::new();
+    for _ in 0..rounds {
+        eng.fused_rollout(&policy, t, Some(TrajectorySlices {
+            obs: &mut obs,
+            actions: &mut actions,
+            rewards: &mut rewards,
+            dones: &mut dones,
+        }));
+        bits.extend(obs.iter().map(|x| x.to_bits()));
+        bits.extend(actions.iter().copied());
+        bits.extend(rewards.iter().map(|x| x.to_bits()));
+        bits.extend(dones.iter().map(|x| x.to_bits()));
+        bits.extend(eng.obs.iter().map(|x| x.to_bits())); // bootstrap
+        rets.clear();
+        lens.clear();
+        eng.drain_finished(&mut rets, &mut lens);
+        bits.extend(rets.iter().map(|x| x.to_bits()));
+        bits.extend(lens.iter().map(|x| x.to_bits()));
+    }
+    bits.extend(eng.snapshot_state().iter().map(|x| x.to_bits()));
+    bits
+}
+
+#[test]
+fn fused_rollout_is_bit_identical_across_thread_counts() {
+    for name in ENVS {
+        let n_envs = if name == "covid_econ" { 5 } else { 12 };
+        let rounds = if name == "covid_econ" { 3 } else { 6 };
+        let reference = run_fused(name, n_envs, 1, 11, 7, rounds);
+        for threads in [2, 3, 4] {
+            let got = run_fused(name, n_envs, threads, 11, 7, rounds);
+            assert_eq!(reference, got,
+                       "{name}: fused {threads}-thread roll-out diverged \
+                        from single-thread run");
         }
     }
 }

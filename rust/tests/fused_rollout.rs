@@ -1,0 +1,114 @@
+//! End-to-end contracts of the fused-pool backend:
+//!
+//! 1. `CpuEngine::train_iter` is **bit-identical for any thread count**
+//!    at a fixed seed — policies *and* metrics — because action sampling
+//!    draws from per-lane streams, trajectory capture writes global
+//!    `[step][env][agent]` offsets, and completed-episode telemetry is
+//!    drained in global `(tick, lane)` order;
+//! 2. the engine's persistent worker pool shuts down cleanly: repeated
+//!    `init()` reseeding rebuilds the pool every time without hanging or
+//!    leaking threads.
+
+use warpsci::coordinator::{Backend, CpuEngine, CpuEngineConfig};
+use warpsci::nn::Mlp;
+
+fn policy_bits(m: &Mlp) -> Vec<u32> {
+    [&m.w1, &m.b1, &m.w2, &m.b2, &m.wp, &m.bp, &m.wv, &m.bv]
+        .iter()
+        .flat_map(|v| v.iter().map(|x| x.to_bits()))
+        .collect()
+}
+
+/// Train `iters` iterations and fingerprint every bit of observable
+/// outcome: the full parameter vector plus the full metrics row.
+fn train_fingerprint(env: &str, n_envs: usize, t: usize, threads: usize,
+                     iters: usize) -> (Vec<u32>, Vec<u64>, f64) {
+    let mut eng = CpuEngine::new(CpuEngineConfig {
+        threads,
+        hidden: 24,
+        seed: 7,
+        ..CpuEngineConfig::new(env, n_envs, t)
+    })
+    .unwrap();
+    for _ in 0..iters {
+        eng.train_iter().unwrap();
+    }
+    let row = eng.metrics_row(0.0).unwrap();
+    let metrics: Vec<u64> = [
+        row.iter, row.env_steps, row.ep_return_ema, row.ep_len_ema,
+        row.episodes_done, row.pi_loss, row.v_loss, row.entropy,
+        row.grad_norm, row.reward_mean, row.value_mean,
+    ]
+    .iter()
+    .map(|x| x.to_bits())
+    .collect();
+    (policy_bits(eng.policy()), metrics, row.episodes_done)
+}
+
+#[test]
+fn covid_train_iter_is_bit_identical_across_thread_counts() {
+    // 4 iterations of t=13 hit the 52-week COVID horizon, so the
+    // order-sensitive episode EMAs are exercised, not just the policy
+    let reference = train_fingerprint("covid_econ", 5, 13, 1, 4);
+    assert!(reference.2 > 0.0, "episodes must finish to test the EMAs");
+    for threads in [2, 3, 5] {
+        let got = train_fingerprint("covid_econ", 5, 13, threads, 4);
+        assert_eq!(got.0, reference.0,
+                   "covid_econ policy diverged at {threads} threads");
+        assert_eq!(got.1, reference.1,
+                   "covid_econ metrics diverged at {threads} threads");
+    }
+}
+
+#[test]
+fn catalysis_train_iter_is_bit_identical_across_thread_counts() {
+    let reference = train_fingerprint("catalysis_lh", 12, 16, 1, 3);
+    for threads in [2, 3, 4] {
+        let got = train_fingerprint("catalysis_lh", 12, 16, threads, 3);
+        assert_eq!(got.0, reference.0,
+                   "catalysis_lh policy diverged at {threads} threads");
+        assert_eq!(got.1, reference.1,
+                   "catalysis_lh metrics diverged at {threads} threads");
+    }
+}
+
+#[cfg(target_os = "linux")]
+fn os_thread_count() -> usize {
+    std::fs::read_to_string("/proc/self/status")
+        .unwrap()
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .unwrap()
+        .trim()
+        .parse()
+        .unwrap()
+}
+
+#[test]
+fn repeated_init_reseeding_never_hangs_or_leaks_pool_threads() {
+    #[cfg(target_os = "linux")]
+    let before = os_thread_count();
+    let mut eng = CpuEngine::new(CpuEngineConfig {
+        threads: 4,
+        hidden: 16,
+        ..CpuEngineConfig::new("cartpole", 8, 4)
+    })
+    .unwrap();
+    for seed in 0..20u64 {
+        // init() rebuilds the whole backend: the old engine's pool must
+        // join its workers on drop, the new one spawns a fresh pool
+        eng.init(seed).unwrap();
+        eng.train_iter().unwrap();
+        assert_eq!(eng.metrics_row(0.0).unwrap().iter, 1.0);
+    }
+    drop(eng);
+    #[cfg(target_os = "linux")]
+    {
+        // 20 rebuilt pools x 3 workers each would show ~60 lingering
+        // threads if Drop failed to join; the generous slack tolerates
+        // sibling tests running concurrently in this binary
+        let after = os_thread_count();
+        assert!(after <= before + 16,
+                "pool threads leaked: {before} -> {after}");
+    }
+}
