@@ -8,6 +8,7 @@
 //! energy profile.
 //!
 //! Run:  cargo run --release --example catalysis_paths
+//! Env:  WARPSCI_EXAMPLE_ITERS=N   shorten the training runs
 
 use anyhow::Result;
 
@@ -18,13 +19,13 @@ use warpsci::envs::catalysis::{mb_energy, Catalysis, Mechanism,
 use warpsci::envs::CpuEnv;
 use warpsci::nn::mlp::Cache;
 use warpsci::nn::Mlp;
-use warpsci::runtime::{Artifact, Device, GraphSet};
+use warpsci::runtime::{CpuDevice, GraphSet};
 use warpsci::store::Checkpoint;
 use warpsci::util::Pcg64;
 
-fn train(device: &Device, mech: &str, iters: usize) -> Result<Checkpoint> {
-    let tag = format!("catalysis_{mech}_n100_t32");
-    let artifact = Artifact::load(&warpsci::artifacts_dir(), &tag)?;
+fn train(device: &CpuDevice, mech: &str, iters: usize)
+         -> Result<Checkpoint> {
+    let artifact = device.artifact(&format!("catalysis_{mech}"), 100, 32)?;
     let graphs = GraphSet::compile(device, artifact)?;
     let cfg = RunConfig {
         env: format!("catalysis_{mech}"),
@@ -116,12 +117,13 @@ fn replay(mech: Mechanism, ck: &Checkpoint) -> Result<()> {
 }
 
 fn main() -> Result<()> {
-    let device = Device::cpu()?;
+    let iters = warpsci::util::env_usize("WARPSCI_EXAMPLE_ITERS", 120);
+    let device = CpuDevice::new();
     std::fs::create_dir_all("results").ok();
     println!("training Langmuir-Hinshelwood (co-adsorbed reactants):");
-    let lh = train(&device, "lh", 120)?;
+    let lh = train(&device, "lh", iters)?;
     println!("training Eley-Rideal (gas-phase approach), same encoding:");
-    let er = train(&device, "er", 120)?;
+    let er = train(&device, "er", iters)?;
     println!("\ndiscovered reaction paths (greedy policy replay):");
     println!("Langmuir-Hinshelwood:");
     replay(Mechanism::Lh, &lh)?;

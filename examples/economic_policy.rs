@@ -6,18 +6,20 @@
 //! and prints the learned policy's health/economy trade-off trajectory.
 //!
 //! Run:  cargo run --release --example economic_policy
+//! Env:  WARPSCI_EXAMPLE_ITERS=N   shorten the run
 
 use anyhow::Result;
 
 use warpsci::config::RunConfig;
 use warpsci::coordinator::Trainer;
-use warpsci::runtime::{Artifact, Device, GraphSet};
+use warpsci::runtime::{CpuDevice, GraphSet};
 use warpsci::util::csv::human;
+use warpsci::util::env_usize;
 
 fn main() -> Result<()> {
-    let root = warpsci::artifacts_dir();
-    let artifact = Artifact::load(&root, "covid_econ_n60_t13")?;
-    let device = Device::cpu()?;
+    let iters = env_usize("WARPSCI_EXAMPLE_ITERS", 200);
+    let device = CpuDevice::new();
+    let artifact = device.artifact("covid_econ", 60, 13)?;
     let man = artifact.manifest.clone();
     println!("two-level economy: {} envs x {} agents, {}-week horizon",
              man.n_envs, man.agents_per_env, man.max_steps);
@@ -27,7 +29,7 @@ fn main() -> Result<()> {
         env: "covid_econ".into(),
         n_envs: 60,
         t: 13,
-        iters: 200,
+        iters,
         seed: 7,
         metrics_every: 10,
         log_csv: Some("results/economic_policy.csv".into()),
@@ -38,7 +40,7 @@ fn main() -> Result<()> {
     println!("\n{:>6} {:>16} {:>12} {:>10} {:>12}", "iter",
              "federal return", "episodes", "entropy", "agent steps/s");
     let t0 = std::time::Instant::now();
-    for i in 0..200 {
+    for i in 0..iters {
         trainer.step_train()?;
         if (i + 1) % 10 == 0 {
             let row = trainer.record_metrics()?;

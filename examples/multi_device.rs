@@ -3,25 +3,28 @@
 //! Runs 4 independent device-resident stores with distinct seeds and
 //! periodically tree-averages their policy parameters via the on-device
 //! `avg2` graph — the orchestration path a multi-GPU WarpSci deployment
-//! runs, demonstrated on the CPU PJRT device.
+//! runs, demonstrated on the in-process CPU device (a `pjrt` build runs
+//! the identical code over PJRT executables).
 //!
 //! Run:  cargo run --release --example multi_device
+//! Env:  WARPSCI_EXAMPLE_ITERS=N   shorten the run (CI smoke uses 8)
 
 use anyhow::Result;
 
 use warpsci::config::RunConfig;
 use warpsci::coordinator::MultiShardTrainer;
-use warpsci::runtime::{Artifact, Device};
+use warpsci::runtime::CpuDevice;
+use warpsci::util::env_usize;
 
 fn main() -> Result<()> {
-    let root = warpsci::artifacts_dir();
-    let artifact = Artifact::load(&root, "cartpole_n64_t16")?;
-    let device = Device::cpu()?;
+    let iters = env_usize("WARPSCI_EXAMPLE_ITERS", 120);
+    let device = CpuDevice::new();
+    let artifact = device.artifact("cartpole", 64, 16)?;
     let cfg = RunConfig {
         env: "cartpole".into(),
         n_envs: 64,
         t: 16,
-        iters: 120,
+        iters,
         seed: 0,
         shards: 4,
         sync_every: 4,
@@ -31,9 +34,10 @@ fn main() -> Result<()> {
               iters", cfg.shards, cfg.n_envs, cfg.sync_every);
     let mut ms = MultiShardTrainer::new(&device, &artifact, cfg.clone())?;
     let t0 = std::time::Instant::now();
+    let report_every = (iters / 6).max(1);
     for i in 0..cfg.iters {
         ms.step(i)?;
-        if (i + 1) % 20 == 0 {
+        if (i + 1) % report_every == 0 {
             println!("iter {:>4}: mean shard return {:>8.2} ({} syncs)",
                      i + 1, ms.mean_return()?, ms.sync_count);
         }

@@ -1,25 +1,28 @@
 //! Quickstart: train CartPole-v1 with 1024 concurrent environments.
 //!
-//! This is the end-to-end driver for the whole stack: the L1 Pallas
-//! kernels and L2 JAX graphs were AOT-lowered by `make artifacts`; here
-//! the rust coordinator chains the fused roll-out+train executable over
-//! the device-resident unified store and logs the reward curve.
+//! This is the end-to-end driver for the whole stack: the coordinator
+//! chains the fused roll-out+train graph over the device-resident
+//! unified store and logs the reward curve.  It runs on the
+//! always-available pure-Rust CPU device — the artifact is synthesized
+//! in memory, no `make artifacts` needed (a `pjrt` build swaps in real
+//! AOT-lowered XLA executables through the same `DeviceBackend` trait).
 //!
 //! Run:  cargo run --release --example quickstart
-//! (requires `make artifacts` first)
+//! Env:  WARPSCI_EXAMPLE_ITERS=N   shorten the run (CI smoke uses 2)
 
 use anyhow::Result;
 
 use warpsci::config::RunConfig;
 use warpsci::coordinator::Trainer;
-use warpsci::runtime::{Artifact, Device, GraphSet};
+use warpsci::runtime::{CpuDevice, DeviceBackend, GraphSet};
 use warpsci::util::csv::human;
+use warpsci::util::env_usize;
 
 fn main() -> Result<()> {
-    let root = warpsci::artifacts_dir();
-    let artifact = Artifact::load(&root, "cartpole_n1024_t32")?;
-    let device = Device::cpu()?;
+    let iters = env_usize("WARPSCI_EXAMPLE_ITERS", 150);
+    let device = CpuDevice::new();
     println!("platform: {}", device.platform());
+    let artifact = device.artifact("cartpole", 1024, 32)?;
     let graphs = GraphSet::compile(&device, artifact)?;
     println!("compiled {} in {:.2?}", graphs.artifact.manifest.tag,
              graphs.compile_time);
@@ -28,7 +31,7 @@ fn main() -> Result<()> {
         env: "cartpole".into(),
         n_envs: 1024,
         t: 32,
-        iters: 150,
+        iters,
         seed: 0,
         metrics_every: 5,
         target_return: Some(400.0),
@@ -40,7 +43,7 @@ fn main() -> Result<()> {
     println!("\n{:>6} {:>12} {:>10} {:>10} {:>12}", "iter", "return",
              "ep_len", "entropy", "steps/s");
     let t0 = std::time::Instant::now();
-    for i in 0..150 {
+    for i in 0..iters {
         trainer.step_train()?;
         if (i + 1) % 5 == 0 {
             let row = trainer.record_metrics()?;

@@ -8,8 +8,10 @@
 //! * [`crate::coordinator::CpuEngine`] — the default: the SoA batch engine
 //!   (`crate::engine`) plus the from-scratch A2C trainer, all in-process
 //!   shared memory, zero serialization.
-//! * `crate::coordinator::Trainer` (cargo feature `pjrt`) — AOT XLA
-//!   executables chained over a device-resident PJRT buffer.
+//! * [`crate::coordinator::Trainer`] — compiled artifact graphs chained
+//!   over a device-resident buffer, generic over
+//!   [`crate::runtime::DeviceBackend`] (pure-Rust CPU device by default,
+//!   PJRT with the `pjrt` cargo feature).
 
 use anyhow::Result;
 
@@ -34,7 +36,7 @@ pub struct RunStats {
 
 /// One execution backend: N replicas + policy + optimizer state.
 pub trait Backend {
-    /// Human-readable backend id ("cpu-engine", "pjrt").
+    /// Human-readable backend id ("cpu-engine", "cpu", "pjrt").
     fn backend_name(&self) -> &'static str;
     /// Environment registry name.
     fn env_name(&self) -> &str;

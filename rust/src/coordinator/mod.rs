@@ -4,18 +4,21 @@
 //! metric telemetry, convergence tracking, and data-parallel multi-shard
 //! orchestration (the paper's multi-GPU axis).
 //!
-//! The loop itself is abstracted behind [`Backend`] with two
-//! implementations: [`CpuEngine`] (default — the SoA batch engine) and
-//! `Trainer`/`MultiShardTrainer` (PJRT device execution, behind the
-//! `pjrt` cargo feature while the `xla` binding is unavailable offline).
+//! The loop itself is abstracted twice, at different altitudes:
+//!
+//! * [`Backend`] — the whole-iteration surface (`train_iter` /
+//!   `rollout_iter` / `metrics_row`) with two implementations:
+//!   [`CpuEngine`] (the SoA batch engine fast path) and [`Trainer`].
+//! * [`crate::runtime::DeviceBackend`] — the compiled-graph surface
+//!   [`Trainer`] and [`MultiShardTrainer`] are generic over: the
+//!   pure-Rust [`crate::runtime::CpuDevice`] by default, real PJRT
+//!   execution with the `pjrt` cargo feature.
 
 pub mod backend;
 pub mod convergence;
 pub mod cpu_engine;
 pub mod metrics;
-#[cfg(feature = "pjrt")]
 pub mod multi_device;
-#[cfg(feature = "pjrt")]
 pub mod trainer;
 
 pub use backend::{measure_rollout_throughput, measure_train_throughput,
@@ -23,7 +26,5 @@ pub use backend::{measure_rollout_throughput, measure_train_throughput,
 pub use convergence::ConvergenceTracker;
 pub use cpu_engine::{CpuEngine, CpuEngineConfig};
 pub use metrics::{MetricRow, MetricsLog};
-#[cfg(feature = "pjrt")]
 pub use multi_device::MultiShardTrainer;
-#[cfg(feature = "pjrt")]
 pub use trainer::{Trainer, TransferMode};

@@ -6,30 +6,40 @@
 //! a tree of `avg2` executions and broadcast back via `set_params` — the
 //! collective stays on device end to end.
 //!
-//! On this CPU testbed all shards share one PJRT device, so speedup is not
-//! expected — the *orchestration code path* (shard init with distinct
-//! seeds, tree averaging, broadcast) is what the integration tests verify,
-//! and it is identical to what a real multi-GPU host would run.
+//! The orchestrator is generic over [`DeviceBackend`]: on the default
+//! build all shards share the in-process [`crate::runtime::CpuDevice`],
+//! so speedup is not expected — the *orchestration code path* (shard init
+//! with distinct seeds, tree averaging, broadcast) is what the
+//! integration tests verify, and it is identical to what a real
+//! multi-GPU host would run.
 
 use anyhow::{Context, Result};
 
 use crate::config::RunConfig;
-use crate::runtime::{Artifact, Device, GraphSet};
+use crate::runtime::{Artifact, DeviceBackend, GraphSet};
 
 use super::metrics::MetricRow;
 
 /// Orchestrates `shards` independent stores with periodic param averaging.
-pub struct MultiShardTrainer {
-    pub graphs: Vec<GraphSet>,
+pub struct MultiShardTrainer<B: DeviceBackend> {
+    pub graphs: Vec<GraphSet<B>>,
     pub cfg: RunConfig,
-    states: Vec<xla::PjRtBuffer>,
+    states: Vec<B::Buffer>,
     pub sync_count: usize,
 }
 
-impl MultiShardTrainer {
-    pub fn new(device: &Device, artifact: &Artifact, cfg: RunConfig)
-               -> Result<MultiShardTrainer> {
+impl<B: DeviceBackend> MultiShardTrainer<B> {
+    pub fn new(device: &B, artifact: &Artifact, cfg: RunConfig)
+               -> Result<MultiShardTrainer<B>> {
         anyhow::ensure!(cfg.shards >= 1, "need at least one shard");
+        // the avg2 tree reduce weights every shard equally only when the
+        // leaf count halves evenly at every level
+        anyhow::ensure!(
+            cfg.shards.is_power_of_two(),
+            "shards must be a power of two (got {}): pairwise avg2 \
+             tree-averaging would weight shards unequally otherwise",
+            cfg.shards
+        );
         // each shard gets its own compiled set (mirrors per-device
         // executables on a real multi-GPU host)
         let mut graphs = Vec::with_capacity(cfg.shards);
@@ -58,17 +68,15 @@ impl MultiShardTrainer {
     pub fn sync_params(&mut self) -> Result<()> {
         let g0 = &self.graphs[0];
         // extract
-        let mut params: Vec<xla::PjRtBuffer> = self
+        let mut params: Vec<B::Buffer> = self
             .states
             .iter()
             .enumerate()
             .map(|(i, s)| self.graphs[i].get_params(s))
             .collect::<Result<_>>()?;
         // tree reduce: pairwise averaging keeps every intermediate the
-        // true mean because shard counts are padded to the nearest pair
-        // (for odd counts the leftover participates in the next level,
-        // weighted correctly by construction of repeated halving on equal
-        // subtrees; we restrict to power-of-two shard counts elsewhere)
+        // true mean because the constructor restricts shard counts to
+        // powers of two, so every level halves evenly
         while params.len() > 1 {
             let mut next = Vec::with_capacity(params.len().div_ceil(2));
             let mut it = params.into_iter();
@@ -112,7 +120,7 @@ impl MultiShardTrainer {
             .enumerate()
             .map(|(i, s)| {
                 let p = self.graphs[i].get_params(s)?;
-                crate::runtime::executor::buffer_to_host(&p)
+                self.graphs[i].device.to_host(&p)
             })
             .collect()
     }

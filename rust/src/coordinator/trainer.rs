@@ -1,9 +1,12 @@
-//! The training event loop: chained `execute_b` over the resident store.
+//! The training event loop: chained `run_buf` over the resident store.
 //!
 //! This is the paper's architecture in ~one page: after `init`, the whole
 //! RL workflow is a sequence of device-side `train_iter` executions over
 //! one flat buffer; the host only ever sees `M ≈ 12` floats of metrics
-//! every `metrics_every` iterations.
+//! every `metrics_every` iterations.  The loop is generic over
+//! [`DeviceBackend`], so the same code drives the pure-Rust
+//! [`crate::runtime::CpuDevice`] (default) and the PJRT device (`pjrt`
+//! feature).
 //!
 //! [`TransferMode`] exposes the ablation used for the Fig 3 "data transfer"
 //! bar: `HostRoundTrip` deliberately downloads + re-uploads the full store
@@ -16,7 +19,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::config::RunConfig;
-use crate::runtime::GraphSet;
+use crate::runtime::{DeviceBackend, GraphSet};
 use crate::store::Checkpoint;
 use crate::util::Timer;
 
@@ -34,20 +37,20 @@ pub enum TransferMode {
     HostRoundTrip,
 }
 
-/// Single-shard trainer.
-pub struct Trainer {
-    pub graphs: GraphSet,
+/// Single-shard trainer over one compiled graph set.
+pub struct Trainer<B: DeviceBackend> {
+    pub graphs: GraphSet<B>,
     pub cfg: RunConfig,
     pub log: MetricsLog,
     pub timer: Timer,
     pub mode: TransferMode,
-    state: Option<xla::PjRtBuffer>,
+    state: Option<B::Buffer>,
     tracker: ConvergenceTracker,
     started: Instant,
 }
 
-impl Trainer {
-    pub fn new(graphs: GraphSet, cfg: RunConfig) -> Result<Trainer> {
+impl<B: DeviceBackend> Trainer<B> {
+    pub fn new(graphs: GraphSet<B>, cfg: RunConfig) -> Result<Trainer<B>> {
         let log = MetricsLog::new(
             cfg.log_csv.as_deref().map(Path::new))?;
         let tracker = ConvergenceTracker::new(cfg.target_return, 8, 1e-3);
@@ -77,7 +80,7 @@ impl Trainer {
         Ok(())
     }
 
-    fn state(&self) -> Result<&xla::PjRtBuffer> {
+    fn state(&self) -> Result<&B::Buffer> {
         self.state.as_ref().context("trainer not initialized — call init()")
     }
 
@@ -95,7 +98,7 @@ impl Trainer {
         let state = self.state.take().context("not initialized")?;
         let next = {
             let graphs = &self.graphs;
-            let run = |s: &xla::PjRtBuffer| {
+            let run = |s: &B::Buffer| {
                 if train { graphs.train_iter(s) } else { graphs.rollout(s) }
             };
             match self.mode {
@@ -215,7 +218,7 @@ impl Trainer {
             let state = self.state()?;
             graphs.get_params(state)?
         };
-        let params = crate::runtime::executor::buffer_to_host(&params_buf)?;
+        let params = self.graphs.device.to_host(&params_buf)?;
         let iter = self.log.last().map(|r| r.iter as u64).unwrap_or(0);
         Checkpoint {
             tag: self.graphs.artifact.manifest.tag.clone(),
@@ -237,20 +240,16 @@ impl Trainer {
         if self.state.is_none() {
             self.init()?;
         }
-        let pbuf = self
-            .graphs
-            .device
-            .client()
-            .buffer_from_host_buffer(&ck.params, &[ck.params.len()], None)?;
+        let pbuf = self.graphs.device.upload(&ck.params)?;
         let state = self.state.take().unwrap();
         self.state = Some(self.graphs.set_params(&state, &pbuf)?);
         Ok(())
     }
 }
 
-impl Backend for Trainer {
+impl<B: DeviceBackend> Backend for Trainer<B> {
     fn backend_name(&self) -> &'static str {
-        "pjrt"
+        self.graphs.device.backend_id()
     }
 
     fn env_name(&self) -> &str {

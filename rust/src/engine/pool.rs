@@ -195,7 +195,7 @@ impl<T: ?Sized> Copy for SendPtr<T> {}
 unsafe impl<T: ?Sized> Send for SendPtr<T> {}
 unsafe impl<T: ?Sized> Sync for SendPtr<T> {}
 
-/// Read-only counterpart of [`SendPtr`].
+/// Read-only counterpart of `SendPtr`.
 pub(crate) struct SendConstPtr<T: ?Sized>(pub *const T);
 
 impl<T: ?Sized> Clone for SendConstPtr<T> {

@@ -2,7 +2,7 @@
 //!
 //! Provides both the scalar [`Acrobot`] ([`CpuEnv`]) and the SoA vector
 //! kernel [`BatchAcrobot`] (`crate::engine::BatchEnv`); both share
-//! [`dsdt`] so the physics cannot drift apart.
+//! `dsdt` so the physics cannot drift apart.
 
 use std::f32::consts::PI;
 

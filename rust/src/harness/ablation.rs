@@ -3,32 +3,50 @@
 //! * **transfer** — the core claim isolated: the *same* compiled graph run
 //!   with (a) the resident store chained on device vs (b) a full host
 //!   round-trip per iteration.  The delta is exactly the cost the paper's
-//!   architecture eliminates.
+//!   architecture eliminates.  Runs on the always-available CPU device
+//!   (synthesized artifact), so it is CI evidence under default features;
+//!   the code path is identical on a real PJRT device.
 //! * **kernel** — fused Pallas kernels vs the pure-jnp reference lowering
-//!   (`*_jnp` artifacts), at equal semantics.
+//!   (`*_jnp` artifacts), at equal semantics.  Needs real AOT artifacts,
+//!   so it stays behind the `pjrt` feature.
 //! * **estimator** — GAE(λ) vs n-step returns (`*_nstep` artifacts):
-//!   convergence quality per wall-clock.
+//!   convergence quality per wall-clock.  Also artifact-bound / `pjrt`.
 
 use anyhow::Result;
 
-use crate::coordinator::TransferMode;
-use crate::runtime::Device;
+use crate::coordinator::{Trainer, TransferMode};
+use crate::runtime::{CpuDevice, DeviceBackend, GraphSet};
 use crate::util::csv::{human, CsvWriter};
 
-use super::{trainer_for, HarnessOpts};
+use super::{parse_tag, HarnessOpts};
 
 /// Resident vs host-round-trip execution of the same artifact.
+///
+/// Accepts a `{env}_n{N}_t{T}` tag and synthesizes the artifact on the
+/// CPU device — no `make artifacts` needed.
 pub fn ablation_transfer(opts: &HarnessOpts, tag: &str) -> Result<()> {
-    let device = Device::cpu()?;
+    let (env, n_envs, t) = parse_tag(tag)?;
+    let device = CpuDevice::new();
+    let artifact = device.artifact(&env, n_envs, t)?;
     let mut csv = CsvWriter::create(
         &opts.out_dir.join("ablation_transfer.csv"),
         &["mode", "steps_per_sec", "compute_secs", "transfer_secs"],
     )?;
     println!("== ablation: device-resident store vs host round-trip \
-              ({tag}) ==");
+              ({tag}, {} backend) ==", device.backend_id());
     for (mode, label) in [(TransferMode::Resident, "resident"),
                           (TransferMode::HostRoundTrip, "host_roundtrip")] {
-        let mut tr = trainer_for(&device, opts, tag, 0, opts.iters)?;
+        let graphs = GraphSet::compile(&device, artifact.clone())?;
+        let cfg = crate::config::RunConfig {
+            env: env.clone(),
+            n_envs,
+            t,
+            iters: opts.iters,
+            seed: 0,
+            metrics_every: 1,
+            ..Default::default()
+        };
+        let mut tr = Trainer::new(graphs, cfg)?;
         tr.mode = mode;
         tr.init()?;
         tr.step_train()?;
@@ -56,7 +74,11 @@ pub fn ablation_transfer(opts: &HarnessOpts, tag: &str) -> Result<()> {
 }
 
 /// Pallas-kernel vs pure-jnp lowering of the same iteration.
+#[cfg(feature = "pjrt")]
 pub fn ablation_kernel(opts: &HarnessOpts, base_tag: &str) -> Result<()> {
+    use super::trainer_for;
+    use crate::runtime::Device;
+
     let device = Device::cpu()?;
     println!("== ablation: Pallas kernels vs pure-jnp lowering ==");
     let mut csv = CsvWriter::create(
@@ -76,7 +98,11 @@ pub fn ablation_kernel(opts: &HarnessOpts, base_tag: &str) -> Result<()> {
 }
 
 /// GAE vs n-step return estimation: final return at equal wall budget.
+#[cfg(feature = "pjrt")]
 pub fn ablation_estimator(opts: &HarnessOpts, base_tag: &str) -> Result<()> {
+    use super::trainer_for;
+    use crate::runtime::Device;
+
     let device = Device::cpu()?;
     println!("== ablation: GAE(lambda) vs n-step returns ({}s budget) ==",
              opts.budget_secs);

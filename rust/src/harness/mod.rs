@@ -11,7 +11,6 @@
 //! feature, [`make_backend`] prefers a compiled artifact when one matching
 //! `{env}_n{N}_t{T}` exists under the artifacts root.
 
-#[cfg(feature = "pjrt")]
 pub mod ablation;
 pub mod fig2;
 pub mod fig3;
@@ -20,7 +19,7 @@ pub mod headline;
 
 use std::path::PathBuf;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::coordinator::{Backend, CpuEngine, CpuEngineConfig};
 use crate::runtime::Artifact;
@@ -79,16 +78,23 @@ pub fn make_backend(opts: &HarnessOpts, env: &str, n_envs: usize, t: usize,
     Ok(Box::new(CpuEngine::new(cfg)?))
 }
 
-/// Load + compile an artifact tag into a ready trainer (pjrt builds).
-#[cfg(feature = "pjrt")]
-pub fn trainer_for(device: &crate::runtime::Device, opts: &HarnessOpts,
-                   tag: &str, seed: u64, iters: usize)
-                   -> Result<crate::coordinator::Trainer> {
+/// Load + compile a *disk* artifact tag into a ready trainer, on any
+/// device backend (the pjrt benches' entry point).
+pub fn trainer_for<B: crate::runtime::DeviceBackend>(
+    device: &B, opts: &HarnessOpts, tag: &str, seed: u64, iters: usize)
+    -> Result<crate::coordinator::Trainer<B>> {
+    let artifact = Artifact::load(&opts.artifacts_root, tag)?;
+    trainer_for_artifact(device, artifact, seed, iters)
+}
+
+/// Compile an already-located artifact into a ready trainer.
+pub fn trainer_for_artifact<B: crate::runtime::DeviceBackend>(
+    device: &B, artifact: Artifact, seed: u64, iters: usize)
+    -> Result<crate::coordinator::Trainer<B>> {
     use crate::config::RunConfig;
     use crate::coordinator::Trainer;
     use crate::runtime::GraphSet;
 
-    let artifact = Artifact::load(&opts.artifacts_root, tag)?;
     let n_envs = artifact.manifest.n_envs;
     let t = artifact.manifest.t;
     let env = artifact.manifest.env.clone();
@@ -103,6 +109,19 @@ pub fn trainer_for(device: &crate::runtime::Device, opts: &HarnessOpts,
         ..Default::default()
     };
     Trainer::new(graphs, cfg)
+}
+
+/// Parse a `{env}_n{N}_t{T}` artifact tag into its components (the CPU
+/// device synthesizes artifacts from these instead of loading HLO).
+pub fn parse_tag(tag: &str) -> Result<(String, usize, usize)> {
+    let parse = || -> Option<(String, usize, usize)> {
+        let (rest, t) = tag.rsplit_once("_t")?;
+        let (env, n) = rest.rsplit_once("_n")?;
+        Some((env.to_string(), n.parse().ok()?, t.parse().ok()?))
+    };
+    parse().with_context(|| {
+        format!("tag {tag:?} does not match {{env}}_n{{N}}_t{{T}}")
+    })
 }
 
 /// Available tags matching `{env}_n{N}_t{T}` for a given env, sorted by N.
@@ -146,6 +165,16 @@ mod tests {
         assert_eq!(tags, vec![(16, "cartpole_n16_t32".into()),
                               (64, "cartpole_n64_t32".into())]);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn parse_tag_roundtrips() {
+        assert_eq!(parse_tag("cartpole_n1024_t32").unwrap(),
+                   ("cartpole".to_string(), 1024, 32));
+        assert_eq!(parse_tag("catalysis_lh_n100_t32").unwrap(),
+                   ("catalysis_lh".to_string(), 100, 32));
+        assert!(parse_tag("cartpole").is_err());
+        assert!(parse_tag("cartpole_nx_t32").is_err());
     }
 
     #[test]

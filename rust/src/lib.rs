@@ -8,14 +8,18 @@
 //! concurrent replicas over one flat `f32` store" design
 //! (`coordinator::Backend`):
 //!
-//! * [`coordinator::CpuEngine`] (default) — the [`engine`] module's
-//!   structure-of-arrays batch environment engine: every replica's state
-//!   lives in flat per-field arrays, stepped in lockstep across shard
-//!   worker threads with a round barrier.  Zero serialization, zero
-//!   per-step virtual dispatch, runs everywhere.
-//! * `coordinator::Trainer` (behind the `pjrt` cargo feature) — AOT-lowered
-//!   XLA executables chained over a device-resident buffer via PJRT.  The
-//!   `xla` binding is not vendored offline, so this path is feature-gated.
+//! * [`coordinator::CpuEngine`] (default fast path) — the [`engine`]
+//!   module's structure-of-arrays batch environment engine: every
+//!   replica's state lives in flat per-field arrays, stepped in lockstep
+//!   across shard worker threads with a round barrier.  Zero
+//!   serialization, zero per-step virtual dispatch, runs everywhere.
+//! * [`coordinator::Trainer`] — the paper's compiled-graph architecture:
+//!   seven artifact graphs chained over one device-resident buffer,
+//!   generic over the [`runtime::DeviceBackend`] trait.  The pure-Rust
+//!   [`runtime::CpuDevice`] implements it everywhere (in-process graphs
+//!   over a flat `f32` store, bit-compatible with `CpuEngine` training);
+//!   the `pjrt` cargo feature adds real PJRT execution of AOT-lowered
+//!   XLA (type-checked offline against the `vendor/xla` stub).
 //!
 //! This crate owns everything around the hot loop: artifact loading, the
 //! trainer event loop, metrics, multi-shard data parallelism, the CPU

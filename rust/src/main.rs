@@ -2,8 +2,10 @@
 //!
 //! Subcommands:
 //!   train            train an environment from a TOML config or flags
-//!                    (default build: the SoA cpu-engine backend; with the
-//!                    `pjrt` feature: compiled AOT artifacts)
+//!                    (default build: the SoA cpu-engine backend, or the
+//!                    in-process CPU graph device for --shards /
+//!                    --checkpoint-dir; with the `pjrt` feature:
+//!                    compiled AOT artifacts)
 //!   bench <exp>      regenerate a paper table/figure (fig2a, fig2b, fig2c,
 //!                    fig3, fig3-scaling, fig4, headline, ablation-*)
 //!   list             list available artifact tags
@@ -141,15 +143,29 @@ fn parse_run_config(args: &Args) -> Result<RunConfig> {
 #[cfg(not(feature = "pjrt"))]
 fn cmd_train(args: &Args) -> Result<()> {
     use warpsci::coordinator::{Backend, CpuEngine, CpuEngineConfig};
+    use warpsci::runtime::CpuDevice;
 
     let cfg = parse_run_config(args)?;
-    if cfg.shards > 1 {
-        bail!("--shards > 1 is the multi-device PJRT path — rebuild with \
-               `--features pjrt`");
-    }
-    if args.get("checkpoint-dir").is_some() {
-        bail!("--checkpoint-dir is only supported by the pjrt backend for \
-               now — rebuild with `--features pjrt`");
+    if cfg.shards > 1 || args.get("checkpoint-dir").is_some() {
+        // the compiled-graph path: multi-shard orchestration and
+        // checkpointing run over the in-process CPU device
+        if cfg.shards > 1 && args.get("checkpoint-dir").is_some() {
+            bail!("--checkpoint-dir is not supported with --shards > 1 \
+                   yet (checkpoint the single-shard run instead)");
+        }
+        if cfg.threads > 0 {
+            eprintln!("note: --threads is ignored by the cpu graph \
+                       device (graphs are single-threaded; the \
+                       cpu-engine backend honours it)");
+        }
+        let device = CpuDevice::new();
+        let artifact = device.artifact(&cfg.env, cfg.n_envs, cfg.t)?;
+        println!("backend: cpu device ({})", artifact.manifest.tag);
+        if cfg.shards > 1 {
+            return train_sharded(&device, &artifact, cfg);
+        }
+        return train_single(&device, artifact, cfg,
+                            args.get("checkpoint-dir"));
     }
     let ecfg = CpuEngineConfig {
         threads: cfg.threads,
@@ -204,8 +220,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 #[cfg(feature = "pjrt")]
 fn cmd_train(args: &Args) -> Result<()> {
-    use warpsci::coordinator::Trainer;
-    use warpsci::runtime::{Device, GraphSet};
+    use warpsci::runtime::Device;
 
     let cfg = parse_run_config(args)?;
     let root = warpsci::try_artifacts_dir()?;
@@ -213,12 +228,27 @@ fn cmd_train(args: &Args) -> Result<()> {
     println!("loading artifact {tag} from {}", root.display());
     let artifact = Artifact::load(&root, &tag)?;
     let device = Device::cpu()?;
-    println!("platform: {}", device.platform());
+    println!("platform: {}",
+             warpsci::runtime::DeviceBackend::platform(&device));
 
     if cfg.shards > 1 {
+        if args.get("checkpoint-dir").is_some() {
+            bail!("--checkpoint-dir is not supported with --shards > 1 \
+                   yet (checkpoint the single-shard run instead)");
+        }
         return train_sharded(&device, &artifact, cfg);
     }
-    let graphs = GraphSet::compile(&device, artifact)?;
+    train_single(&device, artifact, cfg, args.get("checkpoint-dir"))
+}
+
+/// Single-shard compiled-graph training, on any device backend.
+fn train_single<B: warpsci::runtime::DeviceBackend>(
+    device: &B, artifact: Artifact, cfg: RunConfig,
+    checkpoint_dir: Option<&str>) -> Result<()> {
+    use warpsci::coordinator::Trainer;
+    use warpsci::runtime::GraphSet;
+
+    let graphs = GraphSet::compile(device, artifact)?;
     println!("compiled 7 graphs in {:.2?}", graphs.compile_time);
     let mut tr = Trainer::new(graphs, cfg.clone())?;
     tr.init()?;
@@ -254,16 +284,16 @@ fn cmd_train(args: &Args) -> Result<()> {
         human(row.env_steps), wall, human(row.env_steps / wall),
         row.ep_return_ema
     );
-    if let Some(dir) = args.get("checkpoint-dir") {
+    if let Some(dir) = checkpoint_dir {
         tr.checkpoint(std::path::Path::new(dir), "final")?;
         println!("checkpoint saved to {dir}/final.*");
     }
     Ok(())
 }
 
-#[cfg(feature = "pjrt")]
-fn train_sharded(device: &warpsci::runtime::Device, artifact: &Artifact,
-                 cfg: RunConfig) -> Result<()> {
+/// Multi-shard data-parallel training, on any device backend.
+fn train_sharded<B: warpsci::runtime::DeviceBackend>(
+    device: &B, artifact: &Artifact, cfg: RunConfig) -> Result<()> {
     use warpsci::coordinator::MultiShardTrainer;
 
     println!("multi-shard data-parallel: {} shards, sync every {}",
@@ -339,28 +369,29 @@ fn cmd_bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
-#[cfg(feature = "pjrt")]
 fn cmd_bench_ablation(opts: &HarnessOpts, args: &Args, exp: &str)
                       -> Result<()> {
+    let tag = args.get("tag").unwrap_or("cartpole_n1024_t32");
     match exp {
-        "ablation-transfer" => harness::ablation::ablation_transfer(
-            opts, args.get("tag").unwrap_or("cartpole_n1024_t32")),
-        "ablation-kernel" => harness::ablation::ablation_kernel(
-            opts, args.get("tag").unwrap_or("cartpole_n1024_t32")),
-        "ablation-estimator" => harness::ablation::ablation_estimator(
-            opts, args.get("tag").unwrap_or("cartpole_n1024_t32")),
+        // always available: runs on the in-process CPU device
+        "ablation-transfer" => {
+            harness::ablation::ablation_transfer(opts, tag)
+        }
+        #[cfg(feature = "pjrt")]
+        "ablation-kernel" => {
+            harness::ablation::ablation_kernel(opts, tag)
+        }
+        #[cfg(feature = "pjrt")]
+        "ablation-estimator" => {
+            harness::ablation::ablation_estimator(opts, tag)
+        }
+        #[cfg(not(feature = "pjrt"))]
+        "ablation-kernel" | "ablation-estimator" => {
+            bail!("experiment {exp:?} compares AOT artifact variants — \
+                   rebuild with `--features pjrt` and run `make artifacts`")
+        }
         other => bail!("unknown experiment {other:?}\n{USAGE}"),
     }
-}
-
-#[cfg(not(feature = "pjrt"))]
-fn cmd_bench_ablation(_opts: &HarnessOpts, _args: &Args, exp: &str)
-                      -> Result<()> {
-    if exp.starts_with("ablation-") {
-        bail!("experiment {exp:?} needs compiled artifacts — rebuild with \
-               `--features pjrt`");
-    }
-    bail!("unknown experiment {exp:?}\n{USAGE}");
 }
 
 fn cmd_list() -> Result<()> {

@@ -1,0 +1,823 @@
+//! Pure-Rust CPU device: the seven-graph artifact set as in-process
+//! executables over a flat `f32` state buffer.
+//!
+//! This backend makes the paper's architecture runnable with zero
+//! external dependencies: every graph of the artifact set
+//! (`init`/`train_iter`/`rollout`/`metrics`/`get_params`/`set_params`/
+//! `avg2`) is a deterministic Rust function over one flat store that
+//! holds *everything* — SoA environment state (the exact `[field][lane]`
+//! layout the batch engine kernels step), per-lane episode counters,
+//! the per-lane PCG64 env/action streams (bit-cast, 8 words each),
+//! policy parameters, Adam moments, and the telemetry scalars.  A
+//! [`CpuBuffer`] plays the role of device memory; chaining `run_buf`
+//! executions never copies through "host" code, so the
+//! resident-vs-round-trip transfer ablation measures the same code-path
+//! difference it does under PJRT.
+//!
+//! The graph bodies reuse the batch-environment kernels
+//! ([`crate::engine::BatchEnv`]) and the `nn` module (policy forward /
+//! sampling / A2C backward / Adam), with the same per-lane stream
+//! discipline as [`crate::engine::BatchEngine`] — so a `train_iter`
+//! chain on this device reproduces the optimized engine backend's
+//! parameter trajectory bit-for-bit (pinned by
+//! `tests/integration_cpu_device.rs`).
+//!
+//! Artifacts are synthesized in memory by [`CpuDevice::artifact`]
+//! (there is no AOT step); [`DeviceBackend::compile`] re-derives the
+//! layout from any manifest and rejects manifests this device did not
+//! lower.
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::engine::{make_batch_env, BatchEnv, ACTION_STREAM_BASE};
+use crate::nn::mlp::Cache;
+use crate::nn::{Mlp, SampleScratch};
+use crate::util::Pcg64;
+
+use super::device::{DeviceBackend, DeviceBuffer, DeviceExecutable};
+use super::manifest::{FieldView, GraphSig, Manifest};
+use super::Artifact;
+
+/// Bit-cast `u32` words per serialized PCG64 stream (state + increment).
+const RNG_WORDS: usize = 8;
+
+/// Telemetry scalars, in store order (= the manifest metrics order).
+const METRICS: [&str; 11] = [
+    "iter", "env_steps", "ep_return_ema", "ep_len_ema", "episodes_done",
+    "pi_loss", "v_loss", "entropy", "grad_norm", "reward_mean",
+    "value_mean",
+];
+
+const S_ITER: usize = 0;
+const S_ENV_STEPS: usize = 1;
+const S_RET_EMA: usize = 2;
+const S_LEN_EMA: usize = 3;
+const S_EPISODES: usize = 4;
+const S_PI_LOSS: usize = 5;
+const S_V_LOSS: usize = 6;
+const S_ENTROPY: usize = 7;
+const S_GRAD_NORM: usize = 8;
+const S_REWARD_MEAN: usize = 9;
+const S_VALUE_MEAN: usize = 10;
+
+/// A2C hyper-parameters baked into the compiled graphs (mirrors
+/// [`crate::coordinator::CpuEngineConfig`] so the two CPU backends train
+/// identically).
+#[derive(Debug, Clone)]
+pub struct CpuHyperParams {
+    pub hidden: usize,
+    pub gamma: f32,
+    pub lr: f32,
+    pub vf_coef: f32,
+    pub ent_coef: f32,
+    pub max_grad_norm: f32,
+}
+
+impl Default for CpuHyperParams {
+    fn default() -> Self {
+        CpuHyperParams {
+            hidden: 64,
+            gamma: 0.99,
+            lr: 1e-2,
+            vf_coef: 0.25,
+            ent_coef: 0.005,
+            max_grad_norm: 2.0,
+        }
+    }
+}
+
+/// The always-available execution device: in-process graphs, host memory
+/// standing in for device memory.
+#[derive(Debug, Clone, Default)]
+pub struct CpuDevice {
+    pub hp: CpuHyperParams,
+}
+
+impl CpuDevice {
+    pub fn new() -> CpuDevice {
+        CpuDevice::default()
+    }
+
+    /// Synthesize the artifact for an `(env, n_envs, t)` workload: the
+    /// CPU analogue of `make artifacts`.  The manifest is complete (field
+    /// layout, params segment, graph signatures, metrics) and passes
+    /// [`Manifest::validate`]; no files are written.
+    pub fn artifact(&self, env_name: &str, n_envs: usize, t: usize)
+                    -> Result<Artifact> {
+        anyhow::ensure!(n_envs > 0 && t > 0, "n_envs and t must be positive");
+        let env = make_batch_env(env_name)?;
+        let layout = CpuLayout::build(env.as_ref(), n_envs, t,
+                                      self.hp.hidden);
+        let manifest = layout.manifest(env_name, env.as_ref());
+        manifest.validate()
+            .context("synthesized cpu manifest failed validation")?;
+        Ok(Artifact {
+            dir: PathBuf::from(format!("<cpu:{}>", manifest.tag)),
+            manifest,
+        })
+    }
+}
+
+impl DeviceBackend for CpuDevice {
+    type Buffer = CpuBuffer;
+    type Executable = CpuExecutable;
+
+    fn backend_id(&self) -> &'static str {
+        "cpu"
+    }
+
+    fn platform(&self) -> String {
+        "cpu (in-process graphs over a flat f32 store)".to_string()
+    }
+
+    fn compile(&self, artifact: &Artifact, graph: &str)
+               -> Result<CpuExecutable> {
+        let kind = CpuGraph::from_name(graph)?;
+        let man = &artifact.manifest;
+        let env = make_batch_env(&man.env)?;
+        let w1 = man.field("param.w1").with_context(|| {
+            format!("artifact {} was not lowered for the cpu device",
+                    man.tag)
+        })?;
+        anyhow::ensure!(
+            w1.shape.len() == 2 && w1.shape[0] == env.obs_dim(),
+            "artifact {}: param.w1 shape {:?} != [obs, hidden]",
+            man.tag, w1.shape
+        );
+        let hidden = w1.shape[1];
+        let layout = CpuLayout::build(env.as_ref(), man.n_envs, man.t,
+                                      hidden);
+        anyhow::ensure!(
+            layout.state_size == man.state_size
+                && layout.p_off == man.params_offset
+                && layout.p_size == man.params_size,
+            "artifact {} was not lowered for the cpu device (layout \
+             {}x{}@{} != manifest {}x{}@{})",
+            man.tag, layout.state_size, layout.p_size, layout.p_off,
+            man.state_size, man.params_size, man.params_offset
+        );
+        anyhow::ensure!(
+            man.metrics.len() == METRICS.len()
+                && man.metrics.iter().zip(METRICS.iter())
+                    .all(|(a, b)| a.as_str() == *b),
+            "artifact {}: metrics {:?} != cpu device metrics", man.tag,
+            man.metrics
+        );
+        Ok(CpuExecutable {
+            name: format!("{}/{graph}", man.tag),
+            kind,
+            prog: CpuProgram {
+                env,
+                hp: self.hp.clone(),
+                layout,
+                scratch: Mutex::new(CpuScratch::default()),
+            },
+        })
+    }
+
+    fn upload(&self, data: &[f32]) -> Result<CpuBuffer> {
+        Ok(CpuBuffer(data.to_vec()))
+    }
+
+    fn to_host(&self, buf: &CpuBuffer) -> Result<Vec<f32>> {
+        Ok(buf.0.clone())
+    }
+}
+
+/// "Device" memory on the CPU backend: a flat `f32` vector.
+#[derive(Debug, Clone)]
+pub struct CpuBuffer(Vec<f32>);
+
+impl CpuBuffer {
+    pub fn as_slice(&self) -> &[f32] {
+        &self.0
+    }
+}
+
+impl DeviceBuffer for CpuBuffer {}
+
+/// The seven graph kinds of the artifact set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum CpuGraph {
+    Init,
+    TrainIter,
+    Rollout,
+    Metrics,
+    GetParams,
+    SetParams,
+    Avg2,
+}
+
+impl CpuGraph {
+    fn from_name(name: &str) -> Result<CpuGraph> {
+        Ok(match name {
+            "init" => CpuGraph::Init,
+            "train_iter" => CpuGraph::TrainIter,
+            "rollout" => CpuGraph::Rollout,
+            "metrics" => CpuGraph::Metrics,
+            "get_params" => CpuGraph::GetParams,
+            "set_params" => CpuGraph::SetParams,
+            "avg2" => CpuGraph::Avg2,
+            other => bail!("unknown graph {other:?} for the cpu device"),
+        })
+    }
+}
+
+/// Resolved offsets of every segment of the flat store.
+#[derive(Debug, Clone)]
+struct CpuLayout {
+    n_envs: usize,
+    t: usize,
+    na: usize,
+    od: usize,
+    n_actions: usize,
+    sd: usize,
+    max_steps: u32,
+    hidden: usize,
+    env_state: usize,
+    steps: usize,
+    ep_ret: usize,
+    rng_env: usize,
+    rng_act: usize,
+    p_off: usize,
+    p_size: usize,
+    opt_m: usize,
+    opt_v: usize,
+    opt_t: usize,
+    stats: usize,
+    state_size: usize,
+}
+
+/// The eight parameter tensors, in store (= [`Mlp::params_mut`]) order.
+fn param_tensor_shapes(od: usize, hidden: usize, n_actions: usize)
+                       -> [(&'static str, Vec<usize>); 8] {
+    [("param.w1", vec![od, hidden]),
+     ("param.b1", vec![hidden]),
+     ("param.w2", vec![hidden, hidden]),
+     ("param.b2", vec![hidden]),
+     ("param.wp", vec![hidden, n_actions]),
+     ("param.bp", vec![n_actions]),
+     ("param.wv", vec![hidden]),
+     ("param.bv", vec![1])]
+}
+
+impl CpuLayout {
+    fn build(env: &dyn BatchEnv, n_envs: usize, t: usize, hidden: usize)
+             -> CpuLayout {
+        let sd = env.state_dim();
+        let na = env.n_agents();
+        let od = env.obs_dim();
+        let n_actions = env.n_actions();
+        let p_size: usize = param_tensor_shapes(od, hidden, n_actions)
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum();
+        let env_state = 0;
+        let steps = env_state + sd * n_envs;
+        let ep_ret = steps + n_envs;
+        let rng_env = ep_ret + n_envs;
+        let rng_act = rng_env + RNG_WORDS * n_envs;
+        let p_off = rng_act + RNG_WORDS * n_envs;
+        let opt_m = p_off + p_size;
+        let opt_v = opt_m + p_size;
+        let opt_t = opt_v + p_size;
+        let stats = opt_t + 1;
+        let state_size = stats + METRICS.len();
+        CpuLayout {
+            n_envs,
+            t,
+            na,
+            od,
+            n_actions,
+            sd,
+            max_steps: env.max_steps(),
+            hidden,
+            env_state,
+            steps,
+            ep_ret,
+            rng_env,
+            rng_act,
+            p_off,
+            p_size,
+            opt_m,
+            opt_v,
+            opt_t,
+            stats,
+            state_size,
+        }
+    }
+
+    /// Emit the manifest describing this layout (same schema the python
+    /// AOT pipeline writes).
+    fn manifest(&self, env_name: &str, env: &dyn BatchEnv) -> Manifest {
+        let n = self.n_envs;
+        let mut fields = Vec::new();
+        {
+            let mut push = |name: &str, shape: Vec<usize>, dtype: &str,
+                            offset: usize| {
+                let size = shape.iter().product::<usize>().max(1);
+                fields.push(FieldView {
+                    name: name.to_string(),
+                    shape,
+                    dtype: dtype.to_string(),
+                    offset,
+                    size,
+                });
+            };
+            push("env.state", vec![self.sd, n], "f32", self.env_state);
+            push("env.steps", vec![n], "f32", self.steps);
+            push("env.ep_return", vec![n], "f32", self.ep_ret);
+            push("rng.env", vec![n, RNG_WORDS], "u32", self.rng_env);
+            push("rng.act", vec![n, RNG_WORDS], "u32", self.rng_act);
+            let mut off = self.p_off;
+            for (name, shape) in
+                param_tensor_shapes(self.od, self.hidden, self.n_actions)
+            {
+                let size = shape.iter().product::<usize>();
+                push(name, shape, "f32", off);
+                off += size;
+            }
+            push("opt.m", vec![self.p_size], "f32", self.opt_m);
+            push("opt.v", vec![self.p_size], "f32", self.opt_v);
+            push("opt.t", vec![], "f32", self.opt_t);
+            for (k, metric) in METRICS.iter().enumerate() {
+                push(&format!("stat.{metric}"), vec![], "f32",
+                     self.stats + k);
+            }
+        }
+        let groups = [(
+            "params".to_string(),
+            param_tensor_shapes(self.od, self.hidden, self.n_actions)
+                .iter()
+                .map(|(name, _)| name.to_string())
+                .collect::<Vec<_>>(),
+        )]
+        .into_iter()
+        .collect();
+        let s_in = vec![vec![self.state_size]];
+        let p_in = vec![self.p_size];
+        let graphs = [
+            ("init", vec![vec![1]]),
+            ("train_iter", s_in.clone()),
+            ("rollout", s_in.clone()),
+            ("metrics", s_in.clone()),
+            ("get_params", s_in.clone()),
+            ("set_params", vec![vec![self.state_size], p_in.clone()]),
+            ("avg2", vec![p_in.clone(), p_in.clone()]),
+        ]
+        .into_iter()
+        .map(|(name, input_shapes)| {
+            (name.to_string(),
+             GraphSig { file: format!("{name}.cpu"), input_shapes })
+        })
+        .collect();
+        Manifest {
+            tag: format!("{env_name}_n{n}_t{}", self.t),
+            env: env_name.to_string(),
+            state_size: self.state_size,
+            params_offset: self.p_off,
+            params_size: self.p_size,
+            steps_per_iter: n * self.t,
+            agents_per_env: self.na,
+            n_envs: n,
+            t: self.t,
+            max_steps: env.max_steps() as usize,
+            metrics: METRICS.iter().map(|m| m.to_string()).collect(),
+            fields,
+            groups,
+            graphs,
+        }
+    }
+}
+
+/// Reusable working memory for one compiled graph (the analogue of a
+/// compiled executable's preallocated device scratch).
+#[derive(Default)]
+struct CpuScratch {
+    env_rngs: Vec<Pcg64>,
+    act_rngs: Vec<Pcg64>,
+    obs: Vec<f32>,
+    rewards: Vec<f32>,
+    dones: Vec<f32>,
+    actions: Vec<u32>,
+    sample: SampleScratch,
+    traj_obs: Vec<f32>,
+    traj_actions: Vec<u32>,
+    traj_rewards: Vec<f32>,
+    traj_dones: Vec<f32>,
+    cache: Cache,
+    boot_cache: Cache,
+}
+
+/// One "compiled" in-process graph.
+pub struct CpuExecutable {
+    name: String,
+    kind: CpuGraph,
+    prog: CpuProgram,
+}
+
+struct CpuProgram {
+    env: Box<dyn BatchEnv>,
+    hp: CpuHyperParams,
+    layout: CpuLayout,
+    scratch: Mutex<CpuScratch>,
+}
+
+fn rng_from_state(state: &[f32], off: usize) -> Pcg64 {
+    let mut w = [0u32; RNG_WORDS];
+    for (k, word) in w.iter_mut().enumerate() {
+        *word = state[off + k].to_bits();
+    }
+    Pcg64::from_words(&w)
+}
+
+fn rng_to_state(rng: &Pcg64, state: &mut [f32], off: usize) {
+    let words = rng.to_words();
+    for (k, word) in words.into_iter().enumerate() {
+        state[off + k] = f32::from_bits(word);
+    }
+}
+
+impl CpuProgram {
+    /// Build the packed initial state from a seed: per-lane env reset +
+    /// stream setup (the engine's exact stream discipline) and policy
+    /// init from the coordinator stream.
+    fn init(&self, seed: u64) -> Vec<f32> {
+        let l = &self.layout;
+        let n = l.n_envs;
+        let mut state = vec![0.0f32; l.state_size];
+        for i in 0..n {
+            let mut rng = Pcg64::with_stream(seed, i as u64);
+            {
+                let env_state =
+                    &mut state[l.env_state..l.env_state + l.sd * n];
+                self.env.reset_lane(env_state, n, i, &mut rng);
+            }
+            rng_to_state(&rng, &mut state, l.rng_env + RNG_WORDS * i);
+            let act =
+                Pcg64::with_stream(seed, ACTION_STREAM_BASE + i as u64);
+            rng_to_state(&act, &mut state, l.rng_act + RNG_WORDS * i);
+        }
+        let mut init_rng = Pcg64::with_stream(seed, u64::MAX - 1);
+        let policy = Mlp::init(l.od, l.hidden, l.n_actions, &mut init_rng);
+        let mut off = l.p_off;
+        for tensor in [&policy.w1, &policy.b1, &policy.w2, &policy.b2,
+                       &policy.wp, &policy.bp, &policy.wv, &policy.bv] {
+            state[off..off + tensor.len()].copy_from_slice(tensor);
+            off += tensor.len();
+        }
+        state
+    }
+
+    /// Rebuild the policy net from the parameter segment.
+    fn read_policy(&self, state: &[f32]) -> Mlp {
+        let l = &self.layout;
+        let (od, h, a) = (l.od, l.hidden, l.n_actions);
+        let mut off = l.p_off;
+        let mut take = |len: usize| -> Vec<f32> {
+            let v = state[off..off + len].to_vec();
+            off += len;
+            v
+        };
+        Mlp {
+            obs: od,
+            hidden: h,
+            n_out: a,
+            w1: take(od * h),
+            b1: take(h),
+            w2: take(h * h),
+            b2: take(h),
+            wp: take(h * a),
+            bp: take(a),
+            wv: take(h),
+            bv: take(1),
+        }
+    }
+
+    /// One fused iteration over a copy of the input store: `t` ticks of
+    /// inference + sampling + env stepping (+ trajectory capture and one
+    /// A2C/Adam update when `train`).  Mirrors the batch engine's fused
+    /// roll-out semantics lane-for-lane.
+    fn run_iter(&self, input: &[f32], train: bool) -> Vec<f32> {
+        let l = &self.layout;
+        let (n, na, od, t) = (l.n_envs, l.na, l.od, l.t);
+        let rows = n * na;
+        let total = rows * t;
+        let mut state = input.to_vec();
+        let mut guard = self.scratch.lock().unwrap();
+        let sc = &mut *guard;
+
+        // rebuild the per-lane streams from the store
+        sc.env_rngs.clear();
+        sc.act_rngs.clear();
+        for i in 0..n {
+            sc.env_rngs
+                .push(rng_from_state(&state, l.rng_env + RNG_WORDS * i));
+            sc.act_rngs
+                .push(rng_from_state(&state, l.rng_act + RNG_WORDS * i));
+        }
+        let policy = self.read_policy(&state);
+
+        sc.obs.resize(rows * od, 0.0);
+        sc.rewards.resize(rows, 0.0);
+        sc.dones.resize(n, 0.0);
+        sc.actions.resize(rows, 0);
+        if train {
+            sc.traj_obs.resize(total * od, 0.0);
+            sc.traj_actions.resize(total, 0);
+            sc.traj_rewards.resize(total, 0.0);
+            sc.traj_dones.resize(t * n, 0.0);
+        }
+
+        for s in 0..t {
+            {
+                let env_state =
+                    &state[l.env_state..l.env_state + l.sd * n];
+                self.env.write_obs_all(env_state, n, &mut sc.obs);
+            }
+            if train {
+                sc.traj_obs[s * rows * od..(s + 1) * rows * od]
+                    .copy_from_slice(&sc.obs);
+            }
+            policy.sample_actions_lanes(&sc.obs, na, &mut sc.act_rngs,
+                                        &mut sc.sample, &mut sc.actions);
+            if train {
+                sc.traj_actions[s * rows..(s + 1) * rows]
+                    .copy_from_slice(&sc.actions);
+            }
+            {
+                let env_state =
+                    &mut state[l.env_state..l.env_state + l.sd * n];
+                self.env.step_all(env_state, n, &sc.actions,
+                                  &mut sc.env_rngs, &mut sc.rewards,
+                                  &mut sc.dones);
+            }
+            // episode accounting: truncation, telemetry fold in global
+            // (tick, lane) order, lane-local auto-reset — the engine's
+            // `step_shard` semantics over one full-width shard
+            for i in 0..n {
+                let steps = state[l.steps + i] + 1.0;
+                state[l.steps + i] = steps;
+                let rsum: f32 =
+                    sc.rewards[i * na..(i + 1) * na].iter().sum();
+                state[l.ep_ret + i] += rsum / na as f32;
+                let done = sc.dones[i] != 0.0
+                    || steps >= l.max_steps as f32;
+                if done {
+                    let ret = state[l.ep_ret + i];
+                    let n_done = state[l.stats + S_EPISODES];
+                    if n_done == 0.0 {
+                        state[l.stats + S_RET_EMA] = ret;
+                        state[l.stats + S_LEN_EMA] = steps;
+                    } else {
+                        state[l.stats + S_RET_EMA] = 0.95
+                            * state[l.stats + S_RET_EMA]
+                            + 0.05 * ret;
+                        state[l.stats + S_LEN_EMA] = 0.95
+                            * state[l.stats + S_LEN_EMA]
+                            + 0.05 * steps;
+                    }
+                    state[l.stats + S_EPISODES] = n_done + 1.0;
+                    {
+                        let env_state = &mut state
+                            [l.env_state..l.env_state + l.sd * n];
+                        self.env.reset_lane(env_state, n, i,
+                                            &mut sc.env_rngs[i]);
+                    }
+                    state[l.steps + i] = 0.0;
+                    state[l.ep_ret + i] = 0.0;
+                    sc.dones[i] = 1.0;
+                }
+            }
+            if train {
+                sc.traj_rewards[s * rows..(s + 1) * rows]
+                    .copy_from_slice(&sc.rewards);
+                sc.traj_dones[s * n..(s + 1) * n]
+                    .copy_from_slice(&sc.dones);
+            }
+        }
+        // bootstrap observations (post-roll-out, post-reset)
+        {
+            let env_state = &state[l.env_state..l.env_state + l.sd * n];
+            self.env.write_obs_all(env_state, n, &mut sc.obs);
+        }
+        // persist the streams back into the store
+        for i in 0..n {
+            rng_to_state(&sc.env_rngs[i], &mut state,
+                         l.rng_env + RNG_WORDS * i);
+            rng_to_state(&sc.act_rngs[i], &mut state,
+                         l.rng_act + RNG_WORDS * i);
+        }
+        state[l.stats + S_ENV_STEPS] += (n * t) as f32;
+
+        if train {
+            policy.forward(&sc.traj_obs, total, &mut sc.cache);
+            policy.forward(&sc.obs, rows, &mut sc.boot_cache);
+            let returns = crate::nn::nstep_returns(
+                &sc.traj_rewards, &sc.traj_dones, &sc.boot_cache.value,
+                n, na, t, self.hp.gamma);
+            let adv = crate::nn::normalized_advantages(&returns,
+                                                       &sc.cache.value);
+            let mut grads = policy.zeros_like();
+            let (pi_loss, v_loss, entropy) = policy.backward_a2c(
+                &sc.cache, &sc.traj_actions, &adv, &returns,
+                self.hp.vf_coef, self.hp.ent_coef, &mut grads);
+            let gn = grads.global_norm();
+            if gn > self.hp.max_grad_norm {
+                grads.scale(self.hp.max_grad_norm / gn);
+            }
+            // buffer-resident Adam over the flat param/moment segments
+            // (same constants and update order as `nn::Adam`)
+            let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+            let t_adam = state[l.opt_t] + 1.0;
+            state[l.opt_t] = t_adam;
+            let bc1 = 1.0 - b1.powf(t_adam);
+            let bc2 = 1.0 - b2.powf(t_adam);
+            for (j, g) in grads.views().iter()
+                .flat_map(|v| v.iter().copied()).enumerate()
+            {
+                let m = b1 * state[l.opt_m + j] + (1.0 - b1) * g;
+                let v = b2 * state[l.opt_v + j] + (1.0 - b2) * g * g;
+                state[l.opt_m + j] = m;
+                state[l.opt_v + j] = v;
+                state[l.p_off + j] -=
+                    self.hp.lr * (m / bc1) / ((v / bc2).sqrt() + eps);
+            }
+            state[l.stats + S_PI_LOSS] = pi_loss;
+            state[l.stats + S_V_LOSS] = v_loss;
+            state[l.stats + S_ENTROPY] = entropy;
+            state[l.stats + S_GRAD_NORM] = gn;
+            state[l.stats + S_REWARD_MEAN] = (sc.traj_rewards.iter()
+                .map(|r| *r as f64).sum::<f64>()
+                / total as f64) as f32;
+            state[l.stats + S_VALUE_MEAN] = (sc.cache.value.iter()
+                .map(|v| *v as f64).sum::<f64>()
+                / total as f64) as f32;
+            state[l.stats + S_ITER] += 1.0;
+        }
+        state
+    }
+
+    fn metrics(&self, state: &[f32]) -> Vec<f32> {
+        let l = &self.layout;
+        state[l.stats..l.stats + METRICS.len()].to_vec()
+    }
+}
+
+fn check_arity(name: &str, args: &[&[f32]], expect: &[usize])
+               -> Result<()> {
+    if args.len() != expect.len() {
+        bail!("graph {name}: expected {} inputs, got {}", expect.len(),
+              args.len());
+    }
+    for (i, (a, e)) in args.iter().zip(expect.iter()).enumerate() {
+        if a.len() != *e {
+            bail!("graph {name}: input {i} length {} != expected {e}",
+                  a.len());
+        }
+    }
+    Ok(())
+}
+
+impl CpuExecutable {
+    fn execute(&self, args: &[&[f32]]) -> Result<CpuBuffer> {
+        let l = &self.prog.layout;
+        let s = l.state_size;
+        let p = l.p_size;
+        match self.kind {
+            CpuGraph::Init => {
+                check_arity(&self.name, args, &[1])?;
+                Ok(CpuBuffer(self.prog.init(args[0][0] as u64)))
+            }
+            CpuGraph::TrainIter => {
+                check_arity(&self.name, args, &[s])?;
+                Ok(CpuBuffer(self.prog.run_iter(args[0], true)))
+            }
+            CpuGraph::Rollout => {
+                check_arity(&self.name, args, &[s])?;
+                Ok(CpuBuffer(self.prog.run_iter(args[0], false)))
+            }
+            CpuGraph::Metrics => {
+                check_arity(&self.name, args, &[s])?;
+                Ok(CpuBuffer(self.prog.metrics(args[0])))
+            }
+            CpuGraph::GetParams => {
+                check_arity(&self.name, args, &[s])?;
+                Ok(CpuBuffer(args[0][l.p_off..l.p_off + p].to_vec()))
+            }
+            CpuGraph::SetParams => {
+                check_arity(&self.name, args, &[s, p])?;
+                let mut out = args[0].to_vec();
+                out[l.p_off..l.p_off + p].copy_from_slice(args[1]);
+                Ok(CpuBuffer(out))
+            }
+            CpuGraph::Avg2 => {
+                check_arity(&self.name, args, &[p, p])?;
+                Ok(CpuBuffer(args[0].iter().zip(args[1].iter())
+                    .map(|(a, b)| 0.5 * (a + b))
+                    .collect()))
+            }
+        }
+    }
+}
+
+impl DeviceExecutable for CpuExecutable {
+    type Buffer = CpuBuffer;
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run_lit(&self, args: &[Vec<f32>]) -> Result<CpuBuffer> {
+        let refs: Vec<&[f32]> =
+            args.iter().map(|a| a.as_slice()).collect();
+        self.execute(&refs)
+            .with_context(|| format!("executing {}", self.name))
+    }
+
+    fn run_buf(&self, args: &[&CpuBuffer]) -> Result<CpuBuffer> {
+        let refs: Vec<&[f32]> =
+            args.iter().map(|b| b.0.as_slice()).collect();
+        self.execute(&refs)
+            .with_context(|| format!("executing {}", self.name))
+    }
+
+    fn run_to_host(&self, args: &[&CpuBuffer]) -> Result<Vec<f32>> {
+        Ok(self.run_buf(args)?.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthesized_manifest_validates_for_all_envs() {
+        let device = CpuDevice::new();
+        for env in ["cartpole", "acrobot", "pendulum", "covid_econ",
+                    "catalysis_lh", "catalysis_er"] {
+            let a = device.artifact(env, 4, 3).unwrap();
+            let m = &a.manifest;
+            assert_eq!(m.env, env);
+            assert_eq!(m.steps_per_iter, 12);
+            assert_eq!(m.metrics.len(), METRICS.len());
+            assert_eq!(m.graphs.len(), 7);
+            // params segment is exactly the 8 policy tensors
+            let shapes = param_tensor_shapes(
+                m.field("param.w1").unwrap().shape[0],
+                m.field("param.w1").unwrap().shape[1],
+                m.field("param.bp").unwrap().size);
+            let total: usize = shapes.iter()
+                .map(|(_, s)| s.iter().product::<usize>()).sum();
+            assert_eq!(m.params_size, total);
+        }
+        assert!(device.artifact("nope", 4, 3).is_err());
+        assert!(device.artifact("cartpole", 0, 3).is_err());
+    }
+
+    #[test]
+    fn compile_rejects_foreign_manifests() {
+        let device = CpuDevice::new();
+        let mut artifact = device.artifact("cartpole", 4, 3).unwrap();
+        assert!(device.compile(&artifact, "init").is_ok());
+        assert!(device.compile(&artifact, "zzz").is_err());
+        // a manifest whose layout the device did not produce is rejected
+        artifact.manifest.state_size += 1;
+        assert!(device.compile(&artifact, "init").is_err());
+    }
+
+    #[test]
+    fn rng_state_roundtrips_through_the_store() {
+        let mut rng = Pcg64::with_stream(5, 77);
+        rng.next_u64();
+        let mut store = vec![0.0f32; RNG_WORDS + 3];
+        rng_to_state(&rng, &mut store, 2);
+        let mut back = rng_from_state(&store, 2);
+        let mut orig = rng.clone();
+        for _ in 0..4 {
+            assert_eq!(orig.next_u64(), back.next_u64());
+        }
+    }
+
+    #[test]
+    fn init_seeds_differ_and_are_deterministic() {
+        let device = CpuDevice::new();
+        let artifact = device.artifact("cartpole", 8, 4).unwrap();
+        let exe = device.compile(&artifact, "init").unwrap();
+        let a = exe.run_lit(&[vec![3.0]]).unwrap();
+        let b = exe.run_lit(&[vec![3.0]]).unwrap();
+        let c = exe.run_lit(&[vec![4.0]]).unwrap();
+        let bits = |buf: &CpuBuffer| -> Vec<u32> {
+            buf.as_slice().iter().map(|x| x.to_bits()).collect()
+        };
+        assert_eq!(bits(&a), bits(&b));
+        assert_ne!(bits(&a), bits(&c));
+        assert_eq!(a.as_slice().len(), artifact.manifest.state_size);
+        // arity errors are caught
+        assert!(exe.run_lit(&[vec![3.0, 4.0]]).is_err());
+        assert!(exe.run_lit(&[]).is_err());
+    }
+}

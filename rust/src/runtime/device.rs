@@ -1,0 +1,83 @@
+//! The pluggable device backend: the trait surface every execution
+//! device implements.
+//!
+//! The paper's architecture is "seven compiled graphs chained over one
+//! device-resident state buffer".  This module abstracts exactly the
+//! operations that loop uses — compile a named graph of an artifact,
+//! execute it with host literals or device buffers, and move buffers
+//! across the host boundary — so the coordinator
+//! ([`crate::coordinator::Trainer`], [`crate::coordinator::MultiShardTrainer`])
+//! and the harness ablations are written once against the trait:
+//!
+//! * [`crate::runtime::CpuDevice`] (always available) — pure-Rust
+//!   in-process "graphs" over a flat `f32` store, built from the SoA
+//!   engine kernels and the `nn` module.
+//! * `runtime::pjrt::Device` (cargo feature `pjrt`) — real PJRT
+//!   execution of AOT-lowered HLO via the `xla` binding (the offline
+//!   build links a type-surface stub; see `rust/vendor/xla`).
+//!
+//! A `Buffer` is device memory: opaque to the host, cheap to chain
+//! between executions.  `upload`/`to_host` are the *only* host crossings,
+//! which is what makes [`crate::coordinator::TransferMode`] a meaningful
+//! ablation on every backend.
+
+use anyhow::Result;
+
+use super::Artifact;
+
+/// Opaque device-resident memory holding a flat `f32` vector.
+///
+/// A marker trait: buffers are handles the host cannot introspect
+/// portably (PJRT exposes no cheap element count), so every operation on
+/// them goes through [`DeviceExecutable`] / [`DeviceBackend::to_host`].
+pub trait DeviceBuffer {}
+
+/// One compiled graph, ready to execute.
+///
+/// Mirrors the three PJRT entry points the hot loop uses: host-literal
+/// execution (init / restore), device-buffer chaining (the
+/// zero-host-transfer path), and execute-then-fetch (the small metrics
+/// read).
+pub trait DeviceExecutable {
+    type Buffer: DeviceBuffer;
+
+    /// Provenance label (`{tag}/{graph}`), used in error contexts.
+    fn name(&self) -> &str;
+
+    /// Execute with host literals (init / checkpoint restore).
+    fn run_lit(&self, args: &[Vec<f32>]) -> Result<Self::Buffer>;
+
+    /// Execute with device buffers (the zero-host-transfer hot path).
+    fn run_buf(&self, args: &[&Self::Buffer]) -> Result<Self::Buffer>;
+
+    /// Execute and copy the (small) result to host.
+    fn run_to_host(&self, args: &[&Self::Buffer]) -> Result<Vec<f32>>;
+}
+
+/// One execution device: compiles artifact graphs and moves buffers
+/// across the host boundary.
+///
+/// `Clone` is required because the multi-shard orchestrator hands every
+/// shard a handle to the same underlying device (mirroring how a real
+/// multi-GPU host shares one client across per-device executables).
+pub trait DeviceBackend: Clone {
+    type Buffer: DeviceBuffer;
+    type Executable: DeviceExecutable<Buffer = Self::Buffer>;
+
+    /// Stable backend id ("cpu", "pjrt") — used as the coordinator's
+    /// backend name.
+    fn backend_id(&self) -> &'static str;
+
+    /// Human-readable platform description.
+    fn platform(&self) -> String;
+
+    /// Compile one named graph of an artifact into an executable.
+    fn compile(&self, artifact: &Artifact, graph: &str)
+               -> Result<Self::Executable>;
+
+    /// Upload a host `f32` vector into a device buffer.
+    fn upload(&self, data: &[f32]) -> Result<Self::Buffer>;
+
+    /// Download a device buffer to a host `f32` vector.
+    fn to_host(&self, buf: &Self::Buffer) -> Result<Vec<f32>>;
+}

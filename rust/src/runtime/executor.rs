@@ -1,88 +1,39 @@
-//! Compiled graph set: the executable half of an artifact.
+//! Compiled graph set: the executable half of an artifact, generic over
+//! the device backend.
 //!
-//! `GraphSet::compile` turns the seven HLO files of an artifact into PJRT
-//! executables once; afterwards the hot loop is pure `execute_b` chaining
-//! over the resident state buffer.
+//! `GraphSet::compile` turns the seven graphs of an artifact into device
+//! executables once; afterwards the hot loop is pure `run_buf` chaining
+//! over the resident state buffer.  The same code drives the pure-Rust
+//! [`super::CpuDevice`] and (under the `pjrt` feature) the PJRT
+//! `super::Device`.
 
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use super::{Artifact, Device};
-
-/// One compiled executable plus its provenance.
-pub struct Executor {
-    pub name: String,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-impl Executor {
-    /// Execute with host literals (used at init / checkpoint restore).
-    pub fn run_lit(&self, args: &[xla::Literal]) -> Result<xla::PjRtBuffer> {
-        let mut out = self
-            .exe
-            .execute::<xla::Literal>(args)
-            .with_context(|| format!("executing {}", self.name))?;
-        take_single(&mut out, &self.name)
-    }
-
-    /// Execute with device buffers (the zero-host-transfer hot path).
-    pub fn run_buf(&self, args: &[&xla::PjRtBuffer]) -> Result<xla::PjRtBuffer> {
-        let mut out = self
-            .exe
-            .execute_b(args)
-            .with_context(|| format!("executing {}", self.name))?;
-        take_single(&mut out, &self.name)
-    }
-
-    /// Execute and copy the (small) result to host.
-    pub fn run_to_host(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<f32>> {
-        buffer_to_host(&self.run_buf(args)?)
-    }
-}
-
-fn take_single(
-    out: &mut Vec<Vec<xla::PjRtBuffer>>,
-    name: &str,
-) -> Result<xla::PjRtBuffer> {
-    if out.len() != 1 || out[0].len() != 1 {
-        bail!(
-            "graph {name}: expected 1 replica x 1 output, got {}x{}",
-            out.len(),
-            out.first().map(|v| v.len()).unwrap_or(0)
-        );
-    }
-    Ok(out.remove(0).remove(0))
-}
-
-/// Copy a device buffer to a host f32 vector.
-pub fn buffer_to_host(buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
-    let lit = buf.to_literal_sync().context("device->host copy")?;
-    lit.to_vec::<f32>().context("literal to f32 vec")
-}
+use super::device::{DeviceBackend, DeviceExecutable};
+use super::Artifact;
 
 /// All seven executables of one artifact, compiled and ready.
-pub struct GraphSet {
-    pub device: Device,
+pub struct GraphSet<B: DeviceBackend> {
+    pub device: B,
     pub artifact: Artifact,
     pub compile_time: Duration,
-    init: Executor,
-    train_iter: Executor,
-    rollout: Executor,
-    metrics: Executor,
-    get_params: Executor,
-    set_params: Executor,
-    avg2: Executor,
+    init: B::Executable,
+    train_iter: B::Executable,
+    rollout: B::Executable,
+    metrics: B::Executable,
+    get_params: B::Executable,
+    set_params: B::Executable,
+    avg2: B::Executable,
 }
 
-impl GraphSet {
-    pub fn compile(device: &Device, artifact: Artifact) -> Result<GraphSet> {
+impl<B: DeviceBackend> GraphSet<B> {
+    pub fn compile(device: &B, artifact: Artifact) -> Result<GraphSet<B>> {
         let t0 = Instant::now();
-        let build = |name: &str| -> Result<Executor> {
-            let path = artifact.hlo_path(name)?;
-            Ok(Executor {
-                name: format!("{}/{}", artifact.manifest.tag, name),
-                exe: device.compile_hlo_file(&path)?,
+        let build = |name: &str| -> Result<B::Executable> {
+            device.compile(&artifact, name).with_context(|| {
+                format!("compiling {}/{name}", artifact.manifest.tag)
             })
         };
         let init = build("init")?;
@@ -107,51 +58,58 @@ impl GraphSet {
     }
 
     /// Build the initial packed state on device from a seed.
-    pub fn init_state(&self, seed: u64) -> Result<xla::PjRtBuffer> {
-        let lit = xla::Literal::vec1(&[seed as f32]);
-        self.init.run_lit(&[lit])
+    ///
+    /// The init graph ABI takes one `f32` seed (the artifact pipeline
+    /// bakes that arity into the lowered HLO), so only seeds exact in
+    /// `f32` are accepted — larger ones would silently collide.
+    pub fn init_state(&self, seed: u64) -> Result<B::Buffer> {
+        if seed >= (1 << 24) {
+            bail!("seed {seed} exceeds the init graph's f32-exact range \
+                   (must be < 2^24)");
+        }
+        self.init.run_lit(&[vec![seed as f32]])
     }
 
     /// One fused roll-out + A2C update (state stays on device).
-    pub fn train_iter(&self, state: &xla::PjRtBuffer) -> Result<xla::PjRtBuffer> {
+    pub fn train_iter(&self, state: &B::Buffer) -> Result<B::Buffer> {
         self.train_iter.run_buf(&[state])
     }
 
     /// Roll-out only (throughput benches).
-    pub fn rollout(&self, state: &xla::PjRtBuffer) -> Result<xla::PjRtBuffer> {
+    pub fn rollout(&self, state: &B::Buffer) -> Result<B::Buffer> {
         self.rollout.run_buf(&[state])
     }
 
     /// Fetch the small metrics vector (the only recurring host transfer).
-    pub fn metrics(&self, state: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+    pub fn metrics(&self, state: &B::Buffer) -> Result<Vec<f32>> {
         self.metrics.run_to_host(&[state])
     }
 
     /// Extract the policy/value parameter vector (device-resident).
-    pub fn get_params(&self, state: &xla::PjRtBuffer) -> Result<xla::PjRtBuffer> {
+    pub fn get_params(&self, state: &B::Buffer) -> Result<B::Buffer> {
         self.get_params.run_buf(&[state])
     }
 
     /// Inject a parameter vector into a state.
     pub fn set_params(
         &self,
-        state: &xla::PjRtBuffer,
-        params: &xla::PjRtBuffer,
-    ) -> Result<xla::PjRtBuffer> {
+        state: &B::Buffer,
+        params: &B::Buffer,
+    ) -> Result<B::Buffer> {
         self.set_params.run_buf(&[state, params])
     }
 
     /// Average two parameter vectors (tree-reduction building block).
     pub fn avg2(
         &self,
-        a: &xla::PjRtBuffer,
-        b: &xla::PjRtBuffer,
-    ) -> Result<xla::PjRtBuffer> {
+        a: &B::Buffer,
+        b: &B::Buffer,
+    ) -> Result<B::Buffer> {
         self.avg2.run_buf(&[a, b])
     }
 
     /// Upload a host state vector (checkpoint restore / ablation modes).
-    pub fn upload_state(&self, state: &[f32]) -> Result<xla::PjRtBuffer> {
+    pub fn upload_state(&self, state: &[f32]) -> Result<B::Buffer> {
         if state.len() != self.artifact.manifest.state_size {
             bail!(
                 "state length {} != manifest state_size {}",
@@ -159,14 +117,11 @@ impl GraphSet {
                 self.artifact.manifest.state_size
             );
         }
-        self.device
-            .client()
-            .buffer_from_host_buffer(state, &[state.len()], None)
-            .context("uploading state vector")
+        self.device.upload(state).context("uploading state vector")
     }
 
     /// Download the full state (checkpoints / ablation round-trip mode).
-    pub fn download_state(&self, state: &xla::PjRtBuffer) -> Result<Vec<f32>> {
-        buffer_to_host(state)
+    pub fn download_state(&self, state: &B::Buffer) -> Result<Vec<f32>> {
+        self.device.to_host(state).context("device->host copy")
     }
 }

@@ -1,79 +1,37 @@
-//! Artifact runtime: locate AOT artifacts and (with the `pjrt` feature)
-//! execute them.
+//! Artifact runtime: locate artifacts and execute them on a pluggable
+//! device backend.
 //!
-//! Artifact discovery ([`Artifact`]) and the manifest schema ([`Manifest`])
-//! are dependency-free and always available — the store views, metrics
-//! decoding and the CLI's `list`/`info` commands build on them.
+//! Artifact discovery ([`Artifact`]) and the manifest schema
+//! ([`Manifest`]) are dependency-free and always available — the store
+//! views, metrics decoding and the CLI's `list`/`info` commands build on
+//! them.
 //!
-//! The execution half wraps the `xla` crate (PJRT C API, xla_extension
-//! 0.5.1 CPU plugin): `PjRtClient::cpu()` → `HloModuleProto::from_text_file`
-//! → `client.compile` → `execute` / `execute_b`.  Everything on the WarpSci
-//! hot path chains **device buffers** (`execute_b`) — host literals only
-//! appear at init, checkpoints, and the tiny metrics fetch.  The binding is
-//! not vendored in the offline build, so this half sits behind the `pjrt`
-//! cargo feature.
+//! Execution goes through the [`DeviceBackend`] trait surface
+//! ([`device`]): compile the seven graphs of an artifact, chain device
+//! buffers through them, and cross the host boundary only at init,
+//! checkpoints, and the tiny metrics fetch.  Two implementations:
+//!
+//! * [`CpuDevice`] (default, pure Rust) — in-process graphs over a flat
+//!   `f32` store, synthesized from the SoA engine kernels and the `nn`
+//!   module ([`cpu_device`]).  This is what makes the trainer, the
+//!   multi-shard orchestrator and the transfer ablation runnable with no
+//!   external binding.
+//! * `Device` (cargo feature `pjrt`, module `pjrt`) — real PJRT
+//!   execution of AOT-lowered HLO; the offline build type-checks against
+//!   the stub in `rust/vendor/xla`.
 
 pub mod artifact;
-#[cfg(feature = "pjrt")]
+pub mod cpu_device;
+pub mod device;
 pub mod executor;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
 pub use artifact::Artifact;
-#[cfg(feature = "pjrt")]
-pub use executor::{Executor, GraphSet};
+pub use cpu_device::{CpuBuffer, CpuDevice, CpuHyperParams};
+pub use device::{DeviceBackend, DeviceBuffer, DeviceExecutable};
+pub use executor::GraphSet;
 pub use manifest::{FieldView, Manifest};
-
 #[cfg(feature = "pjrt")]
-use std::sync::Arc;
-
-#[cfg(feature = "pjrt")]
-use anyhow::{Context, Result};
-
-/// Shared PJRT client handle.
-///
-/// One client per process is the normal mode; the multi-shard orchestrator
-/// clones the `Arc` so all shards share the device pool (on CPU PJRT this
-/// is one logical device; on a real multi-GPU host each shard would bind
-/// its own device — the orchestration code path is identical).
-#[cfg(feature = "pjrt")]
-#[derive(Clone)]
-pub struct Device {
-    client: Arc<xla::PjRtClient>,
-}
-
-#[cfg(feature = "pjrt")]
-impl Device {
-    /// Create the CPU PJRT client.
-    pub fn cpu() -> Result<Device> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Device { client: Arc::new(client) })
-    }
-
-    pub fn client(&self) -> &xla::PjRtClient {
-        &self.client
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile HLO text (already read into memory) into an executable.
-    pub fn compile_hlo_file(
-        &self,
-        path: &std::path::Path,
-    ) -> Result<xla::PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        self.client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))
-    }
-
-    /// Upload a host f32 vector as a device literal.
-    pub fn literal_f32(&self, data: &[f32]) -> xla::Literal {
-        xla::Literal::vec1(data)
-    }
-}
+pub use pjrt::Device;

@@ -1,0 +1,150 @@
+//! PJRT device backend: AOT-lowered HLO executed via the `xla` binding.
+//!
+//! Wraps the `xla` crate (PJRT C API, xla_extension 0.5.1 CPU plugin):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute` / `execute_b`.  Everything on the
+//! WarpSci hot path chains **device buffers** (`execute_b`) — host
+//! literals only appear at init, checkpoints, and the tiny metrics
+//! fetch.
+//!
+//! The offline build links the type-surface stub in `rust/vendor/xla`
+//! (so `cargo check --features pjrt` guards against API drift);
+//! executing real graphs requires swapping in the actual binding.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::device::{DeviceBackend, DeviceBuffer, DeviceExecutable};
+use super::Artifact;
+
+/// Shared PJRT client handle.
+///
+/// One client per process is the normal mode; the multi-shard
+/// orchestrator clones the handle so all shards share the device pool
+/// (on CPU PJRT this is one logical device; on a real multi-GPU host
+/// each shard would bind its own device — the orchestration code path
+/// is identical).
+#[derive(Clone)]
+pub struct Device {
+    client: Arc<xla::PjRtClient>,
+}
+
+impl Device {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Device> {
+        let client =
+            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Device { client: Arc::new(client) })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Compile HLO text (already read into memory) into an executable.
+    pub fn compile_hlo_file(
+        &self,
+        path: &std::path::Path,
+    ) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+}
+
+impl DeviceBackend for Device {
+    type Buffer = xla::PjRtBuffer;
+    type Executable = PjrtExecutable;
+
+    fn backend_id(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&self, artifact: &Artifact, graph: &str)
+               -> Result<PjrtExecutable> {
+        let path = artifact.hlo_path(graph)?;
+        Ok(PjrtExecutable {
+            name: format!("{}/{graph}", artifact.manifest.tag),
+            exe: self.compile_hlo_file(&path)?,
+        })
+    }
+
+    fn upload(&self, data: &[f32]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, &[data.len()], None)
+            .context("uploading host buffer")
+    }
+
+    fn to_host(&self, buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        buffer_to_host(buf)
+    }
+}
+
+impl DeviceBuffer for xla::PjRtBuffer {}
+
+/// One compiled PJRT executable plus its provenance.
+pub struct PjrtExecutable {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl DeviceExecutable for PjrtExecutable {
+    type Buffer = xla::PjRtBuffer;
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run_lit(&self, args: &[Vec<f32>]) -> Result<xla::PjRtBuffer> {
+        let lits: Vec<xla::Literal> =
+            args.iter().map(|a| xla::Literal::vec1(a)).collect();
+        let mut out = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .with_context(|| format!("executing {}", self.name))?;
+        take_single(&mut out, &self.name)
+    }
+
+    fn run_buf(&self, args: &[&xla::PjRtBuffer])
+               -> Result<xla::PjRtBuffer> {
+        let mut out = self
+            .exe
+            .execute_b(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        take_single(&mut out, &self.name)
+    }
+
+    fn run_to_host(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<f32>> {
+        buffer_to_host(&self.run_buf(args)?)
+    }
+}
+
+fn take_single(
+    out: &mut Vec<Vec<xla::PjRtBuffer>>,
+    name: &str,
+) -> Result<xla::PjRtBuffer> {
+    if out.len() != 1 || out[0].len() != 1 {
+        bail!(
+            "graph {name}: expected 1 replica x 1 output, got {}x{}",
+            out.len(),
+            out.first().map(|v| v.len()).unwrap_or(0)
+        );
+    }
+    Ok(out.remove(0).remove(0))
+}
+
+/// Copy a device buffer to a host f32 vector.
+pub fn buffer_to_host(buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+    let lit = buf.to_literal_sync().context("device->host copy")?;
+    lit.to_vec::<f32>().context("literal to f32 vec")
+}

@@ -13,3 +13,24 @@ pub mod timer;
 pub use json::Json;
 pub use rng::Pcg64;
 pub use timer::Timer;
+
+/// Parse a `usize` from an environment variable, falling back to
+/// `default` when unset or unparseable (example / CI iteration
+/// overrides like `WARPSCI_EXAMPLE_ITERS`).
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn env_usize_falls_back_on_missing() {
+        // unset (or garbage) vars fall back; we only exercise the unset
+        // path here — mutating the environment races with the parallel
+        // test harness
+        assert_eq!(super::env_usize("WARPSCI_NO_SUCH_VAR_XYZ", 7), 7);
+    }
+}

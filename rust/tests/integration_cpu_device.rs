@@ -1,0 +1,375 @@
+//! Integration: the coordinator event loop over the pure-Rust CPU device
+//! — graph-set semantics, training, transfer-mode equivalence,
+//! checkpoints, the multi-shard orchestrator, and bit-exact agreement
+//! with the optimized `CpuEngine` backend.  Everything here runs under
+//! default features: no artifacts, no `pjrt`, no network.
+
+use warpsci::config::RunConfig;
+use warpsci::coordinator::{Backend, CpuEngine, CpuEngineConfig,
+                           MetricRow, MultiShardTrainer, Trainer,
+                           TransferMode};
+use warpsci::harness::HarnessOpts;
+use warpsci::runtime::{CpuDevice, DeviceBackend, GraphSet};
+use warpsci::store::{Checkpoint, StoreView};
+
+fn device(hidden: usize) -> CpuDevice {
+    let mut d = CpuDevice::new();
+    d.hp.hidden = hidden;
+    d
+}
+
+fn graphs(env: &str, n: usize, t: usize, hidden: usize)
+          -> GraphSet<CpuDevice> {
+    let d = device(hidden);
+    let artifact = d.artifact(env, n, t).unwrap();
+    GraphSet::compile(&d, artifact).unwrap()
+}
+
+fn trainer(env: &str, n: usize, t: usize, hidden: usize, iters: usize,
+           seed: u64) -> Trainer<CpuDevice> {
+    let g = graphs(env, n, t, hidden);
+    let cfg = RunConfig {
+        env: env.into(),
+        n_envs: n,
+        t,
+        iters,
+        seed,
+        ..Default::default()
+    };
+    Trainer::new(g, cfg).unwrap()
+}
+
+/// Bit view for exact float-vector comparison (the store holds bit-cast
+/// rng words, so `f32` equality would choke on NaN payloads).
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn train_iter_chain_advances_counters() {
+    let g = graphs("cartpole", 16, 8, 32);
+    let mut state = g.init_state(0).unwrap();
+    for _ in 0..3 {
+        state = g.train_iter(&state).unwrap();
+    }
+    let m = g.metrics(&state).unwrap();
+    let man = &g.artifact.manifest;
+    assert_eq!(m[man.metric_index("iter").unwrap()], 3.0);
+    assert_eq!(m[man.metric_index("env_steps").unwrap()],
+               (3 * man.steps_per_iter) as f32);
+    assert!(m.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn rollout_advances_steps_but_not_iter_or_params() {
+    let g = graphs("cartpole", 8, 6, 32);
+    let state = g.init_state(5).unwrap();
+    let p0 = g.device.to_host(&g.get_params(&state).unwrap()).unwrap();
+    let state2 = g.rollout(&state).unwrap();
+    let p1 = g.device.to_host(&g.get_params(&state2).unwrap()).unwrap();
+    assert_eq!(p0, p1);
+    let m = g.metrics(&state2).unwrap();
+    let man = &g.artifact.manifest;
+    assert_eq!(m[man.metric_index("iter").unwrap()], 0.0);
+    assert_eq!(m[man.metric_index("env_steps").unwrap()],
+               man.steps_per_iter as f32);
+}
+
+#[test]
+fn get_set_params_roundtrip_and_avg2() {
+    let g = graphs("pendulum", 4, 4, 16);
+    let s1 = g.init_state(1).unwrap();
+    let s2 = g.init_state(2).unwrap();
+    let p1 = g.get_params(&s1).unwrap();
+    let p2 = g.get_params(&s2).unwrap();
+    let h1 = g.device.to_host(&p1).unwrap();
+    let h2 = g.device.to_host(&p2).unwrap();
+    assert_eq!(h1.len(), g.artifact.manifest.params_size);
+    assert_ne!(h1, h2, "distinct seeds must give distinct params");
+    // avg2 is the elementwise mean
+    let avg = g.device.to_host(&g.avg2(&p1, &p2).unwrap()).unwrap();
+    for i in 0..avg.len() {
+        assert!((avg[i] - 0.5 * (h1[i] + h2[i])).abs() < 1e-6);
+    }
+    // zero params, verify, restore — rest of the store untouched
+    let zero_host = vec![0f32; h1.len()];
+    let zeros = g.device.upload(&zero_host).unwrap();
+    let s_zero = g.set_params(&s1, &zeros).unwrap();
+    let pz = g.device.to_host(&g.get_params(&s_zero).unwrap()).unwrap();
+    assert!(pz.iter().all(|&x| x == 0.0));
+    let back = g.set_params(&s_zero, &p1).unwrap();
+    assert_eq!(bits(&g.download_state(&s1).unwrap()),
+               bits(&g.download_state(&back).unwrap()));
+}
+
+#[test]
+fn upload_download_roundtrip_is_exact_and_executable() {
+    let g = graphs("cartpole", 8, 4, 32);
+    let state = g.init_state(9).unwrap();
+    let host = g.download_state(&state).unwrap();
+    assert_eq!(host.len(), g.artifact.manifest.state_size);
+    let re = g.upload_state(&host).unwrap();
+    assert_eq!(bits(&host), bits(&g.download_state(&re).unwrap()));
+    // the uploaded buffer is executable: chain one iteration
+    let next = g.train_iter(&re).unwrap();
+    let m = g.metrics(&next).unwrap();
+    assert_eq!(m[g.artifact.manifest.metric_index("iter").unwrap()], 1.0);
+    // wrong-length upload is rejected
+    assert!(g.upload_state(&host[1..]).is_err());
+}
+
+#[test]
+fn store_view_decodes_synthetic_state() {
+    let g = graphs("cartpole", 8, 4, 32);
+    let state = g.init_state(3).unwrap();
+    let host = g.download_state(&state).unwrap();
+    let man = &g.artifact.manifest;
+    let view = StoreView::new(man, &host).unwrap();
+    // fresh cartpole physics state is within the gym init range
+    let phys = view.f32("env.state").unwrap();
+    assert_eq!(phys.len(), 4 * 8);
+    assert!(phys.iter().all(|x| x.abs() <= 0.05 + 1e-6));
+    // episode counters start at zero
+    assert!(view.f32("env.steps").unwrap().iter().all(|&x| x == 0.0));
+    // rng streams are live (nonzero) bit patterns
+    let key = view.u32("rng.env").unwrap();
+    assert_eq!(key.len(), 8 * 8);
+    assert!(key.iter().any(|&w| w != 0));
+    // stats zeroed, params segment is where the manifest says
+    assert_eq!(view.scalar("stat.iter").unwrap(), 0.0);
+    assert_eq!(view.params().len(), man.params_size);
+}
+
+#[test]
+fn trainer_run_reports_consistent_stats() {
+    let mut tr = trainer("cartpole", 32, 8, 32, 5, 0);
+    let stats = tr.run().unwrap();
+    assert_eq!(stats.iters_run, 5);
+    assert_eq!(stats.env_steps, (5 * 32 * 8) as f64);
+    assert_eq!(stats.agent_steps, stats.env_steps);
+    assert!(stats.steps_per_sec > 0.0);
+    assert!(stats.final_return.is_finite());
+    // phases recorded: compute + metrics, no transfer in resident mode
+    let phases: std::collections::BTreeMap<_, _> =
+        stats.phase_secs.iter().cloned().collect();
+    assert!(phases["compute"] > 0.0);
+    assert!(!phases.contains_key("transfer"));
+}
+
+#[test]
+fn training_improves_cartpole_return() {
+    let mut tr = trainer("cartpole", 16, 16, 32, 90, 0);
+    tr.init().unwrap();
+    for _ in 0..30 {
+        tr.step_train().unwrap();
+    }
+    let early = tr.record_metrics().unwrap().ep_return_ema;
+    for _ in 0..60 {
+        tr.step_train().unwrap();
+    }
+    let late = tr.record_metrics().unwrap().ep_return_ema;
+    assert!(late > early,
+            "cpu device did not improve: {early} -> {late}");
+}
+
+#[test]
+fn transfer_modes_compute_identical_states() {
+    // the host round-trip must be semantically invisible — only slower
+    let dir = std::env::temp_dir().join("warpsci_cpu_transfer");
+    let mut a = trainer("cartpole", 16, 8, 32, 3, 4);
+    a.mode = TransferMode::Resident;
+    a.run().unwrap();
+    let mut b = trainer("cartpole", 16, 8, 32, 3, 4);
+    b.mode = TransferMode::HostRoundTrip;
+    b.run().unwrap();
+    assert_eq!(a.log.last().unwrap().ep_return_ema,
+               b.log.last().unwrap().ep_return_ema);
+    assert_eq!(a.log.last().unwrap().env_steps,
+               b.log.last().unwrap().env_steps);
+    // identical parameters, too
+    a.checkpoint(&dir, "resident").unwrap();
+    b.checkpoint(&dir, "roundtrip").unwrap();
+    let ca = Checkpoint::load(&dir, "resident").unwrap();
+    let cb = Checkpoint::load(&dir, "roundtrip").unwrap();
+    assert_eq!(bits(&ca.params), bits(&cb.params));
+    // and the round-trip mode actually paid a transfer cost
+    assert!(b.timer.secs("transfer") > 0.0);
+    assert_eq!(a.timer.secs("transfer"), 0.0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn early_stop_on_target_return() {
+    let mut tr = trainer("cartpole", 16, 8, 32, 100_000, 0);
+    tr.set_target_return(Some(5.0)); // trivially reachable
+    let stats = tr.run().unwrap();
+    assert!(stats.iters_run < 100_000);
+    assert!(stats.reached_target_at.is_some());
+}
+
+#[test]
+fn checkpoint_roundtrip_restores_params() {
+    let dir = std::env::temp_dir().join("warpsci_cpu_ckpt");
+    let mut tr = trainer("cartpole", 16, 8, 32, 3, 2);
+    tr.run().unwrap();
+    tr.checkpoint(&dir, "t").unwrap();
+    let ck = Checkpoint::load(&dir, "t").unwrap();
+    assert_eq!(ck.tag, "cartpole_n16_t8");
+    assert_eq!(ck.params.len(), tr.graphs.artifact.manifest.params_size);
+
+    // restore into a fresh trainer: params must match exactly
+    let mut tr2 = trainer("cartpole", 16, 8, 32, 1, 99);
+    tr2.init().unwrap();
+    tr2.restore(&ck).unwrap();
+    tr2.checkpoint(&dir, "t2").unwrap();
+    let ck2 = Checkpoint::load(&dir, "t2").unwrap();
+    assert_eq!(ck.params, ck2.params);
+
+    // arity mismatch is rejected
+    let bad = Checkpoint { tag: ck.tag.clone(), iter: 0,
+                           params: vec![0.0; 3] };
+    assert!(tr2.restore(&bad).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn shard_metric_rows(shards: usize) -> Vec<MetricRow> {
+    let d = device(32);
+    let artifact = d.artifact("cartpole", 16, 8).unwrap();
+    let cfg = RunConfig {
+        env: "cartpole".into(),
+        n_envs: 16,
+        t: 8,
+        iters: 4,
+        seed: 0,
+        shards,
+        sync_every: 1,
+        ..Default::default()
+    };
+    let mut ms = MultiShardTrainer::new(&d, &artifact, cfg).unwrap();
+    let mut rows = Vec::new();
+    for i in 0..4 {
+        ms.step(i).unwrap();
+        rows.push(ms.metrics(0.0).unwrap());
+    }
+    assert_eq!(ms.sync_count, if shards > 1 { 4 } else { 0 });
+    rows
+}
+
+#[test]
+fn multi_shard_rows_are_finite_and_reproducible() {
+    for shards in [1usize, 4] {
+        let a = shard_metric_rows(shards);
+        let b = shard_metric_rows(shards);
+        assert_eq!(a, b, "shards={shards} must be run-to-run identical");
+        for row in &a {
+            assert!(row.pi_loss.is_finite(), "shards={shards}");
+            assert!(row.v_loss.is_finite(), "shards={shards}");
+            assert!(row.entropy > 0.0, "shards={shards}");
+            assert!(row.ep_return_ema.is_finite(), "shards={shards}");
+        }
+        assert_eq!(a.last().unwrap().iter, 4.0);
+    }
+}
+
+#[test]
+fn tree_average_of_identical_params_is_fixed_point() {
+    let d = device(16);
+    let artifact = d.artifact("cartpole", 8, 4).unwrap();
+    let cfg = RunConfig {
+        env: "cartpole".into(),
+        n_envs: 8,
+        t: 4,
+        iters: 1,
+        seed: 0,
+        shards: 4,
+        sync_every: 1,
+        ..Default::default()
+    };
+    // non-power-of-two shard counts are rejected up front (pairwise
+    // avg2 tree-averaging would weight shards unequally)
+    let bad = RunConfig { shards: 3, ..cfg.clone() };
+    assert!(MultiShardTrainer::new(&d, &artifact, bad).is_err());
+    let mut ms = MultiShardTrainer::new(&d, &artifact, cfg).unwrap();
+    // distinct seeds -> shards start with different params
+    let before = ms.shard_params().unwrap();
+    assert!(before.windows(2).any(|w| w[0] != w[1]));
+    // first sync equalizes every shard
+    ms.sync_params().unwrap();
+    let p1 = ms.shard_params().unwrap();
+    assert!(p1.windows(2).all(|w| w[0] == w[1]));
+    // averaging identical params is the identity (bitwise)
+    ms.sync_params().unwrap();
+    let p2 = ms.shard_params().unwrap();
+    assert_eq!(bits(&p1[0]), bits(&p2[0]));
+    assert_eq!(ms.sync_count, 2);
+}
+
+/// The CPU device chains the same math as the optimized `CpuEngine`
+/// backend: identical seeds must give bit-identical parameter
+/// trajectories (the EMAs differ only in fold precision).
+#[test]
+fn cpu_device_matches_cpu_engine_bit_for_bit() {
+    let (env, n, t, hidden, seed) = ("cartpole", 8, 16, 32, 9);
+    let d = device(hidden);
+    let artifact = d.artifact(env, n, t).unwrap();
+    let g = GraphSet::compile(&d, artifact).unwrap();
+    let mut state = g.init_state(seed).unwrap();
+    for _ in 0..3 {
+        state = g.train_iter(&state).unwrap();
+    }
+    let dev_params =
+        g.device.to_host(&g.get_params(&state).unwrap()).unwrap();
+
+    let mut eng = CpuEngine::new(CpuEngineConfig {
+        threads: 2,
+        hidden,
+        seed,
+        ..CpuEngineConfig::new(env, n, t)
+    })
+    .unwrap();
+    for _ in 0..3 {
+        eng.train_iter().unwrap();
+    }
+    let p = eng.policy();
+    let flat: Vec<f32> = [&p.w1, &p.b1, &p.w2, &p.b2, &p.wp, &p.bp,
+                          &p.wv, &p.bv]
+        .iter()
+        .flat_map(|v| v.iter().copied())
+        .collect();
+    assert_eq!(bits(&dev_params), bits(&flat),
+               "parameter trajectories diverged");
+
+    let raw = g.metrics(&state).unwrap();
+    let dev_row =
+        MetricRow::decode(&g.artifact.manifest, &raw, 0.0).unwrap();
+    let eng_row = eng.metrics_row(0.0).unwrap();
+    assert_eq!(dev_row.iter, eng_row.iter);
+    assert_eq!(dev_row.env_steps, eng_row.env_steps);
+    assert_eq!(dev_row.episodes_done, eng_row.episodes_done);
+    assert_eq!(dev_row.pi_loss as f32, eng_row.pi_loss as f32);
+    assert_eq!(dev_row.v_loss as f32, eng_row.v_loss as f32);
+    assert_eq!(dev_row.entropy as f32, eng_row.entropy as f32);
+    assert_eq!(dev_row.grad_norm as f32, eng_row.grad_norm as f32);
+    let tol = 1e-3 * eng_row.ep_return_ema.abs().max(1.0);
+    assert!((dev_row.ep_return_ema - eng_row.ep_return_ema).abs() < tol,
+            "{} vs {}", dev_row.ep_return_ema, eng_row.ep_return_ema);
+}
+
+#[test]
+fn transfer_ablation_runs_under_default_features() {
+    let dir = std::env::temp_dir().join("warpsci_cpu_ablation");
+    std::fs::create_dir_all(&dir).unwrap();
+    let opts = HarnessOpts {
+        out_dir: dir.clone(),
+        iters: 2,
+        ..Default::default()
+    };
+    warpsci::harness::ablation::ablation_transfer(&opts, "cartpole_n8_t4")
+        .unwrap();
+    let csv =
+        std::fs::read_to_string(dir.join("ablation_transfer.csv")).unwrap();
+    assert_eq!(csv.lines().count(), 3, "{csv}");
+    assert!(csv.contains("resident"), "{csv}");
+    assert!(csv.contains("host_roundtrip"), "{csv}");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -3,13 +3,13 @@
 //! Requires `make artifacts` (the default suite includes
 //! `cartpole_n64_t16`, used here because it compiles fastest).
 
-use warpsci::runtime::{executor::buffer_to_host, Artifact, Device,
-                       GraphSet};
+use warpsci::runtime::{pjrt::buffer_to_host, Artifact, Device,
+                       DeviceBackend, GraphSet};
 use warpsci::store::StoreView;
 
 const TAG: &str = "cartpole_n64_t16";
 
-fn graphs() -> GraphSet {
+fn graphs() -> GraphSet<Device> {
     let root = warpsci::artifacts_dir();
     let artifact = Artifact::load(&root, TAG).expect(
         "artifacts missing — run `make artifacts` before `cargo test`");
@@ -80,11 +80,8 @@ fn get_set_params_roundtrip_on_device() {
     let pv = buffer_to_host(&params).unwrap();
     assert_eq!(pv.len(), g.artifact.manifest.params_size);
     // zero the params, verify, then restore
-    let zeros = g
-        .device
-        .client()
-        .buffer_from_host_buffer(&vec![0f32; pv.len()], &[pv.len()], None)
-        .unwrap();
+    let zero_host = vec![0f32; pv.len()];
+    let zeros = g.device.upload(&zero_host).unwrap();
     let state2 = g.set_params(&state, &zeros).unwrap();
     let pv2 = buffer_to_host(&g.get_params(&state2).unwrap()).unwrap();
     assert!(pv2.iter().all(|&x| x == 0.0));

@@ -9,7 +9,7 @@ use warpsci::store::Checkpoint;
 
 const TAG: &str = "cartpole_n64_t16";
 
-fn setup(iters: usize, seed: u64) -> Trainer {
+fn setup(iters: usize, seed: u64) -> Trainer<Device> {
     let root = warpsci::artifacts_dir();
     let artifact = Artifact::load(&root, TAG).expect(
         "artifacts missing — run `make artifacts` before `cargo test`");

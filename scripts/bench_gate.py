@@ -1,0 +1,72 @@
+#!/usr/bin/env python3
+"""Bench sanity + regression gate for BENCH_engine.json.
+
+Usage: bench_gate.py <fresh BENCH_engine.json> <committed BENCH_baseline.json>
+
+Two checks:
+
+1. Sanity — the fresh run produced well-formed records covering both the
+   fused and unfused roll-out sweeps, with positive throughput.
+2. Regression gate — every `fused_rollout/*` record named in the committed
+   baseline must reach at least HALF of its baseline `items_per_sec`.
+   The 2x tolerance is deliberate: CI runs on shared hardware, and the
+   committed baseline holds conservative floor values, so only
+   order-of-magnitude regressions (accidental debug-mode, O(n^2) paths,
+   lost parallelism) trip the gate — not runner noise.
+
+A missing baseline file is a hard error (it is committed at the repo
+root); a baseline record whose name has no fresh counterpart is also an
+error, so renames must update the baseline.
+"""
+
+import json
+import sys
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    fresh_path, baseline_path = sys.argv[1], sys.argv[2]
+    with open(fresh_path) as f:
+        records = json.load(f)
+    assert records, f"{fresh_path} is empty"
+    by_name = {}
+    for r in records:
+        assert r["items_per_sec"] > 0, r
+        assert r["mean_secs"] > 0, r
+        by_name[r["name"]] = r
+    names = set(by_name)
+    assert any(n.startswith("fused_rollout/") for n in names), names
+    assert any(n.startswith("unfused_rollout/") for n in names), names
+    print(f"{len(records)} bench records OK")
+
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    failures = []
+    for b in baseline:
+        name = b["name"]
+        floor = b["items_per_sec"] / 2.0
+        fresh = by_name.get(name)
+        if fresh is None:
+            failures.append(f"{name}: in baseline but missing from fresh "
+                            f"run — update {baseline_path}?")
+            continue
+        got = fresh["items_per_sec"]
+        status = "OK " if got >= floor else "FAIL"
+        print(f"  {status} {name}: {got:,.0f} items/s "
+              f"(gate: >= {floor:,.0f})")
+        if got < floor:
+            failures.append(f"{name}: {got:,.0f} < {floor:,.0f} "
+                            f"(baseline {b['items_per_sec']:,.0f} / 2)")
+    if failures:
+        print("\nbench regression gate FAILED:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print(f"regression gate OK ({len(baseline)} baseline records)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
