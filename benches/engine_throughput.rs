@@ -1,20 +1,24 @@
-//! Bench: the SoA batch engine — raw vector stepping, plus a
-//! thread-count × environment sweep of the fused in-worker roll-out
-//! against the seed architecture (serial inference + per-tick engine
-//! step), i.e. the paper's "thousands of concurrent environments on one
-//! device" axis realized on CPU.
+//! Bench: the SoA batch engine — raw vector stepping, a thread-count ×
+//! environment sweep of the fused in-worker roll-out against the seed
+//! architecture (serial inference + per-tick engine step), a per-env
+//! fused steps/sec sweep, and microbenchmarks of the `nn::kernels`
+//! compute layer (tiled GEMM vs the scalar reference — the kernel-path
+//! on/off toggle), i.e. the paper's "thousands of concurrent
+//! environments on one device" axis realized on CPU.
 //!
 //! Each result is printed human-readably and as one JSON line, and the
 //! whole run is written as a JSON array to `BENCH_engine.json` at the
-//! repo root — the perf-trajectory baseline for future changes.
+//! repo root — the perf-trajectory baseline for future changes
+//! (`scripts/bench_gate.py` gates the `fused_rollout/*`, `gemm_tile/*`
+//! and `policy_forward/tiled/*` records against `BENCH_baseline.json`).
 //!
 //! Env overrides: `WARPSCI_BENCH_FAST=1` for a smoke run.
 
 use warpsci::bench::Bench;
 use warpsci::coordinator::{Backend, CpuEngine, CpuEngineConfig};
 use warpsci::engine::BatchEngine;
-use warpsci::nn::mlp::Cache;
-use warpsci::nn::Mlp;
+use warpsci::nn::mlp::{Cache, RefCache};
+use warpsci::nn::{kernels, Mlp, TiledPolicy};
 use warpsci::util::{Json, Pcg64};
 
 /// The roll-out structure of the seed architecture: policy forward +
@@ -22,16 +26,16 @@ use warpsci::util::{Json, Pcg64};
 /// shared action stream, then one engine round per tick — the
 /// serial-inference / parallel-step alternation the fused roll-out
 /// eliminates.  Note the per-tick rounds here already run on the
-/// persistent pool (the seed's scoped spawn/join no longer exists in
-/// the tree), so this sweep isolates the *fusion* win; the
-/// spawn-elimination win comes on top when comparing against a real
-/// seed checkout.
+/// persistent pool and the forward already runs on the tiled kernels,
+/// so this sweep isolates the *fusion* win; the kernel win itself is
+/// measured by the `policy_forward/*` pair below.
 struct UnfusedRollout {
     engine: BatchEngine,
-    policy: Mlp,
+    tiled: TiledPolicy,
     rng: Pcg64,
     cache: Cache,
     actions: Vec<u32>,
+    row: Vec<f32>,
 }
 
 impl UnfusedRollout {
@@ -42,12 +46,14 @@ impl UnfusedRollout {
         let policy = Mlp::init(engine.obs_dim(), 64, engine.n_actions(),
                                &mut init_rng);
         let rows = n_envs * engine.n_agents();
+        let n_actions = engine.n_actions();
         UnfusedRollout {
             engine,
-            policy,
+            tiled: TiledPolicy::new(&policy),
             rng: Pcg64::with_stream(0, u64::MAX - 2),
             cache: Cache::default(),
             actions: vec![0; rows],
+            row: vec![0.0; n_actions],
         }
     }
 
@@ -55,11 +61,12 @@ impl UnfusedRollout {
         let rows = self.engine.n_envs() * self.engine.n_agents();
         let n_actions = self.engine.n_actions();
         for _ in 0..t {
-            self.policy.forward(&self.engine.obs, rows, &mut self.cache);
+            self.tiled.forward(&self.engine.obs, rows, &mut self.cache);
             for row in 0..rows {
-                let lp = &self.cache.logp
-                    [row * n_actions..(row + 1) * n_actions];
-                self.actions[row] = self.rng.categorical(lp) as u32;
+                for j in 0..n_actions {
+                    self.row[j] = self.cache.logp[j * rows + row];
+                }
+                self.actions[row] = self.rng.categorical(&self.row) as u32;
             }
             self.engine.step(&self.actions);
         }
@@ -76,6 +83,77 @@ fn main() -> anyhow::Result<()> {
         println!("{json}");
         records.push(json);
     };
+
+    // nn kernel micro-benches: one dense tanh layer at the training
+    // shape (4096 rows x 64 -> 64), tiled vs the scalar reference loop —
+    // the isolated kernel-path on/off comparison
+    {
+        let (n, in_dim, out_dim) = (4096usize, 64usize, 64usize);
+        let mut rng = Pcg64::new(1);
+        let x_cols: Vec<f32> =
+            (0..n * in_dim).map(|_| rng.normal()).collect();
+        let wt: Vec<f32> =
+            (0..out_dim * in_dim).map(|_| rng.normal() * 0.1).collect();
+        let bias: Vec<f32> = (0..out_dim).map(|_| rng.normal()).collect();
+        let mut out = vec![0f32; n * out_dim];
+        let r = bench.run(
+            &format!("gemm_tile/dense{in_dim}x{out_dim}/n{n}"),
+            n as f64,
+            || {
+                kernels::dense_cols(&x_cols, n, in_dim, &wt, &bias,
+                                    out_dim, true, &mut out);
+            });
+        emit(&mut records, &r);
+
+        // the pre-kernel inner loop: row-major x, stride-`out_dim`
+        // weight reads, one scalar accumulator per output
+        let mut x_rows = vec![0f32; n * in_dim];
+        kernels::transpose(&x_cols, in_dim, n, &mut x_rows);
+        let mut w = vec![0f32; in_dim * out_dim];
+        kernels::transpose(&wt, out_dim, in_dim, &mut w);
+        let r = bench.run(
+            &format!("gemm_scalar/dense{in_dim}x{out_dim}/n{n}"),
+            n as f64,
+            || {
+                for i in 0..n {
+                    let xi = &x_rows[i * in_dim..(i + 1) * in_dim];
+                    for j in 0..out_dim {
+                        let mut acc = bias[j];
+                        for k in 0..in_dim {
+                            acc += xi[k] * w[k * out_dim + j];
+                        }
+                        out[i * out_dim + j] = acc.tanh();
+                    }
+                }
+            });
+        emit(&mut records, &r);
+    }
+
+    // full policy forward (2x64 tanh + heads), tiled kernels vs the
+    // scalar reference oracle on an identical batch
+    {
+        let (n, od, acts) = (4096usize, 4usize, 2usize);
+        let mut rng = Pcg64::new(2);
+        let policy = Mlp::init(od, 64, acts, &mut rng);
+        let tiled = TiledPolicy::new(&policy);
+        let x_rows: Vec<f32> = (0..n * od).map(|_| rng.normal()).collect();
+        let mut x_cols = vec![0f32; n * od];
+        kernels::transpose(&x_rows, n, od, &mut x_cols);
+        let mut cache = Cache::default();
+        let r = bench.run(&format!("policy_forward/tiled/n{n}"), n as f64,
+                          || {
+                              tiled.forward(&x_cols, n, &mut cache);
+                          });
+        emit(&mut records, &r);
+        let mut ref_cache = RefCache::default();
+        let r = bench.run(&format!("policy_forward/scalar/n{n}"),
+                          n as f64,
+                          || {
+                              policy.forward_ref(&x_rows, n,
+                                                 &mut ref_cache);
+                          });
+        emit(&mut records, &r);
+    }
 
     // raw SoA stepping (no policy): constant action pattern per lane
     for (n_envs, threads) in [(4096usize, 1usize), (4096, 2), (4096, 4),
@@ -146,6 +224,22 @@ fn main() -> anyhow::Result<()> {
                 });
             emit(&mut records, &r);
         }
+    }
+
+    // per-env fused steps/sec at the headline shard count (cartpole and
+    // covid_econ are covered by the sweep above)
+    for env in ["acrobot", "pendulum", "catalysis_lh"] {
+        let mut eng = CpuEngine::new(CpuEngineConfig {
+            threads: 4,
+            ..CpuEngineConfig::new(env, 4096, 8)
+        })?;
+        let r = bench.run(
+            &format!("fused_rollout/{env}/n4096/t8/threads4"),
+            eng.steps_per_iter() as f64,
+            || {
+                eng.rollout_iter().unwrap();
+            });
+        emit(&mut records, &r);
     }
 
     // fused roll-out + A2C train iteration

@@ -18,7 +18,7 @@ use warpsci::envs::catalysis::{mb_energy, Catalysis, Mechanism,
                                MIN_PRODUCT};
 use warpsci::envs::CpuEnv;
 use warpsci::nn::mlp::Cache;
-use warpsci::nn::Mlp;
+use warpsci::nn::{Mlp, TiledPolicy};
 use warpsci::runtime::{CpuDevice, GraphSet};
 use warpsci::store::Checkpoint;
 use warpsci::util::Pcg64;
@@ -73,12 +73,14 @@ fn replay(mech: Mechanism, ck: &Checkpoint) -> Result<()> {
     let mut prng = Pcg64::new(42);
     env.reset(&mut prng);
     env.perturb = 0.0; // canonical surface for the printed path
+    let tiled = TiledPolicy::new(&mlp);
     let mut cache = Cache::default();
     let mut path = vec![(env.x, env.y, env.energy())];
     for _ in 0..200 {
+        // a single observation row is the same bytes column-major
         let mut o = [0f32; 4];
         env.write_obs(&mut o);
-        mlp.forward(&o, 1, &mut cache);
+        tiled.forward(&o, 1, &mut cache);
         let action = cache.logp[..acts]
             .iter()
             .enumerate()

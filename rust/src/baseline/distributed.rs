@@ -14,7 +14,7 @@ use anyhow::{ensure, Result};
 
 use crate::envs::make_cpu_env;
 use crate::nn::mlp::Cache;
-use crate::nn::{Adam, Mlp};
+use crate::nn::{Adam, Mlp, TiledPolicy};
 use crate::util::{Pcg64, Timer};
 
 use super::transfer::{deserialize_params_into, serialize_params,
@@ -79,6 +79,8 @@ impl PhaseBreakdown {
 pub struct DistributedSystem {
     pub cfg: DistributedConfig,
     pub trainer: Mlp,
+    /// Kernel view of `trainer`, refreshed once per update.
+    tiled: TiledPolicy,
     adam: Adam,
     workers: Vec<RolloutWorker>,
     pub timer: Timer,
@@ -115,6 +117,7 @@ impl DistributedSystem {
         Ok(DistributedSystem {
             adam: Adam::new(cfg.lr, &shapes),
             cfg,
+            tiled: TiledPolicy::new(&trainer),
             trainer,
             workers,
             timer: Timer::new(),
@@ -164,23 +167,24 @@ impl DistributedSystem {
     /// A2C update over all collected batches (n-step returns).
     fn update(&mut self, batches: &[TrajectoryBatch]) -> Result<()> {
         let mut grads = self.trainer.zeros_like();
+        self.tiled.refresh(&self.trainer);
         for b in batches {
             let rows = (b.n_envs * b.n_agents) as usize;
             let t = b.t as usize;
-            // trainer-side forward over every transition
-            self.trainer
-                .forward(&b.obs, rows * t, &mut self.cache);
+            // trainer-side forward over every transition (the batch's
+            // obs arrive in the engine's column-major SoA layout)
+            self.tiled.forward(&b.obs, rows * t, &mut self.cache);
             // bootstrap values from the post-roll-out observations
             let mut boot_cache = Cache::default();
-            self.trainer.forward(&b.bootstrap_obs, rows, &mut boot_cache);
+            self.tiled.forward(&b.bootstrap_obs, rows, &mut boot_cache);
             // n-step returns per (env, agent) stream (shared estimator)
             let returns = crate::nn::nstep_returns(
                 &b.rewards, &b.dones, &boot_cache.value,
                 b.n_envs as usize, b.n_agents as usize, t, self.cfg.gamma);
             let adv = crate::nn::normalized_advantages(&returns,
                                                        &self.cache.value);
-            self.trainer.backward_a2c(&self.cache, &b.actions, &adv,
-                                      &returns, self.cfg.vf_coef,
+            self.trainer.backward_a2c(&b.obs, &self.cache, &b.actions,
+                                      &adv, &returns, self.cfg.vf_coef,
                                       self.cfg.ent_coef, &mut grads);
             self.return_sum += b.finished_returns.iter()
                 .map(|&r| r as f64).sum::<f64>();

@@ -18,7 +18,9 @@ pub struct TrajectoryBatch {
     pub n_envs: u32,
     pub n_agents: u32,
     pub obs_dim: u32,
-    /// (t * n_envs * n_agents * obs_dim)
+    /// (t * n_envs * n_agents * obs_dim), **column-major**
+    /// `[obs_dim][t * rows]` (the engine's SoA trajectory layout — the
+    /// trainer's tiled forward consumes it without a transpose)
     pub obs: Vec<f32>,
     /// (t * n_envs * n_agents)
     pub actions: Vec<u32>,
@@ -26,8 +28,9 @@ pub struct TrajectoryBatch {
     pub rewards: Vec<f32>,
     /// (t * n_envs) — env-level episode end (terminated or truncated)
     pub dones: Vec<f32>,
-    /// (n_envs * n_agents * obs_dim) — observations after the last step,
-    /// for bootstrap value estimation at the trainer
+    /// (n_envs * n_agents * obs_dim), column-major `[obs_dim][rows]` —
+    /// observations after the last step, for bootstrap value estimation
+    /// at the trainer
     pub bootstrap_obs: Vec<f32>,
     /// (n_envs * n_agents) — completed-episode returns for telemetry
     pub finished_returns: Vec<f32>,

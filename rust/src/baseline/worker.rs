@@ -13,7 +13,7 @@
 use anyhow::Result;
 
 use crate::engine::{BatchEngine, TrajectorySlices};
-use crate::nn::Mlp;
+use crate::nn::{Mlp, TiledPolicy};
 
 use super::transfer::TrajectoryBatch;
 
@@ -21,13 +21,17 @@ use super::transfer::TrajectoryBatch;
 pub struct RolloutWorker {
     pub engine: BatchEngine,
     pub policy: Mlp,
+    /// Kernel view of `policy`, re-derived per roll-out (the trainer
+    /// overwrites `policy` with every parameter broadcast).
+    tiled: TiledPolicy,
 }
 
 impl RolloutWorker {
     pub fn new(env: &str, n_envs: usize, policy: Mlp, seed: u64)
                -> Result<RolloutWorker> {
         let engine = BatchEngine::by_name(env, n_envs, 1, seed)?;
-        Ok(RolloutWorker { engine, policy })
+        Ok(RolloutWorker { engine, tiled: TiledPolicy::new(&policy),
+                           policy })
     }
 
     /// Simulate `t` steps in every env; auto-reset on done.
@@ -51,7 +55,8 @@ impl RolloutWorker {
             finished_lens: Vec::new(),
             finished_count: 0,
         };
-        self.engine.fused_rollout(&self.policy, t, Some(TrajectorySlices {
+        self.tiled.refresh(&self.policy);
+        self.engine.fused_rollout(&self.tiled, t, Some(TrajectorySlices {
             obs: &mut batch.obs,
             actions: &mut batch.actions,
             rewards: &mut batch.rewards,
@@ -120,9 +125,16 @@ mod tests {
     fn repeated_rollouts_are_a_contiguous_stream() {
         // the fused path keeps the engine's lane state across calls: the
         // first obs of roll-out k+1 is the bootstrap obs of roll-out k
+        // (compared per SoA column: traj obs are [od][t * rows],
+        // bootstrap obs [od][rows])
         let mut w = worker("cartpole", 2);
         let a = w.rollout(4);
         let b = w.rollout(4);
-        assert_eq!(&a.bootstrap_obs[..], &b.obs[..a.bootstrap_obs.len()]);
+        let (rows, od, t) = (2usize, 4usize, 4usize);
+        for f in 0..od {
+            assert_eq!(&a.bootstrap_obs[f * rows..(f + 1) * rows],
+                       &b.obs[f * t * rows..f * t * rows + rows],
+                       "column {f}");
+        }
     }
 }

@@ -22,7 +22,7 @@ use anyhow::Result;
 
 use crate::engine::{BatchEngine, TrajectorySlices};
 use crate::nn::mlp::Cache;
-use crate::nn::{Adam, Mlp};
+use crate::nn::{Adam, Mlp, TiledPolicy};
 use crate::util::{Pcg64, Timer};
 
 use super::backend::Backend;
@@ -96,6 +96,10 @@ pub struct CpuEngine {
     pub cfg: CpuEngineConfig,
     engine: BatchEngine,
     policy: Mlp,
+    /// Kernel-ready transposed-weight view of `policy`, refreshed at
+    /// the top of every iteration (i.e. after every Adam update) so it
+    /// can never go stale.
+    tiled: TiledPolicy,
     adam: Adam,
     cache: Cache,
     boot_cache: Cache,
@@ -139,6 +143,7 @@ impl CpuEngine {
         Ok(CpuEngine {
             adam: Adam::new(cfg.lr, &policy.param_shapes()),
             engine,
+            tiled: TiledPolicy::new(&policy),
             policy,
             cache: Cache::default(),
             boot_cache: Cache::default(),
@@ -207,9 +212,11 @@ impl CpuEngine {
         let rows = n_envs * na;
         let total = rows * t;
 
-        // trainer forward over every transition + bootstrap values
-        self.policy.forward(&self.traj_obs, total, &mut self.cache);
-        self.policy.forward(&self.engine.obs, rows, &mut self.boot_cache);
+        // trainer forward over every transition + bootstrap values —
+        // both straight over the engine's column-major SoA buffers, no
+        // transpose or copy anywhere
+        self.tiled.forward(&self.traj_obs, total, &mut self.cache);
+        self.tiled.forward(&self.engine.obs, rows, &mut self.boot_cache);
 
         let returns = crate::nn::nstep_returns(
             &self.traj_rewards, &self.traj_dones, &self.boot_cache.value,
@@ -219,8 +226,8 @@ impl CpuEngine {
 
         let mut grads = self.policy.zeros_like();
         let (pi_loss, v_loss, entropy) = self.policy.backward_a2c(
-            &self.cache, &self.traj_actions, &adv, &returns,
-            self.cfg.vf_coef, self.cfg.ent_coef, &mut grads);
+            &self.traj_obs, &self.cache, &self.traj_actions, &adv,
+            &returns, self.cfg.vf_coef, self.cfg.ent_coef, &mut grads);
         let gn = grads.global_norm();
         if gn > self.cfg.max_grad_norm {
             grads.scale(self.cfg.max_grad_norm / gn);
@@ -243,12 +250,15 @@ impl CpuEngine {
         let n_envs = self.engine.n_envs();
         let rows = n_envs * self.engine.n_agents();
         let od = self.engine.obs_dim();
+        // re-derive the transposed kernel layouts from the (possibly
+        // just-updated) policy before the workers touch them
+        self.tiled.refresh(&self.policy);
         let phases = if train {
             self.traj_obs.resize(t * rows * od, 0.0);
             self.traj_actions.resize(t * rows, 0);
             self.traj_rewards.resize(t * rows, 0.0);
             self.traj_dones.resize(t * n_envs, 0.0);
-            self.engine.fused_rollout(&self.policy, t,
+            self.engine.fused_rollout(&self.tiled, t,
                                       Some(TrajectorySlices {
                                           obs: &mut self.traj_obs,
                                           actions: &mut self.traj_actions,
@@ -256,7 +266,7 @@ impl CpuEngine {
                                           dones: &mut self.traj_dones,
                                       }))
         } else {
-            self.engine.fused_rollout(&self.policy, t, None)
+            self.engine.fused_rollout(&self.tiled, t, None)
         };
         self.timer.add("inference",
                        Duration::from_secs_f64(phases.inference_secs));

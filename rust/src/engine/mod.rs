@@ -24,10 +24,21 @@
 //!   is needed between ticks and the serial-inference / parallel-step /
 //!   join alternation of the per-tick path disappears.
 //!
+//! Observations are SoA end-to-end: every kernel emits **column-major**
+//! `[obs_dim][rows]` observation blocks straight from the field-major
+//! state ([`BatchEnv::write_obs_cols`] — a plain per-field copy for most
+//! environments), the tiled policy kernels
+//! ([`crate::nn::TiledPolicy::sample_actions_lanes`]) consume those
+//! columns directly, and trajectory capture copies the same columns
+//! into the global `[obs_dim][t * rows]` record — there is no
+//! array-of-structs gather anywhere between the simulation state and
+//! the matmul, the CPU analogue of the paper's zero-copy store.
+//!
 //! Determinism: every lane owns its own [`Pcg64`] *environment* stream
 //! seeded by `(seed, global lane index)` plus its own *action-sampling*
-//! stream at `(seed, ACTION_STREAM_BASE + global lane index)`, and lane
-//! math never reads a neighbouring lane's RNG — so results are
+//! stream at `(seed, ACTION_STREAM_BASE + global lane index)`, lane
+//! math never reads a neighbouring lane's RNG, and the tiled kernels
+//! give every batch row its own accumulator chain — so results are
 //! **bit-identical for any thread count**, pinned by
 //! `tests/engine_determinism.rs` and `tests/fused_rollout.rs`.
 //! Completed-episode telemetry is drained in global `(tick, lane)` order
@@ -38,7 +49,7 @@ pub mod pool;
 use anyhow::{bail, Result};
 
 use crate::envs;
-use crate::nn::{Mlp, SampleScratch};
+use crate::nn::{SampleScratch, TiledPolicy};
 use crate::util::Pcg64;
 
 use pool::{SendConstPtr, SendPtr, WorkerPool};
@@ -73,22 +84,19 @@ pub trait BatchEnv: Send + Sync {
     /// Reset lane `i` of an `n`-lane shard to a fresh episode.
     fn reset_lane(&self, state: &mut [f32], n: usize, i: usize,
                   rng: &mut Pcg64);
-    /// Write lane `i`'s observation (`n_agents * obs_dim` floats).
-    fn write_obs_lane(&self, state: &[f32], n: usize, i: usize,
-                      out: &mut [f32]);
     /// Advance every lane one step.  `actions` is `[lane][agent]`,
     /// `rewards` is `[lane][agent]`; `dones[i]` is set to 1.0 on
     /// termination (truncation is the engine's job).
     fn step_all(&self, state: &mut [f32], n: usize, actions: &[u32],
                 rngs: &mut [Pcg64], rewards: &mut [f32], dones: &mut [f32]);
-    /// Write every lane's observation.  One virtual call per shard-tick;
-    /// the default loops the (statically dispatched) per-lane writer.
-    fn write_obs_all(&self, state: &[f32], n: usize, out: &mut [f32]) {
-        let w = self.n_agents() * self.obs_dim();
-        for (i, chunk) in out.chunks_exact_mut(w).enumerate().take(n) {
-            self.write_obs_lane(state, n, i, chunk);
-        }
-    }
+    /// Write every lane's observation **column-major**: feature `f` of
+    /// observation row `r = lane * n_agents + agent` goes to
+    /// `out[f * (n * n_agents) + r]`.  One virtual call per shard-tick;
+    /// for single-agent environments whose observations are raw state
+    /// fields this is a straight per-field `memcpy` out of the SoA
+    /// state, and the tiled policy kernels consume the columns with no
+    /// further gather.
+    fn write_obs_cols(&self, state: &[f32], n: usize, out: &mut [f32]);
 }
 
 /// Build a batch kernel by registry name.
@@ -138,6 +146,11 @@ struct Shard {
     finished_lens: Vec<f32>,
     /// Engine ticks executed (identical across shards: lockstep rounds).
     tick: u64,
+    /// Shard-local SoA observations, column-major
+    /// `[obs_dim][n * n_agents]` — always in sync with `state`, refreshed
+    /// at the end of every tick and consumed directly by the tiled
+    /// policy kernels.
+    obs_cols: Vec<f32>,
     /// Fused-rollout action scratch, `[lane][agent]` (`n * n_agents`).
     actions: Vec<u32>,
     /// Fused-rollout inference scratch (policy-only forward rows).
@@ -150,10 +163,11 @@ struct Shard {
 
 /// Borrowed per-iteration trajectory buffers filled in-worker by
 /// [`BatchEngine::fused_rollout`]:
-/// `obs` is `[step][env][agent][obs_dim]`, `actions`/`rewards` are
-/// `[step][env][agent]`, `dones` is `[step][env]` — all row-major over
-/// the *global* replica index, so each shard writes disjoint strided
-/// slices and no post-roll-out gather is needed.
+/// `obs` is **column-major** `[obs_dim][t * rows]` (observation row
+/// `step * rows + env * n_agents + agent`), ready for the trainer's
+/// tiled forward with no transpose; `actions`/`rewards` are
+/// `[step][env][agent]`, `dones` is `[step][env]`.  Each shard writes
+/// disjoint strided slices, so no post-roll-out gather is needed.
 pub struct TrajectorySlices<'a> {
     pub obs: &'a mut [f32],
     pub actions: &'a mut [u32],
@@ -184,7 +198,10 @@ pub struct BatchEngine {
     shards: Vec<Shard>,
     threads: usize,
     n_envs: usize,
-    /// Current observations, `[env][agent][obs_dim]` row-major.
+    /// Current observations, **column-major** `[obs_dim][rows]` with
+    /// observation row `r = env * n_agents + agent` — the same SoA
+    /// convention as the trajectory record, consumable by the tiled
+    /// policy kernels as-is (bootstrap forward).
     pub obs: Vec<f32>,
     /// Rewards of the last step, `[env][agent]`.
     pub rewards: Vec<f32>,
@@ -216,7 +233,7 @@ struct StepRound {
 #[derive(Clone, Copy)]
 struct FusedRound {
     env: SendConstPtr<dyn BatchEnv>,
-    policy: SendConstPtr<Mlp>,
+    policy: SendConstPtr<TiledPolicy>,
     shards: SendPtr<Shard>,
     obs: SendPtr<f32>,
     rewards: SendPtr<f32>,
@@ -266,6 +283,7 @@ impl BatchEngine {
                 finished_returns: Vec::new(),
                 finished_lens: Vec::new(),
                 tick: 0,
+                obs_cols: vec![0.0; env.obs_dim() * n * na],
                 actions: vec![0; n * na],
                 scratch: SampleScratch::default(),
                 inference_secs: 0.0,
@@ -363,10 +381,11 @@ impl BatchEngine {
     /// workers — one parallel region for the whole roll-out, no per-tick
     /// spawn/join or serial-inference phase.  On return `obs` holds the
     /// post-roll-out observations (bootstrap values), `rewards`/`dones`
-    /// the final tick's values, and `traj` (when given) the full
-    /// `[step][env][agent]` record.  Returns the critical-path phase
-    /// split (max across shards, see [`RolloutPhases`]).
-    pub fn fused_rollout(&mut self, policy: &Mlp, t: usize,
+    /// the final tick's values, and `traj` (when given) the full record
+    /// (see [`TrajectorySlices`] for the layouts).  Returns the
+    /// critical-path phase split (max across shards, see
+    /// [`RolloutPhases`]).
+    pub fn fused_rollout(&mut self, policy: &TiledPolicy, t: usize,
                          mut traj: Option<TrajectorySlices<'_>>)
                          -> RolloutPhases {
         if t == 0 {
@@ -403,7 +422,7 @@ impl BatchEngine {
             };
         let round = FusedRound {
             env: SendConstPtr(self.env.as_ref() as *const dyn BatchEnv),
-            policy: SendConstPtr(policy as *const Mlp),
+            policy: SendConstPtr(policy as *const TiledPolicy),
             shards: SendPtr(self.shards.as_mut_ptr()),
             obs: SendPtr(self.obs.as_mut_ptr()),
             rewards: SendPtr(self.rewards.as_mut_ptr()),
@@ -481,16 +500,38 @@ impl BatchEngine {
     fn write_all_obs(&mut self) {
         let na = self.env.n_agents();
         let od = self.env.obs_dim();
-        let mut off = 0;
-        for shard in &self.shards {
-            let rows = shard.n * na;
-            self.env.write_obs_all(
-                &shard.state,
-                shard.n,
-                &mut self.obs[off * na * od..(off * na + rows) * od],
-            );
-            off += shard.n;
+        let rows_total = self.n_envs * na;
+        let env = &*self.env;
+        let dst = self.obs.as_mut_ptr();
+        for shard in self.shards.iter_mut() {
+            env.write_obs_cols(&shard.state, shard.n, &mut shard.obs_cols);
+            // SAFETY: single-threaded here; `dst` covers the whole
+            // [od][rows_total] matrix and each shard writes its own rows
+            unsafe {
+                scatter_obs_cols(&shard.obs_cols, shard.n * na, dst,
+                                 rows_total, shard.lo * na, od);
+            }
         }
+    }
+}
+
+/// Scatter a shard's packed column-major obs block (`[od][rows]`) into
+/// a strided global column-major matrix: feature `f` goes to
+/// `dst[f * ld + row_off ..][..rows]`.  The single strided-scatter
+/// idiom shared by the step round, the fused round's trajectory capture
+/// and bootstrap publish, and the coordinator's initial fill.
+///
+/// # Safety
+/// `dst` must be valid for writes over the whole `[od][ld]` matrix, and
+/// rows `[row_off, row_off + rows)` of every column must be exclusively
+/// owned by the caller for the duration of the call.
+unsafe fn scatter_obs_cols(src: &[f32], rows: usize, dst: *mut f32,
+                           ld: usize, row_off: usize, od: usize) {
+    debug_assert!(row_off + rows <= ld);
+    debug_assert_eq!(src.len(), od * rows);
+    for f in 0..od {
+        std::slice::from_raw_parts_mut(dst.add(f * ld + row_off), rows)
+            .copy_from_slice(&src[f * rows..(f + 1) * rows]);
     }
 }
 
@@ -504,16 +545,19 @@ unsafe fn step_shard_round(r: &StepRound, w: usize) {
     let env = &*r.env.0;
     let rows = shard.n * r.na;
     let row_off = shard.lo * r.na;
+    let rows_total = r.n_envs * r.na;
     let actions =
         std::slice::from_raw_parts(r.actions.0.add(row_off), rows);
-    let obs = std::slice::from_raw_parts_mut(
-        r.obs.0.add(row_off * r.od), rows * r.od);
     let rewards =
         std::slice::from_raw_parts_mut(r.rewards.0.add(row_off), rows);
     let dones =
         std::slice::from_raw_parts_mut(r.dones.0.add(shard.lo), shard.n);
-    step_shard(env, shard, r.max_steps, r.n_envs, actions, obs, rewards,
+    step_shard(env, shard, r.max_steps, r.n_envs, actions, rewards,
                dones);
+    // publish this shard's fresh SoA obs columns into the global
+    // [obs_dim][rows_total] matrix (disjoint strided ranges per shard)
+    scatter_obs_cols(&shard.obs_cols, rows, r.obs.0, rows_total, row_off,
+                     r.od);
 }
 
 /// One shard's [`BatchEngine::fused_rollout`] round: `t` ticks of
@@ -529,8 +573,9 @@ unsafe fn fused_shard_round(r: &FusedRound, w: usize) {
     let rows = shard.n * r.na;
     let row_off = shard.lo * r.na;
     let rows_total = r.n_envs * r.na;
-    let obs = std::slice::from_raw_parts_mut(
-        r.obs.0.add(row_off * r.od), rows * r.od);
+    // trajectory obs row count: column f of the global record spans
+    // [f * total, (f + 1) * total)
+    let total = r.t * rows_total;
     let rewards =
         std::slice::from_raw_parts_mut(r.rewards.0.add(row_off), rows);
     let dones =
@@ -544,13 +589,14 @@ unsafe fn fused_shard_round(r: &FusedRound, w: usize) {
     for s in 0..r.t {
         let t0 = std::time::Instant::now();
         if r.recording {
-            std::slice::from_raw_parts_mut(
-                r.traj_obs.0.add((s * rows_total + row_off) * r.od),
-                rows * r.od)
-                .copy_from_slice(obs);
+            // pre-step SoA obs columns -> global [od][t * rows_total]
+            // (row offset within each column: step base + shard base)
+            scatter_obs_cols(&shard.obs_cols, rows, r.traj_obs.0, total,
+                             s * rows_total + row_off, r.od);
         }
         let mut actions = std::mem::take(&mut shard.actions);
-        policy.sample_actions_lanes(obs, r.na, &mut shard.act_rngs,
+        policy.sample_actions_lanes(&shard.obs_cols, r.na,
+                                    &mut shard.act_rngs,
                                     &mut shard.scratch, &mut actions);
         if r.recording {
             std::slice::from_raw_parts_mut(
@@ -559,8 +605,8 @@ unsafe fn fused_shard_round(r: &FusedRound, w: usize) {
         }
         let t1 = std::time::Instant::now();
         inference += t1 - t0;
-        step_shard(env, shard, r.max_steps, r.n_envs, &actions, obs,
-                   rewards, dones);
+        step_shard(env, shard, r.max_steps, r.n_envs, &actions, rewards,
+                   dones);
         shard.actions = actions;
         if r.recording {
             std::slice::from_raw_parts_mut(
@@ -572,16 +618,21 @@ unsafe fn fused_shard_round(r: &FusedRound, w: usize) {
         }
         env_step += t1.elapsed();
     }
+    // publish the post-roll-out (bootstrap) obs columns once, instead of
+    // once per tick as the AoS path did
+    let t2 = std::time::Instant::now();
+    scatter_obs_cols(&shard.obs_cols, rows, r.obs.0, rows_total, row_off,
+                     r.od);
+    env_step += t2.elapsed();
     shard.inference_secs = inference.as_secs_f64();
     shard.env_secs = env_step.as_secs_f64();
 }
 
 /// One shard's tick: vector step, truncation + episode accounting +
-/// auto-reset, observation refresh.
-#[allow(clippy::too_many_arguments)]
+/// auto-reset, shard-local SoA observation refresh.
 fn step_shard(env: &dyn BatchEnv, shard: &mut Shard, max_steps: u32,
-              n_envs_total: usize, actions: &[u32], obs: &mut [f32],
-              rewards: &mut [f32], dones: &mut [f32]) {
+              n_envs_total: usize, actions: &[u32], rewards: &mut [f32],
+              dones: &mut [f32]) {
     let na = env.n_agents();
     shard.tick += 1;
     env.step_all(&mut shard.state, shard.n, actions, &mut shard.rngs,
@@ -603,7 +654,7 @@ fn step_shard(env: &dyn BatchEnv, shard: &mut Shard, max_steps: u32,
             dones[i] = 1.0;
         }
     }
-    env.write_obs_all(&shard.state, shard.n, obs);
+    env.write_obs_cols(&shard.state, shard.n, &mut shard.obs_cols);
 }
 
 #[cfg(test)]
@@ -698,10 +749,11 @@ mod tests {
 
     #[test]
     fn fused_rollout_records_full_trajectory() {
+        use crate::nn::Mlp;
         let mut rng = Pcg64::new(0);
         let mut eng = BatchEngine::by_name("cartpole", 6, 2, 5).unwrap();
-        let policy = Mlp::init(eng.obs_dim(), 16, eng.n_actions(),
-                               &mut rng);
+        let policy = TiledPolicy::new(&Mlp::init(
+            eng.obs_dim(), 16, eng.n_actions(), &mut rng));
         let (t, rows, od) = (10usize, 6usize, 4usize);
         let mut obs = vec![f32::NAN; t * rows * od];
         let mut actions = vec![u32::MAX; t * rows];
@@ -717,8 +769,15 @@ mod tests {
         assert_eq!(eng.total_steps(), (t * 6) as u64);
         assert!(phases.inference_secs >= 0.0);
         assert!(phases.env_step_secs > 0.0);
-        // tick 0's recorded obs are the pre-roll-out observations
-        assert_eq!(&obs[..rows * od], &first_obs[..]);
+        // tick 0's recorded obs columns are the pre-roll-out
+        // observations ([od][t * rows]: step 0 is the first `rows`
+        // entries of every column)
+        let total = t * rows;
+        for f in 0..od {
+            assert_eq!(&obs[f * total..f * total + rows],
+                       &first_obs[f * rows..(f + 1) * rows],
+                       "column {f}");
+        }
         assert!(obs.iter().all(|x| x.is_finite()));
         assert!(actions.iter().all(|&a| a < 2));
         assert!(rewards.iter().all(|r| *r == 1.0));

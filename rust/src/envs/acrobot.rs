@@ -169,15 +169,16 @@ impl BatchEnv for BatchAcrobot {
         }
     }
 
-    fn write_obs_lane(&self, state: &[f32], n: usize, i: usize,
-                      out: &mut [f32]) {
-        let (th1, th2) = (state[i], state[n + i]);
-        out[0] = th1.cos();
-        out[1] = th1.sin();
-        out[2] = th2.cos();
-        out[3] = th2.sin();
-        out[4] = state[2 * n + i];
-        out[5] = state[3 * n + i];
+    fn write_obs_cols(&self, state: &[f32], n: usize, out: &mut [f32]) {
+        let th1s = &state[..n];
+        let th2s = &state[n..2 * n];
+        for i in 0..n {
+            out[i] = th1s[i].cos();
+            out[n + i] = th1s[i].sin();
+            out[2 * n + i] = th2s[i].cos();
+            out[3 * n + i] = th2s[i].sin();
+        }
+        out[4 * n..6 * n].copy_from_slice(&state[2 * n..4 * n]);
     }
 
     fn step_all(&self, state: &mut [f32], n: usize, actions: &[u32],

@@ -123,12 +123,9 @@ impl BatchEnv for BatchCartPole {
         state[3 * n + i] = rng.uniform(-0.05, 0.05);
     }
 
-    fn write_obs_lane(&self, state: &[f32], n: usize, i: usize,
-                      out: &mut [f32]) {
-        out[0] = state[i];
-        out[1] = state[n + i];
-        out[2] = state[2 * n + i];
-        out[3] = state[3 * n + i];
+    fn write_obs_cols(&self, state: &[f32], n: usize, out: &mut [f32]) {
+        // the observation *is* the SoA state: four straight field copies
+        out[..4 * n].copy_from_slice(&state[..4 * n]);
     }
 
     fn step_all(&self, state: &mut [f32], n: usize, actions: &[u32],

@@ -200,12 +200,16 @@ impl BatchEnv for BatchCatalysis {
         state[2 * n + i] = 0.05 * rng.normal();
     }
 
-    fn write_obs_lane(&self, state: &[f32], n: usize, i: usize,
-                      out: &mut [f32]) {
-        out[0] = state[i];
-        out[1] = state[n + i];
-        out[2] = state[i] - MIN_PRODUCT.0;
-        out[3] = state[n + i] - MIN_PRODUCT.1;
+    fn write_obs_cols(&self, state: &[f32], n: usize, out: &mut [f32]) {
+        // columns 0/1 are the raw position fields; 2/3 are vector
+        // offsets from the product basin
+        out[..2 * n].copy_from_slice(&state[..2 * n]);
+        let xs = &state[..n];
+        let ys = &state[n..2 * n];
+        for i in 0..n {
+            out[2 * n + i] = xs[i] - MIN_PRODUCT.0;
+            out[3 * n + i] = ys[i] - MIN_PRODUCT.1;
+        }
     }
 
     fn step_all(&self, state: &mut [f32], n: usize, actions: &[u32],

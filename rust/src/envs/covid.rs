@@ -235,39 +235,46 @@ impl BatchEnv for BatchCovidEcon {
         state[F_T * n + i] = 0.0;
     }
 
-    fn write_obs_lane(&self, state: &[f32], n: usize, i: usize,
-                      out: &mut [f32]) {
-        let t_frac = state[F_T * n + i] / MAX_STEPS as f32;
-        let last_fed = state[F_FED * n + i];
-        let ns = N_STATES as f32;
-        let (mut i_sum, mut d_sum, mut q_sum) = (0.0f32, 0.0f32, 0.0f32);
-        let mut i_max = f32::NEG_INFINITY;
-        for j in 0..N_STATES {
-            let inf = state[(F_I + j) * n + i];
-            i_sum += inf;
-            d_sum += state[(F_D + j) * n + i];
-            q_sum += state[(F_Q + j) * n + i];
-            i_max = i_max.max(inf);
+    fn write_obs_cols(&self, state: &[f32], n: usize, out: &mut [f32]) {
+        // observation row r = lane * N_AGENTS + agent; feature f of row
+        // r lives at out[f * rows + r]
+        let rows = n * N_AGENTS;
+        for i in 0..n {
+            let t_frac = state[F_T * n + i] / MAX_STEPS as f32;
+            let last_fed = state[F_FED * n + i];
+            let ns = N_STATES as f32;
+            let (mut i_sum, mut d_sum, mut q_sum) =
+                (0.0f32, 0.0f32, 0.0f32);
+            let mut i_max = f32::NEG_INFINITY;
+            for j in 0..N_STATES {
+                let inf = state[(F_I + j) * n + i];
+                i_sum += inf;
+                d_sum += state[(F_D + j) * n + i];
+                q_sum += state[(F_Q + j) * n + i];
+                i_max = i_max.max(inf);
+            }
+            let (i_nat, d_nat, q_nat) =
+                (i_sum / ns, d_sum / ns, q_sum / ns);
+            let base = i * N_AGENTS;
+            for j in 0..N_STATES {
+                let r = base + j;
+                out[r] = state[(F_S + j) * n + i];
+                out[rows + r] = state[(F_I + j) * n + i];
+                out[2 * rows + r] = state[(F_D + j) * n + i];
+                out[3 * rows + r] = state[(F_Q + j) * n + i];
+                out[4 * rows + r] = last_fed / 9.0;
+                out[5 * rows + r] = i_nat;
+                out[6 * rows + r] = t_frac;
+            }
+            let r = base + N_STATES;
+            out[r] = i_nat;
+            out[rows + r] = d_nat;
+            out[2 * rows + r] = q_nat;
+            out[3 * rows + r] = i_max;
+            out[4 * rows + r] = last_fed / 9.0;
+            out[5 * rows + r] = t_frac;
+            out[6 * rows + r] = 0.0; // pad
         }
-        let (i_nat, d_nat, q_nat) = (i_sum / ns, d_sum / ns, q_sum / ns);
-        for j in 0..N_STATES {
-            let o = &mut out[j * GOV_OBS..(j + 1) * GOV_OBS];
-            o[0] = state[(F_S + j) * n + i];
-            o[1] = state[(F_I + j) * n + i];
-            o[2] = state[(F_D + j) * n + i];
-            o[3] = state[(F_Q + j) * n + i];
-            o[4] = last_fed / 9.0;
-            o[5] = i_nat;
-            o[6] = t_frac;
-        }
-        let o = &mut out[N_STATES * GOV_OBS..N_AGENTS * GOV_OBS];
-        o[0] = i_nat;
-        o[1] = d_nat;
-        o[2] = q_nat;
-        o[3] = i_max;
-        o[4] = last_fed / 9.0;
-        o[5] = t_frac;
-        o[6] = 0.0; // pad
     }
 
     fn step_all(&self, state: &mut [f32], n: usize, actions: &[u32],

@@ -121,11 +121,15 @@ impl BatchEnv for BatchPendulum {
         state[n + i] = rng.uniform(-1.0, 1.0);
     }
 
-    fn write_obs_lane(&self, state: &[f32], n: usize, i: usize,
-                      out: &mut [f32]) {
-        out[0] = state[i].cos();
-        out[1] = state[i].sin();
-        out[2] = state[n + i];
+    fn write_obs_cols(&self, state: &[f32], n: usize, out: &mut [f32]) {
+        let (ths, thds) = state.split_at(n);
+        let (cos_col, rest) = out.split_at_mut(n);
+        let (sin_col, thd_col) = rest.split_at_mut(n);
+        for i in 0..n {
+            cos_col[i] = ths[i].cos();
+            sin_col[i] = ths[i].sin();
+        }
+        thd_col[..n].copy_from_slice(&thds[..n]);
     }
 
     fn step_all(&self, state: &mut [f32], n: usize, actions: &[u32],

@@ -1,0 +1,325 @@
+//! Register-tiled, SIMD-friendly dense-layer microkernels over
+//! column-major (structure-of-arrays) activation matrices.
+//!
+//! Every matrix here is **column-major over the batch**: a `(d, n)`
+//! activation block stores feature `f` of batch row `r` at
+//! `buf[f * n + r]`, so one feature of [`TILE`] consecutive batch rows
+//! is one unit-stride vector.  The microkernels exploit exactly that:
+//! a tile of `TILE` rows is forwarded through a layer with `TILE`
+//! independent accumulators (one per row), each of which performs the
+//! **same sequential accumulation** — `bias + x[0]*w[0] + x[1]*w[1] +
+//! ...` in ascending `k` — as the scalar reference path
+//! ([`crate::nn::Mlp::forward_ref`]).  Vectorization happens *across*
+//! rows (independent lanes), never across the reduction, so the result
+//! is **bit-identical** to the scalar oracle for every row count, tile
+//! remainder and shard partition; `tests/kernel_bitexact.rs` pins this.
+//!
+//! Weights are consumed in transposed `[out][in]` layout
+//! ([`crate::nn::TiledPolicy`] precomputes them once per policy update),
+//! which turns the scalar path's stride-`hidden` weight walk into a
+//! unit-stride row read that is broadcast against the row tile.  At the
+//! network sizes this crate trains (hidden = 64), one transposed weight
+//! matrix (16 KiB) plus one input tile (`in_dim * TILE` floats, 2 KiB)
+//! fit L1 together — the row tile is the cache block, no further
+//! blocking is needed.
+
+/// Batch rows per register tile.  Eight `f32` accumulators are one AVX
+/// register (two NEON registers); the remainder rows fall back to the
+/// scalar per-row loop with the identical accumulation order.
+pub const TILE: usize = 8;
+
+/// Transpose a row-major `(rows, cols)` matrix into `dst` (row-major
+/// `(cols, rows)`, i.e. the column-major view of `src`).
+pub fn transpose(src: &[f32], rows: usize, cols: usize, dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), rows * cols);
+    debug_assert_eq!(dst.len(), rows * cols);
+    for r in 0..rows {
+        for c in 0..cols {
+            dst[c * rows + r] = src[r * cols + c];
+        }
+    }
+}
+
+/// Dense layer over a row range of a column-major input block:
+/// for `r in 0..nrows`,
+/// `out[j*ldo + orow0 + r] = act(bias[j] + sum_k x[k*ldx + row0 + r]
+///  * wt[j*in_dim + k])` with `act = tanh` when `tanh` is set.
+///
+/// `wt` is the transposed `[out][in]` weight matrix; `ldx`/`ldo` are the
+/// leading dimensions (batch row counts) of the input/output blocks, so
+/// the same kernel serves full-batch forwards (`ld == n`) and the
+/// sampler's packed 8-row tiles (`ld == tile width`).  The accumulation
+/// order per output element is exactly the scalar reference's.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_block(x: &[f32], ldx: usize, row0: usize, nrows: usize,
+                   in_dim: usize, wt: &[f32], bias: &[f32],
+                   out_dim: usize, tanh: bool, out: &mut [f32],
+                   ldo: usize, orow0: usize) {
+    debug_assert_eq!(wt.len(), out_dim * in_dim);
+    debug_assert_eq!(bias.len(), out_dim);
+    debug_assert!(row0 + nrows <= ldx);
+    debug_assert!(orow0 + nrows <= ldo);
+    debug_assert!(x.len() >= ldx * in_dim);
+    debug_assert!(out.len() >= ldo * out_dim);
+    let mut r0 = 0;
+    while r0 + TILE <= nrows {
+        for j in 0..out_dim {
+            let wrow = &wt[j * in_dim..(j + 1) * in_dim];
+            let mut acc = [bias[j]; TILE];
+            for (k, &w) in wrow.iter().enumerate() {
+                let base = k * ldx + row0 + r0;
+                let xs = &x[base..base + TILE];
+                for r in 0..TILE {
+                    acc[r] += xs[r] * w;
+                }
+            }
+            let obase = j * ldo + orow0 + r0;
+            let o = &mut out[obase..obase + TILE];
+            if tanh {
+                for r in 0..TILE {
+                    o[r] = acc[r].tanh();
+                }
+            } else {
+                o.copy_from_slice(&acc);
+            }
+        }
+        r0 += TILE;
+    }
+    for r in r0..nrows {
+        for j in 0..out_dim {
+            let wrow = &wt[j * in_dim..(j + 1) * in_dim];
+            let mut acc = bias[j];
+            for (k, &w) in wrow.iter().enumerate() {
+                acc += x[k * ldx + row0 + r] * w;
+            }
+            out[j * ldo + orow0 + r] = if tanh { acc.tanh() } else { acc };
+        }
+    }
+}
+
+/// Full-batch dense layer over a packed column-major `(in_dim, n)`
+/// input into a packed `(out_dim, n)` output.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_cols(x: &[f32], n: usize, in_dim: usize, wt: &[f32],
+                  bias: &[f32], out_dim: usize, tanh: bool,
+                  out: &mut [f32]) {
+    debug_assert_eq!(x.len(), in_dim * n);
+    debug_assert_eq!(out.len(), out_dim * n);
+    dense_block(x, n, 0, n, in_dim, wt, bias, out_dim, tanh, out, n, 0);
+}
+
+/// Scalar head (`out[r] = bv + sum_k h[k*n + r] * wv[k]`) over a packed
+/// column-major `(dim, n)` block — the value head, vectorized across
+/// rows with the scalar path's accumulation order.
+pub fn value_cols(h: &[f32], n: usize, dim: usize, wv: &[f32], bv: f32,
+                  out: &mut [f32]) {
+    debug_assert_eq!(h.len(), dim * n);
+    debug_assert_eq!(wv.len(), dim);
+    debug_assert_eq!(out.len(), n);
+    let mut r0 = 0;
+    while r0 + TILE <= n {
+        let mut acc = [bv; TILE];
+        for (k, &w) in wv.iter().enumerate() {
+            let base = k * n + r0;
+            let col = &h[base..base + TILE];
+            for r in 0..TILE {
+                acc[r] += col[r] * w;
+            }
+        }
+        out[r0..r0 + TILE].copy_from_slice(&acc);
+        r0 += TILE;
+    }
+    for r in r0..n {
+        let mut acc = bv;
+        for (k, &w) in wv.iter().enumerate() {
+            acc += h[k * n + r] * w;
+        }
+        out[r] = acc;
+    }
+}
+
+/// In-place log-softmax over every batch row of a packed column-major
+/// `(a, n)` logit block.  Per row the operation order (max fold over
+/// ascending `j`, subtract, exp-sum over ascending `j`, subtract
+/// `ln(sum)`) is exactly [`crate::nn::log_softmax`]'s, so each row's
+/// result is bit-identical to the scalar oracle; rows are processed in
+/// tiles of [`TILE`] purely for vectorization.
+pub fn log_softmax_cols(x: &mut [f32], n: usize, a: usize) {
+    debug_assert_eq!(x.len(), a * n);
+    let mut r0 = 0;
+    while r0 + TILE <= n {
+        let mut maxs = [f32::NEG_INFINITY; TILE];
+        for j in 0..a {
+            let col = &x[j * n + r0..j * n + r0 + TILE];
+            for r in 0..TILE {
+                maxs[r] = maxs[r].max(col[r]);
+            }
+        }
+        let mut sums = [0f32; TILE];
+        for j in 0..a {
+            let col = &mut x[j * n + r0..j * n + r0 + TILE];
+            for r in 0..TILE {
+                col[r] -= maxs[r];
+                sums[r] += col[r].exp();
+            }
+        }
+        let mut logz = [0f32; TILE];
+        for r in 0..TILE {
+            logz[r] = sums[r].ln();
+        }
+        for j in 0..a {
+            let col = &mut x[j * n + r0..j * n + r0 + TILE];
+            for r in 0..TILE {
+                col[r] -= logz[r];
+            }
+        }
+        r0 += TILE;
+    }
+    for r in r0..n {
+        let mut max = f32::NEG_INFINITY;
+        for j in 0..a {
+            max = max.max(x[j * n + r]);
+        }
+        let mut sum = 0.0f32;
+        for j in 0..a {
+            let v = x[j * n + r] - max;
+            x[j * n + r] = v;
+            sum += v.exp();
+        }
+        let logz = sum.ln();
+        for j in 0..a {
+            x[j * n + r] -= logz;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn randv(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    /// Naive scalar oracle with the reference accumulation order.
+    fn dense_oracle(x_cols: &[f32], n: usize, in_dim: usize, wt: &[f32],
+                    bias: &[f32], out_dim: usize, tanh: bool)
+                    -> Vec<f32> {
+        let mut out = vec![0f32; out_dim * n];
+        for r in 0..n {
+            for j in 0..out_dim {
+                let mut acc = bias[j];
+                for k in 0..in_dim {
+                    acc += x_cols[k * n + r] * wt[j * in_dim + k];
+                }
+                out[j * n + r] = if tanh { acc.tanh() } else { acc };
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn dense_cols_matches_oracle_bitwise_for_odd_row_counts() {
+        let mut rng = Pcg64::new(3);
+        for &n in &[1usize, 2, 3, 5, 7, 8, 9, 15, 16, 17, 31, 33] {
+            for &(in_dim, out_dim) in &[(4usize, 6usize), (7, 3), (16, 16)] {
+                let x = randv(&mut rng, in_dim * n);
+                let wt = randv(&mut rng, out_dim * in_dim);
+                let bias = randv(&mut rng, out_dim);
+                for &tanh in &[false, true] {
+                    let want =
+                        dense_oracle(&x, n, in_dim, &wt, &bias, out_dim,
+                                     tanh);
+                    let mut got = vec![0f32; out_dim * n];
+                    dense_cols(&x, n, in_dim, &wt, &bias, out_dim, tanh,
+                               &mut got);
+                    let wb: Vec<u32> =
+                        want.iter().map(|v| v.to_bits()).collect();
+                    let gb: Vec<u32> =
+                        got.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(wb, gb, "n={n} in={in_dim} out={out_dim} \
+                                        tanh={tanh}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dense_block_row_ranges_compose() {
+        // computing [0, n) in one call equals computing [0, cut) and
+        // [cut, n) separately — the property shard partitioning rests on
+        let mut rng = Pcg64::new(9);
+        let (n, in_dim, out_dim) = (21usize, 5usize, 4usize);
+        let x = randv(&mut rng, in_dim * n);
+        let wt = randv(&mut rng, out_dim * in_dim);
+        let bias = randv(&mut rng, out_dim);
+        let mut whole = vec![0f32; out_dim * n];
+        dense_cols(&x, n, in_dim, &wt, &bias, out_dim, true, &mut whole);
+        for cut in [1usize, 7, 8, 13, 20] {
+            let mut parts = vec![0f32; out_dim * n];
+            dense_block(&x, n, 0, cut, in_dim, &wt, &bias, out_dim, true,
+                        &mut parts, n, 0);
+            dense_block(&x, n, cut, n - cut, in_dim, &wt, &bias, out_dim,
+                        true, &mut parts, n, cut);
+            assert_eq!(
+                whole.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                parts.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "cut={cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn value_cols_matches_scalar_order() {
+        let mut rng = Pcg64::new(5);
+        let (n, dim) = (13usize, 6usize);
+        let h = randv(&mut rng, dim * n);
+        let wv = randv(&mut rng, dim);
+        let bv = rng.normal();
+        let mut got = vec![0f32; n];
+        value_cols(&h, n, dim, &wv, bv, &mut got);
+        for r in 0..n {
+            let mut acc = bv;
+            for k in 0..dim {
+                acc += h[k * n + r] * wv[k];
+            }
+            assert_eq!(acc.to_bits(), got[r].to_bits(), "row {r}");
+        }
+    }
+
+    #[test]
+    fn log_softmax_cols_matches_row_oracle_bitwise() {
+        let mut rng = Pcg64::new(7);
+        for &n in &[1usize, 3, 8, 9, 17] {
+            let a = 5usize;
+            let mut cols = randv(&mut rng, a * n);
+            // row-major copy for the scalar oracle
+            let mut rows = vec![0f32; a * n];
+            transpose(&cols, a, n, &mut rows);
+            log_softmax_cols(&mut cols, n, a);
+            for r in 0..n {
+                let row = &mut rows[r * a..(r + 1) * a];
+                crate::nn::log_softmax(row);
+                for j in 0..a {
+                    assert_eq!(row[j].to_bits(), cols[j * n + r].to_bits(),
+                               "n={n} row {r} col {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrips() {
+        let mut rng = Pcg64::new(1);
+        let (rows, cols) = (5usize, 7usize);
+        let src = randv(&mut rng, rows * cols);
+        let mut t = vec![0f32; rows * cols];
+        let mut back = vec![0f32; rows * cols];
+        transpose(&src, rows, cols, &mut t);
+        transpose(&t, cols, rows, &mut back);
+        assert_eq!(src, back);
+        assert_eq!(t[0], src[0]);
+        assert_eq!(t[rows * cols - 1], src[rows * cols - 1]);
+    }
+}

@@ -6,9 +6,25 @@
 //!
 //! Loss (identical to `algo.a2c_loss_terms`):
 //! `L = -mean(logp(a) * adv) + vf * mean((v - R)^2) - ent * mean(H)`.
+//!
+//! Two execution paths share these formulas:
+//!
+//! * the **tiled kernel path** ([`TiledPolicy`] + [`Mlp::backward_a2c`])
+//!   — the hot path.  Activations are column-major over the batch
+//!   (`buf[feature * n + row]`, the same SoA convention as the batch
+//!   engine's observation buffers) and every layer runs through the
+//!   register-tiled microkernels in [`crate::nn::kernels`], with
+//!   transposed `[out][in]` weights precomputed per policy update;
+//! * the **scalar reference path** ([`Mlp::forward_ref`],
+//!   [`Mlp::sample_actions_lanes_ref`], [`Mlp::backward_a2c_ref`]) —
+//!   the original row-major loops, kept as the bit-exactness oracle
+//!   (`tests/kernel_bitexact.rs`) and the "kernels off" arm of the
+//!   bench sweep.  Both paths accumulate every output element in the
+//!   identical order, so they agree **bitwise**.
 
 use crate::util::Pcg64;
 
+use super::kernels::{self, TILE};
 use super::log_softmax;
 
 /// Row-major matrix stored flat.
@@ -40,26 +56,176 @@ pub struct MlpGrads {
     pub bv: Vec<f32>,
 }
 
-/// Forward activations kept for the backward pass.
+/// Forward activations kept for the backward pass, **column-major over
+/// the batch**: `h1`/`h2` are `(hidden, n)` blocks (`h1[k*n + row]`),
+/// `logp` is `(n_out, n)`, `value` is `n` scalars.  The input is *not*
+/// copied here — [`Mlp::backward_a2c`] borrows the same column-major
+/// observation buffer the forward consumed.
 #[derive(Debug, Default, Clone)]
 pub struct Cache {
+    pub n: usize,
+    pub h1: Vec<f32>,
+    pub h2: Vec<f32>,
+    pub logp: Vec<f32>, // log-softmax columns, (n_out, n)
+    pub value: Vec<f32>,
+}
+
+/// Scalar-reference forward activations, row-major (`h1[row*hidden+k]`)
+/// with the input copied into `x` — the layout the original scalar code
+/// used.  Only the reference oracle fills this.
+#[derive(Debug, Default, Clone)]
+pub struct RefCache {
     pub n: usize,
     pub x: Vec<f32>,
     pub h1: Vec<f32>,
     pub h2: Vec<f32>,
-    pub logp: Vec<f32>,   // log-softmax rows
+    pub logp: Vec<f32>, // log-softmax rows
     pub value: Vec<f32>,
 }
 
-/// Per-row scratch for the inference-only sampling path
-/// ([`Mlp::sample_actions_lanes`]): one hidden row of each layer plus one
-/// log-probability row, reused across every row of the shard batch so the
-/// hot loop writes nothing to the heap but the sampled actions.
+/// Reusable tile scratch for the inference-only sampling path
+/// ([`TiledPolicy::sample_actions_lanes`]): one 8-row column-major tile
+/// per layer plus one gathered log-probability row, reused across every
+/// tile of the shard batch so the hot loop writes nothing to the heap
+/// but the sampled actions.
 #[derive(Debug, Default, Clone)]
 pub struct SampleScratch {
-    h1: Vec<f32>,
-    h2: Vec<f32>,
-    logp: Vec<f32>,
+    h1: Vec<f32>,   // (hidden, TILE)
+    h2: Vec<f32>,   // (hidden, TILE)
+    logp: Vec<f32>, // (n_out, TILE)
+    row: Vec<f32>,  // one gathered log-prob row (n_out)
+}
+
+/// Inference-ready tiled view of an [`Mlp`]: transposed `[out][in]`
+/// weight layouts (unit-stride reads for the microkernels in
+/// [`crate::nn::kernels`]) plus copies of the biases and the value
+/// head.  Rebuild it with [`TiledPolicy::refresh`] after every
+/// parameter update — the transpose is O(params), negligible next to
+/// one forward over a shard, and refreshing per update keeps the view
+/// from ever going stale.
+#[derive(Debug, Default, Clone)]
+pub struct TiledPolicy {
+    pub obs: usize,
+    pub hidden: usize,
+    pub n_out: usize,
+    w1t: Vec<f32>, // (hidden, obs)
+    b1: Vec<f32>,
+    w2t: Vec<f32>, // (hidden, hidden)
+    b2: Vec<f32>,
+    wpt: Vec<f32>, // (n_out, hidden)
+    bp: Vec<f32>,
+    wv: Vec<f32>,
+    bv: Vec<f32>,
+}
+
+impl TiledPolicy {
+    pub fn new(p: &Mlp) -> TiledPolicy {
+        let mut t = TiledPolicy::default();
+        t.refresh(p);
+        t
+    }
+
+    /// Re-derive the transposed layouts from `p` (no allocation after
+    /// the first call at a given shape).
+    pub fn refresh(&mut self, p: &Mlp) {
+        let (o, h, a) = (p.obs, p.hidden, p.n_out);
+        self.obs = o;
+        self.hidden = h;
+        self.n_out = a;
+        self.w1t.resize(h * o, 0.0);
+        self.w2t.resize(h * h, 0.0);
+        self.wpt.resize(a * h, 0.0);
+        kernels::transpose(&p.w1, o, h, &mut self.w1t);
+        kernels::transpose(&p.w2, h, h, &mut self.w2t);
+        kernels::transpose(&p.wp, h, a, &mut self.wpt);
+        self.b1.clear();
+        self.b1.extend_from_slice(&p.b1);
+        self.b2.clear();
+        self.b2.extend_from_slice(&p.b2);
+        self.bp.clear();
+        self.bp.extend_from_slice(&p.bp);
+        self.wv.clear();
+        self.wv.extend_from_slice(&p.wv);
+        self.bv.clear();
+        self.bv.extend_from_slice(&p.bv);
+    }
+
+    /// Batched tiled forward.  `x` is a column-major `(obs, n)` block;
+    /// fills the column-major cache (logits stored as
+    /// log-probabilities).  Bit-identical per row to
+    /// [`Mlp::forward_ref`].
+    pub fn forward(&self, x: &[f32], n: usize, cache: &mut Cache) {
+        let (o, h, a) = (self.obs, self.hidden, self.n_out);
+        debug_assert_eq!(x.len(), n * o);
+        cache.n = n;
+        cache.h1.resize(h * n, 0.0);
+        cache.h2.resize(h * n, 0.0);
+        cache.logp.resize(a * n, 0.0);
+        cache.value.resize(n, 0.0);
+        kernels::dense_cols(x, n, o, &self.w1t, &self.b1, h, true,
+                            &mut cache.h1);
+        kernels::dense_cols(&cache.h1, n, h, &self.w2t, &self.b2, h, true,
+                            &mut cache.h2);
+        kernels::dense_cols(&cache.h2, n, h, &self.wpt, &self.bp, a,
+                            false, &mut cache.logp);
+        kernels::log_softmax_cols(&mut cache.logp, n, a);
+        kernels::value_cols(&cache.h2, n, h, &self.wv, self.bv[0],
+                            &mut cache.value);
+    }
+
+    /// Shard-batched fused inference + sampling: the in-worker entry
+    /// point of the batch engine's fused roll-out.  `obs` is a
+    /// column-major `(obs_dim, lanes * n_agents)` block (row = `lane *
+    /// n_agents + agent`); forwards every row through the policy head
+    /// only — in packed 8-row tiles that never leave `scratch` — and
+    /// samples one categorical action per row, drawing lane `l`'s
+    /// agents in order from `act_rngs[l]`.
+    ///
+    /// Per-row results are independent of the tile grouping (each row
+    /// owns its accumulators and the RNG draw order is strictly
+    /// ascending row order), so sampling any lane partition with the
+    /// matching RNG sub-slices is bit-identical to one whole call —
+    /// the property the engine's cross-thread determinism rests on.
+    /// The value head is skipped entirely (sampling never needs values;
+    /// the trainer re-forwards the recorded trajectory for gradients).
+    pub fn sample_actions_lanes(&self, obs: &[f32], n_agents: usize,
+                                act_rngs: &mut [Pcg64],
+                                scratch: &mut SampleScratch,
+                                actions: &mut [u32]) {
+        let (o, h, a) = (self.obs, self.hidden, self.n_out);
+        let lanes = act_rngs.len();
+        let rows = lanes * n_agents;
+        debug_assert_eq!(obs.len(), rows * o);
+        debug_assert_eq!(actions.len(), rows);
+        scratch.h1.resize(h * TILE, 0.0);
+        scratch.h2.resize(h * TILE, 0.0);
+        scratch.logp.resize(a * TILE, 0.0);
+        scratch.row.resize(a, 0.0);
+        let mut base = 0;
+        while base < rows {
+            let w = TILE.min(rows - base);
+            kernels::dense_block(obs, rows, base, w, o, &self.w1t,
+                                 &self.b1, h, true,
+                                 &mut scratch.h1[..h * w], w, 0);
+            kernels::dense_block(&scratch.h1[..h * w], w, 0, w, h,
+                                 &self.w2t, &self.b2, h, true,
+                                 &mut scratch.h2[..h * w], w, 0);
+            kernels::dense_block(&scratch.h2[..h * w], w, 0, w, h,
+                                 &self.wpt, &self.bp, a, false,
+                                 &mut scratch.logp[..a * w], w, 0);
+            kernels::log_softmax_cols(&mut scratch.logp[..a * w], w, a);
+            for r in 0..w {
+                let row = base + r;
+                for (j, slot) in scratch.row.iter_mut().enumerate() {
+                    *slot = scratch.logp[j * w + r];
+                }
+                actions[row] = act_rngs[row / n_agents]
+                    .categorical(&scratch.row)
+                    as u32;
+            }
+            base += w;
+        }
+    }
 }
 
 impl Mlp {
@@ -98,9 +264,212 @@ impl Mlp {
         }
     }
 
-    /// Batched forward.  `x` is (n, obs) row-major; fills the cache and
-    /// returns it (logits are stored as log-probabilities).
-    pub fn forward(&self, x: &[f32], n: usize, cache: &mut Cache) {
+    /// A2C backward from a tiled forward.  `x` is the same column-major
+    /// `(obs, n)` block [`TiledPolicy::forward`] consumed (no copy is
+    /// ever made of it), `cache` the column-major activations it
+    /// produced.  Accumulates into `grads` and returns
+    /// `(pi_loss, v_loss, entropy)`.
+    ///
+    /// Rows are processed in tiles of [`TILE`] so every gradient cell
+    /// is read-modified-written once per tile instead of once per row,
+    /// with unit-stride inner loops throughout — but each cell receives
+    /// its per-row contributions in ascending row order, so the result
+    /// is bit-identical to [`Mlp::backward_a2c_ref`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward_a2c(&self, x: &[f32], cache: &Cache, actions: &[u32],
+                        advantages: &[f32], returns: &[f32], vf_coef: f32,
+                        ent_coef: f32, grads: &mut MlpGrads)
+                        -> (f32, f32, f32) {
+        let (o, h, a) = (self.obs, self.hidden, self.n_out);
+        let n = cache.n;
+        debug_assert_eq!(x.len(), n * o);
+        let inv_n = 1.0 / n as f32;
+        let (mut pi_loss, mut v_loss, mut ent_sum) = (0.0f32, 0.0, 0.0);
+        // column-major (feature, tile-row) scratch blocks
+        let mut dl = vec![0f32; a * TILE];
+        let mut dh2 = vec![0f32; h * TILE];
+        let mut dh1 = vec![0f32; h * TILE];
+        let mut dv = [0f32; TILE];
+        let mut base = 0;
+        while base < n {
+            let w = TILE.min(n - base);
+            // per-row head terms, in global row order (the losses are
+            // order-sensitive f32 folds)
+            for r in 0..w {
+                let i = base + r;
+                let act = actions[i] as usize;
+                let adv = advantages[i];
+                let v = cache.value[i];
+                let ret = returns[i];
+                let mut entropy = 0.0f32;
+                for j in 0..a {
+                    let l = cache.logp[j * n + i];
+                    entropy += -l.exp() * l;
+                }
+                pi_loss += -cache.logp[act * n + i] * adv * inv_n;
+                v_loss += (v - ret) * (v - ret) * inv_n;
+                ent_sum += entropy * inv_n;
+                // d pi_loss / d logits = (p - onehot) * adv / n
+                // d (-ent*H)  / d logits = ent * p * (logp + H) / n
+                for j in 0..a {
+                    let l = cache.logp[j * n + i];
+                    let p = l.exp();
+                    let onehot = if j == act { 1.0 } else { 0.0 };
+                    dl[j * w + r] = ((p - onehot) * adv
+                        + ent_coef * p * (l + entropy))
+                        * inv_n;
+                }
+                dv[r] = 2.0 * vf_coef * (v - ret) * inv_n;
+            }
+            // heads -> dh2 (through tanh)
+            for k in 0..h {
+                let wrow = &self.wp[k * a..(k + 1) * a];
+                let mut acc = [0f32; TILE];
+                for r in 0..w {
+                    acc[r] = self.wv[k] * dv[r];
+                }
+                for (j, &wkj) in wrow.iter().enumerate() {
+                    for r in 0..w {
+                        acc[r] += wkj * dl[j * w + r];
+                    }
+                }
+                let h2col = &cache.h2[k * n + base..k * n + base + w];
+                for r in 0..w {
+                    dh2[k * w + r] = acc[r] * (1.0 - h2col[r] * h2col[r]);
+                }
+            }
+            // head gradients
+            for j in 0..a {
+                let mut acc = grads.bp[j];
+                for r in 0..w {
+                    acc += dl[j * w + r];
+                }
+                grads.bp[j] = acc;
+            }
+            for k in 0..h {
+                let h2col = &cache.h2[k * n + base..k * n + base + w];
+                for j in 0..a {
+                    let mut acc = grads.wp[k * a + j];
+                    for r in 0..w {
+                        acc += h2col[r] * dl[j * w + r];
+                    }
+                    grads.wp[k * a + j] = acc;
+                }
+                let mut acc = grads.wv[k];
+                for r in 0..w {
+                    acc += h2col[r] * dv[r];
+                }
+                grads.wv[k] = acc;
+            }
+            {
+                let mut acc = grads.bv[0];
+                for r in 0..w {
+                    acc += dv[r];
+                }
+                grads.bv[0] = acc;
+            }
+            // layer 2 -> dh1
+            for k in 0..h {
+                let wrow = &self.w2[k * h..(k + 1) * h];
+                let mut acc = [0f32; TILE];
+                for (j, &wkj) in wrow.iter().enumerate() {
+                    for r in 0..w {
+                        acc[r] += wkj * dh2[j * w + r];
+                    }
+                }
+                let h1col = &cache.h1[k * n + base..k * n + base + w];
+                for r in 0..w {
+                    dh1[k * w + r] = acc[r] * (1.0 - h1col[r] * h1col[r]);
+                }
+            }
+            for j in 0..h {
+                let mut acc = grads.b2[j];
+                for r in 0..w {
+                    acc += dh2[j * w + r];
+                }
+                grads.b2[j] = acc;
+            }
+            for k in 0..h {
+                let h1col = &cache.h1[k * n + base..k * n + base + w];
+                for j in 0..h {
+                    let mut acc = grads.w2[k * h + j];
+                    for r in 0..w {
+                        acc += h1col[r] * dh2[j * w + r];
+                    }
+                    grads.w2[k * h + j] = acc;
+                }
+            }
+            // layer 1
+            for j in 0..h {
+                let mut acc = grads.b1[j];
+                for r in 0..w {
+                    acc += dh1[j * w + r];
+                }
+                grads.b1[j] = acc;
+            }
+            for k in 0..o {
+                let xcol = &x[k * n + base..k * n + base + w];
+                for j in 0..h {
+                    let mut acc = grads.w1[k * h + j];
+                    for r in 0..w {
+                        acc += xcol[r] * dh1[j * w + r];
+                    }
+                    grads.w1[k * h + j] = acc;
+                }
+            }
+            base += w;
+        }
+        (pi_loss, v_loss, ent_sum)
+    }
+
+    /// Total A2C loss for gradient checking (scalar reference path;
+    /// `x` is row-major `(n, obs)`).
+    pub fn loss_a2c(&self, x: &[f32], n: usize, actions: &[u32],
+                    advantages: &[f32], returns: &[f32], vf_coef: f32,
+                    ent_coef: f32) -> f32 {
+        let mut cache = RefCache::default();
+        self.forward_ref(x, n, &mut cache);
+        let inv_n = 1.0 / n as f32;
+        let mut loss = 0.0;
+        for i in 0..n {
+            let lp = &cache.logp[i * self.n_out..(i + 1) * self.n_out];
+            let entropy: f32 = lp.iter().map(|&l| -l.exp() * l).sum();
+            loss += (-lp[actions[i] as usize] * advantages[i]
+                + vf_coef * (cache.value[i] - returns[i]).powi(2)
+                - ent_coef * entropy)
+                * inv_n;
+        }
+        loss
+    }
+
+    /// Lengths of each parameter vector, in [`Mlp::params_mut`] order
+    /// (Adam sizing).
+    pub fn param_shapes(&self) -> [usize; 8] {
+        [self.w1.len(), self.b1.len(), self.w2.len(), self.b2.len(),
+         self.wp.len(), self.bp.len(), self.wv.len(), self.bv.len()]
+    }
+
+    /// Flat mutable references over all parameter vectors (Adam plumbing).
+    pub fn params_mut(&mut self) -> [&mut Vec<f32>; 8] {
+        [&mut self.w1, &mut self.b1, &mut self.w2, &mut self.b2,
+         &mut self.wp, &mut self.bp, &mut self.wv, &mut self.bv]
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.w1.len() + self.b1.len() + self.w2.len() + self.b2.len()
+            + self.wp.len() + self.bp.len() + self.wv.len() + self.bv.len()
+    }
+}
+
+/// Scalar reference oracle — the original row-major loops, preserved
+/// verbatim.  The tiled kernel path must stay **bit-identical** to
+/// these (`tests/kernel_bitexact.rs` pins it per tile configuration);
+/// the bench sweep uses them as the "kernels off" arm.  Not on any hot
+/// path.
+impl Mlp {
+    /// Scalar batched forward.  `x` is `(n, obs)` row-major; fills the
+    /// row-major cache (logits stored as log-probabilities).
+    pub fn forward_ref(&self, x: &[f32], n: usize, cache: &mut RefCache) {
         let (o, h, a) = (self.obs, self.hidden, self.n_out);
         debug_assert_eq!(x.len(), n * o);
         cache.n = n;
@@ -148,30 +517,19 @@ impl Mlp {
         }
     }
 
-    /// Shard-batched fused inference + sampling: the in-worker entry
-    /// point of the batch engine's fused roll-out.  Forwards
-    /// `act_rngs.len() * n_agents` observation rows (`[lane][agent]`
-    /// row-major) through the policy head only and samples one
-    /// categorical action per row, drawing lane `l`'s agents in order
-    /// from `act_rngs[l]` — results depend only on the lane, never on
-    /// how lanes are sharded across worker threads.
-    ///
-    /// Unlike [`Mlp::forward`] this captures no activations and skips
-    /// the value head entirely (sampling never needs values; the
-    /// trainer re-forwards the recorded trajectory for gradients), so
-    /// the per-row loop stays in `scratch`'s three small rows.
-    pub fn sample_actions_lanes(&self, obs: &[f32], n_agents: usize,
-                                act_rngs: &mut [Pcg64],
-                                scratch: &mut SampleScratch,
-                                actions: &mut [u32]) {
+    /// Scalar reference of the fused inference + sampling path.  `obs`
+    /// is `(lanes * n_agents, obs_dim)` **row-major**.
+    pub fn sample_actions_lanes_ref(&self, obs: &[f32], n_agents: usize,
+                                    act_rngs: &mut [Pcg64],
+                                    actions: &mut [u32]) {
         let (o, h, a) = (self.obs, self.hidden, self.n_out);
         let lanes = act_rngs.len();
         let rows = lanes * n_agents;
         debug_assert_eq!(obs.len(), rows * o);
         debug_assert_eq!(actions.len(), rows);
-        scratch.h1.resize(h, 0.0);
-        scratch.h2.resize(h, 0.0);
-        scratch.logp.resize(a, 0.0);
+        let mut h1 = vec![0f32; h];
+        let mut h2 = vec![0f32; h];
+        let mut logp = vec![0f32; a];
         for (lane, rng) in act_rngs.iter_mut().enumerate() {
             for agent in 0..n_agents {
                 let row = lane * n_agents + agent;
@@ -181,35 +539,35 @@ impl Mlp {
                     for k in 0..o {
                         acc += xi[k] * self.w1[k * h + j];
                     }
-                    scratch.h1[j] = acc.tanh();
+                    h1[j] = acc.tanh();
                 }
                 for j in 0..h {
                     let mut acc = self.b2[j];
                     for k in 0..h {
-                        acc += scratch.h1[k] * self.w2[k * h + j];
+                        acc += h1[k] * self.w2[k * h + j];
                     }
-                    scratch.h2[j] = acc.tanh();
+                    h2[j] = acc.tanh();
                 }
                 for j in 0..a {
                     let mut acc = self.bp[j];
                     for k in 0..h {
-                        acc += scratch.h2[k] * self.wp[k * a + j];
+                        acc += h2[k] * self.wp[k * a + j];
                     }
-                    scratch.logp[j] = acc;
+                    logp[j] = acc;
                 }
-                super::log_softmax(&mut scratch.logp);
-                actions[row] = rng.categorical(&scratch.logp) as u32;
+                log_softmax(&mut logp);
+                actions[row] = rng.categorical(&logp) as u32;
             }
         }
     }
 
-    /// A2C backward from a cached forward.  Accumulates into `grads` and
-    /// returns (pi_loss, v_loss, entropy).
+    /// Scalar reference A2C backward over a [`RefCache`].  Accumulates
+    /// into `grads` and returns `(pi_loss, v_loss, entropy)`.
     #[allow(clippy::too_many_arguments)]
-    pub fn backward_a2c(&self, cache: &Cache, actions: &[u32],
-                        advantages: &[f32], returns: &[f32], vf_coef: f32,
-                        ent_coef: f32, grads: &mut MlpGrads)
-                        -> (f32, f32, f32) {
+    pub fn backward_a2c_ref(&self, cache: &RefCache, actions: &[u32],
+                            advantages: &[f32], returns: &[f32],
+                            vf_coef: f32, ent_coef: f32,
+                            grads: &mut MlpGrads) -> (f32, f32, f32) {
         let (o, h, a) = (self.obs, self.hidden, self.n_out);
         let n = cache.n;
         let inv_n = 1.0 / n as f32;
@@ -232,8 +590,6 @@ impl Mlp {
             v_loss += (v - ret) * (v - ret) * inv_n;
             ent_sum += entropy * inv_n;
 
-            // d pi_loss / d logits = (p - onehot) * adv / n
-            // d (-ent*H)  / d logits = ent * p * (logp + H) / n
             for j in 0..a {
                 let p = lp[j].exp();
                 let onehot = if j == act { 1.0 } else { 0.0 };
@@ -243,13 +599,12 @@ impl Mlp {
             }
             let dv = 2.0 * vf_coef * (v - ret) * inv_n;
 
-            // heads -> dh2
             for k in 0..h {
                 let mut acc = self.wv[k] * dv;
                 for j in 0..a {
                     acc += self.wp[k * a + j] * dlogits[j];
                 }
-                dh2[k] = acc * (1.0 - h2[k] * h2[k]); // through tanh
+                dh2[k] = acc * (1.0 - h2[k] * h2[k]);
             }
             for j in 0..a {
                 grads.bp[j] += dlogits[j];
@@ -261,7 +616,6 @@ impl Mlp {
             for k in 0..h {
                 grads.wv[k] += h2[k] * dv;
             }
-            // layer 2 -> dh1
             for k in 0..h {
                 let mut acc = 0.0;
                 for j in 0..h {
@@ -275,7 +629,6 @@ impl Mlp {
                     grads.w2[k * h + j] += h1[k] * dh2[j];
                 }
             }
-            // layer 1
             for j in 0..h {
                 grads.b1[j] += dh1[j];
                 for k in 0..o {
@@ -284,43 +637,6 @@ impl Mlp {
             }
         }
         (pi_loss, v_loss, ent_sum)
-    }
-
-    /// Total A2C loss for gradient checking.
-    pub fn loss_a2c(&self, x: &[f32], n: usize, actions: &[u32],
-                    advantages: &[f32], returns: &[f32], vf_coef: f32,
-                    ent_coef: f32) -> f32 {
-        let mut cache = Cache::default();
-        self.forward(x, n, &mut cache);
-        let inv_n = 1.0 / n as f32;
-        let mut loss = 0.0;
-        for i in 0..n {
-            let lp = &cache.logp[i * self.n_out..(i + 1) * self.n_out];
-            let entropy: f32 = lp.iter().map(|&l| -l.exp() * l).sum();
-            loss += (-lp[actions[i] as usize] * advantages[i]
-                + vf_coef * (cache.value[i] - returns[i]).powi(2)
-                - ent_coef * entropy)
-                * inv_n;
-        }
-        loss
-    }
-
-    /// Lengths of each parameter vector, in [`Mlp::params_mut`] order
-    /// (Adam sizing).
-    pub fn param_shapes(&self) -> [usize; 8] {
-        [self.w1.len(), self.b1.len(), self.w2.len(), self.b2.len(),
-         self.wp.len(), self.bp.len(), self.wv.len(), self.bv.len()]
-    }
-
-    /// Flat mutable references over all parameter vectors (Adam plumbing).
-    pub fn params_mut(&mut self) -> [&mut Vec<f32>; 8] {
-        [&mut self.w1, &mut self.b1, &mut self.w2, &mut self.b2,
-         &mut self.wp, &mut self.bp, &mut self.wv, &mut self.bv]
-    }
-
-    pub fn param_count(&self) -> usize {
-        self.w1.len() + self.b1.len() + self.w2.len() + self.b2.len()
-            + self.wp.len() + self.bp.len() + self.wv.len() + self.bv.len()
     }
 }
 
@@ -365,31 +681,69 @@ mod tests {
         (mlp, x, actions, adv, ret)
     }
 
+    /// Row-major `(n, d)` -> column-major `(d, n)`.
+    fn to_cols(rows: &[f32], n: usize, d: usize) -> Vec<f32> {
+        let mut cols = vec![0f32; n * d];
+        super::kernels::transpose(rows, n, d, &mut cols);
+        cols
+    }
+
     #[test]
     fn forward_logp_normalized_and_finite() {
         let (mlp, x, ..) = tiny_setup();
+        let tiled = TiledPolicy::new(&mlp);
         let mut cache = Cache::default();
-        mlp.forward(&x, 6, &mut cache);
-        for i in 0..6 {
-            let total: f32 = cache.logp[i * 4..(i + 1) * 4]
-                .iter()
-                .map(|l| l.exp())
+        let n = 6;
+        tiled.forward(&to_cols(&x, n, 3), n, &mut cache);
+        for i in 0..n {
+            let total: f32 = (0..4)
+                .map(|j| cache.logp[j * n + i].exp())
                 .sum();
             assert!((total - 1.0).abs() < 1e-5);
             assert!(cache.value[i].is_finite());
         }
     }
 
-    /// Analytic A2C gradients vs central finite differences on every
-    /// parameter tensor.
+    /// The tiled forward is bit-identical to the scalar reference —
+    /// the contract the whole kernel layer is built on (broader sweeps
+    /// live in `tests/kernel_bitexact.rs`).
+    #[test]
+    fn tiled_forward_matches_reference_bitwise() {
+        let (mlp, x, ..) = tiny_setup();
+        let n = 6;
+        let tiled = TiledPolicy::new(&mlp);
+        let mut cache = Cache::default();
+        tiled.forward(&to_cols(&x, n, 3), n, &mut cache);
+        let mut rc = RefCache::default();
+        mlp.forward_ref(&x, n, &mut rc);
+        for i in 0..n {
+            assert_eq!(rc.value[i].to_bits(), cache.value[i].to_bits());
+            for j in 0..4 {
+                assert_eq!(rc.logp[i * 4 + j].to_bits(),
+                           cache.logp[j * n + i].to_bits());
+            }
+            for k in 0..5 {
+                assert_eq!(rc.h1[i * 5 + k].to_bits(),
+                           cache.h1[k * n + i].to_bits());
+                assert_eq!(rc.h2[i * 5 + k].to_bits(),
+                           cache.h2[k * n + i].to_bits());
+            }
+        }
+    }
+
+    /// Analytic A2C gradients (tiled path) vs central finite
+    /// differences on every parameter tensor.
     #[test]
     fn gradients_match_finite_differences() {
         let (mut mlp, x, actions, adv, ret) = tiny_setup();
         let (vf, ec) = (0.5f32, 0.01f32);
+        let n = 6;
+        let x_cols = to_cols(&x, n, 3);
         let mut grads = mlp.zeros_like();
         let mut cache = Cache::default();
-        mlp.forward(&x, 6, &mut cache);
-        mlp.backward_a2c(&cache, &actions, &adv, &ret, vf, ec, &mut grads);
+        TiledPolicy::new(&mlp).forward(&x_cols, n, &mut cache);
+        mlp.backward_a2c(&x_cols, &cache, &actions, &adv, &ret, vf, ec,
+                         &mut grads);
         let eps = 2e-3;
         // sample a few coordinates from each tensor
         for tensor_idx in 0..8 {
@@ -414,15 +768,17 @@ mod tests {
     /// The fused sampling path is shard-invariant: sampling all lanes in
     /// one call is bit-identical to sampling any lane partition with the
     /// matching RNG sub-slices — the property the engine's cross-thread
-    /// determinism rests on.  Its logits also match `forward`'s.
+    /// determinism rests on.  Its distribution also matches `forward`'s.
     #[test]
     fn sample_actions_lanes_is_partition_invariant() {
         let mut rng = Pcg64::new(23);
         let (n_agents, lanes, obs_dim) = (2usize, 6usize, 3usize);
         let mlp = Mlp::init(obs_dim, 5, 4, &mut rng);
+        let tiled = TiledPolicy::new(&mlp);
         let rows = lanes * n_agents;
-        let obs: Vec<f32> =
+        let obs_rows: Vec<f32> =
             (0..rows * obs_dim).map(|_| rng.normal()).collect();
+        let obs = to_cols(&obs_rows, rows, obs_dim);
         let fresh_rngs = || -> Vec<Pcg64> {
             (0..lanes).map(|l| Pcg64::with_stream(7, l as u64)).collect()
         };
@@ -430,8 +786,8 @@ mod tests {
         let mut whole = vec![0u32; rows];
         let mut rngs = fresh_rngs();
         let mut scratch = SampleScratch::default();
-        mlp.sample_actions_lanes(&obs, n_agents, &mut rngs, &mut scratch,
-                                 &mut whole);
+        tiled.sample_actions_lanes(&obs, n_agents, &mut rngs, &mut scratch,
+                                   &mut whole);
 
         for split in 1..lanes {
             let mut parts = vec![0u32; rows];
@@ -439,37 +795,65 @@ mod tests {
             let cut_row = split * n_agents;
             let (lo_rngs, hi_rngs) = rngs.split_at_mut(split);
             let (lo_act, hi_act) = parts.split_at_mut(cut_row);
+            // each partition gets its own packed column-major block,
+            // exactly as each engine shard owns a packed SoA obs slab
+            let lo_obs = to_cols(&obs_rows[..cut_row * obs_dim], cut_row,
+                                 obs_dim);
+            let hi_obs = to_cols(&obs_rows[cut_row * obs_dim..],
+                                 rows - cut_row, obs_dim);
             let mut scratch = SampleScratch::default();
-            mlp.sample_actions_lanes(&obs[..cut_row * obs_dim], n_agents,
-                                     lo_rngs, &mut scratch, lo_act);
-            mlp.sample_actions_lanes(&obs[cut_row * obs_dim..], n_agents,
-                                     hi_rngs, &mut scratch, hi_act);
+            tiled.sample_actions_lanes(&lo_obs, n_agents, lo_rngs,
+                                       &mut scratch, lo_act);
+            tiled.sample_actions_lanes(&hi_obs, n_agents, hi_rngs,
+                                       &mut scratch, hi_act);
             assert_eq!(whole, parts, "split at lane {split}");
         }
 
-        // the policy distribution matches the training-path forward:
-        // greedy argmax over forward's logp equals argmax over the
-        // sampling scratch's logits for a deterministic (peaked) net
-        let mut cache = Cache::default();
-        mlp.forward(&obs, rows, &mut cache);
-        for row in 0..rows {
-            let lp = &cache.logp[row * 4..(row + 1) * 4];
-            let total: f32 = lp.iter().map(|l| l.exp()).sum();
-            assert!((total - 1.0).abs() < 1e-5);
-        }
+        // the tiled sampler consumes the RNG streams exactly as the
+        // scalar reference does
+        let mut ref_actions = vec![0u32; rows];
+        let mut rngs = fresh_rngs();
+        mlp.sample_actions_lanes_ref(&obs_rows, n_agents, &mut rngs,
+                                     &mut ref_actions);
+        assert_eq!(whole, ref_actions);
         assert!(whole.iter().all(|&a| a < 4));
     }
 
     #[test]
     fn grad_norm_and_scale() {
         let (mlp, x, actions, adv, ret) = tiny_setup();
+        let n = 6;
+        let x_cols = to_cols(&x, n, 3);
         let mut grads = mlp.zeros_like();
         let mut cache = Cache::default();
-        mlp.forward(&x, 6, &mut cache);
-        mlp.backward_a2c(&cache, &actions, &adv, &ret, 0.5, 0.01, &mut grads);
+        TiledPolicy::new(&mlp).forward(&x_cols, n, &mut cache);
+        mlp.backward_a2c(&x_cols, &cache, &actions, &adv, &ret, 0.5, 0.01,
+                         &mut grads);
         let n0 = grads.global_norm();
         assert!(n0 > 0.0);
         grads.scale(0.5);
         assert!((grads.global_norm() - 0.5 * n0).abs() < 1e-4);
+    }
+
+    /// `refresh` keeps an existing `TiledPolicy` in sync after a
+    /// parameter update (no stale transposed weights).
+    #[test]
+    fn refresh_tracks_parameter_updates() {
+        let (mut mlp, x, ..) = tiny_setup();
+        let n = 6;
+        let x_cols = to_cols(&x, n, 3);
+        let mut tiled = TiledPolicy::new(&mlp);
+        for w in mlp.w1.iter_mut() {
+            *w += 0.25;
+        }
+        mlp.b2[0] -= 1.0;
+        tiled.refresh(&mlp);
+        let mut cache = Cache::default();
+        tiled.forward(&x_cols, n, &mut cache);
+        let mut rc = RefCache::default();
+        mlp.forward_ref(&x, n, &mut rc);
+        for i in 0..n {
+            assert_eq!(rc.value[i].to_bits(), cache.value[i].to_bits());
+        }
     }
 }

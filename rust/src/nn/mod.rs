@@ -3,12 +3,18 @@
 //! Mirrors the JAX model exactly (2 hidden tanh layers, categorical policy
 //! head + value head) with a hand-derived A2C backward pass and Adam.
 //! Unit tests validate the analytic gradients against finite differences.
+//!
+//! The hot path runs through the register-tiled SoA compute layer in
+//! [`kernels`] (column-major activations, transposed weights, 8-row
+//! register tiles) via [`TiledPolicy`]; the original scalar row-major
+//! loops survive as the bit-exactness oracle (`Mlp::*_ref`).
 
 pub mod adam;
+pub mod kernels;
 pub mod mlp;
 
 pub use adam::Adam;
-pub use mlp::{Mlp, MlpGrads, SampleScratch};
+pub use mlp::{Mlp, MlpGrads, SampleScratch, TiledPolicy};
 
 /// Reverse-time n-step returns over a `[step][env][agent]` batch.
 ///

@@ -34,7 +34,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::engine::{make_batch_env, BatchEnv, ACTION_STREAM_BASE};
 use crate::nn::mlp::Cache;
-use crate::nn::{Mlp, SampleScratch};
+use crate::nn::{Mlp, SampleScratch, TiledPolicy};
 use crate::util::Pcg64;
 
 use super::device::{DeviceBackend, DeviceBuffer, DeviceExecutable};
@@ -399,11 +399,17 @@ impl CpuLayout {
 struct CpuScratch {
     env_rngs: Vec<Pcg64>,
     act_rngs: Vec<Pcg64>,
+    /// Column-major `[obs_dim][rows]` SoA observations (the engine's
+    /// convention), consumed by the tiled kernels with no gather.
     obs: Vec<f32>,
     rewards: Vec<f32>,
     dones: Vec<f32>,
     actions: Vec<u32>,
     sample: SampleScratch,
+    /// Transposed-weight kernel view, refreshed from the store's
+    /// parameter segment every iteration.
+    tiled: TiledPolicy,
+    /// Column-major `[obs_dim][t * rows]` trajectory observations.
     traj_obs: Vec<f32>,
     traj_actions: Vec<u32>,
     traj_rewards: Vec<f32>,
@@ -520,6 +526,7 @@ impl CpuProgram {
                 .push(rng_from_state(&state, l.rng_act + RNG_WORDS * i));
         }
         let policy = self.read_policy(&state);
+        sc.tiled.refresh(&policy);
 
         sc.obs.resize(rows * od, 0.0);
         sc.rewards.resize(rows, 0.0);
@@ -536,14 +543,18 @@ impl CpuProgram {
             {
                 let env_state =
                     &state[l.env_state..l.env_state + l.sd * n];
-                self.env.write_obs_all(env_state, n, &mut sc.obs);
+                self.env.write_obs_cols(env_state, n, &mut sc.obs);
             }
             if train {
-                sc.traj_obs[s * rows * od..(s + 1) * rows * od]
-                    .copy_from_slice(&sc.obs);
+                // SoA obs columns -> [od][t * rows] trajectory record
+                for f in 0..od {
+                    sc.traj_obs[f * total + s * rows
+                        ..f * total + (s + 1) * rows]
+                        .copy_from_slice(&sc.obs[f * rows..(f + 1) * rows]);
+                }
             }
-            policy.sample_actions_lanes(&sc.obs, na, &mut sc.act_rngs,
-                                        &mut sc.sample, &mut sc.actions);
+            sc.tiled.sample_actions_lanes(&sc.obs, na, &mut sc.act_rngs,
+                                          &mut sc.sample, &mut sc.actions);
             if train {
                 sc.traj_actions[s * rows..(s + 1) * rows]
                     .copy_from_slice(&sc.actions);
@@ -602,7 +613,7 @@ impl CpuProgram {
         // bootstrap observations (post-roll-out, post-reset)
         {
             let env_state = &state[l.env_state..l.env_state + l.sd * n];
-            self.env.write_obs_all(env_state, n, &mut sc.obs);
+            self.env.write_obs_cols(env_state, n, &mut sc.obs);
         }
         // persist the streams back into the store
         for i in 0..n {
@@ -614,8 +625,8 @@ impl CpuProgram {
         state[l.stats + S_ENV_STEPS] += (n * t) as f32;
 
         if train {
-            policy.forward(&sc.traj_obs, total, &mut sc.cache);
-            policy.forward(&sc.obs, rows, &mut sc.boot_cache);
+            sc.tiled.forward(&sc.traj_obs, total, &mut sc.cache);
+            sc.tiled.forward(&sc.obs, rows, &mut sc.boot_cache);
             let returns = crate::nn::nstep_returns(
                 &sc.traj_rewards, &sc.traj_dones, &sc.boot_cache.value,
                 n, na, t, self.hp.gamma);
@@ -623,7 +634,7 @@ impl CpuProgram {
                                                        &sc.cache.value);
             let mut grads = policy.zeros_like();
             let (pi_loss, v_loss, entropy) = policy.backward_a2c(
-                &sc.cache, &sc.traj_actions, &adv, &returns,
+                &sc.traj_obs, &sc.cache, &sc.traj_actions, &adv, &returns,
                 self.hp.vf_coef, self.hp.ent_coef, &mut grads);
             let gn = grads.global_norm();
             if gn > self.hp.max_grad_norm {

@@ -11,7 +11,7 @@
 
 use warpsci::engine::{BatchEngine, TrajectorySlices};
 use warpsci::envs::make_cpu_env;
-use warpsci::nn::Mlp;
+use warpsci::nn::{Mlp, TiledPolicy};
 use warpsci::util::Pcg64;
 
 const ENVS: [&str; 6] = ["cartpole", "acrobot", "pendulum", "covid_econ",
@@ -62,7 +62,8 @@ fn run_fused(name: &str, n_envs: usize, threads: usize, seed: u64,
     let mut eng = BatchEngine::by_name(name, n_envs, threads, seed)
         .unwrap();
     let mut prng = Pcg64::with_stream(seed, u64::MAX - 1);
-    let policy = Mlp::init(eng.obs_dim(), 24, eng.n_actions(), &mut prng);
+    let policy = TiledPolicy::new(&Mlp::init(eng.obs_dim(), 24,
+                                             eng.n_actions(), &mut prng));
     let rows = n_envs * eng.n_agents();
     let od = eng.obs_dim();
     let mut obs = vec![0f32; t * rows * od];
@@ -140,9 +141,17 @@ fn batch_kernels_agree_with_scalar_envs_bitwise() {
         let ticks = if name == "covid_econ" { 110 } else { 600 };
         for tick in 0..ticks {
             env.write_obs(&mut sobs);
-            for (i, (s, b)) in sobs.iter().zip(&eng.obs).enumerate() {
-                assert_eq!(s.to_bits(), b.to_bits(),
-                           "{name} tick {tick} obs[{i}]: {s} vs {b}");
+            // the engine's obs are column-major [od][rows]: feature f of
+            // agent row a sits at eng.obs[f * na + a], the scalar env's
+            // at sobs[a * od + f]
+            for a in 0..na {
+                for f in 0..od {
+                    let s = sobs[a * od + f];
+                    let b = eng.obs[f * na + a];
+                    assert_eq!(s.to_bits(), b.to_bits(),
+                               "{name} tick {tick} obs[{a}][{f}]: \
+                                {s} vs {b}");
+                }
             }
             let actions: Vec<usize> =
                 (0..na).map(|a| (a + tick) % n_act).collect();

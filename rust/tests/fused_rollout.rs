@@ -2,8 +2,9 @@
 //!
 //! 1. `CpuEngine::train_iter` is **bit-identical for any thread count**
 //!    at a fixed seed — policies *and* metrics — because action sampling
-//!    draws from per-lane streams, trajectory capture writes global
-//!    `[step][env][agent]` offsets, and completed-episode telemetry is
+//!    draws from per-lane streams, the tiled policy kernels give every
+//!    batch row its own accumulator chain, trajectory capture writes
+//!    global SoA column offsets, and completed-episode telemetry is
 //!    drained in global `(tick, lane)` order;
 //! 2. the engine's persistent worker pool shuts down cleanly: repeated
 //!    `init()` reseeding rebuilds the pool every time without hanging or

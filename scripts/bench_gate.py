@@ -5,14 +5,19 @@ Usage: bench_gate.py <fresh BENCH_engine.json> <committed BENCH_baseline.json>
 
 Two checks:
 
-1. Sanity — the fresh run produced well-formed records covering both the
-   fused and unfused roll-out sweeps, with positive throughput.
-2. Regression gate — every `fused_rollout/*` record named in the committed
-   baseline must reach at least HALF of its baseline `items_per_sec`.
-   The 2x tolerance is deliberate: CI runs on shared hardware, and the
-   committed baseline holds conservative floor values, so only
-   order-of-magnitude regressions (accidental debug-mode, O(n^2) paths,
-   lost parallelism) trip the gate — not runner noise.
+1. Sanity — the fresh run produced well-formed records covering the
+   fused and unfused roll-out sweeps plus the nn-kernel microbenches
+   (tiled GEMM and the policy-forward kernel on/off pair), with
+   positive throughput.
+2. Regression gate — every record named in the committed baseline must
+   reach at least `items_per_sec / TOLERANCE` of its baseline value.
+   TOLERANCE is 1.5 (tightened from the original 2x): CI runs on shared
+   hardware, and the committed baseline holds conservative floor values,
+   so the gate trips on real regressions (accidental debug-mode, O(n^2)
+   paths, lost parallelism, a de-vectorized kernel) — not on runner
+   noise.  Once the floors are re-measured from a real CI run (they are
+   still authoring-sandbox guesses — see the notes in the baseline
+   file), drop this to 1.3.
 
 A missing baseline file is a hard error (it is committed at the repo
 root); a baseline record whose name has no fresh counterpart is also an
@@ -21,6 +26,16 @@ error, so renames must update the baseline.
 
 import json
 import sys
+
+TOLERANCE = 1.5
+
+REQUIRED_PREFIXES = [
+    "fused_rollout/",
+    "unfused_rollout/",
+    "gemm_tile/",
+    "policy_forward/tiled/",
+    "policy_forward/scalar/",
+]
 
 
 def main() -> int:
@@ -37,8 +52,9 @@ def main() -> int:
         assert r["mean_secs"] > 0, r
         by_name[r["name"]] = r
     names = set(by_name)
-    assert any(n.startswith("fused_rollout/") for n in names), names
-    assert any(n.startswith("unfused_rollout/") for n in names), names
+    for prefix in REQUIRED_PREFIXES:
+        assert any(n.startswith(prefix) for n in names), \
+            f"no {prefix}* record in {fresh_path}: {sorted(names)}"
     print(f"{len(records)} bench records OK")
 
     with open(baseline_path) as f:
@@ -46,7 +62,7 @@ def main() -> int:
     failures = []
     for b in baseline:
         name = b["name"]
-        floor = b["items_per_sec"] / 2.0
+        floor = b["items_per_sec"] / TOLERANCE
         fresh = by_name.get(name)
         if fresh is None:
             failures.append(f"{name}: in baseline but missing from fresh "
@@ -58,7 +74,8 @@ def main() -> int:
               f"(gate: >= {floor:,.0f})")
         if got < floor:
             failures.append(f"{name}: {got:,.0f} < {floor:,.0f} "
-                            f"(baseline {b['items_per_sec']:,.0f} / 2)")
+                            f"(baseline {b['items_per_sec']:,.0f} "
+                            f"/ {TOLERANCE})")
     if failures:
         print("\nbench regression gate FAILED:")
         for f in failures:
