@@ -1,22 +1,26 @@
 //! Bench: the SoA batch engine — raw vector stepping, a thread-count ×
 //! environment sweep of the fused in-worker roll-out against the seed
 //! architecture (serial inference + per-tick engine step), a per-env
-//! fused steps/sec sweep, and microbenchmarks of the `nn::kernels`
-//! compute layer (tiled GEMM vs the scalar reference — the kernel-path
-//! on/off toggle), i.e. the paper's "thousands of concurrent
-//! environments on one device" axis realized on CPU.
+//! fused steps/sec sweep over the whole environment registry, and two
+//! kernel on/off microbench families: the `nn::kernels` compute layer
+//! (tiled GEMM vs the scalar reference) and the `envs::kernels` step
+//! layer (per-env lane-tiled `step_all` vs the scalar `step_all_ref`
+//! oracle), i.e. the paper's "thousands of concurrent environments on
+//! one device" axis realized on CPU.
 //!
 //! Each result is printed human-readably and as one JSON line, and the
 //! whole run is written as a JSON array to `BENCH_engine.json` at the
 //! repo root — the perf-trajectory baseline for future changes
-//! (`scripts/bench_gate.py` gates the `fused_rollout/*`, `gemm_tile/*`
-//! and `policy_forward/tiled/*` records against `BENCH_baseline.json`).
+//! (`scripts/bench_gate.py` gates the `fused_rollout/*`, `gemm_tile/*`,
+//! `policy_forward/tiled/*` and per-env `env_step/*` records against
+//! `BENCH_baseline.json`).
 //!
 //! Env overrides: `WARPSCI_BENCH_FAST=1` for a smoke run.
 
 use warpsci::bench::Bench;
 use warpsci::coordinator::{Backend, CpuEngine, CpuEngineConfig};
 use warpsci::engine::BatchEngine;
+use warpsci::envs::registry;
 use warpsci::nn::mlp::{Cache, RefCache};
 use warpsci::nn::{kernels, Mlp, TiledPolicy};
 use warpsci::util::{Json, Pcg64};
@@ -173,21 +177,43 @@ fn main() -> anyhow::Result<()> {
         emit(&mut records, &r);
     }
 
-    // other envs at the headline shard count
-    for env in ["acrobot", "pendulum", "catalysis_lh", "covid_econ"] {
-        let n_envs = if env == "covid_econ" { 512 } else { 4096 };
-        let mut eng = BatchEngine::by_name(env, n_envs, 4, 0)?;
-        let rows = n_envs * eng.n_agents();
-        let n_act = eng.n_actions() as u32;
+    // per-env step-kernel microbench across the whole registry: the
+    // lane-tiled columnar step_all vs the scalar step_all_ref oracle
+    // (the env-kernel on/off toggle), direct kernel dispatch on one
+    // resident state slab — no pool round, no obs refresh
+    for spec in registry::SPECS.iter() {
+        let env = (spec.make_batch)();
+        let n = spec.bench_n_envs;
+        let rows = n * spec.n_agents;
+        let mut state = vec![0f32; spec.state_dim * n];
+        for i in 0..n {
+            let mut rng = Pcg64::with_stream(0, i as u64);
+            env.reset_lane(&mut state, n, i, &mut rng);
+        }
+        let mut state_ref = state.clone();
+        let n_act = spec.n_actions as u32;
         let actions: Vec<u32> =
-            (0..rows).map(|i| i as u32 % n_act).collect();
-        let ticks = if env == "covid_econ" { 10 } else { 50 };
+            (0..rows).map(|r| r as u32 % n_act).collect();
+        let mut rewards = vec![0f32; rows];
+        let mut dones = vec![0f32; n];
+        let ticks = if spec.n_agents > 1 { 5 } else { 20 };
         let r = bench.run(
-            &format!("engine_step/{env}/n{n_envs}/threads4"),
-            (ticks * n_envs) as f64,
+            &format!("env_step/{}/tiled/n{n}", spec.name),
+            (ticks * n) as f64,
             || {
                 for _ in 0..ticks {
-                    eng.step(&actions);
+                    env.step_all(&mut state, n, &actions, &mut [],
+                                 &mut rewards, &mut dones);
+                }
+            });
+        emit(&mut records, &r);
+        let r = bench.run(
+            &format!("env_step/{}/scalar/n{n}", spec.name),
+            (ticks * n) as f64,
+            || {
+                for _ in 0..ticks {
+                    env.step_all_ref(&mut state_ref, n, &actions,
+                                     &mut [], &mut rewards, &mut dones);
                 }
             });
         emit(&mut records, &r);
@@ -226,15 +252,20 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    // per-env fused steps/sec at the headline shard count (cartpole and
-    // covid_econ are covered by the sweep above)
-    for env in ["acrobot", "pendulum", "catalysis_lh"] {
+    // per-env fused steps/sec at each env's registry bench shape
+    // (cartpole and covid_econ are covered by the sweep above)
+    for spec in registry::SPECS
+        .iter()
+        .filter(|s| s.name != "cartpole" && s.name != "covid_econ")
+    {
+        let (n_envs, t) = (spec.bench_n_envs, spec.bench_t);
         let mut eng = CpuEngine::new(CpuEngineConfig {
             threads: 4,
-            ..CpuEngineConfig::new(env, 4096, 8)
+            ..CpuEngineConfig::new(spec.name, n_envs, t)
         })?;
         let r = bench.run(
-            &format!("fused_rollout/{env}/n4096/t8/threads4"),
+            &format!("fused_rollout/{}/n{n_envs}/t{t}/threads4",
+                     spec.name),
             eng.steps_per_iter() as f64,
             || {
                 eng.rollout_iter().unwrap();
@@ -256,6 +287,20 @@ fn main() -> anyhow::Result<()> {
                 eng.train_iter().unwrap();
             });
         emit(&mut records, &r);
+    }
+
+    // registry manifest record: the env-name list this run covered,
+    // emitted straight from envs::registry so scripts/bench_gate.py can
+    // derive its per-env required records without a hand-kept mirror
+    {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("name".to_string(),
+                 Json::Str("registry/envs".to_string()));
+        m.insert("envs".to_string(),
+                 Json::Arr(registry::names()
+                     .map(|n| Json::Str(n.to_string()))
+                     .collect()));
+        records.push(Json::Obj(m));
     }
 
     let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))

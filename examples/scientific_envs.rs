@@ -1,0 +1,54 @@
+//! The high-dimensional scientific scenarios: train the Lotka-Volterra
+//! ecosystem manager (32-feature observations) and the 1-D
+//! reaction-diffusion bioreactor controller (64-feature observations)
+//! back to back on the fused CPU engine.
+//!
+//! Both environments were added through `envs::registry` — the engine,
+//! the trainer and this example resolve them purely by name, the same
+//! way `warpsci train --env ecosystem` does.
+//!
+//! Run:  cargo run --release --example scientific_envs
+//! Env:  WARPSCI_EXAMPLE_ITERS=N   shorten the run (CI smoke uses 2)
+
+use anyhow::Result;
+
+use warpsci::coordinator::{Backend, CpuEngine, CpuEngineConfig};
+use warpsci::envs::registry;
+use warpsci::util::csv::human;
+use warpsci::util::env_usize;
+
+fn train(env: &str, iters: usize) -> Result<()> {
+    let spec = registry::find(env).expect("registered env");
+    println!("\n== {env}: {} ==", spec.scenario);
+    println!("   obs {} x actions {} (state {} f32/lane)", spec.obs_dim,
+             spec.n_actions, spec.state_dim);
+    let mut eng = CpuEngine::new(CpuEngineConfig {
+        threads: 0, // all cores
+        seed: 0,
+        ..CpuEngineConfig::new(env, 512, 16)
+    })?;
+    let t0 = std::time::Instant::now();
+    let report_every = (iters / 5).max(1);
+    for i in 0..iters {
+        eng.train_iter()?;
+        if (i + 1) % report_every == 0 {
+            let row = eng.metrics_row(t0.elapsed().as_secs_f64())?;
+            println!("   iter {:>4}  return {:>9.2}  entropy {:>6.3}  \
+                      steps/s {:>10}",
+                     row.iter as u64, row.ep_return_ema, row.entropy,
+                     human(row.env_steps / t0.elapsed().as_secs_f64()));
+        }
+    }
+    let row = eng.metrics_row(t0.elapsed().as_secs_f64())?;
+    println!("   done: {} env steps in {:.1}s, final return {:.2}",
+             human(row.env_steps), t0.elapsed().as_secs_f64(),
+             row.ep_return_ema);
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let iters = env_usize("WARPSCI_EXAMPLE_ITERS", 60);
+    train("ecosystem", iters)?;
+    train("bioreactor", iters)?;
+    Ok(())
+}

@@ -289,6 +289,110 @@ def catalysis_step_ref(pos: jnp.ndarray, perturb: jnp.ndarray,
 
 
 # --------------------------------------------------------------------------
+# Ecosystem management: generalized Lotka-Volterra community
+# --------------------------------------------------------------------------
+ECOSYSTEM = dict(
+    n_species=16, n_actions=17, max_steps=200, dt=0.05,
+    x_max=6.0,            # population cap
+    x_ext=0.05,           # extinction threshold -> episode collapse
+    harvest_frac=0.2,     # fraction removed per harvest action
+    alive_bonus=0.05,     # per-step bonus scaled by surviving fraction
+    collapse_penalty=25.0,
+)
+
+
+def _lv_dsdt(x: jnp.ndarray, r: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """Generalized Lotka-Volterra derivative.
+
+    x: (N, S) populations, r: (N, S) per-episode rates,
+    a: (S, S) interaction matrix (effect of species j on i).
+    """
+    return x * (r + x @ a.T)
+
+
+def ecosystem_step_ref(x: jnp.ndarray, r: jnp.ndarray, a: jnp.ndarray,
+                       price: jnp.ndarray, action: jnp.ndarray) -> tuple:
+    """One managed step: optional harvest, one RK4 LV step, clamp.
+
+    x:      (N, S)  populations
+    r:      (N, S)  per-episode growth/mortality rates (constant)
+    a:      (S, S)  interaction matrix (fixed calibration)
+    price:  (S,)    market price per harvested unit
+    action: (N,)    int 0 = wait, 1..S = harvest species a-1
+    returns (next_x, reward (N,), collapsed (N,))
+    """
+    e = ECOSYSTEM
+    sel = jnp.arange(e["n_species"])[None, :] == (action[:, None] - 1)
+    h = jnp.where(sel, x * e["harvest_frac"], 0.0)
+    harvest = (h * price[None, :]).sum(axis=1)
+    x = x - h
+    dt = e["dt"]
+    k1 = _lv_dsdt(x, r, a)
+    k2 = _lv_dsdt(x + dt / 2.0 * k1, r, a)
+    k3 = _lv_dsdt(x + dt / 2.0 * k2, r, a)
+    k4 = _lv_dsdt(x + dt * k3, r, a)
+    x = x + dt / 6.0 * (k1 + 2 * k2 + 2 * k3 + k4)
+    x = jnp.clip(x, 0.0, e["x_max"])
+    alive = (x >= e["x_ext"]).sum(axis=1)
+    collapsed = alive < e["n_species"]
+    reward = (harvest + e["alive_bonus"] * alive / e["n_species"]
+              - jnp.where(collapsed, e["collapse_penalty"], 0.0))
+    return x, reward, collapsed
+
+
+# --------------------------------------------------------------------------
+# Bioreactor: 1-D reaction-diffusion nutrient/biomass control
+# --------------------------------------------------------------------------
+BIOREACTOR = dict(
+    nx=32, n_actions=8, max_steps=200, dt=0.1, substeps=2,
+    d_n=0.25, d_b=0.05,   # nutrient / biomass diffusion
+    mu_max=1.2, k_s=0.5,  # Monod growth kinetics
+    yield_inv=2.0, decay=0.08,
+    n_max=4.0, b_max=5.0,
+    feed_cells=(3, 11, 19, 27), feed_rates=(0.25, 0.75),
+    feed_cost=0.05, prod_w=4.0,
+    b_ext=1e-3, washout_penalty=10.0,
+)
+
+
+def _reflect_lap(u: jnp.ndarray) -> jnp.ndarray:
+    """1-D Laplacian with reflective boundaries.  u: (N, NX)."""
+    left = jnp.concatenate([u[:, :1], u[:, :-1]], axis=1)
+    right = jnp.concatenate([u[:, 1:], u[:, -1:]], axis=1)
+    return left - 2.0 * u + right
+
+
+def bioreactor_step_ref(nu: jnp.ndarray, b: jnp.ndarray,
+                        action: jnp.ndarray) -> tuple:
+    """One feed + SUBSTEPS explicit Euler substeps.
+
+    nu:     (N, NX) nutrient field
+    b:      (N, NX) biomass field
+    action: (N,)    int: port = a // 2 (of feed_cells), rate = a % 2
+    returns (nu', b', reward (N,), washout (N,))
+    """
+    c = BIOREACTOR
+    ports = jnp.array(c["feed_cells"])[action // 2]
+    rate = jnp.array(c["feed_rates"])[action % 2]
+    feed = (jnp.arange(c["nx"])[None, :] == ports[:, None]) * rate[:, None]
+    nu = jnp.minimum(nu + feed, c["n_max"])
+    g = jnp.zeros_like(nu)
+    for _ in range(c["substeps"]):
+        g = c["mu_max"] * nu / (c["k_s"] + nu) * b
+        nu2 = nu + c["dt"] * (c["d_n"] * _reflect_lap(nu)
+                              - c["yield_inv"] * g)
+        b2 = b + c["dt"] * (c["d_b"] * _reflect_lap(b) + g
+                            - c["decay"] * b)
+        nu = jnp.clip(nu2, 0.0, c["n_max"])
+        b = jnp.clip(b2, 0.0, c["b_max"])
+    prod_mean = g.mean(axis=1)
+    washout = b.mean(axis=1) < c["b_ext"]
+    reward = (c["prod_w"] * prod_mean - c["feed_cost"] * rate
+              - jnp.where(washout, c["washout_penalty"], 0.0))
+    return nu, b, reward, washout
+
+
+# --------------------------------------------------------------------------
 # Fused actor-critic MLP forward (policy inference hot path)
 # --------------------------------------------------------------------------
 def mlp_forward_ref(x: jnp.ndarray, w1, b1, w2, b2, wp, bp, wv, bv) -> tuple:

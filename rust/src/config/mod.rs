@@ -16,8 +16,8 @@ pub use parser::TomlValue;
 /// A training / benchmark run description.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunConfig {
-    /// Environment name as registered in python (`cartpole`, `acrobot`,
-    /// `pendulum`, `covid_econ`, `catalysis_lh`, `catalysis_er`).
+    /// Environment name, resolved through [`crate::envs::registry`]
+    /// (run `warpsci envs` for the table).
     pub env: String,
     /// Concurrent environment instances (the paper's headline axis).
     pub n_envs: usize,
@@ -82,6 +82,11 @@ impl RunConfig {
         let mut cfg = RunConfig::default();
         if let Some(v) = doc.get("env.name") {
             cfg.env = v.as_str()?.to_string();
+            if crate::envs::registry::find(&cfg.env).is_none() {
+                return Err(anyhow!(
+                    "unknown env {:?} (known: {})", cfg.env,
+                    crate::envs::registry::known_names()));
+            }
         }
         if let Some(v) = doc.get("env.n_envs") {
             cfg.n_envs = v.as_int()? as usize;
@@ -178,5 +183,19 @@ tag = "covid_econ_n60_t13"
     #[test]
     fn zero_envs_rejected() {
         assert!(RunConfig::from_toml_str("[env]\nn_envs = 0\n").is_err());
+    }
+
+    #[test]
+    fn unregistered_env_name_rejected_with_registry_listing() {
+        let err = RunConfig::from_toml_str("[env]\nname = \"warp\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cartpole") && err.contains("ecosystem"),
+                "error should list the registry: {err}");
+        // every registered name parses
+        for name in crate::envs::registry::names() {
+            let text = format!("[env]\nname = \"{name}\"\n");
+            assert_eq!(RunConfig::from_toml_str(&text).unwrap().env, name);
+        }
     }
 }

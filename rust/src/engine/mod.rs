@@ -86,9 +86,19 @@ pub trait BatchEnv: Send + Sync {
                   rng: &mut Pcg64);
     /// Advance every lane one step.  `actions` is `[lane][agent]`,
     /// `rewards` is `[lane][agent]`; `dones[i]` is set to 1.0 on
-    /// termination (truncation is the engine's job).
+    /// termination (truncation is the engine's job).  Implementations
+    /// run the lane-tiled columnar path ([`crate::envs::kernels`]).
     fn step_all(&self, state: &mut [f32], n: usize, actions: &[u32],
                 rngs: &mut [Pcg64], rewards: &mut [f32], dones: &mut [f32]);
+    /// Scalar reference implementation of [`BatchEnv::step_all`]: the
+    /// original per-replica loop, retained as the always-compiled
+    /// oracle.  The tiled `step_all` must stay **bit-identical** to
+    /// this path for every lane count — pinned by
+    /// `tests/env_step_bitexact.rs` and re-used as the "kernels off"
+    /// arm of the per-env `env_step` microbench.
+    fn step_all_ref(&self, state: &mut [f32], n: usize, actions: &[u32],
+                    rngs: &mut [Pcg64], rewards: &mut [f32],
+                    dones: &mut [f32]);
     /// Write every lane's observation **column-major**: feature `f` of
     /// observation row `r = lane * n_agents + agent` goes to
     /// `out[f * (n * n_agents) + r]`.  One virtual call per shard-tick;
@@ -99,26 +109,14 @@ pub trait BatchEnv: Send + Sync {
     fn write_obs_cols(&self, state: &[f32], n: usize, out: &mut [f32]);
 }
 
-/// Build a batch kernel by registry name.
+/// Build a batch kernel by registry name
+/// ([`crate::envs::registry`] holds the table).
 pub fn make_batch_env(name: &str) -> Result<Box<dyn BatchEnv>> {
-    Ok(match name {
-        "cartpole" => Box::new(envs::cartpole::BatchCartPole),
-        "acrobot" => Box::new(envs::acrobot::BatchAcrobot),
-        "pendulum" => Box::new(envs::pendulum::BatchPendulum),
-        "covid_econ" => {
-            Box::new(envs::covid::BatchCovidEcon::new(
-                envs::covid::CALIB_SEED))
-        }
-        "catalysis_lh" => {
-            Box::new(envs::catalysis::BatchCatalysis::new(
-                envs::Mechanism::Lh))
-        }
-        "catalysis_er" => {
-            Box::new(envs::catalysis::BatchCatalysis::new(
-                envs::Mechanism::Er))
-        }
-        other => bail!("unknown batch env {other:?}"),
-    })
+    match envs::registry::find(name) {
+        Some(spec) => Ok((spec.make_batch)()),
+        None => bail!("unknown batch env {name:?} (known: {})",
+                      envs::registry::known_names()),
+    }
 }
 
 /// One contiguous range of lanes owned by one worker thread.
@@ -663,8 +661,7 @@ mod tests {
 
     #[test]
     fn registry_covers_all_envs() {
-        for name in ["cartpole", "acrobot", "pendulum", "covid_econ",
-                     "catalysis_lh", "catalysis_er"] {
+        for name in envs::registry::names() {
             let env = make_batch_env(name).unwrap();
             assert_eq!(env.name(), name);
             assert!(env.obs_dim() > 0);

@@ -9,6 +9,7 @@ use std::f32::consts::PI;
 use crate::engine::BatchEnv;
 use crate::util::Pcg64;
 
+use super::kernels::{self, LANES};
 use super::CpuEnv;
 
 const DT: f32 = 0.2;
@@ -140,6 +141,60 @@ impl CpuEnv for Acrobot {
 /// SoA vector kernel: lanes `[th1][th2][dth1][dth2]`, field-major.
 pub struct BatchAcrobot;
 
+/// Lane-batched acrobot ODE over a state tile — [`dsdt`] with the
+/// transcendentals hoisted into batched passes (`cos(th2)`/`sin(th2)`
+/// evaluated once per lane and reused, exactly the values the scalar
+/// body recomputes) and the algebra left in the reference order, so
+/// each lane's derivative is bit-identical to [`dsdt`].
+fn dsdt_tile(s: &[[f32; LANES]; 4], torque: &[f32; LANES],
+             ds: &mut [[f32; LANES]; 4]) {
+    let (mut sin2, mut cos2) = ([0f32; LANES], [0f32; LANES]);
+    kernels::sin_cos(&s[1], &mut sin2, &mut cos2);
+    let mut cos12 = [0f32; LANES]; // cos(th1 + th2 - pi/2)
+    let mut cos1 = [0f32; LANES]; // cos(th1 - pi/2)
+    for l in 0..LANES {
+        cos12[l] = (s[0][l] + s[1][l] - PI / 2.0).cos();
+        cos1[l] = (s[0][l] - PI / 2.0).cos();
+    }
+    for l in 0..LANES {
+        let (dth1, dth2) = (s[2][l], s[3][l]);
+        let d1 = M1 * LC1 * LC1
+            + M2 * (L1 * L1 + LC2 * LC2 + 2.0 * L1 * LC2 * cos2[l])
+            + I1
+            + I2;
+        let d2 = M2 * (LC2 * LC2 + L1 * LC2 * cos2[l]) + I2;
+        let phi2 = M2 * LC2 * G * cos12[l];
+        let phi1 = -M2 * L1 * LC2 * dth2 * dth2 * sin2[l]
+            - 2.0 * M2 * L1 * LC2 * dth2 * dth1 * sin2[l]
+            + (M1 * LC1 + M2 * L1) * G * cos1[l]
+            + phi2;
+        let ddth2 = (torque[l] + d2 / d1 * phi1
+            - M2 * L1 * LC2 * dth1 * dth1 * sin2[l]
+            - phi2)
+            / (M2 * LC2 * LC2 + I2 - d2 * d2 / d1);
+        let ddth1 = -(d2 * ddth2 + phi1) / d1;
+        ds[0][l] = dth1;
+        ds[1][l] = dth2;
+        ds[2][l] = ddth1;
+        ds[3][l] = ddth2;
+    }
+}
+
+/// One lane's RK4 step over the split field columns — the scalar
+/// reference body shared by `step_all_ref` and the tile remainder.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn step_lane(th1s: &mut [f32], th2s: &mut [f32], d1s: &mut [f32],
+             d2s: &mut [f32], i: usize, action: u32,
+             rewards: &mut [f32], dones: &mut [f32]) {
+    let torque = action as f32 - 1.0;
+    let ns = rk4_step([th1s[i], th2s[i], d1s[i], d2s[i]], torque);
+    [th1s[i], th2s[i], d1s[i], d2s[i]] = ns;
+    let terminated = goal_reached(th1s[i], th2s[i]);
+    rewards[i] = if terminated { 0.0 } else { -1.0 };
+    dones[i] = if terminated { 1.0 } else { 0.0 };
+}
+
 impl BatchEnv for BatchAcrobot {
     fn name(&self) -> &'static str {
         "acrobot"
@@ -187,13 +242,49 @@ impl BatchEnv for BatchAcrobot {
         let (th1s, rest) = state.split_at_mut(n);
         let (th2s, rest) = rest.split_at_mut(n);
         let (d1s, d2s) = rest.split_at_mut(n);
+        let mut i0 = 0;
+        while i0 + LANES <= n {
+            let mut s = [[0f32; LANES]; 4];
+            kernels::load(th1s, i0, &mut s[0]);
+            kernels::load(th2s, i0, &mut s[1]);
+            kernels::load(d1s, i0, &mut s[2]);
+            kernels::load(d2s, i0, &mut s[3]);
+            let mut torque = [0f32; LANES];
+            for l in 0..LANES {
+                torque[l] = actions[i0 + l] as f32 - 1.0;
+            }
+            kernels::rk4_tile(&mut s, DT,
+                              |st, ds| dsdt_tile(st, &torque, ds));
+            kernels::wrap(&mut s[0], -PI, PI);
+            kernels::wrap(&mut s[1], -PI, PI);
+            kernels::clamp(&mut s[2], -MAX_VEL1, MAX_VEL1);
+            kernels::clamp(&mut s[3], -MAX_VEL2, MAX_VEL2);
+            for l in 0..LANES {
+                let terminated = goal_reached(s[0][l], s[1][l]);
+                rewards[i0 + l] = if terminated { 0.0 } else { -1.0 };
+                dones[i0 + l] = if terminated { 1.0 } else { 0.0 };
+            }
+            kernels::store(th1s, i0, &s[0]);
+            kernels::store(th2s, i0, &s[1]);
+            kernels::store(d1s, i0, &s[2]);
+            kernels::store(d2s, i0, &s[3]);
+            i0 += LANES;
+        }
+        for i in i0..n {
+            step_lane(th1s, th2s, d1s, d2s, i, actions[i], rewards,
+                      dones);
+        }
+    }
+
+    fn step_all_ref(&self, state: &mut [f32], n: usize, actions: &[u32],
+                    _rngs: &mut [Pcg64], rewards: &mut [f32],
+                    dones: &mut [f32]) {
+        let (th1s, rest) = state.split_at_mut(n);
+        let (th2s, rest) = rest.split_at_mut(n);
+        let (d1s, d2s) = rest.split_at_mut(n);
         for i in 0..n {
-            let torque = actions[i] as f32 - 1.0;
-            let ns = rk4_step([th1s[i], th2s[i], d1s[i], d2s[i]], torque);
-            [th1s[i], th2s[i], d1s[i], d2s[i]] = ns;
-            let terminated = goal_reached(th1s[i], th2s[i]);
-            rewards[i] = if terminated { 0.0 } else { -1.0 };
-            dones[i] = if terminated { 1.0 } else { 0.0 };
+            step_lane(th1s, th2s, d1s, d2s, i, actions[i], rewards,
+                      dones);
         }
     }
 }

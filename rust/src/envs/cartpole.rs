@@ -8,6 +8,7 @@
 use crate::engine::BatchEnv;
 use crate::util::Pcg64;
 
+use super::kernels::{self, LANES};
 use super::CpuEnv;
 
 const GRAVITY: f32 = 9.8;
@@ -93,6 +94,33 @@ impl CpuEnv for CartPole {
 /// SoA vector kernel: lanes `[x][x_dot][theta][theta_dot]`, field-major.
 pub struct BatchCartPole;
 
+/// One lane's Euler step over the split field columns — the scalar
+/// reference body shared by `step_all_ref` and the tile remainder of
+/// `step_all` (so the two paths cannot drift apart).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn step_lane(xs: &mut [f32], xds: &mut [f32], ths: &mut [f32],
+             thds: &mut [f32], i: usize, action: u32,
+             rewards: &mut [f32], dones: &mut [f32]) {
+    let (x, x_dot, th, th_dot) = (xs[i], xds[i], ths[i], thds[i]);
+    let force = if action == 1 { FORCE_MAG } else { -FORCE_MAG };
+    let (sinth, costh) = th.sin_cos();
+    let temp = (force + POLEMASS_LENGTH * th_dot * th_dot * sinth)
+        / TOTAL_MASS;
+    let thacc = (GRAVITY * sinth - costh * temp)
+        / (LENGTH * (4.0 / 3.0 - MASSPOLE * costh * costh / TOTAL_MASS));
+    let xacc = temp - POLEMASS_LENGTH * thacc * costh / TOTAL_MASS;
+    let nx = x + DT * x_dot;
+    let nth = th + DT * th_dot;
+    xs[i] = nx;
+    xds[i] = x_dot + DT * xacc;
+    ths[i] = nth;
+    thds[i] = th_dot + DT * thacc;
+    rewards[i] = 1.0;
+    let terminated = nx.abs() > X_THRESHOLD || nth.abs() > THETA_THRESHOLD;
+    dones[i] = if terminated { 1.0 } else { 0.0 };
+}
+
 impl BatchEnv for BatchCartPole {
     fn name(&self) -> &'static str {
         "cartpole"
@@ -134,26 +162,63 @@ impl BatchEnv for BatchCartPole {
         let (xs, rest) = state.split_at_mut(n);
         let (xds, rest) = rest.split_at_mut(n);
         let (ths, thds) = rest.split_at_mut(n);
+        let mut i0 = 0;
+        while i0 + LANES <= n {
+            let mut x = [0f32; LANES];
+            let mut xd = [0f32; LANES];
+            let mut th = [0f32; LANES];
+            let mut thd = [0f32; LANES];
+            kernels::load(xs, i0, &mut x);
+            kernels::load(xds, i0, &mut xd);
+            kernels::load(ths, i0, &mut th);
+            kernels::load(thds, i0, &mut thd);
+            let (mut sinth, mut costh) = ([0f32; LANES], [0f32; LANES]);
+            kernels::sin_cos(&th, &mut sinth, &mut costh);
+            for l in 0..LANES {
+                let force = if actions[i0 + l] == 1 {
+                    FORCE_MAG
+                } else {
+                    -FORCE_MAG
+                };
+                let temp = (force
+                    + POLEMASS_LENGTH * thd[l] * thd[l] * sinth[l])
+                    / TOTAL_MASS;
+                let thacc = (GRAVITY * sinth[l] - costh[l] * temp)
+                    / (LENGTH
+                        * (4.0 / 3.0
+                            - MASSPOLE * costh[l] * costh[l] / TOTAL_MASS));
+                let xacc =
+                    temp - POLEMASS_LENGTH * thacc * costh[l] / TOTAL_MASS;
+                let nx = x[l] + DT * xd[l];
+                let nth = th[l] + DT * thd[l];
+                x[l] = nx;
+                xd[l] += DT * xacc;
+                th[l] = nth;
+                thd[l] += DT * thacc;
+                rewards[i0 + l] = 1.0;
+                let terminated =
+                    nx.abs() > X_THRESHOLD || nth.abs() > THETA_THRESHOLD;
+                dones[i0 + l] = if terminated { 1.0 } else { 0.0 };
+            }
+            kernels::store(xs, i0, &x);
+            kernels::store(xds, i0, &xd);
+            kernels::store(ths, i0, &th);
+            kernels::store(thds, i0, &thd);
+            i0 += LANES;
+        }
+        for i in i0..n {
+            step_lane(xs, xds, ths, thds, i, actions[i], rewards, dones);
+        }
+    }
+
+    fn step_all_ref(&self, state: &mut [f32], n: usize, actions: &[u32],
+                    _rngs: &mut [Pcg64], rewards: &mut [f32],
+                    dones: &mut [f32]) {
+        let (xs, rest) = state.split_at_mut(n);
+        let (xds, rest) = rest.split_at_mut(n);
+        let (ths, thds) = rest.split_at_mut(n);
         for i in 0..n {
-            let (x, x_dot, th, th_dot) = (xs[i], xds[i], ths[i], thds[i]);
-            let force = if actions[i] == 1 { FORCE_MAG } else { -FORCE_MAG };
-            let (sinth, costh) = th.sin_cos();
-            let temp = (force + POLEMASS_LENGTH * th_dot * th_dot * sinth)
-                / TOTAL_MASS;
-            let thacc = (GRAVITY * sinth - costh * temp)
-                / (LENGTH
-                    * (4.0 / 3.0 - MASSPOLE * costh * costh / TOTAL_MASS));
-            let xacc = temp - POLEMASS_LENGTH * thacc * costh / TOTAL_MASS;
-            let nx = x + DT * x_dot;
-            let nth = th + DT * th_dot;
-            xs[i] = nx;
-            xds[i] = x_dot + DT * xacc;
-            ths[i] = nth;
-            thds[i] = th_dot + DT * thacc;
-            rewards[i] = 1.0;
-            let terminated =
-                nx.abs() > X_THRESHOLD || nth.abs() > THETA_THRESHOLD;
-            dones[i] = if terminated { 1.0 } else { 0.0 };
+            step_lane(xs, xds, ths, thds, i, actions[i], rewards, dones);
         }
     }
 }

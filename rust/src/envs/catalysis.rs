@@ -7,6 +7,7 @@ use std::f32::consts::PI;
 use crate::engine::BatchEnv;
 use crate::util::Pcg64;
 
+use super::kernels::{self, LANES};
 use super::CpuEnv;
 
 const MB_A: [f32; 4] = [-200.0, -100.0, -170.0, 15.0];
@@ -164,6 +165,58 @@ impl BatchCatalysis {
     }
 }
 
+/// Lane-batched [`mb_energy`] over a position tile: per lane the
+/// accumulation runs over the four Gaussians in ascending order, then
+/// the perturbation scale, then the optional co-adsorbate bump —
+/// exactly the scalar body, so each lane's energy is bit-identical.
+fn mb_energy_tile(x: &[f32; LANES], y: &[f32; LANES],
+                  perturb: &[f32; LANES], bump_amp: f32,
+                  out: &mut [f32; LANES]) {
+    *out = [0.0; LANES];
+    for k in 0..4 {
+        for l in 0..LANES {
+            let dx = x[l] - MB_X0[k];
+            let dy = y[l] - MB_Y0[k];
+            out[l] += MB_A[k]
+                * (MB_SMALL_A[k] * dx * dx + MB_B[k] * dx * dy
+                    + MB_C[k] * dy * dy)
+                    .exp();
+        }
+    }
+    for l in 0..LANES {
+        out[l] *= 1.0 + perturb[l];
+    }
+    if bump_amp != 0.0 {
+        for l in 0..LANES {
+            let dx = x[l] - LH_BUMP_X;
+            let dy = y[l] - LH_BUMP_Y;
+            out[l] += bump_amp
+                * (-(dx * dx + dy * dy) / (2.0 * LH_BUMP_W)).exp();
+        }
+    }
+}
+
+/// One lane's compass move over the split field columns — the scalar
+/// reference body shared by `step_all_ref` and the tile remainder.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn step_lane(xs: &mut [f32], ys: &mut [f32], ps: &[f32], bump: f32,
+             i: usize, action: u32, rewards: &mut [f32],
+             dones: &mut [f32]) {
+    let perturb = ps[i];
+    let ang = action as f32 * (2.0 * PI / N_ACTIONS as f32);
+    let e_old = mb_energy(xs[i], ys[i], perturb, bump);
+    xs[i] = (xs[i] + ang.cos() * STEP_LEN).clamp(X_LO, X_HI);
+    ys[i] = (ys[i] + ang.sin() * STEP_LEN).clamp(Y_LO, Y_HI);
+    let e_new = mb_energy(xs[i], ys[i], perturb, bump);
+    let dx = xs[i] - MIN_PRODUCT.0;
+    let dy = ys[i] - MIN_PRODUCT.1;
+    let in_product = dx * dx + dy * dy < PRODUCT_RADIUS * PRODUCT_RADIUS;
+    rewards[i] = -(e_new - e_old) / ENERGY_SCALE - STEP_PENALTY
+        + if in_product { PRODUCT_BONUS } else { 0.0 };
+    dones[i] = if in_product { 1.0 } else { 0.0 };
+}
+
 impl BatchEnv for BatchCatalysis {
     fn name(&self) -> &'static str {
         match self.mechanism {
@@ -217,20 +270,60 @@ impl BatchEnv for BatchCatalysis {
                 dones: &mut [f32]) {
         let (xs, rest) = state.split_at_mut(n);
         let (ys, ps) = rest.split_at_mut(n);
+        let mut i0 = 0;
+        while i0 + LANES <= n {
+            let mut x = [0f32; LANES];
+            let mut y = [0f32; LANES];
+            let mut p = [0f32; LANES];
+            kernels::load(xs, i0, &mut x);
+            kernels::load(ys, i0, &mut y);
+            kernels::load(ps, i0, &mut p);
+            // batched trig + energy passes, then fused move/clamp
+            let (mut sin_a, mut cos_a) = ([0f32; LANES], [0f32; LANES]);
+            let mut ang = [0f32; LANES];
+            for l in 0..LANES {
+                ang[l] = actions[i0 + l] as f32
+                    * (2.0 * PI / N_ACTIONS as f32);
+            }
+            kernels::sin_cos(&ang, &mut sin_a, &mut cos_a);
+            let mut e_old = [0f32; LANES];
+            mb_energy_tile(&x, &y, &p, self.bump, &mut e_old);
+            let mut nx = [0f32; LANES];
+            let mut ny = [0f32; LANES];
+            kernels::axpy(&x, STEP_LEN, &cos_a, &mut nx);
+            kernels::axpy(&y, STEP_LEN, &sin_a, &mut ny);
+            kernels::clamp(&mut nx, X_LO, X_HI);
+            kernels::clamp(&mut ny, Y_LO, Y_HI);
+            let mut e_new = [0f32; LANES];
+            mb_energy_tile(&nx, &ny, &p, self.bump, &mut e_new);
+            for l in 0..LANES {
+                let dx = nx[l] - MIN_PRODUCT.0;
+                let dy = ny[l] - MIN_PRODUCT.1;
+                let in_product =
+                    dx * dx + dy * dy < PRODUCT_RADIUS * PRODUCT_RADIUS;
+                rewards[i0 + l] = -(e_new[l] - e_old[l]) / ENERGY_SCALE
+                    - STEP_PENALTY
+                    + if in_product { PRODUCT_BONUS } else { 0.0 };
+                dones[i0 + l] = if in_product { 1.0 } else { 0.0 };
+            }
+            kernels::store(xs, i0, &nx);
+            kernels::store(ys, i0, &ny);
+            i0 += LANES;
+        }
+        for i in i0..n {
+            step_lane(xs, ys, ps, self.bump, i, actions[i], rewards,
+                      dones);
+        }
+    }
+
+    fn step_all_ref(&self, state: &mut [f32], n: usize, actions: &[u32],
+                    _rngs: &mut [Pcg64], rewards: &mut [f32],
+                    dones: &mut [f32]) {
+        let (xs, rest) = state.split_at_mut(n);
+        let (ys, ps) = rest.split_at_mut(n);
         for i in 0..n {
-            let perturb = ps[i];
-            let ang = actions[i] as f32 * (2.0 * PI / N_ACTIONS as f32);
-            let e_old = mb_energy(xs[i], ys[i], perturb, self.bump);
-            xs[i] = (xs[i] + ang.cos() * STEP_LEN).clamp(X_LO, X_HI);
-            ys[i] = (ys[i] + ang.sin() * STEP_LEN).clamp(Y_LO, Y_HI);
-            let e_new = mb_energy(xs[i], ys[i], perturb, self.bump);
-            let dx = xs[i] - MIN_PRODUCT.0;
-            let dy = ys[i] - MIN_PRODUCT.1;
-            let in_product =
-                dx * dx + dy * dy < PRODUCT_RADIUS * PRODUCT_RADIUS;
-            rewards[i] = -(e_new - e_old) / ENERGY_SCALE - STEP_PENALTY
-                + if in_product { PRODUCT_BONUS } else { 0.0 };
-            dones[i] = if in_product { 1.0 } else { 0.0 };
+            step_lane(xs, ys, ps, self.bump, i, actions[i], rewards,
+                      dones);
         }
     }
 }

@@ -8,6 +8,7 @@
 use crate::engine::BatchEnv;
 use crate::util::Pcg64;
 
+use super::kernels::{self, LANES};
 use super::CpuEnv;
 
 /// Calibration-table seed shared by the scalar and batch registries —
@@ -194,6 +195,47 @@ impl BatchCovidEcon {
         let mut rng = Pcg64::with_stream(calib_seed, 77);
         BatchCovidEcon { calib: make_calibration(&mut rng) }
     }
+
+    /// One lane's week over the field-major state — the scalar
+    /// reference body shared by `step_all_ref` and the tile remainder.
+    fn step_lane(&self, state: &mut [f32], n: usize, i: usize,
+                 acts: &[u32], rewards: &mut [f32], dones: &mut [f32]) {
+        let subsidy = acts[N_STATES] as f32;
+        let mut i_sum = 0.0f32;
+        for j in 0..N_STATES {
+            i_sum += state[(F_I + j) * n + i];
+        }
+        let i_nat = i_sum / N_STATES as f32;
+        let mut reward_sum = 0.0f32;
+        for j in 0..N_STATES {
+            let s = state[(F_S + j) * n + i];
+            let inf = state[(F_I + j) * n + i];
+            let [beta0, q0, hw] = self.calib[j];
+            let stringency = acts[j] as f32;
+            let beta = beta0 * (1.0 - BETA_DAMP * stringency);
+            let new_inf = (beta * s * ((1.0 - MIX) * inf + MIX * i_nat))
+                .clamp(0.0, s);
+            let new_rec = GAMMA_REC * inf;
+            let new_dead = MU_MORT * inf;
+            let i2 = (inf + new_inf - new_rec - new_dead).clamp(0.0, 1.0);
+            state[(F_S + j) * n + i] = s - new_inf;
+            state[(F_I + j) * n + i] = i2;
+            state[(F_D + j) * n + i] += new_dead;
+            let open_frac = 1.0 - ECON_DAMP * stringency;
+            let q2 = q0 * open_frac * (1.0 - 0.5 * i2)
+                + SUBSIDY_BOOST * subsidy;
+            let q = &mut state[(F_Q + j) * n + i];
+            *q = 0.5 * *q + 0.5 * q2;
+            let r = q2 - hw * DEATH_WEIGHT * new_dead;
+            rewards[i * N_AGENTS + j] = r;
+            reward_sum += r;
+        }
+        rewards[i * N_AGENTS + N_STATES] =
+            reward_sum / N_STATES as f32 - SUBSIDY_COST * subsidy;
+        state[F_FED * n + i] = subsidy;
+        state[F_T * n + i] += 1.0;
+        dones[i] = 0.0; // horizon truncation only
+    }
 }
 
 impl BatchEnv for BatchCovidEcon {
@@ -280,44 +322,97 @@ impl BatchEnv for BatchCovidEcon {
     fn step_all(&self, state: &mut [f32], n: usize, actions: &[u32],
                 _rngs: &mut [Pcg64], rewards: &mut [f32],
                 dones: &mut [f32]) {
+        let mut i0 = 0;
+        while i0 + LANES <= n {
+            // national infection average: per lane, ascending-j
+            // accumulation over the unit-stride infection columns
+            let mut i_sum = [0f32; LANES];
+            for j in 0..N_STATES {
+                let col = &state[(F_I + j) * n + i0..(F_I + j) * n + i0
+                    + LANES];
+                for l in 0..LANES {
+                    i_sum[l] += col[l];
+                }
+            }
+            let mut i_nat = [0f32; LANES];
+            let mut subsidy = [0f32; LANES];
+            for l in 0..LANES {
+                i_nat[l] = i_sum[l] / N_STATES as f32;
+                subsidy[l] =
+                    actions[(i0 + l) * N_AGENTS + N_STATES] as f32;
+            }
+            let mut reward_sum = [0f32; LANES];
+            for j in 0..N_STATES {
+                let [beta0, q0, hw] = self.calib[j];
+                let mut s = [0f32; LANES];
+                let mut inf = [0f32; LANES];
+                kernels::load(&state[(F_S + j) * n..(F_S + j + 1) * n],
+                              i0, &mut s);
+                kernels::load(&state[(F_I + j) * n..(F_I + j + 1) * n],
+                              i0, &mut inf);
+                let mut d_add = [0f32; LANES];
+                let mut q2t = [0f32; LANES];
+                for l in 0..LANES {
+                    let stringency =
+                        actions[(i0 + l) * N_AGENTS + j] as f32;
+                    let beta = beta0 * (1.0 - BETA_DAMP * stringency);
+                    let new_inf = (beta * s[l]
+                        * ((1.0 - MIX) * inf[l] + MIX * i_nat[l]))
+                        .clamp(0.0, s[l]);
+                    let new_rec = GAMMA_REC * inf[l];
+                    let new_dead = MU_MORT * inf[l];
+                    let i2 = (inf[l] + new_inf - new_rec - new_dead)
+                        .clamp(0.0, 1.0);
+                    s[l] -= new_inf;
+                    inf[l] = i2;
+                    d_add[l] = new_dead;
+                    let open_frac = 1.0 - ECON_DAMP * stringency;
+                    let q2 = q0 * open_frac * (1.0 - 0.5 * i2)
+                        + SUBSIDY_BOOST * subsidy[l];
+                    q2t[l] = q2;
+                    let r = q2 - hw * DEATH_WEIGHT * new_dead;
+                    rewards[(i0 + l) * N_AGENTS + j] = r;
+                    reward_sum[l] += r;
+                }
+                kernels::store(
+                    &mut state[(F_S + j) * n..(F_S + j + 1) * n], i0, &s);
+                kernels::store(
+                    &mut state[(F_I + j) * n..(F_I + j + 1) * n], i0,
+                    &inf);
+                let d_col = &mut state[(F_D + j) * n + i0..(F_D + j) * n
+                    + i0 + LANES];
+                let q_col_base = (F_Q + j) * n + i0;
+                for l in 0..LANES {
+                    d_col[l] += d_add[l];
+                }
+                let q_col =
+                    &mut state[q_col_base..q_col_base + LANES];
+                for l in 0..LANES {
+                    q_col[l] = 0.5 * q_col[l] + 0.5 * q2t[l];
+                }
+            }
+            for l in 0..LANES {
+                rewards[(i0 + l) * N_AGENTS + N_STATES] = reward_sum[l]
+                    / N_STATES as f32
+                    - SUBSIDY_COST * subsidy[l];
+                state[F_FED * n + i0 + l] = subsidy[l];
+                state[F_T * n + i0 + l] += 1.0;
+                dones[i0 + l] = 0.0; // horizon truncation only
+            }
+            i0 += LANES;
+        }
+        for i in i0..n {
+            let acts = &actions[i * N_AGENTS..(i + 1) * N_AGENTS];
+            self.step_lane(state, n, i, acts, rewards, dones);
+        }
+    }
+
+    fn step_all_ref(&self, state: &mut [f32], n: usize, actions: &[u32],
+                    _rngs: &mut [Pcg64], rewards: &mut [f32],
+                    dones: &mut [f32]) {
         for i in 0..n {
             let acts = &actions[i * N_AGENTS..(i + 1) * N_AGENTS];
-            let subsidy = acts[N_STATES] as f32;
-            let mut i_sum = 0.0f32;
-            for j in 0..N_STATES {
-                i_sum += state[(F_I + j) * n + i];
-            }
-            let i_nat = i_sum / N_STATES as f32;
-            let mut reward_sum = 0.0f32;
-            for j in 0..N_STATES {
-                let s = state[(F_S + j) * n + i];
-                let inf = state[(F_I + j) * n + i];
-                let [beta0, q0, hw] = self.calib[j];
-                let stringency = acts[j] as f32;
-                let beta = beta0 * (1.0 - BETA_DAMP * stringency);
-                let new_inf = (beta * s
-                    * ((1.0 - MIX) * inf + MIX * i_nat))
-                    .clamp(0.0, s);
-                let new_rec = GAMMA_REC * inf;
-                let new_dead = MU_MORT * inf;
-                let i2 = (inf + new_inf - new_rec - new_dead).clamp(0.0, 1.0);
-                state[(F_S + j) * n + i] = s - new_inf;
-                state[(F_I + j) * n + i] = i2;
-                state[(F_D + j) * n + i] += new_dead;
-                let open_frac = 1.0 - ECON_DAMP * stringency;
-                let q2 = q0 * open_frac * (1.0 - 0.5 * i2)
-                    + SUBSIDY_BOOST * subsidy;
-                let q = &mut state[(F_Q + j) * n + i];
-                *q = 0.5 * *q + 0.5 * q2;
-                let r = q2 - hw * DEATH_WEIGHT * new_dead;
-                rewards[i * N_AGENTS + j] = r;
-                reward_sum += r;
-            }
-            rewards[i * N_AGENTS + N_STATES] =
-                reward_sum / N_STATES as f32 - SUBSIDY_COST * subsidy;
-            state[F_FED * n + i] = subsidy;
-            state[F_T * n + i] += 1.0;
-            dones[i] = 0.0; // horizon truncation only
+            self.step_lane(state, n, i, acts, rewards, dones);
         }
     }
 }

@@ -1,0 +1,209 @@
+//! Lane-batched columnar math for the SoA environment kernels — the
+//! environment-side sibling of `nn::kernels`.
+//!
+//! Every [`crate::engine::BatchEnv`] steps `n` independent replica
+//! *lanes* whose state is field-major (`state[field * n + lane]`), so
+//! one field of [`LANES`] consecutive lanes is one unit-stride vector.
+//! The helpers here operate on stack tiles of [`LANES`] lanes at a
+//! time: trig/exp passes evaluate the (scalar, libm) transcendental
+//! once per lane into a tile register, and everything downstream —
+//! clamp/wrap passes, fused multiply-add update passes, the RK4 driver
+//! — is straight-line arithmetic over those tiles with **no
+//! cross-lane operation anywhere**, which is exactly the shape the
+//! autovectorizer turns into SIMD.
+//!
+//! Determinism: lanes are independent, so batching across lanes never
+//! reorders any single lane's operation chain.  Every helper performs,
+//! per lane, the *same sequence of scalar operations* as the
+//! per-replica reference loops (retained as
+//! [`crate::engine::BatchEnv::step_all_ref`]), so the tiled
+//! `step_all` paths are **bit-identical** to the scalar oracles for
+//! every lane count and tile remainder — pinned across all registered
+//! environments by `tests/env_step_bitexact.rs`.
+
+/// Lanes per stack tile.  Eight `f32` values are one AVX register (two
+/// NEON registers); remainder lanes (`n % 8`) run the scalar reference
+/// loop with the identical per-lane operation order.
+pub const LANES: usize = 8;
+
+/// Load one field column tile: `out[l] = col[lo + l]`.
+#[inline]
+pub fn load(col: &[f32], lo: usize, out: &mut [f32; LANES]) {
+    out.copy_from_slice(&col[lo..lo + LANES]);
+}
+
+/// Store one field column tile: `col[lo + l] = x[l]`.
+#[inline]
+pub fn store(col: &mut [f32], lo: usize, x: &[f32; LANES]) {
+    col[lo..lo + LANES].copy_from_slice(x);
+}
+
+/// Batched sine/cosine pass: `sin[l] = x[l].sin()`, `cos[l] =
+/// x[l].cos()`.  The libm calls stay scalar (bit-identity with the
+/// reference path forbids a vector-math approximation); batching them
+/// into one pass keeps the surrounding arithmetic vectorizable.
+#[inline]
+pub fn sin_cos(x: &[f32; LANES], sin: &mut [f32; LANES],
+               cos: &mut [f32; LANES]) {
+    for l in 0..LANES {
+        sin[l] = x[l].sin();
+        cos[l] = x[l].cos();
+    }
+}
+
+/// Batched sine pass: `sin[l] = x[l].sin()` (when the cosine is not
+/// needed).
+#[inline]
+pub fn sin(x: &[f32; LANES], sin: &mut [f32; LANES]) {
+    for l in 0..LANES {
+        sin[l] = x[l].sin();
+    }
+}
+
+/// Batched clamp pass: `x[l] = x[l].clamp(lo, hi)`.
+#[inline]
+pub fn clamp(x: &mut [f32; LANES], lo: f32, hi: f32) {
+    for v in x.iter_mut() {
+        *v = v.clamp(lo, hi);
+    }
+}
+
+/// Batched range-wrap pass: `x[l] = lo + (x[l] - lo).rem_euclid(hi -
+/// lo)` — the angle normalization used by the classic-control
+/// environments, identical expression to their scalar `wrap`.
+#[inline]
+pub fn wrap(x: &mut [f32; LANES], lo: f32, hi: f32) {
+    for v in x.iter_mut() {
+        *v = lo + (*v - lo).rem_euclid(hi - lo);
+    }
+}
+
+/// Fused update pass: `out[l] = a[l] + k * b[l]` — the explicit-Euler
+/// / RK-stage building block (`k` is a step-size constant, so the
+/// per-lane expression matches the scalar `a + K * b` form).
+#[inline]
+pub fn axpy(a: &[f32; LANES], k: f32, b: &[f32; LANES],
+            out: &mut [f32; LANES]) {
+    for l in 0..LANES {
+        out[l] = a[l] + k * b[l];
+    }
+}
+
+/// Lane-batched classic RK4 step over a tile of `D` state-field
+/// columns: `deriv(s, ds)` evaluates the system's time derivative for
+/// all [`LANES`] lanes of the tile (capture per-lane parameters —
+/// controls, per-episode constants — in the closure).  The stage
+/// combination mirrors the scalar reference exactly, per lane:
+///
+/// ```text
+/// k1 = f(s)
+/// k2 = f(s + k1 * (dt/2))
+/// k3 = f(s + k2 * (dt/2))
+/// k4 = f(s + k3 * dt)
+/// s' = s + dt/6 * (k1 + 2*k2 + 2*k3 + k4)
+/// ```
+///
+/// so a lane stepped through this driver is bit-identical to the same
+/// lane stepped through a scalar RK4 with the same `deriv` body.
+#[inline]
+pub fn rk4_tile<const D: usize, F>(s: &mut [[f32; LANES]; D], dt: f32,
+                                   mut deriv: F)
+where
+    F: FnMut(&[[f32; LANES]; D], &mut [[f32; LANES]; D]),
+{
+    let mut k1 = [[0f32; LANES]; D];
+    let mut k2 = [[0f32; LANES]; D];
+    let mut k3 = [[0f32; LANES]; D];
+    let mut k4 = [[0f32; LANES]; D];
+    let mut tmp = [[0f32; LANES]; D];
+    let half = dt / 2.0;
+    deriv(s, &mut k1);
+    for f in 0..D {
+        axpy(&s[f], half, &k1[f], &mut tmp[f]);
+    }
+    deriv(&tmp, &mut k2);
+    for f in 0..D {
+        axpy(&s[f], half, &k2[f], &mut tmp[f]);
+    }
+    deriv(&tmp, &mut k3);
+    for f in 0..D {
+        axpy(&s[f], dt, &k3[f], &mut tmp[f]);
+    }
+    deriv(&tmp, &mut k4);
+    let sixth = dt / 6.0;
+    for f in 0..D {
+        for l in 0..LANES {
+            s[f][l] += sixth
+                * (k1[f][l] + 2.0 * k2[f][l] + 2.0 * k3[f][l] + k4[f][l]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_store_roundtrip_at_offsets() {
+        let col: Vec<f32> = (0..24).map(|i| i as f32).collect();
+        let mut out = vec![0f32; 24];
+        let mut tile = [0f32; LANES];
+        for lo in [0usize, 8, 16] {
+            load(&col, lo, &mut tile);
+            store(&mut out, lo, &tile);
+        }
+        assert_eq!(col, out);
+    }
+
+    #[test]
+    fn passes_match_scalar_expressions_bitwise() {
+        let x0: [f32; LANES] =
+            [0.3, -1.7, 4.0, -9.5, 0.0, 2.25, -0.125, 7.5];
+        let (mut s, mut c) = ([0f32; LANES], [0f32; LANES]);
+        sin_cos(&x0, &mut s, &mut c);
+        for l in 0..LANES {
+            assert_eq!(s[l].to_bits(), x0[l].sin().to_bits());
+            assert_eq!(c[l].to_bits(), x0[l].cos().to_bits());
+        }
+        let mut cl = x0;
+        clamp(&mut cl, -1.0, 1.0);
+        let (lo, hi) = (-2.0f32, 2.0f32);
+        let mut wr = x0;
+        wrap(&mut wr, lo, hi);
+        for l in 0..LANES {
+            assert_eq!(cl[l].to_bits(), x0[l].clamp(-1.0, 1.0).to_bits());
+            let w = lo + (x0[l] - lo).rem_euclid(hi - lo);
+            assert_eq!(wr[l].to_bits(), w.to_bits());
+            assert!((lo..=hi).contains(&wr[l]));
+        }
+        let mut out = [0f32; LANES];
+        axpy(&x0, 0.25, &cl, &mut out);
+        for l in 0..LANES {
+            assert_eq!(out[l].to_bits(), (x0[l] + 0.25 * cl[l]).to_bits());
+        }
+    }
+
+    /// The tile driver against a hand-rolled scalar RK4 on dx = -x
+    /// (lane-independent, closed chain) — per-lane bitwise agreement.
+    #[test]
+    fn rk4_tile_matches_scalar_rk4_bitwise() {
+        let dt = 0.1f32;
+        let x0: [f32; LANES] =
+            [1.0, -0.5, 0.25, 3.0, -2.0, 0.0, 10.0, -7.5];
+        let mut s = [x0];
+        rk4_tile(&mut s, dt, |st, ds| {
+            for l in 0..LANES {
+                ds[0][l] = -st[0][l];
+            }
+        });
+        for l in 0..LANES {
+            let x = x0[l];
+            let k1 = -x;
+            let k2 = -(x + k1 * (dt / 2.0));
+            let k3 = -(x + k2 * (dt / 2.0));
+            let k4 = -(x + k3 * dt);
+            let want = x + dt / 6.0 * (k1 + 2.0 * k2 + 2.0 * k3 + k4);
+            assert_eq!(s[0][l].to_bits(), want.to_bits(), "lane {l}");
+        }
+    }
+}

@@ -9,20 +9,34 @@
 //!     provably agree;
 //!  3. the SoA vector kernels (`Batch*`) consumed by the batch engine
 //!     (`crate::engine`), which step all replicas of an environment per
-//!     tick with no per-replica virtual dispatch.
+//!     tick with no per-replica virtual dispatch.  Their hot loops run
+//!     on the lane-batched columnar layer ([`kernels`]), with the
+//!     original scalar loops retained as the always-compiled
+//!     `step_all_ref` oracles.
+//!
+//! Every scenario is declared once in [`registry`] — name, dimensions,
+//! constructors, bench defaults — and every consumer (engine, devices,
+//! CLI, harness, benches, tests) resolves environments through that
+//! table.
 //!
 //! Dynamics constants mirror `ref.py` exactly (gym classic_control).
 
 pub mod acrobot;
+pub mod bioreactor;
 pub mod cartpole;
 pub mod catalysis;
 pub mod covid;
+pub mod ecosystem;
+pub mod kernels;
 pub mod pendulum;
+pub mod registry;
 
 pub use acrobot::{Acrobot, BatchAcrobot};
+pub use bioreactor::{BatchBioreactor, Bioreactor};
 pub use cartpole::{BatchCartPole, CartPole};
 pub use catalysis::{BatchCatalysis, Catalysis, Mechanism};
 pub use covid::{BatchCovidEcon, CovidEcon};
+pub use ecosystem::{BatchEcosystem, Ecosystem};
 pub use pendulum::{BatchPendulum, Pendulum};
 
 use anyhow::{bail, Result};
@@ -55,15 +69,11 @@ pub trait CpuEnv: Send {
 
 /// Build a CPU environment by its registry name (same names as python).
 pub fn make_cpu_env(name: &str) -> Result<Box<dyn CpuEnv>> {
-    Ok(match name {
-        "cartpole" => Box::new(CartPole::new()),
-        "acrobot" => Box::new(Acrobot::new()),
-        "pendulum" => Box::new(Pendulum::new()),
-        "covid_econ" => Box::new(CovidEcon::new(covid::CALIB_SEED)),
-        "catalysis_lh" => Box::new(Catalysis::new(Mechanism::Lh)),
-        "catalysis_er" => Box::new(Catalysis::new(Mechanism::Er)),
-        other => bail!("unknown cpu env {other:?}"),
-    })
+    match registry::find(name) {
+        Some(spec) => Ok((spec.make_cpu)()),
+        None => bail!("unknown cpu env {name:?} (known: {})",
+                      registry::known_names()),
+    }
 }
 
 #[cfg(test)]
@@ -72,21 +82,21 @@ mod tests {
 
     #[test]
     fn registry_covers_all_envs() {
-        for name in ["cartpole", "acrobot", "pendulum", "covid_econ",
-                     "catalysis_lh", "catalysis_er"] {
+        for name in registry::names() {
             let env = make_cpu_env(name).unwrap();
             assert!(env.obs_dim() > 0);
             assert!(env.n_actions() > 1);
             assert!(env.max_steps() > 0);
         }
-        assert!(make_cpu_env("nope").is_err());
+        let err = make_cpu_env("nope").unwrap_err().to_string();
+        assert!(err.contains("cartpole") && err.contains("bioreactor"),
+                "error should list the registry: {err}");
     }
 
     #[test]
     fn episodes_run_to_completion_under_random_policy() {
         let mut rng = Pcg64::new(0);
-        for name in ["cartpole", "acrobot", "pendulum", "covid_econ",
-                     "catalysis_lh"] {
+        for name in registry::names() {
             let mut env = make_cpu_env(name).unwrap();
             env.reset(&mut rng);
             let na = env.n_agents();

@@ -9,6 +9,7 @@ use std::f32::consts::PI;
 use crate::engine::BatchEnv;
 use crate::util::Pcg64;
 
+use super::kernels::{self, LANES};
 use super::CpuEnv;
 
 const DT: f32 = 0.05;
@@ -93,6 +94,25 @@ impl CpuEnv for Pendulum {
 /// SoA vector kernel: lanes `[theta][theta_dot]`, field-major.
 pub struct BatchPendulum;
 
+/// One lane's torque step over the split field columns — the scalar
+/// reference body shared by `step_all_ref` and the tile remainder.
+#[inline]
+fn step_lane(ths: &mut [f32], thds: &mut [f32], i: usize, action: u32,
+             rewards: &mut [f32], dones: &mut [f32]) {
+    let (th, th_dot) = (ths[i], thds[i]);
+    let u = Pendulum::bin_to_torque(action as usize)
+        .clamp(-MAX_TORQUE, MAX_TORQUE);
+    let th_norm = wrap(th, -PI, PI);
+    let cost = th_norm * th_norm + 0.1 * th_dot * th_dot + 0.001 * u * u;
+    let newthdot = (th_dot
+        + (3.0 * G / (2.0 * L) * th.sin() + 3.0 / (M * L * L) * u) * DT)
+        .clamp(-MAX_SPEED, MAX_SPEED);
+    ths[i] = th + newthdot * DT;
+    thds[i] = newthdot;
+    rewards[i] = -cost;
+    dones[i] = 0.0;
+}
+
 impl BatchEnv for BatchPendulum {
     fn name(&self) -> &'static str {
         "pendulum"
@@ -136,21 +156,48 @@ impl BatchEnv for BatchPendulum {
                 _rngs: &mut [Pcg64], rewards: &mut [f32],
                 dones: &mut [f32]) {
         let (ths, thds) = state.split_at_mut(n);
+        let mut i0 = 0;
+        while i0 + LANES <= n {
+            let (mut th, mut thd) = ([0f32; LANES], [0f32; LANES]);
+            kernels::load(ths, i0, &mut th);
+            kernels::load(thds, i0, &mut thd);
+            // batched trig + wrap passes over the tile, then one
+            // arithmetic pass per lane with the reference op order
+            let mut sinth = [0f32; LANES];
+            kernels::sin(&th, &mut sinth);
+            let mut th_norm = th;
+            kernels::wrap(&mut th_norm, -PI, PI);
+            for l in 0..LANES {
+                let u = Pendulum::bin_to_torque(actions[i0 + l] as usize)
+                    .clamp(-MAX_TORQUE, MAX_TORQUE);
+                let cost = th_norm[l] * th_norm[l]
+                    + 0.1 * thd[l] * thd[l]
+                    + 0.001 * u * u;
+                let newthdot = (thd[l]
+                    + (3.0 * G / (2.0 * L) * sinth[l]
+                        + 3.0 / (M * L * L) * u)
+                        * DT)
+                    .clamp(-MAX_SPEED, MAX_SPEED);
+                th[l] += newthdot * DT;
+                thd[l] = newthdot;
+                rewards[i0 + l] = -cost;
+                dones[i0 + l] = 0.0;
+            }
+            kernels::store(ths, i0, &th);
+            kernels::store(thds, i0, &thd);
+            i0 += LANES;
+        }
+        for i in i0..n {
+            step_lane(ths, thds, i, actions[i], rewards, dones);
+        }
+    }
+
+    fn step_all_ref(&self, state: &mut [f32], n: usize, actions: &[u32],
+                    _rngs: &mut [Pcg64], rewards: &mut [f32],
+                    dones: &mut [f32]) {
+        let (ths, thds) = state.split_at_mut(n);
         for i in 0..n {
-            let (th, th_dot) = (ths[i], thds[i]);
-            let u = Pendulum::bin_to_torque(actions[i] as usize)
-                .clamp(-MAX_TORQUE, MAX_TORQUE);
-            let th_norm = wrap(th, -PI, PI);
-            let cost = th_norm * th_norm + 0.1 * th_dot * th_dot
-                + 0.001 * u * u;
-            let newthdot = (th_dot
-                + (3.0 * G / (2.0 * L) * th.sin() + 3.0 / (M * L * L) * u)
-                    * DT)
-                .clamp(-MAX_SPEED, MAX_SPEED);
-            ths[i] = th + newthdot * DT;
-            thds[i] = newthdot;
-            rewards[i] = -cost;
-            dones[i] = 0.0;
+            step_lane(ths, thds, i, actions[i], rewards, dones);
         }
     }
 }

@@ -1,0 +1,303 @@
+//! The environment registry: one table describing every scenario the
+//! runtime can host.
+//!
+//! Everything that used to string-match on environment names — the
+//! scalar factory ([`crate::envs::make_cpu_env`]), the batch-kernel
+//! factory ([`crate::engine::make_batch_env`]), the engine/device
+//! backends, `warpsci envs`, the benches and the test suites — now
+//! resolves through this table, so adding a scenario is **one new
+//! [`EnvSpec`] row** (see the "adding an environment" walkthrough in
+//! `rust/README.md`, whose environment table is generated from this
+//! registry and pinned by a test here).
+
+use super::{
+    acrobot, bioreactor, cartpole, catalysis, covid, ecosystem, pendulum,
+    CpuEnv,
+};
+use crate::engine::BatchEnv;
+
+/// Static description + constructors for one registered environment.
+pub struct EnvSpec {
+    /// Registry name (shared with the python pipeline and artifacts).
+    pub name: &'static str,
+    /// One-line scenario description (docs, `warpsci envs`).
+    pub scenario: &'static str,
+    /// Per-agent observation width.
+    pub obs_dim: usize,
+    /// Per-agent discrete action count.
+    pub n_actions: usize,
+    /// Acting agents per replica.
+    pub n_agents: usize,
+    /// Per-lane `f32` state slots of the batch kernel.
+    pub state_dim: usize,
+    /// Episode truncation horizon.
+    pub max_steps: u32,
+    /// Default replica count for throughput benches.
+    pub bench_n_envs: usize,
+    /// Default roll-out length for throughput benches.
+    pub bench_t: usize,
+    /// Scalar per-instance environment constructor.
+    pub make_cpu: fn() -> Box<dyn CpuEnv>,
+    /// SoA vector-kernel constructor.
+    pub make_batch: fn() -> Box<dyn BatchEnv>,
+}
+
+fn cpu_cartpole() -> Box<dyn CpuEnv> {
+    Box::new(cartpole::CartPole::new())
+}
+
+fn batch_cartpole() -> Box<dyn BatchEnv> {
+    Box::new(cartpole::BatchCartPole)
+}
+
+fn cpu_acrobot() -> Box<dyn CpuEnv> {
+    Box::new(acrobot::Acrobot::new())
+}
+
+fn batch_acrobot() -> Box<dyn BatchEnv> {
+    Box::new(acrobot::BatchAcrobot)
+}
+
+fn cpu_pendulum() -> Box<dyn CpuEnv> {
+    Box::new(pendulum::Pendulum::new())
+}
+
+fn batch_pendulum() -> Box<dyn BatchEnv> {
+    Box::new(pendulum::BatchPendulum)
+}
+
+fn cpu_covid() -> Box<dyn CpuEnv> {
+    Box::new(covid::CovidEcon::new(covid::CALIB_SEED))
+}
+
+fn batch_covid() -> Box<dyn BatchEnv> {
+    Box::new(covid::BatchCovidEcon::new(covid::CALIB_SEED))
+}
+
+fn cpu_catalysis_lh() -> Box<dyn CpuEnv> {
+    Box::new(catalysis::Catalysis::new(catalysis::Mechanism::Lh))
+}
+
+fn batch_catalysis_lh() -> Box<dyn BatchEnv> {
+    Box::new(catalysis::BatchCatalysis::new(catalysis::Mechanism::Lh))
+}
+
+fn cpu_catalysis_er() -> Box<dyn CpuEnv> {
+    Box::new(catalysis::Catalysis::new(catalysis::Mechanism::Er))
+}
+
+fn batch_catalysis_er() -> Box<dyn BatchEnv> {
+    Box::new(catalysis::BatchCatalysis::new(catalysis::Mechanism::Er))
+}
+
+fn cpu_ecosystem() -> Box<dyn CpuEnv> {
+    Box::new(ecosystem::Ecosystem::new())
+}
+
+fn batch_ecosystem() -> Box<dyn BatchEnv> {
+    Box::new(ecosystem::BatchEcosystem::new(ecosystem::CALIB_SEED))
+}
+
+fn cpu_bioreactor() -> Box<dyn CpuEnv> {
+    Box::new(bioreactor::Bioreactor::new())
+}
+
+fn batch_bioreactor() -> Box<dyn BatchEnv> {
+    Box::new(bioreactor::BatchBioreactor)
+}
+
+/// Every registered environment, in canonical (docs/bench) order.
+pub static SPECS: [EnvSpec; 8] = [
+    EnvSpec {
+        name: "cartpole",
+        scenario: "classic control: pole balancing on a cart (Euler)",
+        obs_dim: 4,
+        n_actions: 2,
+        n_agents: 1,
+        state_dim: 4,
+        max_steps: 500,
+        bench_n_envs: 4096,
+        bench_t: 8,
+        make_cpu: cpu_cartpole,
+        make_batch: batch_cartpole,
+    },
+    EnvSpec {
+        name: "acrobot",
+        scenario: "classic control: two-link swing-up (RK4 dynamics)",
+        obs_dim: 6,
+        n_actions: 3,
+        n_agents: 1,
+        state_dim: 4,
+        max_steps: 500,
+        bench_n_envs: 4096,
+        bench_t: 8,
+        make_cpu: cpu_acrobot,
+        make_batch: batch_acrobot,
+    },
+    EnvSpec {
+        name: "pendulum",
+        scenario: "classic control: torque pendulum (5 torque bins)",
+        obs_dim: 3,
+        n_actions: 5,
+        n_agents: 1,
+        state_dim: 2,
+        max_steps: 200,
+        bench_n_envs: 4096,
+        bench_t: 8,
+        make_cpu: cpu_pendulum,
+        make_batch: batch_pendulum,
+    },
+    EnvSpec {
+        name: "covid_econ",
+        scenario: "two-level COVID economy: 51 governors + 1 federal",
+        obs_dim: covid::GOV_OBS,
+        n_actions: covid::N_ACTIONS,
+        n_agents: covid::N_AGENTS,
+        state_dim: 4 * covid::N_STATES + 2,
+        max_steps: covid::MAX_STEPS as u32,
+        bench_n_envs: 128,
+        bench_t: 4,
+        make_cpu: cpu_covid,
+        make_batch: batch_covid,
+    },
+    EnvSpec {
+        name: "catalysis_lh",
+        scenario: "reaction path on the Mueller-Brown PES (LH geometry)",
+        obs_dim: 4,
+        n_actions: 8,
+        n_agents: 1,
+        state_dim: 3,
+        max_steps: 200,
+        bench_n_envs: 4096,
+        bench_t: 8,
+        make_cpu: cpu_catalysis_lh,
+        make_batch: batch_catalysis_lh,
+    },
+    EnvSpec {
+        name: "catalysis_er",
+        scenario: "reaction path on the Mueller-Brown PES (ER geometry)",
+        obs_dim: 4,
+        n_actions: 8,
+        n_agents: 1,
+        state_dim: 3,
+        max_steps: 200,
+        bench_n_envs: 4096,
+        bench_t: 8,
+        make_cpu: cpu_catalysis_er,
+        make_batch: batch_catalysis_er,
+    },
+    EnvSpec {
+        name: "ecosystem",
+        scenario: "Lotka-Volterra ecosystem management (16 species, RK4)",
+        obs_dim: ecosystem::OBS_DIM,
+        n_actions: ecosystem::N_ACTIONS,
+        n_agents: 1,
+        state_dim: 2 * ecosystem::N_SPECIES,
+        max_steps: 200,
+        bench_n_envs: 1024,
+        bench_t: 8,
+        make_cpu: cpu_ecosystem,
+        make_batch: batch_ecosystem,
+    },
+    EnvSpec {
+        name: "bioreactor",
+        scenario: "1-D reaction-diffusion bioreactor feed control",
+        obs_dim: bioreactor::OBS_DIM,
+        n_actions: bioreactor::N_ACTIONS,
+        n_agents: 1,
+        state_dim: 2 * bioreactor::NX,
+        max_steps: 200,
+        bench_n_envs: 1024,
+        bench_t: 8,
+        make_cpu: cpu_bioreactor,
+        make_batch: batch_bioreactor,
+    },
+];
+
+/// Look an environment up by registry name.
+pub fn find(name: &str) -> Option<&'static EnvSpec> {
+    SPECS.iter().find(|s| s.name == name)
+}
+
+/// All registered names, in canonical order.
+pub fn names() -> impl Iterator<Item = &'static str> {
+    SPECS.iter().map(|s| s.name)
+}
+
+/// Comma-separated name list for error messages.
+pub fn known_names() -> String {
+    names().collect::<Vec<_>>().join(", ")
+}
+
+/// The environment table in `rust/README.md`, generated from this
+/// registry (a test pins the README copy against this output).
+pub fn markdown_table() -> String {
+    let mut out = String::from(
+        "| name | obs dim | actions | agents | state dim | horizon | \
+         scenario |\n\
+         |------|---------|---------|--------|-----------|---------|\
+         ----------|\n",
+    );
+    for spec in SPECS.iter() {
+        out.push_str(&format!(
+            "| `{}` | {} | {} | {} | {} | {} | {} |\n",
+            spec.name, spec.obs_dim, spec.n_actions, spec.n_agents,
+            spec.state_dim, spec.max_steps, spec.scenario));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every spec's static metadata must agree with both live
+    /// constructions — the registry can never drift from the envs.
+    #[test]
+    fn specs_match_both_constructions() {
+        for spec in SPECS.iter() {
+            let cpu = (spec.make_cpu)();
+            assert_eq!(cpu.obs_dim(), spec.obs_dim, "{}", spec.name);
+            assert_eq!(cpu.n_actions(), spec.n_actions, "{}", spec.name);
+            assert_eq!(cpu.n_agents(), spec.n_agents, "{}", spec.name);
+            assert_eq!(cpu.max_steps(), spec.max_steps as usize, "{}",
+                       spec.name);
+            let batch = (spec.make_batch)();
+            assert_eq!(batch.name(), spec.name);
+            assert_eq!(batch.obs_dim(), spec.obs_dim, "{}", spec.name);
+            assert_eq!(batch.n_actions(), spec.n_actions, "{}",
+                       spec.name);
+            assert_eq!(batch.n_agents(), spec.n_agents, "{}", spec.name);
+            assert_eq!(batch.state_dim(), spec.state_dim, "{}",
+                       spec.name);
+            assert_eq!(batch.max_steps(), spec.max_steps, "{}",
+                       spec.name);
+            assert!(spec.bench_n_envs > 0 && spec.bench_t > 0);
+        }
+    }
+
+    #[test]
+    fn names_are_unique_and_findable() {
+        let all: Vec<_> = names().collect();
+        for name in &all {
+            assert_eq!(find(name).unwrap().name, *name);
+        }
+        let mut dedup = all.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), all.len(), "duplicate registry names");
+        assert!(find("nope").is_none());
+        assert!(known_names().contains("cartpole"));
+    }
+
+    /// The README environment table is this registry's render — edits
+    /// to either side must keep them in sync.
+    #[test]
+    fn readme_env_table_is_generated_from_the_registry() {
+        let readme = include_str!("../../README.md");
+        assert!(readme.contains(&markdown_table()),
+                "rust/README.md env table is out of sync with \
+                 envs::registry::markdown_table(); regenerate it:\n\n{}",
+                markdown_table());
+    }
+}

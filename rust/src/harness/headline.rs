@@ -15,17 +15,24 @@ struct Row {
     env: &'static str,
     t: usize,
     our_envs: usize,
+    /// 0 for workloads the paper does not report (our additions).
     paper_envs: usize,
     paper_sps: f64,
 }
 
-const ROWS: [Row; 3] = [
+const ROWS: [Row; 5] = [
     Row { workload: "classic control (CartPole)", env: "cartpole", t: 32,
           our_envs: 4096, paper_envs: 10_000, paper_sps: 8.6e6 },
     Row { workload: "economic simulation", env: "covid_econ", t: 13,
           our_envs: 256, paper_envs: 1_000, paper_sps: 0.12e6 },
     Row { workload: "catalytic reactions (LH)", env: "catalysis_lh", t: 32,
           our_envs: 2_000, paper_envs: 2_000, paper_sps: 0.95e6 },
+    // the high-dimensional-observation scenarios this reproduction
+    // adds on top of the paper's set (no paper reference numbers)
+    Row { workload: "ecosystem management (LV)", env: "ecosystem", t: 32,
+          our_envs: 1_024, paper_envs: 0, paper_sps: 0.0 },
+    Row { workload: "bioreactor control (RD)", env: "bioreactor", t: 32,
+          our_envs: 1_024, paper_envs: 0, paper_sps: 0.0 },
 ];
 
 /// Measure each workload at a fixed high concurrency level.
@@ -47,9 +54,13 @@ pub fn headline(opts: &HarnessOpts) -> Result<()> {
                                                opts.iters)?;
         let agent_sps =
             stats.steps_per_sec * backend.agents_per_env() as f64;
+        let paper = if row.paper_envs == 0 {
+            "—".to_string()
+        } else {
+            format!("{} @{}", human(row.paper_sps), row.paper_envs)
+        };
         println!("{:<28} {:>16} {:>12} {:>16} {:>16}", row.workload,
-                 format!("{} @{}", human(row.paper_sps), row.paper_envs),
-                 backend.n_envs(), human(stats.steps_per_sec),
+                 paper, backend.n_envs(), human(stats.steps_per_sec),
                  human(agent_sps));
         csv.row(&[row.workload.into(), row.paper_envs.to_string(),
                   format!("{}", row.paper_sps),

@@ -8,6 +8,8 @@
 //!                    compiled AOT artifacts)
 //!   bench <exp>      regenerate a paper table/figure (fig2a, fig2b, fig2c,
 //!                    fig3, fig3-scaling, fig4, headline, ablation-*)
+//!   envs             list the environment registry (all trainable
+//!                    scenarios with their dimensions)
 //!   list             list available artifact tags
 //!   info <tag>       print an artifact manifest summary
 //!   validate [tag]   compile + smoke-run artifacts (pjrt builds only)
@@ -82,6 +84,7 @@ USAGE:
                  ablation-transfer|ablation-kernel|ablation-estimator|all>
                 [--budget-secs S] [--seeds N] [--iters K] [--threads P]
                 [--out-dir d]
+  warpsci envs
   warpsci list
   warpsci info <tag>
   warpsci validate [tag ...]   (pjrt builds: compiles + smoke-runs)
@@ -105,6 +108,7 @@ fn run(argv: &[String]) -> Result<()> {
     match cmd {
         "train" => cmd_train(&args),
         "bench" => cmd_bench(&args),
+        "envs" => cmd_envs(),
         "list" => cmd_list(),
         "info" => cmd_info(&args),
         "validate" => cmd_validate(&args),
@@ -392,6 +396,19 @@ fn cmd_bench_ablation(opts: &HarnessOpts, args: &Args, exp: &str)
         }
         other => bail!("unknown experiment {other:?}\n{USAGE}"),
     }
+}
+
+/// Print the environment registry: every trainable scenario with its
+/// dimensions — the single env table the whole stack dispatches on.
+fn cmd_envs() -> Result<()> {
+    println!("{:<14} {:>4} {:>8} {:>7} {:>6} {:>8}  scenario", "name",
+             "obs", "actions", "agents", "state", "horizon");
+    for spec in warpsci::envs::registry::SPECS.iter() {
+        println!("{:<14} {:>4} {:>8} {:>7} {:>6} {:>8}  {}", spec.name,
+                 spec.obs_dim, spec.n_actions, spec.n_agents,
+                 spec.state_dim, spec.max_steps, spec.scenario);
+    }
+    Ok(())
 }
 
 fn cmd_list() -> Result<()> {

@@ -768,8 +768,7 @@ mod tests {
     #[test]
     fn synthesized_manifest_validates_for_all_envs() {
         let device = CpuDevice::new();
-        for env in ["cartpole", "acrobot", "pendulum", "covid_econ",
-                    "catalysis_lh", "catalysis_er"] {
+        for env in crate::envs::registry::names() {
             let a = device.artifact(env, 4, 3).unwrap();
             let m = &a.manifest;
             assert_eq!(m.env, env);

@@ -10,12 +10,15 @@
 //!    trajectories, bitwise).
 
 use warpsci::engine::{BatchEngine, TrajectorySlices};
-use warpsci::envs::make_cpu_env;
+use warpsci::envs::{make_cpu_env, registry};
 use warpsci::nn::{Mlp, TiledPolicy};
 use warpsci::util::Pcg64;
 
-const ENVS: [&str; 6] = ["cartpole", "acrobot", "pendulum", "covid_econ",
-                         "catalysis_lh", "catalysis_er"];
+/// Every registered environment (the registry is the single source of
+/// the name list — no hardcoded env sets in tests).
+fn env_names() -> impl Iterator<Item = &'static str> {
+    registry::names()
+}
 
 /// Run `ticks` rounds with a deterministic action pattern; return the
 /// bit patterns of every obs/reward emitted plus the final state.
@@ -41,7 +44,7 @@ fn run_ticks(name: &str, n_envs: usize, threads: usize, seed: u64,
 
 #[test]
 fn sharded_stepping_is_bit_identical_across_thread_counts() {
-    for name in ENVS {
+    for name in env_names() {
         let n_envs = if name == "covid_econ" { 6 } else { 16 };
         let ticks = if name == "covid_econ" { 20 } else { 60 };
         let reference = run_ticks(name, n_envs, 1, 42, ticks);
@@ -96,7 +99,7 @@ fn run_fused(name: &str, n_envs: usize, threads: usize, seed: u64,
 
 #[test]
 fn fused_rollout_is_bit_identical_across_thread_counts() {
-    for name in ENVS {
+    for name in env_names() {
         let n_envs = if name == "covid_econ" { 5 } else { 12 };
         let rounds = if name == "covid_econ" { 3 } else { 6 };
         let reference = run_fused(name, n_envs, 1, 11, 7, rounds);
@@ -118,7 +121,7 @@ fn different_seeds_give_different_trajectories() {
 
 #[test]
 fn batch_kernels_agree_with_scalar_envs_bitwise() {
-    for name in ENVS {
+    for name in env_names() {
         // lane 0 of a fresh engine uses the Pcg64 stream (seed, 0); drive
         // a scalar env from the identical stream and action sequence
         let seed = 5u64;

@@ -1,0 +1,115 @@
+//! The env-kernel contract: for every registered environment, the
+//! lane-tiled `step_all` (built on `envs::kernels` — 8-lane tiles over
+//! the SoA field columns) is **bit-identical** to the always-compiled
+//! scalar oracle `step_all_ref` (the original per-replica loop): same
+//! state evolution, same rewards, same termination flags, for every
+//! lane count — full tiles, every `n % 8` remainder, and the
+//! single-lane case the scalar `CpuEnv` wrappers ride on.  This is
+//! what lets the engine hot path switch to the columnar layer without
+//! perturbing a single training trajectory
+//! (`tests/engine_determinism.rs` and `tests/fused_rollout.rs` keep
+//! pinning thread-count invariance *through* the tiled path).
+
+use warpsci::envs::registry;
+use warpsci::util::Pcg64;
+
+/// Lane counts covering every tile remainder, multi-tile batches and
+/// the 1..64 sweep's edges.
+const LANE_COUNTS: [usize; 18] = [1, 2, 3, 4, 5, 6, 7, 8, 9, 11, 13, 16,
+                                  17, 24, 31, 33, 63, 64];
+
+const STEPS: usize = 4;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn tiled_step_all_is_bit_identical_to_scalar_oracle() {
+    for spec in registry::SPECS.iter() {
+        let env = (spec.make_batch)();
+        let na = env.n_agents();
+        let n_act = env.n_actions() as u32;
+        for &n in &LANE_COUNTS {
+            // identical per-lane streams => identical starting states
+            let mut state = vec![0f32; env.state_dim() * n];
+            for i in 0..n {
+                let mut rng = Pcg64::with_stream(9, i as u64);
+                env.reset_lane(&mut state, n, i, &mut rng);
+            }
+            let mut state_ref = state.clone();
+            let rows = n * na;
+            let mut rewards = vec![0f32; rows];
+            let mut dones = vec![0f32; n];
+            let mut rewards_ref = vec![0f32; rows];
+            let mut dones_ref = vec![0f32; n];
+            for step in 0..STEPS {
+                let actions: Vec<u32> = (0..rows)
+                    .map(|r| (r + step) as u32 % n_act)
+                    .collect();
+                env.step_all(&mut state, n, &actions, &mut [],
+                             &mut rewards, &mut dones);
+                env.step_all_ref(&mut state_ref, n, &actions, &mut [],
+                                 &mut rewards_ref, &mut dones_ref);
+                assert_eq!(bits(&rewards), bits(&rewards_ref),
+                           "{} n={n} step {step}: rewards diverged",
+                           spec.name);
+                assert_eq!(bits(&dones), bits(&dones_ref),
+                           "{} n={n} step {step}: dones diverged",
+                           spec.name);
+                assert_eq!(bits(&state), bits(&state_ref),
+                           "{} n={n} step {step}: state diverged",
+                           spec.name);
+            }
+        }
+    }
+}
+
+/// Lane-count invariance of the tiled path itself: lane `i` of an
+/// `n`-lane batch evolves exactly like the same lane stepped alone —
+/// the property shard partitioning (and the engine's lane-local
+/// determinism guarantee) rests on.
+#[test]
+fn tiled_step_all_is_lane_local() {
+    for spec in registry::SPECS.iter() {
+        let env = (spec.make_batch)();
+        let na = env.n_agents();
+        let n_act = env.n_actions() as u32;
+        let n = 13usize;
+        let mut state = vec![0f32; env.state_dim() * n];
+        for i in 0..n {
+            let mut rng = Pcg64::with_stream(3, i as u64);
+            env.reset_lane(&mut state, n, i, &mut rng);
+        }
+        let rows = n * na;
+        let mut rewards = vec![0f32; rows];
+        let mut dones = vec![0f32; n];
+        let actions: Vec<u32> =
+            (0..rows).map(|r| r as u32 % n_act).collect();
+        env.step_all(&mut state, n, &actions, &mut [], &mut rewards,
+                     &mut dones);
+        for i in [0usize, 7, n - 1] {
+            let mut lane = vec![0f32; env.state_dim()];
+            let mut rng = Pcg64::with_stream(3, i as u64);
+            env.reset_lane(&mut lane, 1, 0, &mut rng);
+            let lane_actions: Vec<u32> = (0..na)
+                .map(|a| (i * na + a) as u32 % n_act)
+                .collect();
+            let mut lane_rew = vec![0f32; na];
+            let mut lane_done = vec![0f32; 1];
+            env.step_all(&mut lane, 1, &lane_actions, &mut [],
+                         &mut lane_rew, &mut lane_done);
+            for f in 0..env.state_dim() {
+                assert_eq!(lane[f].to_bits(), state[f * n + i].to_bits(),
+                           "{} lane {i} field {f}", spec.name);
+            }
+            for a in 0..na {
+                assert_eq!(lane_rew[a].to_bits(),
+                           rewards[i * na + a].to_bits(),
+                           "{} lane {i} agent {a}", spec.name);
+            }
+            assert_eq!(lane_done[0].to_bits(), dones[i].to_bits(),
+                       "{} lane {i} done", spec.name);
+        }
+    }
+}

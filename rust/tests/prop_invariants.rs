@@ -165,8 +165,7 @@ fn prop_nstep_returns_match_scalar_reference() {
 fn prop_env_invariants_random_actions() {
     for seed in 0..10u64 {
         let mut rng = Pcg64::new(seed);
-        for name in ["cartpole", "acrobot", "pendulum", "catalysis_lh",
-                     "covid_econ"] {
+        for name in warpsci::envs::registry::names() {
             let mut env = make_cpu_env(name).unwrap();
             env.reset(&mut rng);
             let na = env.n_agents();

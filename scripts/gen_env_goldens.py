@@ -1,0 +1,266 @@
+#!/usr/bin/env python3
+"""Golden-trajectory generator for the ecosystem and bioreactor envs.
+
+Mirrors the rust implementations (rust/src/envs/{ecosystem,bioreactor}.rs)
+operation-for-operation in numpy float32 — including the PCG64 generator
+used for the shared calibration table — and prints rust-ready golden
+arrays for the env unit tests, plus sanity sweeps that back the
+behavioural tests (sustainability / collapse / feeding).
+
+The jnp twins of these dynamics live in python/compile/kernels/ref.py
+(`ecosystem_step_ref` / `bioreactor_step_ref`); this script is the
+offline, dependency-free generator (numpy only).
+
+Usage: python3 scripts/gen_env_goldens.py
+"""
+
+import numpy as np
+
+F = np.float32
+M64 = (1 << 64) - 1
+M128 = (1 << 128) - 1
+PCG_MULT = 0x2360ED051FC65DA44385DF649FCCF645
+
+
+class Pcg64:
+    """Bit-exact mirror of rust util::Pcg64 (PCG-XSL-RR 128/64)."""
+
+    DEFAULT_STREAM = 0xDA3E39CB94B95BDB
+
+    def __init__(self, seed, stream=DEFAULT_STREAM):
+        self.inc = ((stream << 1) | 1) & M128
+        self.state = 0
+        self.next_u64()
+        self.state = (self.state + seed) & M128
+        self.next_u64()
+
+    def next_u64(self):
+        self.state = (self.state * PCG_MULT + self.inc) & M128
+        rot = self.state >> 122
+        xsl = ((self.state >> 64) ^ self.state) & M64
+        return ((xsl >> rot) | (xsl << ((64 - rot) % 64))) & M64
+
+    def next_f32(self):
+        return F(self.next_u64() >> 40) / F(1 << 24)
+
+    def uniform(self, lo, hi):
+        return F(lo) + (F(hi) - F(lo)) * self.next_f32()
+
+
+# ---------------------------------------------------------------- ecosystem
+S = 16
+ECO_DT = F(0.05)
+X_MAX = F(6.0)
+X_EXT = F(0.05)
+HARVEST_FRAC = F(0.2)
+ALIVE_BONUS = F(0.05)
+COLLAPSE_PENALTY = F(25.0)
+ECO_CALIB_SEED = 11
+
+
+def eco_calibration():
+    rng = Pcg64(ECO_CALIB_SEED, 88)
+    r_base = [rng.uniform(0.7, 1.0) if i % 2 == 0
+              else rng.uniform(-0.35, -0.2) for i in range(S)]
+    price = [rng.uniform(0.5, 1.5) for _ in range(S)]
+    a = [[rng.uniform(-0.04, 0.02) for _ in range(S)] for _ in range(S)]
+    for i in range(S):
+        a[i][i] = F(-1.0)
+    for k in range(S // 2):
+        prey, pred = 2 * k, 2 * k + 1
+        a[prey][pred] = -rng.uniform(0.6, 0.8)
+        a[pred][prey] = rng.uniform(0.9, 1.3)
+    return r_base, price, a
+
+
+def lv_deriv(x, r, a):
+    ds = [F(0.0)] * S
+    for f in range(S):
+        acc = r[f]
+        for j in range(S):
+            acc = acc + a[f][j] * x[j]
+        ds[f] = x[f] * acc
+    return ds
+
+
+def eco_step(x, r, calib, action):
+    r_base, price, a = calib
+    x = list(x)
+    harvest = F(0.0)
+    if action > 0:
+        k = action - 1
+        h = x[k] * HARVEST_FRAC
+        x[k] = x[k] - h
+        harvest = h * price[k]
+    half = ECO_DT / F(2.0)
+    k1 = lv_deriv(x, r, a)
+    tmp = [x[f] + half * k1[f] for f in range(S)]
+    k2 = lv_deriv(tmp, r, a)
+    tmp = [x[f] + half * k2[f] for f in range(S)]
+    k3 = lv_deriv(tmp, r, a)
+    tmp = [x[f] + ECO_DT * k3[f] for f in range(S)]
+    k4 = lv_deriv(tmp, r, a)
+    sixth = ECO_DT / F(6.0)
+    x = [x[f] + sixth * (k1[f] + F(2.0) * k2[f] + F(2.0) * k3[f]
+                         + k4[f]) for f in range(S)]
+    alive = 0
+    for f in range(S):
+        x[f] = min(max(x[f], F(0.0)), X_MAX)
+        if x[f] >= X_EXT:
+            alive += 1
+    collapsed = alive < S
+    reward = (harvest + ALIVE_BONUS * (F(alive) / F(S))
+              - (COLLAPSE_PENALTY if collapsed else F(0.0)))
+    return x, reward, collapsed
+
+
+def eco_reset(rng, calib):
+    r_base = calib[0]
+    x = [rng.uniform(0.4, 1.2) for _ in range(S)]
+    r = [r_base[f] * rng.uniform(0.9, 1.1) for f in range(S)]
+    return x, r
+
+
+# --------------------------------------------------------------- bioreactor
+NX = 32
+BIO_DT = F(0.1)
+SUBSTEPS = 2
+D_N = F(0.25)
+D_B = F(0.05)
+MU_MAX = F(1.2)
+K_S = F(0.5)
+YIELD_INV = F(2.0)
+DECAY = F(0.08)
+N_MAX = F(4.0)
+B_MAX = F(5.0)
+FEED_CELLS = [3, 11, 19, 27]
+FEED_RATES = [F(0.25), F(0.75)]
+FEED_COST = F(0.05)
+PROD_W = F(4.0)
+B_EXT = F(1e-3)
+WASHOUT_PENALTY = F(10.0)
+
+
+def bio_step(nu, b, action):
+    nu, b = list(nu), list(b)
+    port = FEED_CELLS[action // 2]
+    rate = FEED_RATES[action % 2]
+    nu[port] = min(nu[port] + rate, N_MAX)
+    g = [F(0.0)] * NX
+    for _ in range(SUBSTEPS):
+        for f in range(NX):
+            g[f] = MU_MAX * nu[f] / (K_S + nu[f]) * b[f]
+        new_n, new_b = [F(0.0)] * NX, [F(0.0)] * NX
+        for f in range(NX):
+            lm = 0 if f == 0 else f - 1
+            rp = NX - 1 if f == NX - 1 else f + 1
+            lap_n = nu[lm] - F(2.0) * nu[f] + nu[rp]
+            lap_b = b[lm] - F(2.0) * b[f] + b[rp]
+            new_n[f] = min(max(nu[f] + BIO_DT * (D_N * lap_n
+                                                 - YIELD_INV * g[f]),
+                               F(0.0)), N_MAX)
+            new_b[f] = min(max(b[f] + BIO_DT * (D_B * lap_b + g[f]
+                                                - DECAY * b[f]),
+                               F(0.0)), B_MAX)
+        nu, b = new_n, new_b
+    prod = F(0.0)
+    b_sum = F(0.0)
+    for f in range(NX):
+        prod = prod + g[f]
+        b_sum = b_sum + b[f]
+    prod_mean = prod / F(NX)
+    washout = b_sum / F(NX) < B_EXT
+    reward = (PROD_W * prod_mean - FEED_COST * rate
+              - (WASHOUT_PENALTY if washout else F(0.0)))
+    return nu, b, reward, washout
+
+
+def bio_reset(rng):
+    nu = [rng.uniform(0.8, 1.2) for _ in range(NX)]
+    b = [rng.uniform(0.05, 0.15) for _ in range(NX)]
+    return nu, b
+
+
+# ------------------------------------------------------------------- main
+def main():
+    calib = eco_calibration()
+    r_base, price, _ = calib
+    print("ecosystem r_base[0..4] =", [f"{v:.6g}" for v in r_base[:4]])
+    print("ecosystem price[0..2]  =", [f"{v:.6g}" for v in price[:2]])
+
+    # golden: all-0.8 community at baseline rates
+    x = [F(0.8)] * S
+    r = list(r_base)
+    actions = [0, 1, 0, 4, 16]
+    print("\nGOLDEN ecosystem (x[0..4], reward per step):")
+    xs, rews = [], []
+    for a in actions:
+        x, reward, collapsed = eco_step(x, r, calib, a)
+        assert not collapsed, "golden trajectory must not collapse"
+        xs.append([x[f] for f in range(4)])
+        rews.append(reward)
+    for row in xs:
+        print("    [" + ", ".join(f"{v:.9g}" for v in row) + "],")
+    print("  rew: [" + ", ".join(f"{v:.9g}" for v in rews) + "]")
+
+    # behavioural check 1: unmanaged community never collapses (many seeds)
+    worst = None
+    for seed in range(20):
+        rng = Pcg64(seed)
+        x, r = eco_reset(rng, calib)
+        lo = min(x)
+        for step in range(200):
+            x, _, collapsed = eco_step(x, r, calib, 0)
+            lo = min(lo, min(x))
+            assert not collapsed, f"seed {seed} collapsed at {step}"
+        worst = lo if worst is None else min(worst, lo)
+    print(f"\nunmanaged community: min population over 20 seeds = "
+          f"{worst:.4f} (extinction at {float(X_EXT)})")
+
+    # behavioural check 2: hammering species 1 collapses (seed 5)
+    rng = Pcg64(5)
+    x, r = eco_reset(rng, calib)
+    for step in range(200):
+        x, reward, collapsed = eco_step(x, r, calib, 2)
+        if collapsed:
+            print(f"overharvest: collapsed at step {step}, "
+                  f"reward {reward:.3f}")
+            break
+    else:
+        raise AssertionError("overharvest did not collapse")
+
+    # bioreactor golden: uniform reactor
+    nu = [F(1.0)] * NX
+    b = [F(0.1)] * NX
+    actions = [1, 6, 0, 3, 7]
+    probes = [3, 16, NX + 3, NX + 16]
+    print("\nGOLDEN bioreactor ((idx, value) probes + reward per step):")
+    for a in actions:
+        nu, b, reward, washout = bio_step(nu, b, a)
+        assert not washout
+        state = nu + b
+        cells = ", ".join(f"({p}, {state[p]:.9g})" for p in probes)
+        print(f"    [{cells}],   // reward {reward:.9g}")
+
+    # behavioural check 3: rotating high-rate feeds sustain the culture
+    rng = Pcg64(6)
+    nu, b = bio_reset(rng)
+    total = 0.0
+    for step in range(200):
+        nu, b, reward, washout = bio_step(nu, b, (step % 4) * 2 + 1)
+        assert not washout, f"washout at step {step}"
+        total += float(reward)
+    b_mean = sum(float(v) for v in b) / NX
+    print(f"\nfed reactor: total reward {total:.2f}, final mean biomass "
+          f"{b_mean:.3f}")
+
+    # behavioural check 4: feed port raises its cell (from flat 0.5)
+    nu = [F(0.5)] * NX
+    b = [F(0.1)] * NX
+    nu2, _, _, _ = bio_step(nu, b, 1)
+    print(f"feed-port check: fed cell {float(nu2[FEED_CELLS[0]]):.3f} vs "
+          f"far cell {float(nu2[FEED_CELLS[2]]):.3f}")
+
+
+if __name__ == "__main__":
+    main()
