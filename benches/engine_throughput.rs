@@ -12,7 +12,8 @@
 //! whole run is written as a JSON array to `BENCH_engine.json` at the
 //! repo root — the perf-trajectory baseline for future changes
 //! (`scripts/bench_gate.py` gates the `fused_rollout/*`, `gemm_tile/*`,
-//! `policy_forward/tiled/*` and per-env `env_step/*` records against
+//! `policy_forward/tiled/*`, per-env `env_step/*` and multi-shard
+//! `shard_scaling/{sync,async}/*` records against
 //! `BENCH_baseline.json`).
 //!
 //! Env overrides: `WARPSCI_BENCH_FAST=1` for a smoke run.
@@ -287,6 +288,61 @@ fn main() -> anyhow::Result<()> {
                 eng.train_iter().unwrap();
             });
         emit(&mut records, &r);
+    }
+
+    // multi-shard scaling: the lockstep sync collective vs the async
+    // parameter server, both over the in-process CPU graph device.
+    // Sync steps its shards serially on this thread; async gives each
+    // shard a worker thread, so at 4+ shards the async record must at
+    // least match sync on any multi-core runner (the gate's floors
+    // encode that ordering conservatively).
+    {
+        use warpsci::config::RunConfig;
+        use warpsci::coordinator::{AsyncShardTrainer, MultiShardTrainer};
+        use warpsci::runtime::CpuDevice;
+
+        let (env, n_envs, t) = ("cartpole", 256usize, 8usize);
+        let (iters, sync_every) = (8usize, 2usize);
+        let device = CpuDevice::new();
+        let artifact = device.artifact(env, n_envs, t)?;
+        for shards in [1usize, 4] {
+            let cfg = RunConfig {
+                env: env.into(),
+                n_envs,
+                t,
+                iters,
+                seed: 0,
+                shards,
+                sync_every,
+                max_staleness: 1,
+                ..Default::default()
+            };
+            let steps = (iters * n_envs * t * shards) as f64;
+            let mut ms =
+                MultiShardTrainer::new(&device, &artifact, cfg.clone())?;
+            let mut iter_idx = 0usize;
+            let r = bench.run(
+                &format!("shard_scaling/sync/{env}/shards{shards}"),
+                steps,
+                || {
+                    for _ in 0..iters {
+                        ms.step(iter_idx).unwrap();
+                        iter_idx += 1;
+                    }
+                });
+            emit(&mut records, &r);
+
+            // each call is one whole async job (spawn, train, join) —
+            // thread + in-memory compile overhead is part of the cost
+            let tr = AsyncShardTrainer::new(&device, &artifact, cfg)?;
+            let r = bench.run(
+                &format!("shard_scaling/async/{env}/shards{shards}"),
+                steps,
+                || {
+                    tr.run().unwrap();
+                });
+            emit(&mut records, &r);
+        }
     }
 
     // registry manifest record: the env-name list this run covered,

@@ -33,6 +33,12 @@ pub struct RunConfig {
     pub shards: usize,
     /// Average shard parameters every k iterations.
     pub sync_every: usize,
+    /// Use the async parameter-server trainer instead of the lockstep
+    /// collective (`[parallel] async = true` / `--async`).
+    pub run_async: bool,
+    /// Bounded-staleness window of the async parameter server, in
+    /// rounds; 0 = lockstep (bit-identical to the sync trainer).
+    pub max_staleness: usize,
     /// CPU-engine shard worker threads (0 = all available cores).
     pub threads: usize,
     /// Stop early once the episodic-return EMA reaches this value.
@@ -54,6 +60,8 @@ impl Default for RunConfig {
             metrics_every: 1,
             shards: 1,
             sync_every: 1,
+            run_async: false,
+            max_staleness: 0,
             threads: 0,
             target_return: None,
             log_csv: None,
@@ -115,6 +123,12 @@ impl RunConfig {
         if let Some(v) = doc.get("parallel.sync_every") {
             cfg.sync_every = (v.as_int()? as usize).max(1);
         }
+        if let Some(v) = doc.get("parallel.async") {
+            cfg.run_async = v.as_bool()?;
+        }
+        if let Some(v) = doc.get("parallel.max_staleness") {
+            cfg.max_staleness = v.as_int()? as usize;
+        }
         if let Some(v) = doc.get("parallel.threads") {
             cfg.threads = v.as_int()? as usize;
         }
@@ -162,6 +176,8 @@ log_csv = "out/run.csv"
 [parallel]
 shards = 4
 sync_every = 2
+async = true
+max_staleness = 2
 
 [artifact]
 tag = "covid_econ_n60_t13"
@@ -177,6 +193,8 @@ tag = "covid_econ_n60_t13"
         assert_eq!(cfg.log_csv.as_deref(), Some("out/run.csv"));
         assert_eq!(cfg.shards, 4);
         assert_eq!(cfg.sync_every, 2);
+        assert!(cfg.run_async);
+        assert_eq!(cfg.max_staleness, 2);
         assert_eq!(cfg.artifact_tag(), "covid_econ_n60_t13");
     }
 

@@ -1,0 +1,349 @@
+//! Asynchronous data-parallel training: free-running shard workers
+//! against a bounded-staleness parameter server.
+//!
+//! This is the third layer of the coordinator refactor.  Where
+//! [`MultiShardTrainer`](super::MultiShardTrainer) steps every shard in
+//! lockstep on one thread, [`AsyncShardTrainer`] gives each shard its
+//! own OS thread and compiled [`GraphSet`]; shards run windows of
+//! `sync_every` fused `train_iter`s at their own pace and exchange
+//! parameters with the [`ParamServer`](super::ParamServer) over the
+//! [`transport`](super::transport) layer.  The slowest shard no longer
+//! gates every round — it only dampens its own (stale) contributions.
+//!
+//! ## Protocol
+//!
+//! ```text
+//! worker                         server (caller thread)
+//! ------                         ----------------------
+//! compile GraphSet
+//! init_state(seed + shard)
+//! Hello(init params)   ───────▶  register; all in → version-0 merge
+//! loop windows:
+//!   sync_every × train_iter
+//!   Push(params, base) ───────▶  ParamServer::push
+//!   ◀─────────────────────────   Ack(accepted, snapshot)
+//!   set_params(snapshot)
+//! trailing iters (< sync_every)
+//! Done(final metrics)  ───────▶  retire shard
+//! ```
+//!
+//! With `max_staleness = 0` the server withholds acks until every
+//! active shard has pushed (the BSP round barrier), so the protocol
+//! degenerates to the synchronous collective and the run is
+//! **bit-identical** to `MultiShardTrainer` with the same config: same
+//! per-shard init seeds, same `train_iter` chains, same
+//! [`tree_average`](super::tree_average) kernel applied in shard order,
+//! same `set_params` broadcast.  With `max_staleness >= 1` scheduling
+//! order reaches the parameter values, so runs are reproducible only in
+//! distribution, not bitwise — that trade is the point.
+//!
+//! Worker threads require only `B: DeviceBackend + Send + 'static`
+//! (buffers never cross threads; each worker compiles its own graph
+//! set), so the bound lives here and not on the backend trait.
+
+use std::thread;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::RunConfig;
+use crate::runtime::{Artifact, DeviceBackend, GraphSet};
+
+use super::param_server::{ParamServer, PushOutcome};
+use super::transport::{ChannelTransport, GradMsg, ParamMsg, ServerEndpoint,
+                       ShardEndpoint, ToServer, ToShard, Transport};
+
+/// Per-shard telemetry carried back on `Done`.
+#[derive(Debug, Clone, Default)]
+pub struct AsyncShardReport {
+    pub iters: u64,
+    pub env_steps: f64,
+    pub ep_return_ema: f32,
+}
+
+/// What one async run produced.
+#[derive(Debug, Clone)]
+pub struct AsyncRunReport {
+    /// The server's final authoritative parameter vector.
+    pub final_params: Vec<f32>,
+    /// Final publication version.
+    pub version: u64,
+    /// Pushes folded into the params.
+    pub applied: u64,
+    /// Pushes rejected as older than the staleness window.
+    pub rejected: u64,
+    pub per_shard: Vec<AsyncShardReport>,
+    pub wall_secs: f64,
+    /// Total env steps across every shard.
+    pub env_steps: f64,
+    pub steps_per_sec: f64,
+    /// Mean of the shards' final `ep_return_ema`.
+    pub mean_return: f64,
+}
+
+/// Async parameter-server trainer (see module docs).
+pub struct AsyncShardTrainer<B: DeviceBackend + Send + 'static> {
+    device: B,
+    artifact: Artifact,
+    pub cfg: RunConfig,
+    /// Print a progress line on (every `metrics_every`-th) publication.
+    pub verbose: bool,
+}
+
+impl<B: DeviceBackend + Send + 'static> AsyncShardTrainer<B> {
+    pub fn new(device: &B, artifact: &Artifact, cfg: RunConfig)
+               -> Result<AsyncShardTrainer<B>> {
+        anyhow::ensure!(cfg.shards >= 1, "need at least one shard");
+        anyhow::ensure!(cfg.sync_every >= 1, "sync_every must be >= 1");
+        Ok(AsyncShardTrainer {
+            device: device.clone(),
+            artifact: artifact.clone(),
+            cfg,
+            verbose: false,
+        })
+    }
+
+    /// Run the full async training job: spawn one worker thread per
+    /// shard, serve pushes on the calling thread until every shard is
+    /// done, and return the server's view of the run.
+    pub fn run(&self) -> Result<AsyncRunReport> {
+        let n = self.cfg.shards;
+        let t0 = Instant::now();
+        let (mut server, shard_ends) = ChannelTransport.connect(n)?;
+
+        let mut workers = Vec::with_capacity(n);
+        for (shard, ep) in shard_ends.into_iter().enumerate() {
+            let device = self.device.clone();
+            let artifact = self.artifact.clone();
+            let cfg = self.cfg.clone();
+            let handle = thread::Builder::new()
+                .name(format!("warpsci-shard-{shard}"))
+                .spawn(move || shard_worker(shard, device, artifact, cfg, ep))
+                .context("spawning shard worker")?;
+            workers.push(handle);
+        }
+
+        let serve_result = self.serve(&mut server, n);
+        if serve_result.is_err() {
+            // wake any worker still blocked on an ack so joins finish
+            server.stop_all();
+        }
+        let mut worker_err = None;
+        for handle in workers {
+            match handle.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    worker_err.get_or_insert(e);
+                }
+                Err(_) => {
+                    worker_err.get_or_insert_with(|| {
+                        anyhow::anyhow!("shard worker panicked")
+                    });
+                }
+            }
+        }
+        let (ps, per_shard) = serve_result?;
+        if let Some(e) = worker_err {
+            return Err(e.context("shard worker failed"));
+        }
+
+        let wall = t0.elapsed().as_secs_f64();
+        let snapshot = ps.snapshot()?;
+        let env_steps: f64 = per_shard.iter().map(|s| s.env_steps).sum();
+        let mean_return = per_shard
+            .iter()
+            .map(|s| s.ep_return_ema as f64)
+            .sum::<f64>() / n as f64;
+        Ok(AsyncRunReport {
+            final_params: snapshot.params,
+            version: snapshot.version,
+            applied: ps.applied(),
+            rejected: ps.rejected(),
+            per_shard,
+            wall_secs: wall,
+            env_steps,
+            steps_per_sec: env_steps / wall.max(1e-9),
+            mean_return,
+        })
+    }
+
+    /// The server event loop: feed frames to the [`ParamServer`] core
+    /// and forward its outcomes as acks until every shard reported
+    /// `Done`.
+    fn serve<E: ServerEndpoint>(&self, server: &mut E, n: usize)
+                                -> Result<(ParamServer, Vec<AsyncShardReport>)> {
+        let mut ps = ParamServer::new(n, self.cfg.max_staleness as u64)?;
+        let mut per_shard = vec![AsyncShardReport::default(); n];
+        // pushes racing ahead of a slower shard's Hello (compile time
+        // differs per thread) are parked until the fleet is registered
+        let mut parked: Vec<GradMsg> = Vec::new();
+        let mut done = 0usize;
+        while done < n {
+            match server.recv()? {
+                ToServer::Hello { shard, params } => {
+                    if ps.register(shard, params)? {
+                        for g in std::mem::take(&mut parked) {
+                            self.apply_push(server, &mut ps, g)?;
+                        }
+                    }
+                }
+                ToServer::Push(g) => {
+                    if ps.is_ready() {
+                        self.apply_push(server, &mut ps, g)?;
+                    } else {
+                        parked.push(g);
+                    }
+                }
+                ToServer::Done { shard, iters, env_steps, ep_return_ema } => {
+                    anyhow::ensure!(shard < n, "Done from bad shard {shard}");
+                    per_shard[shard] = AsyncShardReport {
+                        iters,
+                        env_steps,
+                        ep_return_ema,
+                    };
+                    done += 1;
+                    if let Some((snapshot, shards)) = ps.mark_done(shard)? {
+                        self.ack_round(server, snapshot, &shards)?;
+                    }
+                }
+                ToServer::Fatal { shard, error } => {
+                    anyhow::bail!("shard {shard} failed: {error}");
+                }
+            }
+        }
+        Ok((ps, per_shard))
+    }
+
+    fn apply_push<E: ServerEndpoint>(&self, server: &mut E,
+                                     ps: &mut ParamServer, g: GradMsg)
+                                     -> Result<()> {
+        let shard = g.shard;
+        match ps.push(g)? {
+            PushOutcome::Applied { staleness_rounds, snapshot } => {
+                self.progress(&snapshot, shard, staleness_rounds, true);
+                server.send(shard, ToShard::Ack {
+                    accepted: true,
+                    staleness_rounds,
+                    snapshot,
+                })
+            }
+            PushOutcome::Rejected { staleness_rounds, snapshot } => {
+                self.progress(&snapshot, shard, staleness_rounds, false);
+                server.send(shard, ToShard::Ack {
+                    accepted: false,
+                    staleness_rounds,
+                    snapshot,
+                })
+            }
+            PushOutcome::Deferred => Ok(()),
+            PushOutcome::RoundComplete { snapshot, shards } => {
+                self.ack_round(server, snapshot, &shards)
+            }
+        }
+    }
+
+    fn ack_round<E: ServerEndpoint>(&self, server: &mut E,
+                                    snapshot: ParamMsg, shards: &[usize])
+                                    -> Result<()> {
+        if let Some(shard) = shards.first() {
+            self.progress(&snapshot, *shard, 0.0, true);
+        }
+        for &shard in shards {
+            server.send(shard, ToShard::Ack {
+                accepted: true,
+                staleness_rounds: 0.0,
+                snapshot: snapshot.clone(),
+            })?;
+        }
+        Ok(())
+    }
+
+    fn progress(&self, snapshot: &ParamMsg, shard: usize,
+                staleness_rounds: f64, accepted: bool) {
+        if !self.verbose
+            || snapshot.version % self.cfg.metrics_every.max(1) as u64 != 0 {
+            return;
+        }
+        println!(
+            "[async] v{:<6} shard {shard} staleness {staleness_rounds:.2} \
+             rounds {}",
+            snapshot.version,
+            if accepted { "applied" } else { "REJECTED" },
+        );
+    }
+}
+
+/// One shard's whole life, on its own thread: compile, init, train in
+/// windows, exchange params, report `Done`.  Wrapped so any failure is
+/// reported to the server as a `Fatal` frame — the server must never
+/// hang on a dead worker.
+fn shard_worker<B: DeviceBackend>(shard: usize, device: B, artifact: Artifact,
+                                  cfg: RunConfig, mut ep: impl ShardEndpoint)
+                                  -> Result<()> {
+    let result = shard_worker_inner(shard, &device, artifact, &cfg, &mut ep);
+    if let Err(e) = &result {
+        let _ = ep.send(ToServer::Fatal {
+            shard,
+            error: format!("{e:#}"),
+        });
+    }
+    result
+}
+
+fn shard_worker_inner<B: DeviceBackend>(shard: usize, device: &B,
+                                        artifact: Artifact, cfg: &RunConfig,
+                                        ep: &mut impl ShardEndpoint)
+                                        -> Result<()> {
+    let graphs = GraphSet::compile(device, artifact)?;
+    let man = &graphs.artifact.manifest;
+    let ret_idx = man.metric_index("ep_return_ema")?;
+    let mut state = graphs.init_state(cfg.seed + shard as u64)?;
+    ep.send(ToServer::Hello {
+        shard,
+        params: graphs.download_params(&state)?,
+    })?;
+
+    let windows = cfg.iters / cfg.sync_every;
+    let trailing = cfg.iters % cfg.sync_every;
+    let mut base_version = 0u64;
+    let mut iters_done = 0u64;
+    let mut ep_return_ema = f32::NAN;
+    for _ in 0..windows {
+        for _ in 0..cfg.sync_every {
+            state = graphs.train_iter(&state)?;
+        }
+        iters_done += cfg.sync_every as u64;
+        ep_return_ema = graphs.metrics(&state)?[ret_idx];
+        ep.send(ToServer::Push(GradMsg {
+            shard,
+            base_version,
+            iters: cfg.sync_every as u64,
+            params: graphs.download_params(&state)?,
+            ep_return_ema,
+            env_steps: iters_done as f64 * man.steps_per_iter as f64,
+        }))?;
+        match ep.recv()? {
+            ToShard::Ack { snapshot, .. } => {
+                // continue from the server's params whether or not our
+                // push was applied — a rejected shard re-bases
+                base_version = snapshot.version;
+                state = graphs.upload_params(&state, &snapshot.params)?;
+            }
+            ToShard::Stop => return Ok(()),
+        }
+    }
+    for _ in 0..trailing {
+        state = graphs.train_iter(&state)?;
+    }
+    iters_done += trailing as u64;
+    if trailing > 0 || windows == 0 {
+        ep_return_ema = graphs.metrics(&state)?[ret_idx];
+    }
+    ep.send(ToServer::Done {
+        shard,
+        iters: iters_done,
+        env_steps: iters_done as f64 * man.steps_per_iter as f64,
+        ep_return_ema,
+    })?;
+    Ok(())
+}

@@ -13,18 +13,39 @@
 //!   [`Trainer`] and [`MultiShardTrainer`] are generic over: the
 //!   pure-Rust [`crate::runtime::CpuDevice`] by default, real PJRT
 //!   execution with the `pjrt` cargo feature.
+//!
+//! Distributed training is layered on top as three further modules:
+//!
+//! * [`transport`] — typed [`ParamMsg`](transport::ParamMsg) /
+//!   [`GradMsg`](transport::GradMsg) frames over the
+//!   [`Transport`](transport::Transport) trait (in-process
+//!   [`ChannelTransport`] today; sockets or device-to-device copies
+//!   later).
+//! * [`param_server`] — the authoritative parameter store with a
+//!   bounded-staleness window and versioned snapshots; also home of the
+//!   [`tree_average`] collective kernel both the sync and async paths
+//!   share.
+//! * [`async_trainer`] — [`AsyncShardTrainer`]: free-running shard
+//!   worker threads against the server, bit-identical to
+//!   [`MultiShardTrainer`] when `max_staleness = 0`.
 
+pub mod async_trainer;
 pub mod backend;
 pub mod convergence;
 pub mod cpu_engine;
 pub mod metrics;
 pub mod multi_device;
+pub mod param_server;
 pub mod trainer;
+pub mod transport;
 
+pub use async_trainer::{AsyncRunReport, AsyncShardReport, AsyncShardTrainer};
 pub use backend::{measure_rollout_throughput, measure_train_throughput,
                   Backend, RunStats};
 pub use convergence::ConvergenceTracker;
 pub use cpu_engine::{CpuEngine, CpuEngineConfig};
 pub use metrics::{MetricRow, MetricsLog};
 pub use multi_device::MultiShardTrainer;
+pub use param_server::{tree_average, ParamServer, PushOutcome};
 pub use trainer::{Trainer, TransferMode};
+pub use transport::{ChannelTransport, GradMsg, ParamMsg, Transport};

@@ -3,8 +3,17 @@
 //! Each shard owns an independent device-resident store (its own env batch
 //! and optimizer state) and runs the fused `train_iter` locally; every
 //! `sync_every` iterations the shards' policy parameters are averaged with
-//! a tree of `avg2` executions and broadcast back via `set_params` — the
-//! collective stays on device end to end.
+//! the weighted pairwise [`tree_average`] kernel (host-staged via
+//! `download_params`/`upload_params`) and broadcast back via `set_params`.
+//! Leaf-count weighting makes the collective an exact `1/n` mean for any
+//! shard count — the historical power-of-two restriction of the
+//! on-device `avg2` reduction tree is gone, and for power-of-two counts
+//! the result is bit-identical to what that tree produced (the
+//! equal-weight merge is the same `0.5 * (a + b)` expression).
+//!
+//! This synchronous collective is the `max_staleness = 0` baseline the
+//! [`AsyncShardTrainer`](super::AsyncShardTrainer) is pinned
+//! bit-identical against; both paths call the same [`tree_average`].
 //!
 //! The orchestrator is generic over [`DeviceBackend`]: on the default
 //! build all shards share the in-process [`crate::runtime::CpuDevice`],
@@ -19,6 +28,7 @@ use crate::config::RunConfig;
 use crate::runtime::{Artifact, DeviceBackend, GraphSet};
 
 use super::metrics::MetricRow;
+use super::param_server::tree_average;
 
 /// Orchestrates `shards` independent stores with periodic param averaging.
 pub struct MultiShardTrainer<B: DeviceBackend> {
@@ -32,14 +42,6 @@ impl<B: DeviceBackend> MultiShardTrainer<B> {
     pub fn new(device: &B, artifact: &Artifact, cfg: RunConfig)
                -> Result<MultiShardTrainer<B>> {
         anyhow::ensure!(cfg.shards >= 1, "need at least one shard");
-        // the avg2 tree reduce weights every shard equally only when the
-        // leaf count halves evenly at every level
-        anyhow::ensure!(
-            cfg.shards.is_power_of_two(),
-            "shards must be a power of two (got {}): pairwise avg2 \
-             tree-averaging would weight shards unequally otherwise",
-            cfg.shards
-        );
         // each shard gets its own compiled set (mirrors per-device
         // executables on a real multi-GPU host)
         let mut graphs = Vec::with_capacity(cfg.shards);
@@ -64,33 +66,24 @@ impl<B: DeviceBackend> MultiShardTrainer<B> {
         Ok(())
     }
 
-    /// Tree-average all shard parameters and broadcast the result.
+    /// Average all shard parameters and broadcast the result.
+    ///
+    /// Host-staged: download every shard's params, reduce with the
+    /// leaf-count-weighted [`tree_average`] (exact `1/n` for any shard
+    /// count; bit-identical to the old on-device `avg2` tree for
+    /// power-of-two counts), upload the mean back into every shard.
+    /// This is the same kernel the async parameter server applies, which
+    /// is what pins the `max_staleness = 0` bit-identity guarantee.
     pub fn sync_params(&mut self) -> Result<()> {
-        let g0 = &self.graphs[0];
-        // extract
-        let mut params: Vec<B::Buffer> = self
+        let parts: Vec<(Vec<f32>, u32)> = self
             .states
             .iter()
             .enumerate()
-            .map(|(i, s)| self.graphs[i].get_params(s))
+            .map(|(i, s)| Ok((self.graphs[i].download_params(s)?, 1)))
             .collect::<Result<_>>()?;
-        // tree reduce: pairwise averaging keeps every intermediate the
-        // true mean because the constructor restricts shard counts to
-        // powers of two, so every level halves evenly
-        while params.len() > 1 {
-            let mut next = Vec::with_capacity(params.len().div_ceil(2));
-            let mut it = params.into_iter();
-            while let (Some(a), rest) = (it.next(), &mut it) {
-                match rest.next() {
-                    Some(b) => next.push(g0.avg2(&a, &b)?),
-                    None => next.push(a),
-                }
-            }
-            params = next;
-        }
-        let avg = params.pop().context("empty shard set")?;
+        let avg = tree_average(parts).context("averaging shard params")?;
         for (i, s) in self.states.iter_mut().enumerate() {
-            *s = self.graphs[i].set_params(s, &avg)?;
+            *s = self.graphs[i].upload_params(s, &avg)?;
         }
         self.sync_count += 1;
         Ok(())

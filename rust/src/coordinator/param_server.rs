@@ -1,0 +1,565 @@
+//! Asynchronous parameter server with a bounded-staleness window.
+//!
+//! [`ParamServer`] is the pure, single-threaded core of the async
+//! trainer: it owns the authoritative flat parameter vector, a ring of
+//! versioned snapshots, and the staleness arithmetic.  It has no
+//! threads and no transport — the [`crate::coordinator::AsyncShardTrainer`]
+//! event loop feeds it frames and forwards its outcomes as
+//! [`ToShard::Ack`](crate::coordinator::transport::ToShard) replies,
+//! which keeps every staleness rule unit-testable without spawning a
+//! worker.
+//!
+//! ## Versions, rounds, and staleness
+//!
+//! Every published parameter state carries a monotonically increasing
+//! `version`; the initial merge of the shard Hellos is version 0.  A
+//! *round* is `n_shards` versions — the granularity at which the whole
+//! fleet has pushed once — so the staleness of a push is measured in
+//! rounds: `age_rounds = (version - base_version) / n_shards`.
+//!
+//! * **`max_staleness = 0` — lockstep (BSP)**: pushes are buffered per
+//!   shard until every active shard has contributed one, then the round
+//!   is closed by averaging the pushed parameter vectors with
+//!   [`tree_average`] *in shard order* (arrival order cannot leak into
+//!   the result).  This is bit-identical to the synchronous
+//!   [`MultiShardTrainer`](crate::coordinator::MultiShardTrainer)
+//!   collective, which calls the same kernel.
+//! * **`max_staleness >= 1` — stale-synchronous**: each push is applied
+//!   immediately.  The server recovers the shard's update against the
+//!   snapshot it started from (`delta = pushed - snapshot[base_version]`)
+//!   and folds it in damped by shard weight and age:
+//!   `params += (1/n) * 1/(1 + age_rounds) * delta`.  Pushes older than
+//!   the window (`age_rounds > max_staleness`) are **rejected**: nothing
+//!   is applied and the shard is re-based onto the latest snapshot.
+//!
+//! The snapshot ring holds `max_staleness * n_shards + 1` entries, which
+//! is exactly enough that the base snapshot of any *acceptable* push is
+//! still resident; a miss therefore indicates a protocol bug and is an
+//! error, not a silent fallback.
+
+use std::collections::VecDeque;
+
+use anyhow::{Context, Result};
+
+use super::transport::{GradMsg, ParamMsg};
+
+/// Weighted n-way average as a pairwise merge tree.
+///
+/// Each part is `(params, leaf_count)`; adjacent pairs are merged until
+/// one vector remains.  Two properties matter enough to pin:
+///
+/// * the **equal-weight** merge computes exactly `0.5 * (a + b)` — the
+///   same float expression as the device `avg2` kernel — so for
+///   power-of-two part counts with unit weights the result is bitwise
+///   identical to the historical on-device avg2 reduction tree, and
+///   averaging identical inputs is a bitwise fixed point;
+/// * the **unequal** merge weights by leaf counts,
+///   `(wa*a + wb*b) / (wa + wb)`, which makes the tree an exact `1/n`
+///   mean for *any* n in exact arithmetic (leaf counts are integers, so
+///   no weight itself is rounded).
+///
+/// A single part is returned unmodified — no float ops — so `n = 1`
+/// is a bitwise identity.
+pub fn tree_average(parts: Vec<(Vec<f32>, u32)>) -> Result<Vec<f32>> {
+    anyhow::ensure!(!parts.is_empty(), "tree_average of zero parts");
+    let len = parts[0].0.len();
+    for (p, w) in &parts {
+        anyhow::ensure!(p.len() == len,
+            "tree_average: part length {} != {len}", p.len());
+        anyhow::ensure!(*w > 0, "tree_average: zero-weight part");
+    }
+    let mut level = parts;
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_ceil(2));
+        let mut it = level.into_iter();
+        while let Some((a, wa)) = it.next() {
+            match it.next() {
+                Some((b, wb)) => {
+                    let merged: Vec<f32> = if wa == wb {
+                        a.iter()
+                            .zip(b.iter())
+                            .map(|(x, y)| 0.5 * (x + y))
+                            .collect()
+                    } else {
+                        let (fa, fb) = (wa as f32, wb as f32);
+                        let denom = fa + fb;
+                        a.iter()
+                            .zip(b.iter())
+                            .map(|(x, y)| (fa * x + fb * y) / denom)
+                            .collect()
+                    };
+                    next.push((merged, wa + wb));
+                }
+                None => next.push((a, wa)),
+            }
+        }
+        level = next;
+    }
+    Ok(level.pop().expect("non-empty level").0)
+}
+
+/// What the server decided about one gradient push.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PushOutcome {
+    /// The push was folded into the authoritative params; ack the shard
+    /// with this (new) snapshot.
+    Applied { staleness_rounds: f64, snapshot: ParamMsg },
+    /// The push was older than the staleness window; nothing was
+    /// applied — ack the shard with the latest snapshot so it re-bases.
+    Rejected { staleness_rounds: f64, snapshot: ParamMsg },
+    /// `max_staleness = 0` only: buffered until the round barrier
+    /// fills.  No ack yet — the shard stays blocked, which *is* the
+    /// lockstep.
+    Deferred,
+    /// `max_staleness = 0` only: this push closed the round.  Ack every
+    /// shard listed (the whole buffered cohort) with this snapshot.
+    RoundComplete { snapshot: ParamMsg, shards: Vec<usize> },
+}
+
+/// The authoritative parameter store (see module docs).
+pub struct ParamServer {
+    n_shards: usize,
+    max_staleness: u64,
+    version: u64,
+    params: Vec<f32>,
+    ready: bool,
+    inits: Vec<Option<Vec<f32>>>,
+    active: Vec<bool>,
+    /// `max_staleness = 0` round barrier, indexed by shard id.
+    round: Vec<Option<Vec<f32>>>,
+    snapshots: VecDeque<ParamMsg>,
+    applied: u64,
+    rejected: u64,
+}
+
+impl ParamServer {
+    pub fn new(n_shards: usize, max_staleness: u64) -> Result<ParamServer> {
+        anyhow::ensure!(n_shards >= 1, "need at least one shard");
+        Ok(ParamServer {
+            n_shards,
+            max_staleness,
+            version: 0,
+            params: Vec::new(),
+            ready: false,
+            inits: vec![None; n_shards],
+            active: vec![true; n_shards],
+            round: vec![None; n_shards],
+            snapshots: VecDeque::new(),
+            applied: 0,
+            rejected: 0,
+        })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    pub fn max_staleness(&self) -> u64 {
+        self.max_staleness
+    }
+
+    /// Current publication counter (0 until/at the initial merge).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Applied-push counter (each buffered BSP push counts once).
+    pub fn applied(&self) -> u64 {
+        self.applied
+    }
+
+    /// Rejected-push counter.
+    pub fn rejected(&self) -> u64 {
+        self.rejected
+    }
+
+    /// True once every shard has registered.
+    pub fn is_ready(&self) -> bool {
+        self.ready
+    }
+
+    /// Record one shard's `Hello`.  Returns true when this registration
+    /// completed the fleet: the server merges the shard inits into its
+    /// version-0 snapshot (used only as the delta base for the first
+    /// stale-synchronous pushes — shards keep training from their own
+    /// init, matching the sync trainer's no-initial-broadcast).
+    pub fn register(&mut self, shard: usize, params: Vec<f32>) -> Result<bool> {
+        anyhow::ensure!(shard < self.n_shards, "register: bad shard {shard}");
+        anyhow::ensure!(!self.ready, "register: server already ready");
+        anyhow::ensure!(self.inits[shard].is_none(),
+            "register: duplicate hello from shard {shard}");
+        if let Some(first) = self.inits.iter().flatten().next() {
+            anyhow::ensure!(params.len() == first.len(),
+                "register: shard {shard} param length {} != {}",
+                params.len(), first.len());
+        }
+        self.inits[shard] = Some(params);
+        if self.inits.iter().all(|p| p.is_some()) {
+            let parts: Vec<(Vec<f32>, u32)> = self
+                .inits
+                .iter_mut()
+                .map(|p| (p.take().expect("all inits present"), 1))
+                .collect();
+            self.params = tree_average(parts)?;
+            self.version = 0;
+            self.publish();
+            self.ready = true;
+        }
+        Ok(self.ready)
+    }
+
+    /// Latest published snapshot.
+    pub fn snapshot(&self) -> Result<ParamMsg> {
+        self.snapshots
+            .back()
+            .cloned()
+            .context("param server has no snapshot yet (not ready)")
+    }
+
+    /// Authoritative params (empty until ready).
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    /// Fold one shard push into the authoritative params (see module
+    /// docs for the two staleness regimes).
+    pub fn push(&mut self, g: GradMsg) -> Result<PushOutcome> {
+        anyhow::ensure!(self.ready, "push before every shard registered");
+        anyhow::ensure!(g.shard < self.n_shards, "push: bad shard {}", g.shard);
+        anyhow::ensure!(self.active[g.shard],
+            "push from shard {} after its Done", g.shard);
+        anyhow::ensure!(g.params.len() == self.params.len(),
+            "push: shard {} param length {} != {}",
+            g.shard, g.params.len(), self.params.len());
+        anyhow::ensure!(g.base_version <= self.version,
+            "push: shard {} base_version {} is from the future (at {})",
+            g.shard, g.base_version, self.version);
+
+        if self.max_staleness == 0 {
+            anyhow::ensure!(self.round[g.shard].is_none(),
+                "push: shard {} pushed twice in one round", g.shard);
+            self.round[g.shard] = Some(g.params);
+            return Ok(match self.try_close_round()? {
+                Some((snapshot, shards)) => {
+                    PushOutcome::RoundComplete { snapshot, shards }
+                }
+                None => PushOutcome::Deferred,
+            });
+        }
+
+        let age_rounds =
+            (self.version - g.base_version) as f64 / self.n_shards as f64;
+        if age_rounds > self.max_staleness as f64 {
+            self.rejected += 1;
+            return Ok(PushOutcome::Rejected {
+                staleness_rounds: age_rounds,
+                snapshot: self.snapshot()?,
+            });
+        }
+        let base = self
+            .snapshots
+            .iter()
+            .find(|s| s.version == g.base_version)
+            .with_context(|| format!(
+                "push: base version {} evicted from the snapshot ring \
+                 (protocol bug: age {age_rounds} rounds is inside the \
+                 window)", g.base_version))?;
+        let w = 1.0 / self.n_shards as f32;
+        let alpha = 1.0 / (1.0 + age_rounds) as f32;
+        let scale = w * alpha;
+        for ((p, pushed), base) in self
+            .params
+            .iter_mut()
+            .zip(g.params.iter())
+            .zip(base.params.iter())
+        {
+            *p += scale * (pushed - base);
+        }
+        self.version += 1;
+        self.publish();
+        self.applied += 1;
+        Ok(PushOutcome::Applied {
+            staleness_rounds: age_rounds,
+            snapshot: self.snapshot()?,
+        })
+    }
+
+    /// Retire a shard (its `Done` frame).  Under `max_staleness = 0`
+    /// this can close a round the retired shard will never contribute
+    /// to; the returned snapshot (if any) must be acked to the listed
+    /// still-buffered shards.
+    pub fn mark_done(&mut self, shard: usize)
+                     -> Result<Option<(ParamMsg, Vec<usize>)>> {
+        anyhow::ensure!(shard < self.n_shards, "done: bad shard {shard}");
+        anyhow::ensure!(self.active[shard],
+            "done: duplicate Done from shard {shard}");
+        self.active[shard] = false;
+        if self.max_staleness == 0 && self.ready {
+            return self.try_close_round();
+        }
+        Ok(None)
+    }
+
+    /// Close the BSP round if every still-active shard has buffered a
+    /// push.  Averages *in shard order* so arrival order cannot change
+    /// the result.
+    fn try_close_round(&mut self)
+                       -> Result<Option<(ParamMsg, Vec<usize>)>> {
+        let satisfied = (0..self.n_shards)
+            .all(|s| !self.active[s] || self.round[s].is_some());
+        if !satisfied || self.round.iter().all(|p| p.is_none()) {
+            return Ok(None);
+        }
+        let mut shards = Vec::new();
+        let mut parts = Vec::new();
+        for (s, slot) in self.round.iter_mut().enumerate() {
+            if let Some(p) = slot.take() {
+                shards.push(s);
+                parts.push((p, 1));
+            }
+        }
+        self.applied += parts.len() as u64;
+        self.params = tree_average(parts)?;
+        self.version += 1;
+        self.publish();
+        Ok(Some((self.snapshot()?, shards)))
+    }
+
+    fn publish(&mut self) {
+        let cap = (self.max_staleness as usize) * self.n_shards + 1;
+        self.snapshots.push_back(ParamMsg {
+            version: self.version,
+            params: self.params.clone(),
+        });
+        while self.snapshots.len() > cap {
+            self.snapshots.pop_front();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn tree_average_single_part_is_bitwise_identity() {
+        let p = vec![0.1f32, -3.7, 1e-20, 123.456];
+        let avg = tree_average(vec![(p.clone(), 1)]).unwrap();
+        assert_eq!(bits(&avg), bits(&p));
+    }
+
+    #[test]
+    fn tree_average_equal_pair_matches_device_avg2_expression() {
+        let a = vec![0.1f32, -2.0, 7.5];
+        let b = vec![0.3f32, 4.0, -1.25];
+        let avg = tree_average(vec![(a.clone(), 1), (b.clone(), 1)]).unwrap();
+        let manual: Vec<f32> = a.iter().zip(b.iter())
+            .map(|(x, y)| 0.5 * (x + y)).collect();
+        assert_eq!(bits(&avg), bits(&manual));
+    }
+
+    #[test]
+    fn tree_average_power_of_two_matches_pairwise_tree() {
+        let parts: Vec<Vec<f32>> = (0..4)
+            .map(|i| vec![i as f32 * 0.3 + 0.1, -(i as f32) * 1.7])
+            .collect();
+        let m01: Vec<f32> = parts[0].iter().zip(parts[1].iter())
+            .map(|(x, y)| 0.5 * (x + y)).collect();
+        let m23: Vec<f32> = parts[2].iter().zip(parts[3].iter())
+            .map(|(x, y)| 0.5 * (x + y)).collect();
+        let manual: Vec<f32> = m01.iter().zip(m23.iter())
+            .map(|(x, y)| 0.5 * (x + y)).collect();
+        let avg = tree_average(
+            parts.into_iter().map(|p| (p, 1)).collect()).unwrap();
+        assert_eq!(bits(&avg), bits(&manual));
+    }
+
+    #[test]
+    fn tree_average_is_close_to_exact_mean_for_odd_counts() {
+        for n in [3usize, 5, 7] {
+            let parts: Vec<Vec<f32>> = (0..n)
+                .map(|i| vec![(i as f32) * 1.25 - 2.0, 0.01 * i as f32])
+                .collect();
+            let mean0: f64 = parts.iter()
+                .map(|p| p[0] as f64).sum::<f64>() / n as f64;
+            let mean1: f64 = parts.iter()
+                .map(|p| p[1] as f64).sum::<f64>() / n as f64;
+            let avg = tree_average(
+                parts.into_iter().map(|p| (p, 1)).collect()).unwrap();
+            assert!((avg[0] as f64 - mean0).abs() < 1e-5, "n={n}");
+            assert!((avg[1] as f64 - mean1).abs() < 1e-5, "n={n}");
+        }
+    }
+
+    #[test]
+    fn tree_average_rejects_bad_parts() {
+        assert!(tree_average(vec![]).is_err());
+        assert!(tree_average(
+            vec![(vec![1.0], 1), (vec![1.0, 2.0], 1)]).is_err());
+        assert!(tree_average(vec![(vec![1.0], 0)]).is_err());
+    }
+
+    fn ready_server(n: usize, s: u64, dim: usize) -> ParamServer {
+        let mut ps = ParamServer::new(n, s).unwrap();
+        for shard in 0..n {
+            let init = vec![shard as f32; dim];
+            let ready = ps.register(shard, init).unwrap();
+            assert_eq!(ready, shard == n - 1);
+        }
+        assert!(ps.is_ready());
+        assert_eq!(ps.version(), 0);
+        ps
+    }
+
+    fn push(shard: usize, base: u64, params: Vec<f32>) -> GradMsg {
+        GradMsg {
+            shard,
+            base_version: base,
+            iters: 1,
+            params,
+            ep_return_ema: 0.0,
+            env_steps: 1.0,
+        }
+    }
+
+    #[test]
+    fn bsp_round_barrier_averages_in_shard_order() {
+        let mut ps = ready_server(3, 0, 2);
+        let p0 = vec![1.0f32, 10.0];
+        let p1 = vec![2.0f32, 20.0];
+        let p2 = vec![4.0f32, 40.0];
+        // arrival order 2, 0, 1 — result must still be shard-ordered
+        assert_eq!(ps.push(push(2, 0, p2.clone())).unwrap(),
+                   PushOutcome::Deferred);
+        assert_eq!(ps.push(push(0, 0, p0.clone())).unwrap(),
+                   PushOutcome::Deferred);
+        match ps.push(push(1, 0, p1.clone())).unwrap() {
+            PushOutcome::RoundComplete { snapshot, shards } => {
+                assert_eq!(shards, vec![0, 1, 2]);
+                assert_eq!(snapshot.version, 1);
+                let manual = tree_average(
+                    vec![(p0, 1), (p1, 1), (p2, 1)]).unwrap();
+                assert_eq!(bits(&snapshot.params), bits(&manual));
+            }
+            other => panic!("expected RoundComplete, got {other:?}"),
+        }
+        assert_eq!(ps.applied(), 3);
+        assert_eq!(ps.version(), 1);
+    }
+
+    #[test]
+    fn bsp_double_push_in_one_round_is_an_error() {
+        let mut ps = ready_server(2, 0, 1);
+        assert_eq!(ps.push(push(0, 0, vec![1.0])).unwrap(),
+                   PushOutcome::Deferred);
+        assert!(ps.push(push(0, 0, vec![2.0])).is_err());
+    }
+
+    #[test]
+    fn done_shard_closes_a_waiting_round() {
+        let mut ps = ready_server(2, 0, 1);
+        assert_eq!(ps.push(push(0, 0, vec![3.0])).unwrap(),
+                   PushOutcome::Deferred);
+        let (snap, shards) = ps.mark_done(1).unwrap().unwrap();
+        assert_eq!(shards, vec![0]);
+        // single remaining part: bitwise identity
+        assert_eq!(bits(&snap.params), bits(&[3.0f32]));
+        assert!(ps.mark_done(1).is_err(), "duplicate Done");
+    }
+
+    #[test]
+    fn stale_synchronous_applies_with_age_damping() {
+        let mut ps = ready_server(2, 1, 1);
+        let base0 = ps.params()[0];
+        // shard 0, age (0-0)/2 = 0 rounds: full 1/n weight
+        match ps.push(push(0, 0, vec![base0 + 2.0])).unwrap() {
+            PushOutcome::Applied { staleness_rounds, snapshot } => {
+                assert_eq!(staleness_rounds, 0.0);
+                assert_eq!(snapshot.version, 1);
+                let expect = base0 + 0.5 * 1.0 * 2.0;
+                assert_eq!(bits(&snapshot.params), bits(&[expect]));
+            }
+            other => panic!("expected Applied, got {other:?}"),
+        }
+        // shard 1 still based on version 0: age (1-0)/2 = 0.5 rounds
+        let before = ps.params()[0];
+        match ps.push(push(1, 0, vec![base0 + 4.0])).unwrap() {
+            PushOutcome::Applied { staleness_rounds, snapshot } => {
+                assert_eq!(staleness_rounds, 0.5);
+                assert_eq!(snapshot.version, 2);
+                let alpha = 1.0f32 / 1.5;
+                let expect = before + 0.5 * alpha * 4.0;
+                assert_eq!(bits(&snapshot.params), bits(&[expect]));
+            }
+            other => panic!("expected Applied, got {other:?}"),
+        }
+        assert_eq!((ps.applied(), ps.rejected()), (2, 0));
+    }
+
+    #[test]
+    fn pushes_outside_the_window_are_rejected() {
+        let mut ps = ready_server(2, 1, 1);
+        // advance to version 3 with fresh pushes
+        for (shard, base) in [(0, 0), (1, 1), (0, 2)] {
+            match ps.push(push(shard, base, vec![1.0])).unwrap() {
+                PushOutcome::Applied { .. } => {}
+                other => panic!("expected Applied, got {other:?}"),
+            }
+        }
+        assert_eq!(ps.version(), 3);
+        let before = ps.params().to_vec();
+        // shard 1 pushing from version 0: age (3-0)/2 = 1.5 > 1
+        match ps.push(push(1, 0, vec![99.0])).unwrap() {
+            PushOutcome::Rejected { staleness_rounds, snapshot } => {
+                assert_eq!(staleness_rounds, 1.5);
+                assert_eq!(snapshot.version, 3);
+                assert_eq!(bits(&snapshot.params), bits(&before));
+            }
+            other => panic!("expected Rejected, got {other:?}"),
+        }
+        assert_eq!(ps.version(), 3, "rejection publishes nothing");
+        assert_eq!((ps.applied(), ps.rejected()), (3, 1));
+    }
+
+    #[test]
+    fn snapshot_ring_keeps_the_whole_staleness_window() {
+        let mut ps = ready_server(2, 1, 1);
+        // capacity = 1*2 + 1 = 3; publish versions 1..=4
+        for (shard, base) in [(0, 0), (1, 1), (0, 2), (1, 3)] {
+            ps.push(push(shard, base, vec![0.5])).unwrap();
+        }
+        assert_eq!(ps.version(), 4);
+        let held: Vec<u64> = ps.snapshots.iter().map(|s| s.version).collect();
+        assert_eq!(held, vec![2, 3, 4]);
+        // age (4-2)/2 = 1.0 <= 1: base still resident, applies cleanly
+        match ps.push(push(0, 2, vec![0.25])).unwrap() {
+            PushOutcome::Applied { staleness_rounds, .. } => {
+                assert_eq!(staleness_rounds, 1.0);
+            }
+            other => panic!("expected Applied, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn register_validates_fleet_and_shapes() {
+        let mut ps = ParamServer::new(2, 0).unwrap();
+        assert!(ps.push(push(0, 0, vec![1.0])).is_err(),
+                "push before ready");
+        assert!(ps.register(5, vec![1.0]).is_err(), "bad shard id");
+        assert!(!ps.register(0, vec![1.0, 2.0]).unwrap());
+        assert!(ps.register(0, vec![1.0, 2.0]).is_err(),
+                "duplicate hello");
+        assert!(ps.register(1, vec![1.0]).is_err(),
+                "mismatched param length");
+        assert!(ps.register(1, vec![3.0, 4.0]).unwrap());
+        // v0 = equal-weight average of the two inits
+        let expect: Vec<f32> = [(1.0f32, 3.0f32), (2.0, 4.0)]
+            .iter().map(|(a, b)| 0.5 * (a + b)).collect();
+        assert_eq!(bits(ps.params()), bits(&expect));
+        assert!(ParamServer::new(0, 0).is_err());
+    }
+}

@@ -213,12 +213,11 @@ impl<B: DeviceBackend> Trainer<B> {
 
     /// Save the current policy parameters.
     pub fn checkpoint(&mut self, dir: &Path, name: &str) -> Result<()> {
-        let params_buf = {
+        let params = {
             let graphs = &self.graphs;
             let state = self.state()?;
-            graphs.get_params(state)?
+            graphs.download_params(state)?
         };
-        let params = self.graphs.device.to_host(&params_buf)?;
         let iter = self.log.last().map(|r| r.iter as u64).unwrap_or(0);
         Checkpoint {
             tag: self.graphs.artifact.manifest.tag.clone(),
@@ -230,19 +229,16 @@ impl<B: DeviceBackend> Trainer<B> {
 
     /// Restore policy parameters from a checkpoint into the live store.
     pub fn restore(&mut self, ck: &Checkpoint) -> Result<()> {
-        let man = &self.graphs.artifact.manifest;
-        anyhow::ensure!(
-            ck.params.len() == man.params_size,
-            "checkpoint params {} != manifest {}",
-            ck.params.len(),
-            man.params_size
-        );
         if self.state.is_none() {
             self.init()?;
         }
-        let pbuf = self.graphs.device.upload(&ck.params)?;
         let state = self.state.take().unwrap();
-        self.state = Some(self.graphs.set_params(&state, &pbuf)?);
+        // upload_params validates the length against manifest params_size
+        self.state = Some(
+            self.graphs
+                .upload_params(&state, &ck.params)
+                .context("restoring checkpoint params")?,
+        );
         Ok(())
     }
 }

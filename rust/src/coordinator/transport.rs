@@ -1,0 +1,300 @@
+//! Typed parameter/gradient transport between shard workers and the
+//! parameter server.
+//!
+//! The async trainer ([`crate::coordinator::AsyncShardTrainer`]) never
+//! talks to a channel, socket, or device copy engine directly: it speaks
+//! the small message vocabulary defined here — [`ParamMsg`] frames flow
+//! server → shard, [`GradMsg`] frames flow shard → server — over the
+//! [`Transport`] trait.  The in-process [`ChannelTransport`]
+//! (`std::sync::mpsc`) is the only implementation today; the trait is
+//! shaped so the same trainer can later run over
+//!
+//! * **sockets** (multi-node): every frame is a flat `f32` vector plus a
+//!   few scalars — length-prefixed wire encoding is mechanical, and the
+//!   endpoints are already split into one server half and `n` owned,
+//!   `Send` shard halves that can live in different processes;
+//! * **device-to-device copies** (multi-GPU via
+//!   [`crate::runtime::DeviceBackend`]): a backend-aware transport can
+//!   keep `ParamMsg::params` resident by replacing the host `Vec<f32>`
+//!   payload hand-off with `upload`/`to_host`-free peer copies, leaving
+//!   every call site untouched.
+//!
+//! Blocking semantics are part of the contract: `recv` blocks until a
+//! frame arrives (or every peer endpoint is gone, which is an error),
+//! and the server paces shards purely by *when* it answers a push with
+//! its [`ToShard::Ack`] — that is how `max_staleness = 0` degenerates to
+//! lockstep rounds without any extra synchronization primitive.
+
+use std::sync::mpsc;
+
+use anyhow::{Context, Result};
+
+/// Server → shard: a versioned snapshot of the authoritative parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamMsg {
+    /// Publication counter of the parameter server (0 = initial params).
+    pub version: u64,
+    /// The flat parameter vector (manifest `params_size` floats).
+    pub params: Vec<f32>,
+}
+
+/// Shard → server: one *window* (`sync_every` local iterations) of
+/// training applied on top of the snapshot `base_version`.
+///
+/// The payload is the shard's locally-updated parameter vector — the
+/// update direction preconditioned by the shard's own optimizer, which
+/// is what an A2C/Adam shard's "gradient" looks like after its local
+/// step.  The server recovers the true delta against its snapshot ring
+/// (`delta = params - snapshot[base_version]`), so the wire frame stays
+/// a flat vector while the server applies gradients with
+/// staleness-aware damping.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GradMsg {
+    /// Shard index in `[0, n_shards)`.
+    pub shard: usize,
+    /// Version of the snapshot this window was computed from.
+    pub base_version: u64,
+    /// Local train iterations folded into this push.
+    pub iters: u64,
+    /// Locally-updated parameter vector (see type docs).
+    pub params: Vec<f32>,
+    /// Shard telemetry riding along for progress reporting.
+    pub ep_return_ema: f32,
+    /// Cumulative env steps this shard has executed.
+    pub env_steps: f64,
+}
+
+/// Shard → server control/data frames.
+#[derive(Debug, Clone)]
+pub enum ToServer {
+    /// Registration: the shard's freshly-initialized parameters (the
+    /// server folds these into its version-0 snapshot and applies no
+    /// update).  Must be the first frame a shard sends.
+    Hello { shard: usize, params: Vec<f32> },
+    /// One window of local training (answered with an [`ToShard::Ack`]).
+    Push(GradMsg),
+    /// The shard finished its iteration budget and is gone.
+    Done {
+        shard: usize,
+        iters: u64,
+        env_steps: f64,
+        ep_return_ema: f32,
+    },
+    /// The shard hit an unrecoverable error (sent even before `Hello`,
+    /// so the server never hangs waiting on a dead worker).
+    Fatal { shard: usize, error: String },
+}
+
+/// Server → shard control/data frames.
+#[derive(Debug, Clone)]
+pub enum ToShard {
+    /// Answer to a push: whether it was applied, how stale it was (in
+    /// rounds), and the snapshot the shard must continue from.
+    Ack {
+        accepted: bool,
+        staleness_rounds: f64,
+        snapshot: ParamMsg,
+    },
+    /// The server is shutting down (error path); the shard must exit.
+    Stop,
+}
+
+/// The server half: receives from every shard, sends to one shard.
+pub trait ServerEndpoint {
+    /// Block until the next shard frame arrives.
+    fn recv(&mut self) -> Result<ToServer>;
+    /// Send a frame to shard `shard`.
+    fn send(&mut self, shard: usize, msg: ToShard) -> Result<()>;
+}
+
+/// One shard's half: sends to the server, receives its own frames.
+pub trait ShardEndpoint: Send {
+    fn send(&mut self, msg: ToServer) -> Result<()>;
+    /// Block until the server's next frame for this shard arrives.
+    fn recv(&mut self) -> Result<ToShard>;
+}
+
+/// A transport factory: wires one server endpoint to `n` shard
+/// endpoints.  Implementations decide what the wire is (in-process
+/// channels, sockets, device copies).
+pub trait Transport {
+    type ServerEnd: ServerEndpoint;
+    type ShardEnd: ShardEndpoint + 'static;
+
+    /// Build the endpoints for an `n_shards`-worker run.
+    fn connect(&mut self, n_shards: usize)
+               -> Result<(Self::ServerEnd, Vec<Self::ShardEnd>)>;
+}
+
+// ---------------------------------------------------------------------
+// In-process channel transport
+// ---------------------------------------------------------------------
+
+/// The in-process transport: one shared mpsc queue into the server, one
+/// private queue back to each shard.  Zero-copy hand-off of the `Vec`
+/// payloads (ownership moves through the channel).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ChannelTransport;
+
+/// Server side of [`ChannelTransport`].
+pub struct ChannelServerEnd {
+    rx: mpsc::Receiver<ToServer>,
+    txs: Vec<mpsc::Sender<ToShard>>,
+}
+
+/// Shard side of [`ChannelTransport`].
+pub struct ChannelShardEnd {
+    tx: mpsc::Sender<ToServer>,
+    rx: mpsc::Receiver<ToShard>,
+}
+
+impl Transport for ChannelTransport {
+    type ServerEnd = ChannelServerEnd;
+    type ShardEnd = ChannelShardEnd;
+
+    fn connect(&mut self, n_shards: usize)
+               -> Result<(ChannelServerEnd, Vec<ChannelShardEnd>)> {
+        anyhow::ensure!(n_shards >= 1, "need at least one shard endpoint");
+        let (to_server, rx) = mpsc::channel();
+        let mut txs = Vec::with_capacity(n_shards);
+        let mut shard_ends = Vec::with_capacity(n_shards);
+        for _ in 0..n_shards {
+            let (tx_shard, rx_shard) = mpsc::channel();
+            txs.push(tx_shard);
+            shard_ends.push(ChannelShardEnd {
+                tx: to_server.clone(),
+                rx: rx_shard,
+            });
+        }
+        Ok((ChannelServerEnd { rx, txs }, shard_ends))
+    }
+}
+
+impl ServerEndpoint for ChannelServerEnd {
+    fn recv(&mut self) -> Result<ToServer> {
+        self.rx
+            .recv()
+            .context("transport: every shard endpoint disconnected")
+    }
+
+    fn send(&mut self, shard: usize, msg: ToShard) -> Result<()> {
+        let tx = self
+            .txs
+            .get(shard)
+            .with_context(|| format!("transport: no shard {shard}"))?;
+        tx.send(msg)
+            .map_err(|_| anyhow::anyhow!(
+                "transport: shard {shard} endpoint disconnected"))
+    }
+}
+
+impl ChannelServerEnd {
+    /// Best-effort broadcast of [`ToShard::Stop`] (shutdown/error path);
+    /// already-disconnected shards are skipped.
+    pub fn stop_all(&mut self) {
+        for tx in &self.txs {
+            let _ = tx.send(ToShard::Stop);
+        }
+    }
+}
+
+impl ShardEndpoint for ChannelShardEnd {
+    fn send(&mut self, msg: ToServer) -> Result<()> {
+        self.tx
+            .send(msg)
+            .map_err(|_| anyhow::anyhow!(
+                "transport: server endpoint disconnected"))
+    }
+
+    fn recv(&mut self) -> Result<ToShard> {
+        self.rx.recv().context("transport: server endpoint disconnected")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_roundtrip_through_the_channel_transport() {
+        let (mut server, mut shards) =
+            ChannelTransport.connect(2).unwrap();
+        let mut s1 = shards.pop().unwrap();
+        let mut s0 = shards.pop().unwrap();
+        s0.send(ToServer::Hello { shard: 0, params: vec![1.0, 2.0] })
+            .unwrap();
+        s1.send(ToServer::Push(GradMsg {
+            shard: 1,
+            base_version: 0,
+            iters: 4,
+            params: vec![3.0, 4.0],
+            ep_return_ema: 0.5,
+            env_steps: 64.0,
+        }))
+        .unwrap();
+        let mut hello = 0;
+        let mut push = 0;
+        for _ in 0..2 {
+            match server.recv().unwrap() {
+                ToServer::Hello { shard, params } => {
+                    hello += 1;
+                    assert_eq!(shard, 0);
+                    assert_eq!(params, vec![1.0, 2.0]);
+                }
+                ToServer::Push(g) => {
+                    push += 1;
+                    assert_eq!(g.shard, 1);
+                    assert_eq!(g.base_version, 0);
+                    assert_eq!(g.params, vec![3.0, 4.0]);
+                }
+                other => panic!("unexpected frame {other:?}"),
+            }
+        }
+        assert_eq!((hello, push), (1, 1));
+
+        // server -> shard frames land on the right private queue
+        server
+            .send(1, ToShard::Ack {
+                accepted: true,
+                staleness_rounds: 0.0,
+                snapshot: ParamMsg { version: 1, params: vec![9.0] },
+            })
+            .unwrap();
+        match s1.recv().unwrap() {
+            ToShard::Ack { accepted, snapshot, .. } => {
+                assert!(accepted);
+                assert_eq!(snapshot.version, 1);
+                assert_eq!(snapshot.params, vec![9.0]);
+            }
+            ToShard::Stop => panic!("unexpected stop"),
+        }
+        assert!(server.send(7, ToShard::Stop).is_err());
+    }
+
+    #[test]
+    fn disconnects_surface_as_errors() {
+        let (mut server, shards) = ChannelTransport.connect(1).unwrap();
+        drop(shards);
+        assert!(server.recv().is_err());
+        assert!(server.send(0, ToShard::Stop).is_err());
+        // stop_all on a dead fleet is a no-op, not a panic
+        server.stop_all();
+
+        let (server, mut shards) = ChannelTransport.connect(1).unwrap();
+        drop(server);
+        assert!(shards[0].recv().is_err());
+        assert!(shards[0]
+            .send(ToServer::Done {
+                shard: 0,
+                iters: 0,
+                env_steps: 0.0,
+                ep_return_ema: 0.0,
+            })
+            .is_err());
+    }
+
+    #[test]
+    fn zero_shard_connect_is_rejected() {
+        assert!(ChannelTransport.connect(0).is_err());
+    }
+}

@@ -16,6 +16,7 @@ pub mod fig2;
 pub mod fig3;
 pub mod fig4;
 pub mod headline;
+pub mod scaling;
 
 use std::path::PathBuf;
 

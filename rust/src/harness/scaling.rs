@@ -1,0 +1,87 @@
+//! Throughput-vs-shards scaling: the lockstep sync collective against
+//! the async parameter server, on the in-process CPU graph device.
+//!
+//! `MultiShardTrainer` steps its shards serially on the caller thread
+//! (each CPU-device graph is single-threaded), while
+//! `AsyncShardTrainer` gives every shard its own worker thread — so on
+//! a multi-core host the async path's advantage over the sync loop
+//! grows with the shard count, which is exactly the actor/learner
+//! decoupling story this table is meant to show.  On a real multi-GPU
+//! host the same gap opens for a different reason (the slowest device
+//! no longer gates every round); the orchestration code path measured
+//! here is identical.
+//!
+//! Writes `shard_scaling.csv` under the harness out-dir.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::coordinator::{AsyncShardTrainer, MultiShardTrainer};
+use crate::runtime::CpuDevice;
+use crate::util::csv::{human, CsvWriter};
+
+use super::HarnessOpts;
+
+/// Sync vs async steps/sec at each shard count.
+pub fn shard_scaling(opts: &HarnessOpts, env: &str, shard_counts: &[usize])
+                     -> Result<()> {
+    let (n_envs, t) = (256usize, 8usize);
+    let (sync_every, max_staleness) = (2usize, 1usize);
+    let iters = opts.iters.max(sync_every);
+    let device = CpuDevice::new();
+    let artifact = device.artifact(env, n_envs, t)?;
+    let mut csv = CsvWriter::create(
+        &opts.out_dir.join("shard_scaling.csv"),
+        &["shards", "sync_steps_per_sec", "async_steps_per_sec",
+          "async_speedup", "applied", "rejected"],
+    )?;
+    println!(
+        "shard scaling on {env}: n_envs={n_envs} t={t} iters={iters} \
+         sync_every={sync_every} max_staleness={max_staleness}"
+    );
+    for &shards in shard_counts {
+        let cfg = RunConfig {
+            env: env.into(),
+            n_envs,
+            t,
+            iters,
+            seed: 0,
+            shards,
+            sync_every,
+            max_staleness,
+            ..Default::default()
+        };
+        let steps = (iters * n_envs * t * shards) as f64;
+
+        let mut ms = MultiShardTrainer::new(&device, &artifact, cfg.clone())?;
+        let t0 = Instant::now();
+        for i in 0..iters {
+            ms.step(i)?;
+        }
+        let sync_sps = steps / t0.elapsed().as_secs_f64().max(1e-9);
+
+        let tr = AsyncShardTrainer::new(&device, &artifact, cfg)?;
+        let report = tr.run()?;
+        let async_sps = report.steps_per_sec;
+
+        let speedup = async_sps / sync_sps;
+        println!(
+            "  shards {shards:>2}: sync {:>10} steps/s   async {:>10} \
+             steps/s   ({speedup:.2}x; {} applied, {} rejected)",
+            human(sync_sps), human(async_sps),
+            report.applied, report.rejected
+        );
+        csv.row_f64(&[
+            shards as f64,
+            sync_sps,
+            async_sps,
+            speedup,
+            report.applied as f64,
+            report.rejected as f64,
+        ])?;
+    }
+    csv.flush()?;
+    Ok(())
+}

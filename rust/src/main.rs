@@ -4,8 +4,8 @@
 //!   train            train an environment from a TOML config or flags
 //!                    (default build: the SoA cpu-engine backend, or the
 //!                    in-process CPU graph device for --shards /
-//!                    --checkpoint-dir; with the `pjrt` feature:
-//!                    compiled AOT artifacts)
+//!                    --async / --checkpoint-dir; with the `pjrt`
+//!                    feature: compiled AOT artifacts)
 //!   bench <exp>      regenerate a paper table/figure (fig2a, fig2b, fig2c,
 //!                    fig3, fig3-scaling, fig4, headline, ablation-*)
 //!   envs             list the environment registry (all trainable
@@ -78,10 +78,12 @@ warpsci — high data-throughput RL with a unified in-place data store
 USAGE:
   warpsci train [--config run.toml] [--env cartpole] [--n-envs N] [--t T]
                 [--iters K] [--seed S] [--threads P] [--shards P]
+                [--sync-every K] [--async] [--max-staleness N]
                 [--metrics-every M] [--target-return R] [--log-csv path]
                 [--checkpoint-dir d]
   warpsci bench <fig2a|fig2b|fig2c|fig3|fig3-scaling|fig4|headline|
-                 ablation-transfer|ablation-kernel|ablation-estimator|all>
+                 shard-scaling|ablation-transfer|ablation-kernel|
+                 ablation-estimator|all>
                 [--budget-secs S] [--seeds N] [--iters K] [--threads P]
                 [--out-dir d]
   warpsci envs
@@ -133,6 +135,9 @@ fn parse_run_config(args: &Args) -> Result<RunConfig> {
     cfg.iters = args.get_parse("iters", cfg.iters)?;
     cfg.seed = args.get_parse("seed", cfg.seed)?;
     cfg.shards = args.get_parse("shards", cfg.shards)?;
+    cfg.sync_every = args.get_parse("sync-every", cfg.sync_every)?;
+    cfg.run_async = args.get_parse("async", cfg.run_async)?;
+    cfg.max_staleness = args.get_parse("max-staleness", cfg.max_staleness)?;
     cfg.threads = args.get_parse("threads", cfg.threads)?;
     cfg.metrics_every = args.get_parse("metrics-every", cfg.metrics_every)?;
     if let Some(r) = args.get("target-return") {
@@ -150,12 +155,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     use warpsci::runtime::CpuDevice;
 
     let cfg = parse_run_config(args)?;
-    if cfg.shards > 1 || args.get("checkpoint-dir").is_some() {
+    if cfg.run_async || cfg.shards > 1 || args.get("checkpoint-dir").is_some() {
         // the compiled-graph path: multi-shard orchestration and
         // checkpointing run over the in-process CPU device
-        if cfg.shards > 1 && args.get("checkpoint-dir").is_some() {
+        if (cfg.shards > 1 || cfg.run_async)
+            && args.get("checkpoint-dir").is_some() {
             bail!("--checkpoint-dir is not supported with --shards > 1 \
-                   yet (checkpoint the single-shard run instead)");
+                   or --async yet (checkpoint the single-shard run \
+                   instead)");
         }
         if cfg.threads > 0 {
             eprintln!("note: --threads is ignored by the cpu graph \
@@ -165,6 +172,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         let device = CpuDevice::new();
         let artifact = device.artifact(&cfg.env, cfg.n_envs, cfg.t)?;
         println!("backend: cpu device ({})", artifact.manifest.tag);
+        if cfg.run_async {
+            return train_async(&device, &artifact, cfg);
+        }
         if cfg.shards > 1 {
             return train_sharded(&device, &artifact, cfg);
         }
@@ -235,10 +245,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     println!("platform: {}",
              warpsci::runtime::DeviceBackend::platform(&device));
 
-    if cfg.shards > 1 {
+    if cfg.shards > 1 || cfg.run_async {
         if args.get("checkpoint-dir").is_some() {
             bail!("--checkpoint-dir is not supported with --shards > 1 \
-                   yet (checkpoint the single-shard run instead)");
+                   or --async yet (checkpoint the single-shard run \
+                   instead)");
+        }
+        if cfg.run_async {
+            return train_async(&device, &artifact, cfg);
         }
         return train_sharded(&device, &artifact, cfg);
     }
@@ -323,6 +337,37 @@ fn train_sharded<B: warpsci::runtime::DeviceBackend>(
     Ok(())
 }
 
+/// Async parameter-server training, on any `Send` device backend.
+fn train_async<B>(device: &B, artifact: &Artifact, cfg: RunConfig)
+                  -> Result<()>
+where
+    B: warpsci::runtime::DeviceBackend + Send + 'static,
+{
+    use warpsci::coordinator::AsyncShardTrainer;
+
+    println!("async parameter-server: {} shards, push every {} iters, \
+              max staleness {} rounds{}",
+             cfg.shards, cfg.sync_every, cfg.max_staleness,
+             if cfg.max_staleness == 0 {
+                 " (lockstep: bit-identical to sync)"
+             } else {
+                 ""
+             });
+    let shards = cfg.shards;
+    let mut tr = AsyncShardTrainer::new(device, artifact, cfg)?;
+    tr.verbose = true;
+    let report = tr.run()?;
+    println!("done: {} aggregate env steps in {:.1}s ({} steps/s across \
+              {} shards)",
+             human(report.env_steps), report.wall_secs,
+             human(report.steps_per_sec), shards);
+    println!("server: {} param versions, {} pushes applied, {} rejected, \
+              mean return {:.2}",
+             report.version, report.applied, report.rejected,
+             report.mean_return);
+    Ok(())
+}
+
 fn cmd_bench(args: &Args) -> Result<()> {
     let exp = args
         .positional
@@ -356,6 +401,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
             harness::fig4::fig4(&opts, "er", &[4, 20, 100, 500])?;
         }
         "headline" => harness::headline::headline(&opts)?,
+        "shard-scaling" => harness::scaling::shard_scaling(
+            &opts, "cartpole", &[1, 2, 3, 4, 8])?,
         "all" => {
             harness::headline::headline(&opts)?;
             harness::fig2::fig2a(&opts, &["cartpole", "acrobot"],

@@ -26,6 +26,13 @@
 //! (there is no AOT step); [`DeviceBackend::compile`] re-derives the
 //! layout from any manifest and rejects manifests this device did not
 //! lower.
+//!
+//! The `avg2` graph's equal-weight mean is exactly `0.5 * (a + b)` per
+//! element; the host-side collective
+//! [`crate::coordinator::tree_average`] uses the same expression for its
+//! equal-weight merges, which is what lets the sync and async
+//! multi-shard paths stay bit-identical to the historical on-device
+//! avg2 reduction tree for power-of-two shard counts.
 
 use std::path::PathBuf;
 use std::sync::Mutex;

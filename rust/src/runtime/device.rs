@@ -57,9 +57,14 @@ pub trait DeviceExecutable {
 /// One execution device: compiles artifact graphs and moves buffers
 /// across the host boundary.
 ///
-/// `Clone` is required because the multi-shard orchestrator hands every
+/// `Clone` is required because the multi-shard orchestrators hand every
 /// shard a handle to the same underlying device (mirroring how a real
 /// multi-GPU host shares one client across per-device executables).
+/// `Send` is deliberately *not* a supertrait: only the async trainer
+/// moves device handles across threads, so that bound lives on
+/// [`crate::coordinator::AsyncShardTrainer`] (`B: Send + 'static`) —
+/// buffers themselves never cross a thread boundary; each worker
+/// compiles its own executables and keeps its state resident.
 pub trait DeviceBackend: Clone {
     type Buffer: DeviceBuffer;
     type Executable: DeviceExecutable<Buffer = Self::Buffer>;

@@ -108,6 +108,31 @@ impl<B: DeviceBackend> GraphSet<B> {
         self.avg2.run_buf(&[a, b])
     }
 
+    /// Download the policy/value parameter vector to the host
+    /// (checkpoints, parameter-server pushes, host-staged collectives).
+    pub fn download_params(&self, state: &B::Buffer) -> Result<Vec<f32>> {
+        let p = self.get_params(state)?;
+        self.device.to_host(&p).context("params device->host copy")
+    }
+
+    /// Upload a host parameter vector and inject it into `state`
+    /// (checkpoint restore, parameter-server snapshot adoption).
+    pub fn upload_params(
+        &self,
+        state: &B::Buffer,
+        params: &[f32],
+    ) -> Result<B::Buffer> {
+        if params.len() != self.artifact.manifest.params_size {
+            bail!(
+                "params length {} != manifest params_size {}",
+                params.len(),
+                self.artifact.manifest.params_size
+            );
+        }
+        let pbuf = self.device.upload(params).context("uploading params")?;
+        self.set_params(state, &pbuf)
+    }
+
     /// Upload a host state vector (checkpoint restore / ablation modes).
     pub fn upload_state(&self, state: &[f32]) -> Result<B::Buffer> {
         if state.len() != self.artifact.manifest.state_size {

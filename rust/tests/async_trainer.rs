@@ -1,0 +1,171 @@
+//! Integration: the async parameter-server trainer over the pure-Rust
+//! CPU device — the `max_staleness = 0` bit-identity pin against the
+//! synchronous `MultiShardTrainer`, scheduling-independence of the BSP
+//! round barrier, staleness-window convergence on two environments, and
+//! push accounting.  Everything here runs under default features.
+
+use warpsci::config::RunConfig;
+use warpsci::coordinator::{tree_average, AsyncShardTrainer,
+                           MultiShardTrainer};
+use warpsci::runtime::CpuDevice;
+
+fn device(hidden: usize) -> CpuDevice {
+    let mut d = CpuDevice::new();
+    d.hp.hidden = hidden;
+    d
+}
+
+/// Bit view for exact float-vector comparison (NaN-payload safe).
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn cfg_for(env: &str, n: usize, t: usize, iters: usize, shards: usize,
+           sync_every: usize, max_staleness: usize) -> RunConfig {
+    RunConfig {
+        env: env.into(),
+        n_envs: n,
+        t,
+        iters,
+        seed: 7,
+        shards,
+        sync_every,
+        max_staleness,
+        ..Default::default()
+    }
+}
+
+/// At `max_staleness = 0` the server's round barrier reduces the async
+/// protocol to the synchronous collective: same per-shard seeds, same
+/// `train_iter` chains, same `tree_average` in shard order.  The final
+/// server params must be *bitwise* equal to the sync trainer's — for
+/// every shard count, power-of-two or not (1 and 8 also pin the
+/// single-shard identity and the deeper tree).
+#[test]
+fn staleness0_bit_identical_to_sync_across_shard_counts() {
+    for shards in [1usize, 3, 5, 8] {
+        let (n, t, hidden, iters, sync_every) = (8, 4, 16, 6, 2);
+        let d = device(hidden);
+        let artifact = d.artifact("cartpole", n, t).unwrap();
+        let cfg = cfg_for("cartpole", n, t, iters, shards, sync_every, 0);
+
+        let mut ms = MultiShardTrainer::new(&d, &artifact,
+                                            cfg.clone()).unwrap();
+        for i in 0..iters {
+            ms.step(i).unwrap();
+        }
+        let sync_params = ms.shard_params().unwrap();
+        if shards > 1 {
+            // iters divisible by sync_every: the last step synced, so
+            // every sync shard holds the same averaged vector
+            for p in &sync_params[1..] {
+                assert_eq!(bits(p), bits(&sync_params[0]));
+            }
+        }
+
+        let tr = AsyncShardTrainer::new(&d, &artifact, cfg).unwrap();
+        let report = tr.run().unwrap();
+        assert_eq!(bits(&report.final_params), bits(&sync_params[0]),
+                   "async max_staleness=0 diverged from sync at \
+                    shards={shards}");
+
+        let windows = (iters / sync_every) as u64;
+        assert_eq!(report.version, windows, "shards={shards}");
+        assert_eq!(report.applied, windows * shards as u64);
+        assert_eq!(report.rejected, 0);
+        assert_eq!(report.per_shard.len(), shards);
+        for s in &report.per_shard {
+            assert_eq!(s.iters, iters as u64);
+            assert!(s.ep_return_ema.is_finite());
+        }
+        assert!(report.env_steps > 0.0);
+    }
+}
+
+/// The round barrier makes `max_staleness = 0` runs independent of
+/// thread scheduling: two runs of the same job are bitwise equal.
+#[test]
+fn staleness0_reruns_are_bit_identical() {
+    let d = device(16);
+    let artifact = d.artifact("cartpole", 8, 4).unwrap();
+    let cfg = cfg_for("cartpole", 8, 4, 6, 3, 2, 0);
+    let tr = AsyncShardTrainer::new(&d, &artifact, cfg).unwrap();
+    let r1 = tr.run().unwrap();
+    let r2 = tr.run().unwrap();
+    assert_eq!(bits(&r1.final_params), bits(&r2.final_params));
+    assert_eq!(r1.version, r2.version);
+    assert_eq!(r1.applied, r2.applied);
+}
+
+/// Staleness windows 1..=4 must stay in the neighbourhood of the sync
+/// baseline's episodic return on both a classic-control env and a
+/// scientific one.  Scheduling reaches the parameter values at
+/// `max_staleness >= 1`, so the band is deliberately generous — this
+/// pins "bounded staleness still trains", not an exact trajectory.
+#[test]
+fn staleness_window_tracks_sync_returns() {
+    for (env, n, t, iters) in [("cartpole", 16, 8, 12),
+                               ("ecosystem", 8, 4, 8)] {
+        let (hidden, shards, sync_every) = (16, 3, 2);
+        let d = device(hidden);
+        let artifact = d.artifact(env, n, t).unwrap();
+
+        let cfg = cfg_for(env, n, t, iters, shards, sync_every, 0);
+        let mut ms = MultiShardTrainer::new(&d, &artifact,
+                                            cfg.clone()).unwrap();
+        for i in 0..iters {
+            ms.step(i).unwrap();
+        }
+        let sync_mean = ms.mean_return().unwrap();
+        assert!(sync_mean.is_finite(), "{env}: sync baseline diverged");
+        let tol = 0.75 * sync_mean.abs() + 15.0;
+
+        for staleness in 1..=4usize {
+            let cfg = cfg_for(env, n, t, iters, shards, sync_every,
+                              staleness);
+            let tr = AsyncShardTrainer::new(&d, &artifact, cfg).unwrap();
+            let report = tr.run().unwrap();
+            assert!(report.mean_return.is_finite(),
+                    "{env} staleness={staleness}: diverged");
+            assert!((report.mean_return - sync_mean).abs() <= tol,
+                    "{env} staleness={staleness}: async return {} left \
+                     the sync band around {sync_mean} (tol {tol})",
+                    report.mean_return);
+            assert!(report.final_params.iter().all(|x| x.is_finite()));
+            // every push is either applied or rejected; rejections can
+            // only come from the staleness bound
+            let pushes = (shards * (iters / sync_every)) as u64;
+            assert_eq!(report.applied + report.rejected, pushes,
+                       "{env} staleness={staleness}");
+            assert!(report.applied >= 1);
+        }
+    }
+}
+
+/// A job shorter than one sync window never pushes: the server's final
+/// vector is the version-0 merge of the shards' init params (the same
+/// `tree_average` over `shard_params`), and accounting stays at zero.
+#[test]
+fn short_job_without_windows_serves_initial_merge() {
+    let (n, t, hidden, shards) = (8, 4, 16, 3);
+    let d = device(hidden);
+    let artifact = d.artifact("cartpole", n, t).unwrap();
+    // iters < sync_every -> zero windows, only trailing local iters
+    let cfg = cfg_for("cartpole", n, t, 1, shards, 4, 0);
+
+    let ms = MultiShardTrainer::new(&d, &artifact, cfg.clone()).unwrap();
+    let inits = ms.shard_params().unwrap();
+    let expect = tree_average(
+        inits.into_iter().map(|p| (p, 1)).collect()).unwrap();
+
+    let tr = AsyncShardTrainer::new(&d, &artifact, cfg).unwrap();
+    let report = tr.run().unwrap();
+    assert_eq!(bits(&report.final_params), bits(&expect));
+    assert_eq!(report.version, 0);
+    assert_eq!(report.applied, 0);
+    assert_eq!(report.rejected, 0);
+    for s in &report.per_shard {
+        assert_eq!(s.iters, 1);
+        assert!(s.ep_return_ema.is_finite());
+    }
+}

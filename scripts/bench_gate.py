@@ -11,14 +11,18 @@ Two checks:
    per-env step-kernel microbenches (one tiled/scalar pair for every
    environment in the registry), with positive throughput.
 2. Regression gate — every record named in the committed baseline must
-   reach at least `items_per_sec / TOLERANCE` of its baseline value.
-   TOLERANCE is 1.3 (tightened 2x -> 1.5 -> 1.3 as the record set and
-   floors matured): CI runs on shared hardware, and the committed
-   baseline holds conservative floor values, so the gate trips on real
-   regressions (accidental debug-mode, O(n^2) paths, lost parallelism,
-   a de-vectorized kernel) — not on runner noise.  The floors are
-   still conservative authoring-sandbox values; raise them (keeping
-   TOLERANCE at 1.3) once a real CI run has measured the fleet.
+   reach at least `items_per_sec / tolerance` of its baseline value.
+   The default TOLERANCE is 1.3 (tightened 2x -> 1.5 -> 1.3 as the
+   record set and floors matured); a baseline record may carry its own
+   `"tolerance"` field to gate tighter where its floor is known to sit
+   far below real throughput (the microbench floors are 5-10x
+   conservative, so 1.15 is safe there).  CI runs on shared hardware,
+   and the committed baseline holds conservative floor values, so the
+   gate trips on real regressions (accidental debug-mode, O(n^2)
+   paths, lost parallelism, a de-vectorized kernel) — not on runner
+   noise.  The floors are still conservative authoring-sandbox values;
+   raise them (keeping tolerances) once a real CI run has measured the
+   fleet.
 
 A missing baseline file is a hard error (it is committed at the repo
 root); a baseline record whose name has no fresh counterpart is also an
@@ -36,6 +40,8 @@ REQUIRED_PREFIXES = [
     "gemm_tile/",
     "policy_forward/tiled/",
     "policy_forward/scalar/",
+    "shard_scaling/sync/",
+    "shard_scaling/async/",
 ]
 
 # The per-env required records are derived from the "registry/envs"
@@ -81,7 +87,8 @@ def main() -> int:
     failures = []
     for b in baseline:
         name = b["name"]
-        floor = b["items_per_sec"] / TOLERANCE
+        tolerance = b.get("tolerance", TOLERANCE)
+        floor = b["items_per_sec"] / tolerance
         fresh = by_name.get(name)
         if fresh is None:
             failures.append(f"{name}: in baseline but missing from fresh "
@@ -94,7 +101,7 @@ def main() -> int:
         if got < floor:
             failures.append(f"{name}: {got:,.0f} < {floor:,.0f} "
                             f"(baseline {b['items_per_sec']:,.0f} "
-                            f"/ {TOLERANCE})")
+                            f"/ {tolerance})")
     if failures:
         print("\nbench regression gate FAILED:")
         for f in failures:
