@@ -13,6 +13,210 @@ use anyhow::{anyhow, Context, Result};
 
 pub use parser::TomlValue;
 
+/// Fault-tolerance knobs for the async trainer: how liveness is
+/// detected and what happens when it is lost.
+///
+/// The server event loop is driven by a `recv_timeout` deadline tick of
+/// `heartbeat_ms`; a shard that produces no frame (heartbeat, push,
+/// hello, done) for `missed_heartbeats` consecutive ticks is declared
+/// dead.  With `tolerate = false` (the default) a dead shard aborts the
+/// run with a diagnostic — the pre-fault-tolerance behaviour, except it
+/// can no longer hang.  With `tolerate = true` the server degrades
+/// gracefully instead: the shard is dropped from the round barrier, the
+/// collective re-weights over survivors, and the loss is recorded in
+/// the run report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Server deadline tick and worker heartbeat cadence, milliseconds.
+    pub heartbeat_ms: u64,
+    /// Consecutive silent ticks before a shard is declared dead.
+    pub missed_heartbeats: u32,
+    /// Degrade on shard death instead of aborting the run.
+    pub tolerate: bool,
+    /// Bounded retry budget for the `Rejoin` handshake (per shard).
+    pub max_rejoins: u32,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            heartbeat_ms: 2000,
+            missed_heartbeats: 15,
+            tolerate: false,
+            max_rejoins: 2,
+        }
+    }
+}
+
+/// A seeded fault-injection plan for the chaos transport
+/// ([`crate::coordinator::ChaosTransport`]).
+///
+/// Rates are per-frame probabilities in `[0, 1]`, split by direction
+/// (shard→server and server→shard).  Every decision is drawn from a
+/// per-edge [`crate::util::Pcg64`] stream derived from `seed`, so a
+/// chaos run's fault pattern depends only on the frame count of each
+/// edge — not on thread interleaving — and is reproducible.
+///
+/// Spec grammar (CLI `--chaos <spec>` and TOML `[chaos] spec = "..."`):
+///
+/// ```text
+/// seed=7,drop=0.05,delay=0.1,delay_ms=5,dup=0.02,reorder=0.05,kill=1@3
+/// ```
+///
+/// `drop`/`delay`/`dup`/`reorder` set both directions; append
+/// `_to_server` or `_to_shard` to set one (e.g. `drop_to_shard=0.2`).
+/// `kill=S@K` silences shard `S` starting at its `K`-th push (1-based) —
+/// the push never arrives, and neither does anything after it (including
+/// the `Fatal` frame), which is exactly the silent-death case the
+/// heartbeat deadline exists for.  Multiple kills join with `+`:
+/// `kill=1@3+2@5`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Seed of the per-edge fault decision streams.
+    pub seed: u64,
+    /// Drop probability per shard→server frame.
+    pub drop_to_server: f64,
+    /// Drop probability per server→shard frame.
+    pub drop_to_shard: f64,
+    /// Delay probability per shard→server frame.
+    pub delay_to_server: f64,
+    /// Delay probability per server→shard frame.
+    pub delay_to_shard: f64,
+    /// Sleep applied to a delayed frame, milliseconds.
+    pub delay_ms: u64,
+    /// Duplicate probability per shard→server frame.
+    pub dup_to_server: f64,
+    /// Duplicate probability per server→shard frame.
+    pub dup_to_shard: f64,
+    /// Reorder (hold-back) probability per shard→server frame.
+    pub reorder_to_server: f64,
+    /// Reorder (hold-back) probability per server→shard frame.
+    pub reorder_to_shard: f64,
+    /// `(shard, push_number)` kill points (1-based push count).
+    pub kill: Vec<(usize, u64)>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0,
+            drop_to_server: 0.0,
+            drop_to_shard: 0.0,
+            delay_to_server: 0.0,
+            delay_to_shard: 0.0,
+            delay_ms: 1,
+            dup_to_server: 0.0,
+            dup_to_shard: 0.0,
+            reorder_to_server: 0.0,
+            reorder_to_shard: 0.0,
+            kill: Vec::new(),
+        }
+    }
+}
+
+impl FaultPlan {
+    /// True when the plan injects nothing: the chaos transport is then a
+    /// pure pass-through and the run is bit-identical to an undecorated
+    /// one.
+    pub fn is_zero(&self) -> bool {
+        self.drop_to_server == 0.0
+            && self.drop_to_shard == 0.0
+            && self.delay_to_server == 0.0
+            && self.delay_to_shard == 0.0
+            && self.dup_to_server == 0.0
+            && self.dup_to_shard == 0.0
+            && self.reorder_to_server == 0.0
+            && self.reorder_to_shard == 0.0
+            && self.kill.is_empty()
+    }
+
+    /// Parse the `key=value,...` chaos spec grammar (see type docs).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for item in spec.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            let (key, value) = item.split_once('=').ok_or_else(|| {
+                anyhow!("chaos spec item {item:?} is not key=value")
+            })?;
+            plan.set(key.trim(), value.trim())
+                .with_context(|| format!("chaos spec item {item:?}"))?;
+        }
+        Ok(plan)
+    }
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        fn rate(value: &str) -> Result<f64> {
+            let r: f64 = value
+                .parse()
+                .map_err(|_| anyhow!("bad rate {value:?}"))?;
+            if !(0.0..=1.0).contains(&r) {
+                return Err(anyhow!("rate {r} outside [0, 1]"));
+            }
+            Ok(r)
+        }
+        match key {
+            "seed" => {
+                self.seed = value
+                    .parse()
+                    .map_err(|_| anyhow!("bad seed {value:?}"))?;
+            }
+            "delay_ms" => {
+                self.delay_ms = value
+                    .parse()
+                    .map_err(|_| anyhow!("bad delay_ms {value:?}"))?;
+            }
+            "drop" => {
+                self.drop_to_server = rate(value)?;
+                self.drop_to_shard = self.drop_to_server;
+            }
+            "drop_to_server" => self.drop_to_server = rate(value)?,
+            "drop_to_shard" => self.drop_to_shard = rate(value)?,
+            "delay" => {
+                self.delay_to_server = rate(value)?;
+                self.delay_to_shard = self.delay_to_server;
+            }
+            "delay_to_server" => self.delay_to_server = rate(value)?,
+            "delay_to_shard" => self.delay_to_shard = rate(value)?,
+            "dup" => {
+                self.dup_to_server = rate(value)?;
+                self.dup_to_shard = self.dup_to_server;
+            }
+            "dup_to_server" => self.dup_to_server = rate(value)?,
+            "dup_to_shard" => self.dup_to_shard = rate(value)?,
+            "reorder" => {
+                self.reorder_to_server = rate(value)?;
+                self.reorder_to_shard = self.reorder_to_server;
+            }
+            "reorder_to_server" => self.reorder_to_server = rate(value)?,
+            "reorder_to_shard" => self.reorder_to_shard = rate(value)?,
+            "kill" => {
+                for part in value.split('+') {
+                    let (shard, push) =
+                        part.split_once('@').ok_or_else(|| {
+                            anyhow!("kill point {part:?} is not shard@push")
+                        })?;
+                    let shard: usize = shard.parse().map_err(|_| {
+                        anyhow!("bad kill shard {shard:?}")
+                    })?;
+                    let push: u64 = push.parse().map_err(|_| {
+                        anyhow!("bad kill push count {push:?}")
+                    })?;
+                    if push == 0 {
+                        return Err(anyhow!(
+                            "kill push count is 1-based (got 0)"));
+                    }
+                    self.kill.push((shard, push));
+                }
+            }
+            other => return Err(anyhow!("unknown chaos key {other:?}")),
+        }
+        Ok(())
+    }
+}
+
 /// A training / benchmark run description.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunConfig {
@@ -47,6 +251,21 @@ pub struct RunConfig {
     pub log_csv: Option<String>,
     /// Artifact tag override (defaults to `{env}_n{n_envs}_t{t}`).
     pub tag: Option<String>,
+    /// Liveness / degradation knobs for the async trainer.
+    pub fault: FaultConfig,
+    /// Fault-injection plan; `Some` decorates the transport with
+    /// [`crate::coordinator::ChaosTransport`] (`--chaos <spec>` /
+    /// `[chaos]` table).  An all-zero plan is a bit-identical
+    /// pass-through.
+    pub chaos: Option<FaultPlan>,
+    /// Async-trainer checkpoint cadence in published versions
+    /// (0 = off; `--checkpoint-every K` / `[checkpoint] every`).
+    pub checkpoint_every: usize,
+    /// Directory the async checkpointer writes `latest.*` into.
+    pub checkpoint_dir: Option<String>,
+    /// Resume an async run from the `latest` checkpoint in this
+    /// directory (`--resume <dir>` / `[checkpoint] resume`).
+    pub resume: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -66,6 +285,11 @@ impl Default for RunConfig {
             target_return: None,
             log_csv: None,
             tag: None,
+            fault: FaultConfig::default(),
+            chaos: None,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+            resume: None,
         }
     }
 }
@@ -135,10 +359,61 @@ impl RunConfig {
         if let Some(v) = doc.get("artifact.tag") {
             cfg.tag = Some(v.as_str()?.to_string());
         }
+        if let Some(v) = doc.get("fault.heartbeat_ms") {
+            cfg.fault.heartbeat_ms = (v.as_int()? as u64).max(1);
+        }
+        if let Some(v) = doc.get("fault.missed_heartbeats") {
+            cfg.fault.missed_heartbeats = (v.as_int()? as u32).max(1);
+        }
+        if let Some(v) = doc.get("fault.tolerate") {
+            cfg.fault.tolerate = v.as_bool()?;
+        }
+        if let Some(v) = doc.get("fault.max_rejoins") {
+            cfg.fault.max_rejoins = v.as_int()? as u32;
+        }
+        cfg.chaos = Self::chaos_from_doc(&doc)?;
+        if let Some(v) = doc.get("checkpoint.every") {
+            cfg.checkpoint_every = v.as_int()? as usize;
+        }
+        if let Some(v) = doc.get("checkpoint.dir") {
+            cfg.checkpoint_dir = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = doc.get("checkpoint.resume") {
+            cfg.resume = Some(v.as_str()?.to_string());
+        }
         if cfg.n_envs == 0 || cfg.t == 0 {
             return Err(anyhow!("n_envs and t must be positive"));
         }
         Ok(cfg)
+    }
+
+    /// Assemble a [`FaultPlan`] from the `[chaos]` table: `spec` parses
+    /// the full grammar first, then the individual keys override it.
+    fn chaos_from_doc(doc: &parser::TomlDoc) -> Result<Option<FaultPlan>> {
+        const KEYS: [&str; 7] =
+            ["seed", "drop", "delay", "delay_ms", "dup", "reorder", "kill"];
+        let mut plan = match doc.get("chaos.spec") {
+            Some(v) => Some(FaultPlan::parse(v.as_str()?)
+                .context("[chaos] spec")?),
+            None => None,
+        };
+        for key in KEYS {
+            if let Some(v) = doc.get(&format!("chaos.{key}")) {
+                let value = match v {
+                    TomlValue::Str(s) => s.clone(),
+                    TomlValue::Int(i) => i.to_string(),
+                    TomlValue::Float(f) => f.to_string(),
+                    other => {
+                        return Err(anyhow!(
+                            "[chaos] {key}: unsupported value {other:?}"))
+                    }
+                };
+                plan.get_or_insert_with(FaultPlan::default)
+                    .set(key, &value)
+                    .with_context(|| format!("[chaos] {key}"))?;
+            }
+        }
+        Ok(plan)
     }
 }
 
@@ -196,6 +471,77 @@ tag = "covid_econ_n60_t13"
         assert!(cfg.run_async);
         assert_eq!(cfg.max_staleness, 2);
         assert_eq!(cfg.artifact_tag(), "covid_econ_n60_t13");
+    }
+
+    #[test]
+    fn fault_plan_spec_grammar_roundtrips() {
+        let plan = FaultPlan::parse(
+            "seed=7,drop=0.05,delay=0.1,delay_ms=5,dup=0.02,\
+             reorder=0.04,drop_to_shard=0.2,kill=1@3+2@5",
+        )
+        .unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.drop_to_server, 0.05);
+        assert_eq!(plan.drop_to_shard, 0.2, "direction key overrides");
+        assert_eq!(plan.delay_to_server, 0.1);
+        assert_eq!(plan.delay_to_shard, 0.1);
+        assert_eq!(plan.delay_ms, 5);
+        assert_eq!(plan.dup_to_server, 0.02);
+        assert_eq!(plan.reorder_to_shard, 0.04);
+        assert_eq!(plan.kill, vec![(1, 3), (2, 5)]);
+        assert!(!plan.is_zero());
+
+        assert!(FaultPlan::parse("seed=1").unwrap().is_zero());
+        assert!(FaultPlan::parse("").unwrap().is_zero());
+        assert!(FaultPlan::parse("drop=1.5").is_err(), "rate > 1");
+        assert!(FaultPlan::parse("drop").is_err(), "missing =");
+        assert!(FaultPlan::parse("kill=1").is_err(), "missing @");
+        assert!(FaultPlan::parse("kill=1@0").is_err(), "0-based kill");
+        assert!(FaultPlan::parse("warp=1").is_err(), "unknown key");
+    }
+
+    #[test]
+    fn fault_and_chaos_tables_parse() {
+        let text = r#"
+[fault]
+heartbeat_ms = 50
+missed_heartbeats = 4
+tolerate = true
+max_rejoins = 3
+
+[chaos]
+spec = "drop=0.5,delay_ms=9"
+seed = 11
+drop = 0.1
+kill = "0@2"
+
+[checkpoint]
+every = 8
+dir = "out/ckpt"
+resume = "out/prev"
+"#;
+        let cfg = RunConfig::from_toml_str(text).unwrap();
+        assert_eq!(cfg.fault.heartbeat_ms, 50);
+        assert_eq!(cfg.fault.missed_heartbeats, 4);
+        assert!(cfg.fault.tolerate);
+        assert_eq!(cfg.fault.max_rejoins, 3);
+        let plan = cfg.chaos.unwrap();
+        assert_eq!(plan.seed, 11);
+        assert_eq!(plan.drop_to_server, 0.1,
+                   "individual key overrides spec");
+        assert_eq!(plan.delay_ms, 9, "spec value survives");
+        assert_eq!(plan.kill, vec![(0, 2)]);
+        assert_eq!(cfg.checkpoint_every, 8);
+        assert_eq!(cfg.checkpoint_dir.as_deref(), Some("out/ckpt"));
+        assert_eq!(cfg.resume.as_deref(), Some("out/prev"));
+
+        // no tables -> defaults
+        let cfg = RunConfig::from_toml_str("[env]\nname = \"cartpole\"\n")
+            .unwrap();
+        assert_eq!(cfg.fault, FaultConfig::default());
+        assert!(cfg.chaos.is_none());
+        assert_eq!(cfg.checkpoint_every, 0);
+        assert!(cfg.resume.is_none());
     }
 
     #[test]

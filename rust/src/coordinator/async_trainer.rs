@@ -19,9 +19,9 @@
 //! init_state(seed + shard)
 //! Hello(init params)   ───────▶  register; all in → version-0 merge
 //! loop windows:
-//!   sync_every × train_iter
-//!   Push(params, base) ───────▶  ParamServer::push
-//!   ◀─────────────────────────   Ack(accepted, snapshot)
+//!   sync_every × train_iter      (Heartbeat beacons ride between iters)
+//!   Push(seq, params)  ───────▶  ParamServer::push (dedup by seq)
+//!   ◀─────────────────────────   Ack(seq, accepted, snapshot)
 //!   set_params(snapshot)
 //! trailing iters (< sync_every)
 //! Done(final metrics)  ───────▶  retire shard
@@ -37,21 +37,66 @@
 //! order reaches the parameter values, so runs are reproducible only in
 //! distribution, not bitwise — that trade is the point.
 //!
+//! ## Fault tolerance (PR 7)
+//!
+//! The serve loop is **deadline-driven**: it polls with
+//! `recv_timeout(heartbeat_ms)` and declares a shard dead after
+//! `missed_heartbeats` silent ticks ([`ToServer::Fatal`] remains the
+//! fast path; the deadline is the guaranteed one).  What death means
+//! depends on [`crate::config::FaultConfig::tolerate`]:
+//!
+//! * `tolerate = false` (default): the run fails with the same
+//!   `"shard N failed: ..."` error the Fatal path always produced.
+//! * `tolerate = true`: the shard is dropped from the round barrier,
+//!   the stale-synchronous shard weight renormalizes over survivors
+//!   (exactly `1/n_shards` while nothing has failed, so the zero-fault
+//!   arithmetic — and the bit-identity pin — are untouched), and the
+//!   loss is recorded in the [`AsyncRunReport`].
+//!
+//! Pushes are delivered **at least once**: each carries a per-shard
+//! [`GradMsg::seq`], the server ignores duplicates, and a worker whose
+//! ack never arrives probes with [`ToServer::Rejoin`] and resends when
+//! the echoed seq shows its push was lost.  A shard the server wrote
+//! off re-enters through the same probe (bounded by
+//! [`crate::config::FaultConfig::max_rejoins`]).
+//!
+//! Crash recovery: with `checkpoint_every > 0` the serve loop hands
+//! snapshots crossing a version boundary to a dedicated writer thread
+//! (saves never block the apply path) using the atomic
+//! [`Checkpoint::save`]; `resume` rebuilds the server from the saved
+//! params + version verbatim ([`ParamServer::with_resume`]) and restores
+//! the reseed RNG stream so restarted workers draw fresh trajectories
+//! instead of replaying the crashed ones.
+//!
 //! Worker threads require only `B: DeviceBackend + Send + 'static`
 //! (buffers never cross threads; each worker compiles its own graph
 //! set), so the bound lives here and not on the backend trait.
 
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::config::RunConfig;
 use crate::runtime::{Artifact, DeviceBackend, GraphSet};
+use crate::store::Checkpoint;
+use crate::util::Pcg64;
 
+use super::chaos::ChaosTransport;
 use super::param_server::{ParamServer, PushOutcome};
 use super::transport::{ChannelTransport, GradMsg, ParamMsg, ServerEndpoint,
                        ShardEndpoint, ToServer, ToShard, Transport};
+
+/// File stem of the rolling async checkpoint inside `checkpoint_dir`.
+pub const CKPT_NAME: &str = "ckpt";
+/// [`Pcg64`] stream id of the trainer's reseed stream (persisted in the
+/// checkpoint so chained resumes keep drawing fresh worker seeds).
+const RESEED_STREAM: u64 = 0x5eed;
+/// Device `init_state` seeds must stay below 2^24; resume seed draws
+/// are masked to 23 bits so `seed_base + shard` always fits.
+const RESUME_SEED_MASK: u64 = (1 << 23) - 1;
 
 /// Per-shard telemetry carried back on `Done`.
 #[derive(Debug, Clone, Default)]
@@ -77,8 +122,23 @@ pub struct AsyncRunReport {
     /// Total env steps across every shard.
     pub env_steps: f64,
     pub steps_per_sec: f64,
-    /// Mean of the shards' final `ep_return_ema`.
+    /// Mean of the reporting shards' final `ep_return_ema` (shards lost
+    /// to faults are excluded; NaN if nothing survived to report).
     pub mean_return: f64,
+    /// Shards still written off as dead when serving ended.
+    pub failed_shards: Vec<usize>,
+    /// First recorded error per lost shard, `(shard, message)`.
+    pub shard_errors: Vec<(usize, String)>,
+    /// Successful rejoin handshakes across the fleet.
+    pub rejoins: u32,
+    /// Heartbeat frames the server consumed.
+    pub heartbeats: u64,
+    /// Duplicate/zombie pushes ignored by the seq fence.
+    pub ignored: u64,
+    /// Checkpoints the writer thread persisted.
+    pub checkpoints_written: u64,
+    /// Version the run was resumed from, if `cfg.resume` was set.
+    pub resumed_from: Option<u64>,
 }
 
 /// Async parameter-server trainer (see module docs).
@@ -88,6 +148,51 @@ pub struct AsyncShardTrainer<B: DeviceBackend + Send + 'static> {
     pub cfg: RunConfig,
     /// Print a progress line on (every `metrics_every`-th) publication.
     pub verbose: bool,
+}
+
+/// Serve-loop bookkeeping that lives outside the [`ParamServer`] core:
+/// liveness clocks, parked frames, telemetry, and the checkpoint
+/// pipeline.
+struct ServeState {
+    per_shard: Vec<AsyncShardReport>,
+    /// Shards whose `Done` telemetry was recorded.
+    reported: Vec<bool>,
+    /// Shards the loop no longer waits on (`Done` *or* written off).
+    finished: Vec<bool>,
+    finished_count: usize,
+    shard_errors: Vec<Option<String>>,
+    last_heard: Vec<Instant>,
+    /// Pushes racing ahead of a slower shard's Hello (compile time
+    /// differs per thread), parked until the fleet is registered.
+    parked: Vec<GradMsg>,
+    rejoins_used: Vec<u32>,
+    heartbeats: u64,
+    ignored: u64,
+    /// Seed stream persisted into checkpoints (see [`RESEED_STREAM`]).
+    reseed: Pcg64,
+    ckpt_tx: Option<mpsc::Sender<Checkpoint>>,
+    last_ckpt_version: u64,
+}
+
+impl ServeState {
+    fn new(n: usize, reseed: Pcg64, ckpt_tx: Option<mpsc::Sender<Checkpoint>>,
+           last_ckpt_version: u64) -> ServeState {
+        ServeState {
+            per_shard: vec![AsyncShardReport::default(); n],
+            reported: vec![false; n],
+            finished: vec![false; n],
+            finished_count: 0,
+            shard_errors: vec![None; n],
+            last_heard: vec![Instant::now(); n],
+            parked: Vec::new(),
+            rejoins_used: vec![0; n],
+            heartbeats: 0,
+            ignored: 0,
+            reseed,
+            ckpt_tx,
+            last_ckpt_version,
+        }
+    }
 }
 
 impl<B: DeviceBackend + Send + 'static> AsyncShardTrainer<B> {
@@ -105,156 +210,477 @@ impl<B: DeviceBackend + Send + 'static> AsyncShardTrainer<B> {
 
     /// Run the full async training job: spawn one worker thread per
     /// shard, serve pushes on the calling thread until every shard is
-    /// done, and return the server's view of the run.
+    /// done (or written off), and return the server's view of the run.
+    ///
+    /// When `cfg.chaos` holds a [`crate::config::FaultPlan`], the whole
+    /// exchange runs through the fault-injecting [`ChaosTransport`]; a
+    /// zero plan is delivery-identical to the plain channel transport.
     pub fn run(&self) -> Result<AsyncRunReport> {
+        match &self.cfg.chaos {
+            Some(plan) => self.run_with(
+                ChaosTransport::new(ChannelTransport, plan.clone())),
+            None => self.run_with(ChannelTransport),
+        }
+    }
+
+    /// [`Self::run`] over an explicit transport.
+    fn run_with<T: Transport>(&self, mut transport: T)
+                              -> Result<AsyncRunReport> {
         let n = self.cfg.shards;
         let t0 = Instant::now();
-        let (mut server, shard_ends) = ChannelTransport.connect(n)?;
 
+        // Crash recovery: restore params/version/rng before anything
+        // spawns, so workers and server agree on the starting point.
+        let resume = match &self.cfg.resume {
+            Some(dir) => {
+                let ck = Checkpoint::load(Path::new(dir), CKPT_NAME)
+                    .with_context(|| format!("resuming from {dir}"))?;
+                anyhow::ensure!(
+                    ck.tag == self.artifact.manifest.tag,
+                    "resume checkpoint is for '{}', not '{}'",
+                    ck.tag, self.artifact.manifest.tag);
+                Some(ck)
+            }
+            None => None,
+        };
+        let mut reseed = match resume.as_ref().and_then(|ck| ck.rng.as_ref()) {
+            Some(words) => Pcg64::from_words(words),
+            None => Pcg64::with_stream(self.cfg.seed, RESEED_STREAM),
+        };
+        // Fresh runs seed workers exactly as they always did (the
+        // bit-identity pin); resumed runs draw a fresh base so the
+        // restarted shards explore instead of replaying the crashed
+        // trajectories against already-trained params.
+        let (seed_base, start_version, resume_params, resumed_from) =
+            match &resume {
+                Some(ck) => (reseed.next_u64() & RESUME_SEED_MASK,
+                             ck.version, Some(ck.params.clone()),
+                             Some(ck.version)),
+                None => (self.cfg.seed, 0, None, None),
+            };
+
+        // Checkpoint writer thread: `save` (fsync + rename) runs here,
+        // never on the apply path.
+        let (ckpt_tx, ckpt_writer) = if self.cfg.checkpoint_every > 0 {
+            let dir = PathBuf::from(
+                self.cfg.checkpoint_dir.as_deref().context(
+                    "checkpoint_every is set but checkpoint_dir is not")?);
+            let (tx, rx) = mpsc::channel::<Checkpoint>();
+            let handle = thread::Builder::new()
+                .name("warpsci-ckpt".into())
+                .spawn(move || -> Result<u64> {
+                    let mut written = 0u64;
+                    for ck in rx {
+                        ck.save(&dir, CKPT_NAME)?;
+                        written += 1;
+                    }
+                    Ok(written)
+                })
+                .context("spawning checkpoint writer")?;
+            (Some(tx), Some(handle))
+        } else {
+            (None, None)
+        };
+
+        let (mut server, shard_ends) = transport.connect(n)?;
         let mut workers = Vec::with_capacity(n);
         for (shard, ep) in shard_ends.into_iter().enumerate() {
             let device = self.device.clone();
             let artifact = self.artifact.clone();
             let cfg = self.cfg.clone();
+            let restore = resume_params.clone();
             let handle = thread::Builder::new()
                 .name(format!("warpsci-shard-{shard}"))
-                .spawn(move || shard_worker(shard, device, artifact, cfg, ep))
+                .spawn(move || {
+                    shard_worker(shard, device, artifact, cfg, seed_base,
+                                 start_version, restore, ep)
+                })
                 .context("spawning shard worker")?;
             workers.push(handle);
         }
 
-        let serve_result = self.serve(&mut server, n);
-        if serve_result.is_err() {
-            // wake any worker still blocked on an ack so joins finish
-            server.stop_all();
-        }
-        let mut worker_err = None;
+        let ps = match resume {
+            Some(ck) => ParamServer::with_resume(
+                n, self.cfg.max_staleness as u64, ck.params, ck.version)?,
+            None => ParamServer::new(n, self.cfg.max_staleness as u64)?,
+        };
+        let mut st = ServeState::new(n, reseed, ckpt_tx, start_version);
+        let serve_result = self.serve(&mut server, ps, &mut st);
+
+        // Whatever happened, release every blocked party: workers
+        // waiting on an ack get a Stop, dropping our endpoint unblocks
+        // the rest, and closing the channel retires the writer.
+        server.stop_all(n);
+        drop(server);
+        st.ckpt_tx = None;
+
+        let mut join_errs: Vec<Option<String>> = Vec::with_capacity(n);
         for handle in workers {
-            match handle.join() {
-                Ok(Ok(())) => {}
-                Ok(Err(e)) => {
-                    worker_err.get_or_insert(e);
-                }
-                Err(_) => {
-                    worker_err.get_or_insert_with(|| {
-                        anyhow::anyhow!("shard worker panicked")
-                    });
+            join_errs.push(match handle.join() {
+                Ok(Ok(())) => None,
+                Ok(Err(e)) => Some(format!("{e:#}")),
+                Err(_) => Some("worker thread panicked".into()),
+            });
+        }
+        let writer_result = match ckpt_writer {
+            Some(h) => h
+                .join()
+                .map_err(|_| anyhow::anyhow!("checkpoint writer panicked"))
+                .and_then(|r| r.context("writing checkpoints")),
+            None => Ok(0),
+        };
+
+        let ps = match serve_result {
+            Ok(ps) => ps,
+            Err(e) => {
+                // Surface the first worker root cause alongside the
+                // serve-side symptom.
+                let detail = join_errs
+                    .iter()
+                    .enumerate()
+                    .find_map(|(s, m)| m.as_ref().map(|m| (s, m.clone())));
+                return Err(match detail {
+                    Some((s, m)) => {
+                        e.context(format!("shard {s} reported: {m}"))
+                    }
+                    None => e,
+                });
+            }
+        };
+        let checkpoints_written = writer_result?;
+
+        // Fold worker join errors into the fault record: a lost shard's
+        // local error is telemetry, any other worker error is a bug.
+        for (s, err) in join_errs.into_iter().enumerate() {
+            if let Some(msg) = err {
+                if ps.is_failed(s) {
+                    st.shard_errors[s].get_or_insert(msg);
+                } else {
+                    bail!("shard {s} worker failed after serving \
+                           completed: {msg}");
                 }
             }
         }
-        let (ps, per_shard) = serve_result?;
-        if let Some(e) = worker_err {
-            return Err(e.context("shard worker failed"));
-        }
 
         let wall = t0.elapsed().as_secs_f64();
-        let snapshot = ps.snapshot()?;
-        let env_steps: f64 = per_shard.iter().map(|s| s.env_steps).sum();
-        let mean_return = per_shard
-            .iter()
-            .map(|s| s.ep_return_ema as f64)
-            .sum::<f64>() / n as f64;
+        let snapshot = ps.snapshot().context(
+            "no parameters to report: every shard died before the fleet \
+             finished registering")?;
+        let env_steps: f64 = st.per_shard.iter().map(|s| s.env_steps).sum();
+        let reported_n = st.reported.iter().filter(|&&r| r).count();
+        let mean_return = if reported_n > 0 {
+            st.per_shard
+                .iter()
+                .zip(&st.reported)
+                .filter(|(_, &r)| r)
+                .map(|(s, _)| s.ep_return_ema as f64)
+                .sum::<f64>() / reported_n as f64
+        } else {
+            f64::NAN
+        };
         Ok(AsyncRunReport {
             final_params: snapshot.params,
             version: snapshot.version,
             applied: ps.applied(),
             rejected: ps.rejected(),
-            per_shard,
+            per_shard: st.per_shard,
             wall_secs: wall,
             env_steps,
             steps_per_sec: env_steps / wall.max(1e-9),
             mean_return,
+            failed_shards: ps.failed_shards(),
+            shard_errors: st
+                .shard_errors
+                .iter()
+                .enumerate()
+                .filter_map(|(s, e)| e.clone().map(|m| (s, m)))
+                .collect(),
+            rejoins: ps.rejoin_count(),
+            heartbeats: st.heartbeats,
+            ignored: st.ignored,
+            checkpoints_written,
+            resumed_from,
         })
     }
 
     /// The server event loop: feed frames to the [`ParamServer`] core
     /// and forward its outcomes as acks until every shard reported
-    /// `Done`.
-    fn serve<E: ServerEndpoint>(&self, server: &mut E, n: usize)
-                                -> Result<(ParamServer, Vec<AsyncShardReport>)> {
-        let mut ps = ParamServer::new(n, self.cfg.max_staleness as u64)?;
-        let mut per_shard = vec![AsyncShardReport::default(); n];
-        // pushes racing ahead of a slower shard's Hello (compile time
-        // differs per thread) are parked until the fleet is registered
-        let mut parked: Vec<GradMsg> = Vec::new();
-        let mut done = 0usize;
-        while done < n {
-            match server.recv()? {
-                ToServer::Hello { shard, params } => {
-                    if ps.register(shard, params)? {
-                        for g in std::mem::take(&mut parked) {
-                            self.apply_push(server, &mut ps, g)?;
+    /// `Done` or was written off.  Deadline-driven — no call here
+    /// blocks longer than one heartbeat tick.
+    fn serve<E: ServerEndpoint>(&self, server: &mut E, mut ps: ParamServer,
+                                st: &mut ServeState) -> Result<ParamServer> {
+        let n = ps.n_shards();
+        let tick = Duration::from_millis(self.cfg.fault.heartbeat_ms.max(1));
+        let dead_after = tick * self.cfg.fault.missed_heartbeats.max(1);
+        while st.finished_count < n {
+            let frame = match server.recv_timeout(tick) {
+                Ok(f) => f,
+                Err(e) => {
+                    // Every worker endpoint hung up without a Done:
+                    // write the stragglers off (fatal unless tolerant).
+                    let msg = format!("transport closed: {e:#}");
+                    for s in 0..n {
+                        if !st.finished[s] {
+                            self.fail_shard(server, &mut ps, st, s, &msg)?;
                         }
                     }
+                    continue;
                 }
-                ToServer::Push(g) => {
-                    if ps.is_ready() {
-                        self.apply_push(server, &mut ps, g)?;
-                    } else {
-                        parked.push(g);
-                    }
-                }
-                ToServer::Done { shard, iters, env_steps, ep_return_ema } => {
-                    anyhow::ensure!(shard < n, "Done from bad shard {shard}");
-                    per_shard[shard] = AsyncShardReport {
-                        iters,
-                        env_steps,
-                        ep_return_ema,
-                    };
-                    done += 1;
-                    if let Some((snapshot, shards)) = ps.mark_done(shard)? {
-                        self.ack_round(server, snapshot, &shards)?;
-                    }
-                }
-                ToServer::Fatal { shard, error } => {
-                    anyhow::bail!("shard {shard} failed: {error}");
+            };
+            if let Some(frame) = frame {
+                self.handle(server, &mut ps, st, frame)?;
+            }
+            let now = Instant::now();
+            for s in 0..n {
+                if !st.finished[s]
+                    && now.duration_since(st.last_heard[s]) > dead_after {
+                    let msg = format!(
+                        "no heartbeat for {:.1}s ({} ticks of {}ms missed)",
+                        now.duration_since(st.last_heard[s]).as_secs_f64(),
+                        self.cfg.fault.missed_heartbeats,
+                        self.cfg.fault.heartbeat_ms);
+                    self.fail_shard(server, &mut ps, st, s, &msg)?;
                 }
             }
         }
-        Ok((ps, per_shard))
+        // Final checkpoint at end of serving, version boundary or not.
+        if ps.is_ready() {
+            self.maybe_checkpoint(&ps, st, true)?;
+        }
+        Ok(ps)
+    }
+
+    fn handle<E: ServerEndpoint>(&self, server: &mut E,
+                                 ps: &mut ParamServer, st: &mut ServeState,
+                                 frame: ToServer) -> Result<()> {
+        let n = ps.n_shards();
+        match frame {
+            ToServer::Hello { shard, params } => {
+                anyhow::ensure!(shard < n, "Hello from bad shard {shard}");
+                st.last_heard[shard] = Instant::now();
+                if ps.is_failed(shard) {
+                    // Written off before its Hello arrived; it must
+                    // re-enter through the Rejoin handshake.
+                    return Ok(());
+                }
+                if ps.register(shard, params)? {
+                    self.drain_parked(server, ps, st)?;
+                }
+            }
+            ToServer::Push(g) => {
+                anyhow::ensure!(g.shard < n, "Push from bad shard {}",
+                                g.shard);
+                st.last_heard[g.shard] = Instant::now();
+                if ps.is_ready() {
+                    self.apply_push(server, ps, st, g)?;
+                } else if !st.parked.iter()
+                    .any(|p| p.shard == g.shard && p.seq == g.seq) {
+                    st.parked.push(g);
+                }
+            }
+            ToServer::Done { shard, iters, env_steps, ep_return_ema } => {
+                anyhow::ensure!(shard < n, "Done from bad shard {shard}");
+                st.last_heard[shard] = Instant::now();
+                if st.finished[shard] {
+                    return Ok(()); // duplicate, or already written off
+                }
+                st.per_shard[shard] = AsyncShardReport {
+                    iters,
+                    env_steps,
+                    ep_return_ema,
+                };
+                st.reported[shard] = true;
+                st.finished[shard] = true;
+                st.finished_count += 1;
+                if let Some((snapshot, shards)) = ps.mark_done(shard)? {
+                    self.ack_round(server, ps, st, snapshot, &shards)?;
+                }
+            }
+            ToServer::Fatal { shard, error } => {
+                anyhow::ensure!(shard < n, "Fatal from bad shard {shard}");
+                self.fail_shard(server, ps, st, shard, &error)?;
+            }
+            ToServer::Heartbeat { shard, .. } => {
+                anyhow::ensure!(shard < n,
+                                "Heartbeat from bad shard {shard}");
+                st.last_heard[shard] = Instant::now();
+                st.heartbeats += 1;
+            }
+            ToServer::Rejoin { shard } => {
+                anyhow::ensure!(shard < n, "Rejoin from bad shard {shard}");
+                st.last_heard[shard] = Instant::now();
+                self.handle_rejoin(server, ps, st, shard)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Answer a [`ToServer::Rejoin`] probe (see the frame's docs for
+    /// the four cases).
+    fn handle_rejoin<E: ServerEndpoint>(&self, server: &mut E,
+                                        ps: &mut ParamServer,
+                                        st: &mut ServeState, shard: usize)
+                                        -> Result<()> {
+        if ps.is_failed(shard) {
+            if st.rejoins_used[shard] >= self.cfg.fault.max_rejoins {
+                // Budget exhausted: tell the worker to exit cleanly
+                // instead of letting it probe until its own deadline.
+                let _ = server.send(shard, ToShard::Stop);
+                return Ok(());
+            }
+            if let Some(snapshot) = ps.rejoin(shard)? {
+                st.rejoins_used[shard] += 1;
+                if st.finished[shard] {
+                    st.finished[shard] = false;
+                    st.finished_count -= 1;
+                }
+                st.shard_errors[shard] = None;
+                eprintln!("[async] shard {shard} rejoined at v{} \
+                           (rejoin {} of {})",
+                          snapshot.version, st.rejoins_used[shard],
+                          self.cfg.fault.max_rejoins);
+                self.send_ack(server, ps, st, shard, false, 0.0, snapshot)?;
+            }
+            return Ok(());
+        }
+        // A live worker probing an unanswered push.  If it is parked at
+        // the BSP round barrier the silence *is* the lockstep — say
+        // nothing; otherwise echo the last seq we processed so it can
+        // resend (seq behind) or move on (seq caught up).
+        if ps.is_ready() && !ps.round_slot_filled(shard)
+            && !st.finished[shard] {
+            let snapshot = ps.snapshot()?;
+            self.send_ack(server, ps, st, shard, false, 0.0, snapshot)?;
+        }
+        Ok(())
     }
 
     fn apply_push<E: ServerEndpoint>(&self, server: &mut E,
-                                     ps: &mut ParamServer, g: GradMsg)
+                                     ps: &mut ParamServer,
+                                     st: &mut ServeState, g: GradMsg)
                                      -> Result<()> {
         let shard = g.shard;
         match ps.push(g)? {
             PushOutcome::Applied { staleness_rounds, snapshot } => {
                 self.progress(&snapshot, shard, staleness_rounds, true);
-                server.send(shard, ToShard::Ack {
-                    accepted: true,
-                    staleness_rounds,
-                    snapshot,
-                })
+                self.send_ack(server, ps, st, shard, true,
+                              staleness_rounds, snapshot)?;
+                self.maybe_checkpoint(ps, st, false)?;
             }
             PushOutcome::Rejected { staleness_rounds, snapshot } => {
                 self.progress(&snapshot, shard, staleness_rounds, false);
-                server.send(shard, ToShard::Ack {
-                    accepted: false,
-                    staleness_rounds,
-                    snapshot,
-                })
+                self.send_ack(server, ps, st, shard, false,
+                              staleness_rounds, snapshot)?;
             }
-            PushOutcome::Deferred => Ok(()),
+            PushOutcome::Deferred => {}
             PushOutcome::RoundComplete { snapshot, shards } => {
-                self.ack_round(server, snapshot, &shards)
+                self.ack_round(server, ps, st, snapshot, &shards)?;
+                self.maybe_checkpoint(ps, st, false)?;
             }
+            PushOutcome::Ignored => st.ignored += 1,
         }
+        Ok(())
     }
 
     fn ack_round<E: ServerEndpoint>(&self, server: &mut E,
-                                    snapshot: ParamMsg, shards: &[usize])
-                                    -> Result<()> {
-        if let Some(shard) = shards.first() {
-            self.progress(&snapshot, *shard, 0.0, true);
+                                    ps: &mut ParamServer,
+                                    st: &mut ServeState, snapshot: ParamMsg,
+                                    shards: &[usize]) -> Result<()> {
+        if let Some(&shard) = shards.first() {
+            self.progress(&snapshot, shard, 0.0, true);
         }
         for &shard in shards {
-            server.send(shard, ToShard::Ack {
-                accepted: true,
-                staleness_rounds: 0.0,
-                snapshot: snapshot.clone(),
-            })?;
+            self.send_ack(server, ps, st, shard, true, 0.0,
+                          snapshot.clone())?;
         }
+        Ok(())
+    }
+
+    /// Send an ack (echoing the shard's last processed seq); a shard
+    /// whose endpoint is gone is written off instead of failing the
+    /// send, so an ack is never the thing that kills the server.
+    fn send_ack<E: ServerEndpoint>(&self, server: &mut E,
+                                   ps: &mut ParamServer,
+                                   st: &mut ServeState, shard: usize,
+                                   accepted: bool, staleness_rounds: f64,
+                                   snapshot: ParamMsg) -> Result<()> {
+        let ack = ToShard::Ack {
+            seq: ps.last_seq(shard),
+            accepted,
+            staleness_rounds,
+            snapshot,
+        };
+        if let Err(e) = server.send(shard, ack) {
+            self.fail_shard(server, ps, st, shard,
+                            &format!("ack undeliverable: {e:#}"))?;
+        }
+        Ok(())
+    }
+
+    /// Write one shard off.  Fatal unless `fault.tolerate`; otherwise
+    /// the shard leaves the barrier (possibly closing a BSP round over
+    /// the survivors) and — if it died before registering — the
+    /// survivors get to finish the bootstrap.
+    fn fail_shard<E: ServerEndpoint>(&self, server: &mut E,
+                                     ps: &mut ParamServer,
+                                     st: &mut ServeState, shard: usize,
+                                     reason: &str) -> Result<()> {
+        if st.finished[shard] {
+            return Ok(());
+        }
+        if !self.cfg.fault.tolerate {
+            bail!("shard {shard} failed: {reason}");
+        }
+        eprintln!("[async] shard {shard} lost ({reason}); \
+                   continuing over survivors");
+        st.shard_errors[shard].get_or_insert_with(|| reason.to_string());
+        st.finished[shard] = true;
+        st.finished_count += 1;
+        let was_ready = ps.is_ready();
+        if let Some((snapshot, shards)) = ps.mark_failed(shard)? {
+            self.ack_round(server, ps, st, snapshot, &shards)?;
+        }
+        if !was_ready && ps.is_ready() {
+            // The death completed registration over the survivors.
+            self.drain_parked(server, ps, st)?;
+        }
+        Ok(())
+    }
+
+    fn drain_parked<E: ServerEndpoint>(&self, server: &mut E,
+                                       ps: &mut ParamServer,
+                                       st: &mut ServeState) -> Result<()> {
+        for g in std::mem::take(&mut st.parked) {
+            self.apply_push(server, ps, st, g)?;
+        }
+        Ok(())
+    }
+
+    /// Hand a checkpoint to the writer thread when the version crossed
+    /// a `checkpoint_every` boundary since the last save (or at the end
+    /// of serving, with `force`).  This only clones and enqueues — the
+    /// fsync/rename runs on the writer thread.
+    fn maybe_checkpoint(&self, ps: &ParamServer, st: &mut ServeState,
+                        force: bool) -> Result<()> {
+        let every = self.cfg.checkpoint_every as u64;
+        let tx = match &st.ckpt_tx {
+            Some(tx) if every > 0 => tx,
+            _ => return Ok(()),
+        };
+        let v = ps.version();
+        let crossed = v / every > st.last_ckpt_version / every;
+        if !(crossed || (force && v > st.last_ckpt_version)) {
+            return Ok(());
+        }
+        tx.send(Checkpoint {
+            tag: self.artifact.manifest.tag.clone(),
+            iter: ps.applied(),
+            version: v,
+            rng: Some(st.reseed.to_words()),
+            params: ps.params().to_vec(),
+        })
+        .context("checkpoint writer hung up")?;
+        st.last_ckpt_version = v;
         Ok(())
     }
 
@@ -273,31 +699,65 @@ impl<B: DeviceBackend + Send + 'static> AsyncShardTrainer<B> {
     }
 }
 
-/// One shard's whole life, on its own thread: compile, init, train in
-/// windows, exchange params, report `Done`.  Wrapped so any failure is
-/// reported to the server as a `Fatal` frame — the server must never
-/// hang on a dead worker.
-fn shard_worker<B: DeviceBackend>(shard: usize, device: B, artifact: Artifact,
-                                  cfg: RunConfig, mut ep: impl ShardEndpoint)
-                                  -> Result<()> {
-    let result = shard_worker_inner(shard, &device, artifact, &cfg, &mut ep);
+/// One shard's whole life, on its own thread: compile, init (or
+/// restore), train in windows, exchange params, report `Done`.  Wrapped
+/// so any failure is reported to the server as a `Fatal` frame — and
+/// when even that frame cannot be delivered, the root cause goes to
+/// stderr instead of being silently swallowed (the join result carries
+/// it too).
+fn shard_worker<B: DeviceBackend>(
+    shard: usize, device: B, artifact: Artifact, cfg: RunConfig,
+    seed_base: u64, start_version: u64, restore: Option<Vec<f32>>,
+    mut ep: impl ShardEndpoint,
+) -> Result<()> {
+    let result = shard_worker_inner(shard, &device, artifact, &cfg,
+                                    seed_base, start_version,
+                                    restore.as_deref(), &mut ep);
     if let Err(e) = &result {
-        let _ = ep.send(ToServer::Fatal {
+        if let Err(send_err) = ep.send(ToServer::Fatal {
             shard,
             error: format!("{e:#}"),
-        });
+        }) {
+            eprintln!("[async] shard {shard} died unreported \
+                       ({send_err:#}); root cause: {e:#}");
+        }
     }
     result
 }
 
-fn shard_worker_inner<B: DeviceBackend>(shard: usize, device: &B,
-                                        artifact: Artifact, cfg: &RunConfig,
-                                        ep: &mut impl ShardEndpoint)
-                                        -> Result<()> {
+/// Send a heartbeat if at least half a heartbeat interval has passed
+/// (workers beat at 2× the server's tick so one lost/late beacon never
+/// trips the deadline).
+fn beat(ep: &mut impl ShardEndpoint, shard: usize, version: u64,
+        last: &mut Instant, hb: Duration) -> Result<()> {
+    if last.elapsed() >= hb / 2 {
+        ep.send(ToServer::Heartbeat { shard, version })?;
+        *last = Instant::now();
+    }
+    Ok(())
+}
+
+fn shard_worker_inner<B: DeviceBackend>(
+    shard: usize, device: &B, artifact: Artifact, cfg: &RunConfig,
+    seed_base: u64, start_version: u64, restore: Option<&[f32]>,
+    ep: &mut impl ShardEndpoint,
+) -> Result<()> {
+    let hb = Duration::from_millis(cfg.fault.heartbeat_ms.max(1));
+    // How long to wait on one ack before probing with Rejoin: exactly
+    // the server's death deadline, so a worker the server wrote off
+    // probes right as it becomes eligible to rejoin.
+    let patience = hb * cfg.fault.missed_heartbeats.max(1);
+    let give_up = patience * (cfg.fault.max_rejoins + 2);
+
     let graphs = GraphSet::compile(device, artifact)?;
     let man = &graphs.artifact.manifest;
     let ret_idx = man.metric_index("ep_return_ema")?;
-    let mut state = graphs.init_state(cfg.seed + shard as u64)?;
+    let mut state = graphs.init_state(seed_base + shard as u64)?;
+    if let Some(params) = restore {
+        // Crash recovery: env state is fresh, params come from the
+        // checkpoint (the same vector the resumed server holds).
+        state = graphs.upload_params(&state, params)?;
+    }
     ep.send(ToServer::Hello {
         shard,
         params: graphs.download_params(&state)?,
@@ -305,35 +765,82 @@ fn shard_worker_inner<B: DeviceBackend>(shard: usize, device: &B,
 
     let windows = cfg.iters / cfg.sync_every;
     let trailing = cfg.iters % cfg.sync_every;
-    let mut base_version = 0u64;
+    let mut base_version = start_version;
+    let mut seq = 0u64;
     let mut iters_done = 0u64;
     let mut ep_return_ema = f32::NAN;
+    let mut last_beat = Instant::now();
     for _ in 0..windows {
         for _ in 0..cfg.sync_every {
             state = graphs.train_iter(&state)?;
+            beat(ep, shard, base_version, &mut last_beat, hb)?;
         }
         iters_done += cfg.sync_every as u64;
         ep_return_ema = graphs.metrics(&state)?[ret_idx];
+        seq += 1;
+        let env_steps = iters_done as f64 * man.steps_per_iter as f64;
         ep.send(ToServer::Push(GradMsg {
             shard,
+            seq,
             base_version,
             iters: cfg.sync_every as u64,
             params: graphs.download_params(&state)?,
             ep_return_ema,
-            env_steps: iters_done as f64 * man.steps_per_iter as f64,
+            env_steps,
         }))?;
-        match ep.recv()? {
-            ToShard::Ack { snapshot, .. } => {
-                // continue from the server's params whether or not our
-                // push was applied — a rejected shard re-bases
-                base_version = snapshot.version;
-                state = graphs.upload_params(&state, &snapshot.params)?;
+
+        // Await the ack for `seq`, heartbeating while we wait.  Under
+        // BSP the wait is the round barrier; under faults the probe /
+        // resend dance recovers lost frames (the server dedupes).
+        let waited = Instant::now();
+        let mut last_probe = Instant::now();
+        let snapshot = loop {
+            match ep.recv_timeout(hb)? {
+                Some(ToShard::Ack { seq: acked, snapshot, .. }) => {
+                    if acked == seq {
+                        break snapshot;
+                    }
+                    anyhow::ensure!(acked < seq,
+                        "shard {shard}: ack for future push {acked} \
+                         while awaiting {seq}");
+                    // The server echoed an older seq: our push was
+                    // lost.  Resend it — the state is unchanged while
+                    // we wait, so the re-download is bit-identical.
+                    ep.send(ToServer::Push(GradMsg {
+                        shard,
+                        seq,
+                        base_version,
+                        iters: cfg.sync_every as u64,
+                        params: graphs.download_params(&state)?,
+                        ep_return_ema,
+                        env_steps,
+                    }))?;
+                }
+                Some(ToShard::Stop) => return Ok(()),
+                None => {
+                    anyhow::ensure!(waited.elapsed() < give_up,
+                        "shard {shard}: push {seq} unacknowledged for \
+                         {:.1}s", waited.elapsed().as_secs_f64());
+                    ep.send(ToServer::Heartbeat {
+                        shard,
+                        version: base_version,
+                    })?;
+                    if last_probe.elapsed() >= patience {
+                        ep.send(ToServer::Rejoin { shard })?;
+                        last_probe = Instant::now();
+                    }
+                }
             }
-            ToShard::Stop => return Ok(()),
-        }
+        };
+        // Continue from the server's params whether or not our push
+        // was applied — a rejected (or rejoined) shard re-bases.
+        base_version = snapshot.version;
+        state = graphs.upload_params(&state, &snapshot.params)?;
+        last_beat = Instant::now();
     }
     for _ in 0..trailing {
         state = graphs.train_iter(&state)?;
+        beat(ep, shard, base_version, &mut last_beat, hb)?;
     }
     iters_done += trailing as u64;
     if trailing > 0 || windows == 0 {

@@ -1,0 +1,486 @@
+//! Seeded fault injection for any [`Transport`]: the chaos layer the
+//! soak tests drive to prove the trainer survives a hostile wire.
+//!
+//! [`ChaosTransport`] decorates an inner transport and perturbs frames
+//! on the *send* side of each directed edge (shard→server and
+//! server→shard are independent edges with independent fault streams).
+//! Supported faults, all drawn per-frame from a
+//! [`FaultPlan`](crate::config::FaultPlan):
+//!
+//! * **drop** — the frame silently never arrives;
+//! * **delay** — the sender sleeps `delay_ms` before the frame goes out;
+//! * **dup** — the frame is delivered twice (exercises the `seq`-based
+//!   dedup on pushes and acks);
+//! * **reorder** — the frame is held back and delivered *after* the next
+//!   eligible frame on the same edge (adjacent swap);
+//! * **kill** — from the shard's `K`-th push attempt onward, every send
+//!   *and* receive on that shard's endpoint errors: the push never
+//!   arrives and neither does anything after it, including the `Fatal`
+//!   frame.  This is the silent-death case the heartbeat deadline
+//!   exists for.
+//!
+//! Determinism: each directed edge owns a private
+//! [`Pcg64`](crate::util::Pcg64) stream (`2·shard + 1` for
+//! shard→server, `2·shard + 2` for server→shard, seeded from
+//! `plan.seed`), and draws exactly four decisions per eligible frame.
+//! A chaos run's fault pattern therefore depends only on each edge's
+//! frame sequence — never on cross-thread interleaving — so a given
+//! `(plan, workload)` pair replays bit-identically.
+//!
+//! Exemptions keep the protocol's bootstrap and shutdown reliable:
+//! [`ToServer::Hello`] and [`ToShard::Stop`] pass through unfaulted
+//! (and draw nothing from the stream).  Everything else — pushes, acks,
+//! heartbeats, `Done`, even `Fatal` — is fair game; a dropped `Fatal`
+//! simply downgrades the fast death-detection path to the guaranteed
+//! heartbeat-timeout one.
+//!
+//! With an all-zero plan ([`FaultPlan::is_zero`]) every frame passes
+//! through untouched and undelayed, so the decorated run is
+//! **bit-identical** to the undecorated one — pinned by
+//! `tests/async_trainer.rs`.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::config::FaultPlan;
+use crate::util::Pcg64;
+
+use super::transport::{ServerEndpoint, ShardEndpoint, ToServer, ToShard,
+                       Transport};
+
+/// Fault-injecting decorator over any [`Transport`] (see module docs).
+#[derive(Debug, Clone)]
+pub struct ChaosTransport<T> {
+    inner: T,
+    plan: FaultPlan,
+}
+
+impl<T> ChaosTransport<T> {
+    pub fn new(inner: T, plan: FaultPlan) -> Self {
+        ChaosTransport { inner, plan }
+    }
+}
+
+/// Per-directed-edge fault state: one decision stream plus at most one
+/// held-back (reordered) frame.
+struct Edge<M> {
+    rng: Pcg64,
+    drop: f64,
+    delay: f64,
+    delay_ms: u64,
+    dup: f64,
+    reorder: f64,
+    held: Option<M>,
+}
+
+impl<M: Clone> Edge<M> {
+    /// Uniform in [0, 1) with 53-bit resolution.
+    fn draw(&mut self) -> f64 {
+        (self.rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Apply the per-frame fault decisions to `msg`, delivering through
+    /// `send`.  Exactly four stream draws per call, regardless of which
+    /// faults fire, so the decision sequence stays aligned with the
+    /// edge's frame count.
+    fn faulty_send(
+        &mut self,
+        msg: M,
+        send: &mut dyn FnMut(M) -> Result<()>,
+    ) -> Result<()> {
+        let drop = self.draw() < self.drop;
+        let delay = self.draw() < self.delay;
+        let dup = self.draw() < self.dup;
+        let reorder = self.draw() < self.reorder;
+        if drop {
+            return Ok(());
+        }
+        if delay {
+            std::thread::sleep(Duration::from_millis(self.delay_ms));
+        }
+        if reorder && self.held.is_none() {
+            self.held = Some(msg);
+            return Ok(());
+        }
+        let copy = if dup { Some(msg.clone()) } else { None };
+        send(msg)?;
+        if let Some(h) = self.held.take() {
+            send(h)?;
+        }
+        if let Some(c) = copy {
+            send(c)?;
+        }
+        Ok(())
+    }
+
+    /// Deliver a fault-exempt frame: any held frame goes out first (the
+    /// reorder hold must not outlive the edge), then the frame itself,
+    /// untouched.
+    fn exempt_send(
+        &mut self,
+        msg: M,
+        send: &mut dyn FnMut(M) -> Result<()>,
+    ) -> Result<()> {
+        if let Some(h) = self.held.take() {
+            send(h)?;
+        }
+        send(msg)
+    }
+
+    /// Best-effort flush of a held frame (endpoint teardown).
+    fn flush(&mut self, send: &mut dyn FnMut(M) -> Result<()>) {
+        if let Some(h) = self.held.take() {
+            let _ = send(h);
+        }
+    }
+}
+
+fn to_server_edge(plan: &FaultPlan, shard: usize) -> Edge<ToServer> {
+    Edge {
+        rng: Pcg64::with_stream(plan.seed, 2 * shard as u64 + 1),
+        drop: plan.drop_to_server,
+        delay: plan.delay_to_server,
+        delay_ms: plan.delay_ms,
+        dup: plan.dup_to_server,
+        reorder: plan.reorder_to_server,
+        held: None,
+    }
+}
+
+fn to_shard_edge(plan: &FaultPlan, shard: usize) -> Edge<ToShard> {
+    Edge {
+        rng: Pcg64::with_stream(plan.seed, 2 * shard as u64 + 2),
+        drop: plan.drop_to_shard,
+        delay: plan.delay_to_shard,
+        delay_ms: plan.delay_ms,
+        dup: plan.dup_to_shard,
+        reorder: plan.reorder_to_shard,
+        held: None,
+    }
+}
+
+/// Server half of [`ChaosTransport`]: faults the server→shard edges.
+pub struct ChaosServerEnd<E: ServerEndpoint> {
+    inner: E,
+    edges: Vec<Edge<ToShard>>,
+}
+
+/// One shard's half of [`ChaosTransport`]: faults its shard→server edge
+/// and simulates process death at the configured kill point.
+pub struct ChaosShardEnd<E: ShardEndpoint> {
+    inner: E,
+    shard: usize,
+    edge: Edge<ToServer>,
+    /// `Some(k)`: die at the `k`-th push attempt (1-based).
+    kill_at: Option<u64>,
+    pushes: u64,
+    dead: bool,
+}
+
+impl<T: Transport> Transport for ChaosTransport<T> {
+    type ServerEnd = ChaosServerEnd<T::ServerEnd>;
+    type ShardEnd = ChaosShardEnd<T::ShardEnd>;
+
+    fn connect(&mut self, n_shards: usize)
+               -> Result<(Self::ServerEnd, Vec<Self::ShardEnd>)> {
+        for &(shard, _) in &self.plan.kill {
+            anyhow::ensure!(
+                shard < n_shards,
+                "chaos kill point names shard {shard}, \
+                 but the run has only {n_shards} shards"
+            );
+        }
+        let (server, shards) = self.inner.connect(n_shards)?;
+        let edges =
+            (0..n_shards).map(|s| to_shard_edge(&self.plan, s)).collect();
+        let shard_ends = shards
+            .into_iter()
+            .enumerate()
+            .map(|(s, inner)| ChaosShardEnd {
+                inner,
+                shard: s,
+                edge: to_server_edge(&self.plan, s),
+                kill_at: self
+                    .plan
+                    .kill
+                    .iter()
+                    .filter(|&&(shard, _)| shard == s)
+                    .map(|&(_, k)| k)
+                    .min(),
+                pushes: 0,
+                dead: false,
+            })
+            .collect();
+        Ok((ChaosServerEnd { inner: server, edges }, shard_ends))
+    }
+}
+
+impl<E: ServerEndpoint> ServerEndpoint for ChaosServerEnd<E> {
+    fn recv(&mut self) -> Result<ToServer> {
+        self.inner.recv()
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<ToServer>> {
+        self.inner.recv_timeout(timeout)
+    }
+
+    fn send(&mut self, shard: usize, msg: ToShard) -> Result<()> {
+        let inner = &mut self.inner;
+        let mut deliver = |m: ToShard| inner.send(shard, m);
+        match self.edges.get_mut(shard) {
+            // Stop is the shutdown contract: never faulted.
+            Some(edge) if !matches!(msg, ToShard::Stop) => {
+                edge.faulty_send(msg, &mut deliver)
+            }
+            Some(edge) => edge.exempt_send(msg, &mut deliver),
+            None => deliver(msg),
+        }
+    }
+}
+
+impl<E: ServerEndpoint> Drop for ChaosServerEnd<E> {
+    fn drop(&mut self) {
+        for shard in 0..self.edges.len() {
+            let inner = &mut self.inner;
+            let mut deliver = |m: ToShard| inner.send(shard, m);
+            self.edges[shard].flush(&mut deliver);
+        }
+    }
+}
+
+impl<E: ShardEndpoint> ShardEndpoint for ChaosShardEnd<E> {
+    fn send(&mut self, msg: ToServer) -> Result<()> {
+        if let ToServer::Push(_) = &msg {
+            self.pushes += 1;
+            if let Some(k) = self.kill_at {
+                if self.pushes >= k {
+                    self.dead = true;
+                }
+            }
+        }
+        if self.dead {
+            anyhow::bail!(
+                "chaos kill: shard {} silenced at push {}",
+                self.shard,
+                self.pushes
+            );
+        }
+        let inner = &mut self.inner;
+        let mut deliver = |m: ToServer| inner.send(m);
+        // Hello is the registration contract: never faulted.
+        if matches!(msg, ToServer::Hello { .. }) {
+            self.edge.exempt_send(msg, &mut deliver)
+        } else {
+            self.edge.faulty_send(msg, &mut deliver)
+        }
+    }
+
+    fn recv(&mut self) -> Result<ToShard> {
+        if self.dead {
+            anyhow::bail!("chaos kill: shard {} is dead", self.shard);
+        }
+        self.inner.recv()
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<ToShard>> {
+        if self.dead {
+            anyhow::bail!("chaos kill: shard {} is dead", self.shard);
+        }
+        self.inner.recv_timeout(timeout)
+    }
+}
+
+impl<E: ShardEndpoint> Drop for ChaosShardEnd<E> {
+    fn drop(&mut self) {
+        // A live endpoint flushes its reorder hold on teardown so a
+        // held trailing frame (e.g. `Done`) is not lost; a killed one
+        // stays silent — nothing escapes a dead process.
+        if self.dead {
+            self.edge.held = None;
+            return;
+        }
+        let inner = &mut self.inner;
+        let mut deliver = |m: ToServer| inner.send(m);
+        self.edge.flush(&mut deliver);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::transport::{ChannelTransport, GradMsg, ParamMsg};
+
+    fn plan(spec: &str) -> FaultPlan {
+        FaultPlan::parse(spec).unwrap()
+    }
+
+    fn push(shard: usize, seq: u64) -> ToServer {
+        ToServer::Push(GradMsg {
+            shard,
+            seq,
+            base_version: 0,
+            iters: 1,
+            params: vec![seq as f32],
+            ep_return_ema: 0.0,
+            env_steps: 1.0,
+        })
+    }
+
+    fn seq_of(msg: &ToServer) -> u64 {
+        match msg {
+            ToServer::Push(g) => g.seq,
+            other => panic!("expected push, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn zero_plan_is_a_pure_pass_through() {
+        let mut t = ChaosTransport::new(ChannelTransport, plan("seed=9"));
+        let (mut server, mut shards) = t.connect(1).unwrap();
+        shards[0]
+            .send(ToServer::Hello { shard: 0, params: vec![1.0] })
+            .unwrap();
+        shards[0].send(push(0, 1)).unwrap();
+        match server.recv().unwrap() {
+            ToServer::Hello { shard, params } => {
+                assert_eq!((shard, params), (0, vec![1.0]));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(seq_of(&server.recv().unwrap()), 1);
+        server
+            .send(0, ToShard::Ack {
+                seq: 1,
+                accepted: true,
+                staleness_rounds: 0.0,
+                snapshot: ParamMsg { version: 1, params: vec![2.0] },
+            })
+            .unwrap();
+        match shards[0].recv().unwrap() {
+            ToShard::Ack { seq, snapshot, .. } => {
+                assert_eq!(seq, 1);
+                assert_eq!(snapshot.params, vec![2.0]);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn certain_drop_loses_pushes_but_never_hello_or_stop() {
+        let mut t =
+            ChaosTransport::new(ChannelTransport, plan("seed=1,drop=1.0"));
+        let (mut server, mut shards) = t.connect(1).unwrap();
+        shards[0]
+            .send(ToServer::Hello { shard: 0, params: vec![1.0] })
+            .unwrap();
+        shards[0].send(push(0, 1)).unwrap();
+        match server.recv_timeout(Duration::from_millis(50)).unwrap() {
+            Some(ToServer::Hello { .. }) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        // The push was dropped: nothing else arrives.
+        assert!(server
+            .recv_timeout(Duration::from_millis(20))
+            .unwrap()
+            .is_none());
+        // Stop still goes through even at drop=1.0 on both edges.
+        server.send(0, ToShard::Stop).unwrap();
+        match shards[0].recv_timeout(Duration::from_millis(50)).unwrap() {
+            Some(ToShard::Stop) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn certain_dup_delivers_twice() {
+        let mut t =
+            ChaosTransport::new(ChannelTransport, plan("seed=1,dup=1.0"));
+        let (mut server, mut shards) = t.connect(1).unwrap();
+        shards[0].send(push(0, 7)).unwrap();
+        assert_eq!(seq_of(&server.recv().unwrap()), 7);
+        assert_eq!(seq_of(&server.recv().unwrap()), 7);
+        assert!(server
+            .recv_timeout(Duration::from_millis(20))
+            .unwrap()
+            .is_none());
+    }
+
+    #[test]
+    fn certain_reorder_swaps_adjacent_frames_and_flushes_on_teardown() {
+        let mut t =
+            ChaosTransport::new(ChannelTransport, plan("seed=1,reorder=1.0"));
+        let (mut server, mut shards) = t.connect(1).unwrap();
+        shards[0].send(push(0, 1)).unwrap(); // held
+        shards[0].send(push(0, 2)).unwrap(); // sent, then flushes 1
+        assert_eq!(seq_of(&server.recv().unwrap()), 2);
+        assert_eq!(seq_of(&server.recv().unwrap()), 1);
+        // A trailing hold is flushed when the worker tears its end down.
+        shards[0].send(push(0, 3)).unwrap(); // held again
+        assert!(server
+            .recv_timeout(Duration::from_millis(20))
+            .unwrap()
+            .is_none());
+        drop(shards.pop().unwrap());
+        assert_eq!(seq_of(&server.recv().unwrap()), 3);
+    }
+
+    #[test]
+    fn kill_silences_the_shard_from_push_k_onward() {
+        let mut t =
+            ChaosTransport::new(ChannelTransport, plan("seed=1,kill=0@2"));
+        let (mut server, mut shards) = t.connect(1).unwrap();
+        shards[0]
+            .send(ToServer::Hello { shard: 0, params: vec![1.0] })
+            .unwrap();
+        shards[0].send(push(0, 1)).unwrap();
+        // Push 2 is the kill point: it errors and never arrives …
+        assert!(shards[0].send(push(0, 2)).is_err());
+        // … and so does everything after it, including Fatal and recvs.
+        assert!(shards[0]
+            .send(ToServer::Fatal { shard: 0, error: "x".into() })
+            .is_err());
+        assert!(shards[0].recv_timeout(Duration::from_millis(5)).is_err());
+        match server.recv().unwrap() {
+            ToServer::Hello { .. } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(seq_of(&server.recv().unwrap()), 1);
+        assert!(server
+            .recv_timeout(Duration::from_millis(20))
+            .unwrap()
+            .is_none());
+    }
+
+    #[test]
+    fn kill_point_outside_the_fleet_is_rejected() {
+        let mut t =
+            ChaosTransport::new(ChannelTransport, plan("seed=1,kill=3@1"));
+        assert!(t.connect(2).is_err());
+    }
+
+    #[test]
+    fn fault_pattern_replays_bit_identically_per_edge() {
+        let deliveries = |seed: u64| -> Vec<u64> {
+            let spec = format!("seed={seed},drop=0.4,dup=0.3");
+            let mut t = ChaosTransport::new(ChannelTransport, plan(&spec));
+            let (mut server, mut shards) = t.connect(1).unwrap();
+            for k in 1..=32 {
+                shards[0].send(push(0, k)).unwrap();
+            }
+            let mut got = Vec::new();
+            while let Some(m) =
+                server.recv_timeout(Duration::from_millis(10)).unwrap()
+            {
+                got.push(seq_of(&m));
+            }
+            got
+        };
+        let a = deliveries(1234);
+        let b = deliveries(1234);
+        let c = deliveries(1235);
+        assert_eq!(a, b, "same plan must replay identically");
+        assert_ne!(a, c, "different seeds must differ somewhere");
+        assert!(a.len() < 64 && !a.is_empty());
+    }
+}

@@ -31,6 +31,7 @@
 
 pub mod async_trainer;
 pub mod backend;
+pub mod chaos;
 pub mod convergence;
 pub mod cpu_engine;
 pub mod metrics;
@@ -40,6 +41,7 @@ pub mod trainer;
 pub mod transport;
 
 pub use async_trainer::{AsyncRunReport, AsyncShardReport, AsyncShardTrainer};
+pub use chaos::ChaosTransport;
 pub use backend::{measure_rollout_throughput, measure_train_throughput,
                   Backend, RunStats};
 pub use convergence::ConvergenceTracker;

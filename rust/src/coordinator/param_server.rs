@@ -36,6 +36,20 @@
 //! is exactly enough that the base snapshot of any *acceptable* push is
 //! still resident; a miss therefore indicates a protocol bug and is an
 //! error, not a silent fallback.
+//!
+//! ## Failure, rejoin, and resume
+//!
+//! The trainer can declare a shard **failed** ([`ParamServer::mark_failed`],
+//! driven by its heartbeat deadline or a `Fatal` frame): the shard
+//! leaves the round barrier (any buffered BSP push is discarded), the
+//! stale-synchronous shard weight re-normalizes over survivors
+//! (`1/(n_shards - failed)` — exactly `1/n_shards` while nothing has
+//! failed, so the zero-failure arithmetic is untouched), and its later
+//! frames are ignored rather than fatal.  A failed shard that turns out
+//! to be alive re-enters through [`ParamServer::rejoin`].  Pushes are
+//! deduplicated by [`GradMsg::seq`] (at-least-once delivery under the
+//! chaos transport), and [`ParamServer::with_resume`] rebuilds a ready
+//! server from checkpointed params + version for crash recovery.
 
 use std::collections::VecDeque;
 
@@ -114,6 +128,10 @@ pub enum PushOutcome {
     /// `max_staleness = 0` only: this push closed the round.  Ack every
     /// shard listed (the whole buffered cohort) with this snapshot.
     RoundComplete { snapshot: ParamMsg, shards: Vec<usize> },
+    /// Nothing to do: a duplicate delivery (`seq` already processed) or
+    /// a frame from a shard currently marked failed.  No ack — the
+    /// sender either already has one or will probe with `Rejoin`.
+    Ignored,
 }
 
 /// The authoritative parameter store (see module docs).
@@ -130,6 +148,14 @@ pub struct ParamServer {
     snapshots: VecDeque<ParamMsg>,
     applied: u64,
     rejected: u64,
+    /// Last processed [`GradMsg::seq`] per shard (duplicate fence).
+    last_seq: Vec<u64>,
+    /// Shards declared dead (disjoint from plain `Done` retirement).
+    failed: Vec<bool>,
+    /// Successful `rejoin` count per shard.
+    rejoins: Vec<u32>,
+    /// Built by [`ParamServer::with_resume`]: Hellos are liveness-only.
+    resumed: bool,
 }
 
 impl ParamServer {
@@ -147,7 +173,34 @@ impl ParamServer {
             snapshots: VecDeque::new(),
             applied: 0,
             rejected: 0,
+            last_seq: vec![0; n_shards],
+            failed: vec![false; n_shards],
+            rejoins: vec![0; n_shards],
+            resumed: false,
         })
+    }
+
+    /// Rebuild a *ready* server from checkpointed state (crash
+    /// recovery).  The authoritative params and version counter are
+    /// taken verbatim — no init merge happens, so the restored vector
+    /// is bitwise what the checkpoint held.  Worker Hellos on a resumed
+    /// server are accepted as liveness signals and otherwise ignored
+    /// (workers restore the same checkpoint themselves).
+    pub fn with_resume(
+        n_shards: usize,
+        max_staleness: u64,
+        params: Vec<f32>,
+        version: u64,
+    ) -> Result<ParamServer> {
+        anyhow::ensure!(!params.is_empty(),
+            "resume with empty parameter vector");
+        let mut ps = ParamServer::new(n_shards, max_staleness)?;
+        ps.params = params;
+        ps.version = version;
+        ps.publish();
+        ps.ready = true;
+        ps.resumed = true;
+        Ok(ps)
     }
 
     pub fn n_shards(&self) -> usize {
@@ -185,6 +238,14 @@ impl ParamServer {
     /// init, matching the sync trainer's no-initial-broadcast).
     pub fn register(&mut self, shard: usize, params: Vec<f32>) -> Result<bool> {
         anyhow::ensure!(shard < self.n_shards, "register: bad shard {shard}");
+        if self.resumed {
+            // Resume path: the fleet restores checkpointed params
+            // itself; the Hello is just "I'm up".
+            anyhow::ensure!(params.len() == self.params.len(),
+                "register: shard {shard} param length {} != {}",
+                params.len(), self.params.len());
+            return Ok(true);
+        }
         anyhow::ensure!(!self.ready, "register: server already ready");
         anyhow::ensure!(self.inits[shard].is_none(),
             "register: duplicate hello from shard {shard}");
@@ -194,18 +255,34 @@ impl ParamServer {
                 params.len(), first.len());
         }
         self.inits[shard] = Some(params);
-        if self.inits.iter().all(|p| p.is_some()) {
-            let parts: Vec<(Vec<f32>, u32)> = self
-                .inits
-                .iter_mut()
-                .map(|p| (p.take().expect("all inits present"), 1))
-                .collect();
-            self.params = tree_average(parts)?;
-            self.version = 0;
-            self.publish();
-            self.ready = true;
-        }
+        self.try_finish_registration()?;
         Ok(self.ready)
+    }
+
+    /// Complete registration once every *live* shard has said Hello —
+    /// with no failures this is exactly "all shards registered", so the
+    /// zero-failure init merge is untouched.  Called from [`Self::register`]
+    /// and from [`Self::mark_failed`] (a shard dying before its Hello must
+    /// not block the survivors' bootstrap forever).
+    fn try_finish_registration(&mut self) -> Result<()> {
+        if self.ready {
+            return Ok(());
+        }
+        let complete = (0..self.n_shards)
+            .all(|s| !self.active[s] || self.inits[s].is_some());
+        if !complete || self.inits.iter().all(|p| p.is_none()) {
+            return Ok(());
+        }
+        let parts: Vec<(Vec<f32>, u32)> = self
+            .inits
+            .iter_mut()
+            .filter_map(|p| p.take().map(|v| (v, 1)))
+            .collect();
+        self.params = tree_average(parts)?;
+        self.version = 0;
+        self.publish();
+        self.ready = true;
+        Ok(())
     }
 
     /// Latest published snapshot.
@@ -226,14 +303,29 @@ impl ParamServer {
     pub fn push(&mut self, g: GradMsg) -> Result<PushOutcome> {
         anyhow::ensure!(self.ready, "push before every shard registered");
         anyhow::ensure!(g.shard < self.n_shards, "push: bad shard {}", g.shard);
+        if self.failed[g.shard] {
+            // Zombie frame from a shard already written off; its probes
+            // go through `rejoin`, not here.
+            return Ok(PushOutcome::Ignored);
+        }
         anyhow::ensure!(self.active[g.shard],
             "push from shard {} after its Done", g.shard);
+        if g.seq <= self.last_seq[g.shard] {
+            // At-least-once delivery: a resend or chaos duplicate of a
+            // push already folded in.  Never re-apply.
+            return Ok(PushOutcome::Ignored);
+        }
+        anyhow::ensure!(g.seq == self.last_seq[g.shard] + 1,
+            "push: shard {} seq {} skips ahead of {} (protocol bug: \
+             a worker never has two distinct pushes in flight)",
+            g.shard, g.seq, self.last_seq[g.shard]);
         anyhow::ensure!(g.params.len() == self.params.len(),
             "push: shard {} param length {} != {}",
             g.shard, g.params.len(), self.params.len());
         anyhow::ensure!(g.base_version <= self.version,
             "push: shard {} base_version {} is from the future (at {})",
             g.shard, g.base_version, self.version);
+        self.last_seq[g.shard] = g.seq;
 
         if self.max_staleness == 0 {
             anyhow::ensure!(self.round[g.shard].is_none(),
@@ -264,7 +356,12 @@ impl ParamServer {
                 "push: base version {} evicted from the snapshot ring \
                  (protocol bug: age {age_rounds} rounds is inside the \
                  window)", g.base_version))?;
-        let w = 1.0 / self.n_shards as f32;
+        // Survivor weighting: exactly 1/n_shards while nothing has
+        // failed (the bit-identity case), renormalized over the live
+        // fleet once shards are lost so the survivors' combined step
+        // keeps summing to a full round's worth.
+        let survivors = self.n_shards - self.failed_count();
+        let w = 1.0 / survivors.max(1) as f32;
         let alpha = 1.0 / (1.0 + age_rounds) as f32;
         let scale = w * alpha;
         for ((p, pushed), base) in self
@@ -291,6 +388,11 @@ impl ParamServer {
     pub fn mark_done(&mut self, shard: usize)
                      -> Result<Option<(ParamMsg, Vec<usize>)>> {
         anyhow::ensure!(shard < self.n_shards, "done: bad shard {shard}");
+        if self.failed[shard] {
+            // A shard written off as dead finishing after all: already
+            // out of every barrier, nothing to do.
+            return Ok(None);
+        }
         anyhow::ensure!(self.active[shard],
             "done: duplicate Done from shard {shard}");
         self.active[shard] = false;
@@ -298,6 +400,78 @@ impl ParamServer {
             return self.try_close_round();
         }
         Ok(None)
+    }
+
+    /// Declare a shard dead (heartbeat deadline or `Fatal` frame).  The
+    /// shard leaves the round barrier — a buffered BSP push is
+    /// discarded, and closing the round over the survivors may publish
+    /// a snapshot that must be acked to the listed shards.  Idempotent;
+    /// a shard that already retired via `Done` is left retired.
+    pub fn mark_failed(&mut self, shard: usize)
+                       -> Result<Option<(ParamMsg, Vec<usize>)>> {
+        anyhow::ensure!(shard < self.n_shards, "failed: bad shard {shard}");
+        if self.failed[shard] || !self.active[shard] {
+            return Ok(None);
+        }
+        self.active[shard] = false;
+        self.failed[shard] = true;
+        self.round[shard] = None;
+        if !self.ready {
+            // Dying before (completing) registration: let survivors
+            // finish the bootstrap.
+            self.try_finish_registration()?;
+            return Ok(None);
+        }
+        if self.max_staleness == 0 {
+            return self.try_close_round();
+        }
+        Ok(None)
+    }
+
+    /// Re-admit a failed shard (its bounded-retry `Rejoin` handshake):
+    /// it re-enters the round barrier and the survivor weighting, and
+    /// gets the latest snapshot to continue from.  Returns `None` when
+    /// the shard is not actually failed (a live worker's ack probe —
+    /// the caller answers those from `last_seq` instead).
+    pub fn rejoin(&mut self, shard: usize) -> Result<Option<ParamMsg>> {
+        anyhow::ensure!(shard < self.n_shards, "rejoin: bad shard {shard}");
+        if !(self.failed[shard] && self.ready) {
+            return Ok(None);
+        }
+        self.failed[shard] = false;
+        self.active[shard] = true;
+        self.rejoins[shard] += 1;
+        Ok(Some(self.snapshot()?))
+    }
+
+    /// Number of shards currently declared dead.
+    pub fn failed_count(&self) -> usize {
+        self.failed.iter().filter(|&&f| f).count()
+    }
+
+    /// Shard ids currently declared dead, ascending.
+    pub fn failed_shards(&self) -> Vec<usize> {
+        (0..self.n_shards).filter(|&s| self.failed[s]).collect()
+    }
+
+    /// Whether `shard` is currently declared dead.
+    pub fn is_failed(&self, shard: usize) -> bool {
+        self.failed.get(shard).copied().unwrap_or(false)
+    }
+
+    /// Total successful rejoins across the fleet.
+    pub fn rejoin_count(&self) -> u32 {
+        self.rejoins.iter().sum()
+    }
+
+    /// Last processed push seq for `shard` (0 = none yet).
+    pub fn last_seq(&self, shard: usize) -> u64 {
+        self.last_seq.get(shard).copied().unwrap_or(0)
+    }
+
+    /// Whether `shard` has a push parked at the BSP round barrier.
+    pub fn round_slot_filled(&self, shard: usize) -> bool {
+        self.round.get(shard).map(|s| s.is_some()).unwrap_or(false)
     }
 
     /// Close the BSP round if every still-active shard has buffered a
@@ -415,9 +589,11 @@ mod tests {
         ps
     }
 
-    fn push(shard: usize, base: u64, params: Vec<f32>) -> GradMsg {
+    fn push_seq(shard: usize, seq: u64, base: u64, params: Vec<f32>)
+                -> GradMsg {
         GradMsg {
             shard,
+            seq,
             base_version: base,
             iters: 1,
             params,
@@ -433,11 +609,11 @@ mod tests {
         let p1 = vec![2.0f32, 20.0];
         let p2 = vec![4.0f32, 40.0];
         // arrival order 2, 0, 1 — result must still be shard-ordered
-        assert_eq!(ps.push(push(2, 0, p2.clone())).unwrap(),
+        assert_eq!(ps.push(push_seq(2, 1, 0, p2.clone())).unwrap(),
                    PushOutcome::Deferred);
-        assert_eq!(ps.push(push(0, 0, p0.clone())).unwrap(),
+        assert_eq!(ps.push(push_seq(0, 1, 0, p0.clone())).unwrap(),
                    PushOutcome::Deferred);
-        match ps.push(push(1, 0, p1.clone())).unwrap() {
+        match ps.push(push_seq(1, 1, 0, p1.clone())).unwrap() {
             PushOutcome::RoundComplete { snapshot, shards } => {
                 assert_eq!(shards, vec![0, 1, 2]);
                 assert_eq!(snapshot.version, 1);
@@ -454,15 +630,33 @@ mod tests {
     #[test]
     fn bsp_double_push_in_one_round_is_an_error() {
         let mut ps = ready_server(2, 0, 1);
-        assert_eq!(ps.push(push(0, 0, vec![1.0])).unwrap(),
+        assert_eq!(ps.push(push_seq(0, 1, 0, vec![1.0])).unwrap(),
                    PushOutcome::Deferred);
-        assert!(ps.push(push(0, 0, vec![2.0])).is_err());
+        // A *new* push (fresh seq) while one is parked is a worker bug …
+        assert!(ps.push(push_seq(0, 2, 0, vec![2.0])).is_err());
+    }
+
+    #[test]
+    fn duplicate_and_zombie_pushes_are_ignored_not_fatal() {
+        let mut ps = ready_server(2, 0, 1);
+        assert_eq!(ps.push(push_seq(0, 1, 0, vec![1.0])).unwrap(),
+                   PushOutcome::Deferred);
+        // … but a redelivery of the same seq is silently deduped.
+        assert_eq!(ps.push(push_seq(0, 1, 0, vec![1.0])).unwrap(),
+                   PushOutcome::Ignored);
+        // A seq gap is a protocol bug, not a fault-model event.
+        assert!(ps.push(push_seq(0, 3, 0, vec![1.0])).is_err());
+        // Frames from a shard written off as dead are ignored too.
+        ps.mark_failed(1).unwrap();
+        assert_eq!(ps.push(push_seq(1, 1, 0, vec![9.0])).unwrap(),
+                   PushOutcome::Ignored);
+        assert!(ps.mark_done(1).unwrap().is_none());
     }
 
     #[test]
     fn done_shard_closes_a_waiting_round() {
         let mut ps = ready_server(2, 0, 1);
-        assert_eq!(ps.push(push(0, 0, vec![3.0])).unwrap(),
+        assert_eq!(ps.push(push_seq(0, 1, 0, vec![3.0])).unwrap(),
                    PushOutcome::Deferred);
         let (snap, shards) = ps.mark_done(1).unwrap().unwrap();
         assert_eq!(shards, vec![0]);
@@ -476,7 +670,7 @@ mod tests {
         let mut ps = ready_server(2, 1, 1);
         let base0 = ps.params()[0];
         // shard 0, age (0-0)/2 = 0 rounds: full 1/n weight
-        match ps.push(push(0, 0, vec![base0 + 2.0])).unwrap() {
+        match ps.push(push_seq(0, 1, 0, vec![base0 + 2.0])).unwrap() {
             PushOutcome::Applied { staleness_rounds, snapshot } => {
                 assert_eq!(staleness_rounds, 0.0);
                 assert_eq!(snapshot.version, 1);
@@ -487,7 +681,7 @@ mod tests {
         }
         // shard 1 still based on version 0: age (1-0)/2 = 0.5 rounds
         let before = ps.params()[0];
-        match ps.push(push(1, 0, vec![base0 + 4.0])).unwrap() {
+        match ps.push(push_seq(1, 1, 0, vec![base0 + 4.0])).unwrap() {
             PushOutcome::Applied { staleness_rounds, snapshot } => {
                 assert_eq!(staleness_rounds, 0.5);
                 assert_eq!(snapshot.version, 2);
@@ -504,8 +698,8 @@ mod tests {
     fn pushes_outside_the_window_are_rejected() {
         let mut ps = ready_server(2, 1, 1);
         // advance to version 3 with fresh pushes
-        for (shard, base) in [(0, 0), (1, 1), (0, 2)] {
-            match ps.push(push(shard, base, vec![1.0])).unwrap() {
+        for (shard, seq, base) in [(0, 1, 0), (1, 1, 1), (0, 2, 2)] {
+            match ps.push(push_seq(shard, seq, base, vec![1.0])).unwrap() {
                 PushOutcome::Applied { .. } => {}
                 other => panic!("expected Applied, got {other:?}"),
             }
@@ -513,7 +707,7 @@ mod tests {
         assert_eq!(ps.version(), 3);
         let before = ps.params().to_vec();
         // shard 1 pushing from version 0: age (3-0)/2 = 1.5 > 1
-        match ps.push(push(1, 0, vec![99.0])).unwrap() {
+        match ps.push(push_seq(1, 2, 0, vec![99.0])).unwrap() {
             PushOutcome::Rejected { staleness_rounds, snapshot } => {
                 assert_eq!(staleness_rounds, 1.5);
                 assert_eq!(snapshot.version, 3);
@@ -529,14 +723,15 @@ mod tests {
     fn snapshot_ring_keeps_the_whole_staleness_window() {
         let mut ps = ready_server(2, 1, 1);
         // capacity = 1*2 + 1 = 3; publish versions 1..=4
-        for (shard, base) in [(0, 0), (1, 1), (0, 2), (1, 3)] {
-            ps.push(push(shard, base, vec![0.5])).unwrap();
+        for (shard, seq, base) in [(0, 1, 0), (1, 1, 1), (0, 2, 2), (1, 2, 3)]
+        {
+            ps.push(push_seq(shard, seq, base, vec![0.5])).unwrap();
         }
         assert_eq!(ps.version(), 4);
         let held: Vec<u64> = ps.snapshots.iter().map(|s| s.version).collect();
         assert_eq!(held, vec![2, 3, 4]);
         // age (4-2)/2 = 1.0 <= 1: base still resident, applies cleanly
-        match ps.push(push(0, 2, vec![0.25])).unwrap() {
+        match ps.push(push_seq(0, 3, 2, vec![0.25])).unwrap() {
             PushOutcome::Applied { staleness_rounds, .. } => {
                 assert_eq!(staleness_rounds, 1.0);
             }
@@ -547,7 +742,7 @@ mod tests {
     #[test]
     fn register_validates_fleet_and_shapes() {
         let mut ps = ParamServer::new(2, 0).unwrap();
-        assert!(ps.push(push(0, 0, vec![1.0])).is_err(),
+        assert!(ps.push(push_seq(0, 1, 0, vec![1.0])).is_err(),
                 "push before ready");
         assert!(ps.register(5, vec![1.0]).is_err(), "bad shard id");
         assert!(!ps.register(0, vec![1.0, 2.0]).unwrap());
@@ -561,5 +756,126 @@ mod tests {
             .iter().map(|(a, b)| 0.5 * (a + b)).collect();
         assert_eq!(bits(ps.params()), bits(&expect));
         assert!(ParamServer::new(0, 0).is_err());
+    }
+
+    /// Satellite: the survivor-set merge is still a true weighted mean.
+    /// Identical survivor vectors merge to themselves bitwise (the
+    /// weights sum to 1), and dropping a dead shard whose contribution
+    /// sat exactly at the survivor mean (zero delta) leaves the merged
+    /// result unchanged.
+    #[test]
+    fn survivor_tree_average_weights_sum_to_one() {
+        for n in [2usize, 3, 5, 8] {
+            let x = vec![0.37f32, -4.25, 1e-3];
+            let same: Vec<(Vec<f32>, u32)> =
+                (0..n).map(|_| (x.clone(), 1)).collect();
+            let avg = tree_average(same).unwrap();
+            assert_eq!(bits(&avg), bits(&x), "n={n} survivors");
+        }
+
+        let a = vec![1.0f32, -2.0, 0.5];
+        let b = vec![3.0f32, 6.0, -0.25];
+        let survivors =
+            tree_average(vec![(a.clone(), 1), (b.clone(), 1)]).unwrap();
+        // Dead shard contributing exactly the survivor mean: the
+        // full-set merge must agree with the survivor-set merge.
+        let full = tree_average(vec![
+            (a, 1),
+            (b, 1),
+            (survivors.clone(), 1),
+        ])
+        .unwrap();
+        for (s, f) in survivors.iter().zip(full.iter()) {
+            assert!((s - f).abs() <= 1e-6, "{s} vs {f}");
+        }
+    }
+
+    #[test]
+    fn bsp_mark_failed_drops_the_shard_and_closes_over_survivors() {
+        let mut ps = ready_server(3, 0, 1);
+        assert_eq!(ps.push(push_seq(0, 1, 0, vec![2.0])).unwrap(),
+                   PushOutcome::Deferred);
+        assert_eq!(ps.push(push_seq(2, 1, 0, vec![6.0])).unwrap(),
+                   PushOutcome::Deferred);
+        assert!(ps.round_slot_filled(0));
+        // shard 1 dies: the barrier closes over the two survivors.
+        let (snap, shards) = ps.mark_failed(1).unwrap().unwrap();
+        assert_eq!(shards, vec![0, 2]);
+        assert_eq!(bits(&snap.params), bits(&[0.5f32 * (2.0 + 6.0)]));
+        assert_eq!(ps.failed_shards(), vec![1]);
+        assert_eq!(ps.failed_count(), 1);
+        // Idempotent, and failing a shard whose slot was filled
+        // discards the buffered push.
+        assert!(ps.mark_failed(1).unwrap().is_none());
+    }
+
+    #[test]
+    fn stale_weight_renormalizes_over_survivors() {
+        let mut ps = ready_server(3, 1, 1);
+        let base0 = ps.params()[0];
+        ps.mark_failed(2).unwrap();
+        // Two survivors of three: weight is 1/2, not 1/3.
+        match ps.push(push_seq(0, 1, 0, vec![base0 + 3.0])).unwrap() {
+            PushOutcome::Applied { snapshot, .. } => {
+                let expect = base0 + 0.5 * 1.0 * 3.0;
+                assert_eq!(bits(&snapshot.params), bits(&[expect]));
+            }
+            other => panic!("expected Applied, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejoin_revives_a_failed_shard_with_the_latest_snapshot() {
+        let mut ps = ready_server(2, 1, 1);
+        // Live shard probing: not a rejoin.
+        assert!(ps.rejoin(0).unwrap().is_none());
+        ps.mark_failed(1).unwrap();
+        assert!(ps.is_failed(1));
+        let snap = ps.rejoin(1).unwrap().unwrap();
+        assert_eq!(snap.version, ps.version());
+        assert!(!ps.is_failed(1));
+        assert_eq!(ps.rejoin_count(), 1);
+        // Revived shard pushes again, seq fence intact across the gap.
+        assert_eq!(ps.last_seq(1), 0);
+        match ps.push(push_seq(1, 1, 0, vec![1.5])).unwrap() {
+            PushOutcome::Applied { .. } => {}
+            other => panic!("expected Applied, got {other:?}"),
+        }
+        assert_eq!(ps.last_seq(1), 1);
+    }
+
+    #[test]
+    fn death_before_hello_lets_survivors_finish_registration() {
+        let mut ps = ParamServer::new(3, 0).unwrap();
+        assert!(!ps.register(0, vec![2.0]).unwrap());
+        assert!(ps.mark_failed(2).unwrap().is_none());
+        assert!(!ps.is_ready());
+        assert!(ps.register(1, vec![4.0]).unwrap());
+        assert!(ps.is_ready());
+        // v0 merges only the survivor inits.
+        assert_eq!(bits(ps.params()), bits(&[0.5f32 * (2.0 + 4.0)]));
+    }
+
+    #[test]
+    fn resume_restores_params_and_version_verbatim() {
+        let ckpt = vec![0.125f32, -7.5];
+        let mut ps = ParamServer::with_resume(2, 1, ckpt.clone(), 42).unwrap();
+        assert!(ps.is_ready());
+        assert_eq!(ps.version(), 42);
+        assert_eq!(bits(ps.params()), bits(&ckpt));
+        // Hellos on a resumed server are liveness-only no-ops.
+        assert!(ps.register(0, ckpt.clone()).unwrap());
+        assert_eq!(bits(ps.params()), bits(&ckpt));
+        assert!(ps.register(0, vec![1.0]).is_err(), "length checked");
+        // First push applies against the restored snapshot.
+        match ps.push(push_seq(0, 1, 42, vec![ckpt[0] + 2.0, ckpt[1]]))
+            .unwrap()
+        {
+            PushOutcome::Applied { snapshot, .. } => {
+                assert_eq!(snapshot.version, 43);
+            }
+            other => panic!("expected Applied, got {other:?}"),
+        }
+        assert!(ParamServer::with_resume(2, 0, vec![], 1).is_err());
     }
 }

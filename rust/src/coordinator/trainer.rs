@@ -222,6 +222,8 @@ impl<B: DeviceBackend> Trainer<B> {
         Checkpoint {
             tag: self.graphs.artifact.manifest.tag.clone(),
             iter,
+            version: iter,
+            rng: None,
             params,
         }
         .save(dir, name)

@@ -24,8 +24,23 @@
 //! and the server paces shards purely by *when* it answers a push with
 //! its [`ToShard::Ack`] — that is how `max_staleness = 0` degenerates to
 //! lockstep rounds without any extra synchronization primitive.
+//!
+//! Fault tolerance rides on three additions (PR 7):
+//!
+//! * `recv_timeout` on both endpoint traits — `Ok(None)` on expiry —
+//!   so neither the server loop nor a worker's ack wait is ever an
+//!   unbounded block.  [`ToServer::Fatal`] stays the *fast* path for
+//!   declaring a shard dead; the deadline is the *guaranteed* one.
+//! * [`ToServer::Heartbeat`] liveness frames, sent by workers between
+//!   train iterations and while waiting on an ack, so a slow-but-alive
+//!   shard is distinguishable from a dead one.
+//! * at-least-once push delivery: every [`GradMsg`] carries a per-shard
+//!   `seq`, echoed by [`ToShard::Ack`], so a worker can detect a lost
+//!   push (the server's [`ToServer::Rejoin`] probe reply echoes an
+//!   older seq) and resend it, while the server ignores duplicates.
 
 use std::sync::mpsc;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -52,6 +67,10 @@ pub struct ParamMsg {
 pub struct GradMsg {
     /// Shard index in `[0, n_shards)`.
     pub shard: usize,
+    /// Per-shard push sequence number, starting at 1.  The server
+    /// processes seq `n+1` after `n` and treats anything `<= n` as a
+    /// duplicate (at-least-once delivery under the chaos transport).
+    pub seq: u64,
     /// Version of the snapshot this window was computed from.
     pub base_version: u64,
     /// Local train iterations folded into this push.
@@ -83,6 +102,19 @@ pub enum ToServer {
     /// The shard hit an unrecoverable error (sent even before `Hello`,
     /// so the server never hangs waiting on a dead worker).
     Fatal { shard: usize, error: String },
+    /// Liveness beacon: sent between train iterations and while waiting
+    /// on an ack.  `version` is the shard's current base version
+    /// (telemetry only — no state changes on either side).
+    Heartbeat { shard: usize, version: u64 },
+    /// Re-sync probe / rejoin request.  An active shard that has waited
+    /// too long for an ack sends this to ask "did my push arrive?"; the
+    /// server answers with an [`ToShard::Ack`] echoing the last seq it
+    /// processed (so the worker knows whether to resend) — unless the
+    /// shard is legitimately parked at the BSP round barrier, in which
+    /// case the server stays silent.  A shard previously declared dead
+    /// re-enters the fleet through the same frame (bounded by the
+    /// rejoin budget) and continues from a fresh snapshot.
+    Rejoin { shard: usize },
 }
 
 /// Server → shard control/data frames.
@@ -91,6 +123,11 @@ pub enum ToShard {
     /// Answer to a push: whether it was applied, how stale it was (in
     /// rounds), and the snapshot the shard must continue from.
     Ack {
+        /// Echo of the last [`GradMsg::seq`] the server processed for
+        /// this shard.  A worker waiting on seq `n` discards acks with
+        /// `seq < n` (stale duplicates) and resends its push when a
+        /// [`ToServer::Rejoin`] probe comes back echoing `n - 1`.
+        seq: u64,
         accepted: bool,
         staleness_rounds: f64,
         snapshot: ParamMsg,
@@ -103,8 +140,21 @@ pub enum ToShard {
 pub trait ServerEndpoint {
     /// Block until the next shard frame arrives.
     fn recv(&mut self) -> Result<ToServer>;
+    /// Wait at most `timeout` for the next shard frame: `Ok(Some(..))`
+    /// on delivery, `Ok(None)` on expiry, `Err` when every peer
+    /// endpoint is gone.  This is what keeps the fault-tolerant server
+    /// loop deadline-driven instead of blocking forever.
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<ToServer>>;
     /// Send a frame to shard `shard`.
     fn send(&mut self, shard: usize, msg: ToShard) -> Result<()>;
+    /// Best-effort broadcast of [`ToShard::Stop`] to all `n_shards`
+    /// shards (shutdown/error path); per-shard send failures are
+    /// ignored — a disconnected shard is already stopped.
+    fn stop_all(&mut self, n_shards: usize) {
+        for s in 0..n_shards {
+            let _ = self.send(s, ToShard::Stop);
+        }
+    }
 }
 
 /// One shard's half: sends to the server, receives its own frames.
@@ -112,6 +162,10 @@ pub trait ShardEndpoint: Send {
     fn send(&mut self, msg: ToServer) -> Result<()>;
     /// Block until the server's next frame for this shard arrives.
     fn recv(&mut self) -> Result<ToShard>;
+    /// Wait at most `timeout` for the server's next frame: `Ok(Some(..))`
+    /// on delivery, `Ok(None)` on expiry, `Err` on disconnect.  Workers
+    /// use this to interleave heartbeats with their ack wait.
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<ToShard>>;
 }
 
 /// A transport factory: wires one server endpoint to `n` shard
@@ -177,6 +231,15 @@ impl ServerEndpoint for ChannelServerEnd {
             .context("transport: every shard endpoint disconnected")
     }
 
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<ToServer>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(msg) => Ok(Some(msg)),
+            Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(anyhow::anyhow!(
+                "transport: every shard endpoint disconnected")),
+        }
+    }
+
     fn send(&mut self, shard: usize, msg: ToShard) -> Result<()> {
         let tx = self
             .txs
@@ -185,16 +248,6 @@ impl ServerEndpoint for ChannelServerEnd {
         tx.send(msg)
             .map_err(|_| anyhow::anyhow!(
                 "transport: shard {shard} endpoint disconnected"))
-    }
-}
-
-impl ChannelServerEnd {
-    /// Best-effort broadcast of [`ToShard::Stop`] (shutdown/error path);
-    /// already-disconnected shards are skipped.
-    pub fn stop_all(&mut self) {
-        for tx in &self.txs {
-            let _ = tx.send(ToShard::Stop);
-        }
     }
 }
 
@@ -208,6 +261,15 @@ impl ShardEndpoint for ChannelShardEnd {
 
     fn recv(&mut self) -> Result<ToShard> {
         self.rx.recv().context("transport: server endpoint disconnected")
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<ToShard>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(msg) => Ok(Some(msg)),
+            Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(anyhow::anyhow!(
+                "transport: server endpoint disconnected")),
+        }
     }
 }
 
@@ -225,6 +287,7 @@ mod tests {
             .unwrap();
         s1.send(ToServer::Push(GradMsg {
             shard: 1,
+            seq: 1,
             base_version: 0,
             iters: 4,
             params: vec![3.0, 4.0],
@@ -255,6 +318,7 @@ mod tests {
         // server -> shard frames land on the right private queue
         server
             .send(1, ToShard::Ack {
+                seq: 1,
                 accepted: true,
                 staleness_rounds: 0.0,
                 snapshot: ParamMsg { version: 1, params: vec![9.0] },
@@ -278,7 +342,7 @@ mod tests {
         assert!(server.recv().is_err());
         assert!(server.send(0, ToShard::Stop).is_err());
         // stop_all on a dead fleet is a no-op, not a panic
-        server.stop_all();
+        server.stop_all(1);
 
         let (server, mut shards) = ChannelTransport.connect(1).unwrap();
         drop(server);
@@ -296,5 +360,58 @@ mod tests {
     #[test]
     fn zero_shard_connect_is_rejected() {
         assert!(ChannelTransport.connect(0).is_err());
+    }
+
+    #[test]
+    fn recv_timeout_expires_delivers_and_detects_disconnects() {
+        let (mut server, mut shards) = ChannelTransport.connect(1).unwrap();
+
+        // Empty queue: expiry is Ok(None), not an error.
+        let got = server.recv_timeout(Duration::from_millis(5)).unwrap();
+        assert!(got.is_none());
+        let got = shards[0].recv_timeout(Duration::from_millis(5)).unwrap();
+        assert!(got.is_none());
+
+        // Delivery race: a frame sent while the receiver is parked in
+        // recv_timeout must win against a generous deadline.
+        let mut shard = shards.pop().unwrap();
+        let sender = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            shard
+                .send(ToServer::Heartbeat { shard: 0, version: 3 })
+                .unwrap();
+            shard
+        });
+        match server.recv_timeout(Duration::from_secs(5)).unwrap() {
+            Some(ToServer::Heartbeat { shard, version }) => {
+                assert_eq!((shard, version), (0, 3));
+            }
+            other => panic!("expected heartbeat, got {other:?}"),
+        }
+        let mut shard = sender.join().unwrap();
+        server.send(0, ToShard::Stop).unwrap();
+        match shard.recv_timeout(Duration::from_secs(5)).unwrap() {
+            Some(ToShard::Stop) => {}
+            other => panic!("expected stop, got {other:?}"),
+        }
+
+        // Disconnect surfaces as Err on both halves, even with time left.
+        drop(shard);
+        assert!(server.recv_timeout(Duration::from_millis(5)).is_err());
+        let (server, mut shards) = ChannelTransport.connect(1).unwrap();
+        drop(server);
+        assert!(shards[0].recv_timeout(Duration::from_millis(5)).is_err());
+    }
+
+    #[test]
+    fn trait_stop_all_broadcasts_best_effort() {
+        let (mut server, mut shards) = ChannelTransport.connect(2).unwrap();
+        // One shard already gone: the broadcast must still reach the other.
+        drop(shards.pop().unwrap());
+        ServerEndpoint::stop_all(&mut server, 2);
+        match shards[0].recv().unwrap() {
+            ToShard::Stop => {}
+            other => panic!("expected stop, got {other:?}"),
+        }
     }
 }

@@ -80,7 +80,12 @@ USAGE:
                 [--iters K] [--seed S] [--threads P] [--shards P]
                 [--sync-every K] [--async] [--max-staleness N]
                 [--metrics-every M] [--target-return R] [--log-csv path]
-                [--checkpoint-dir d]
+                [--checkpoint-dir d] [--checkpoint-every K] [--resume d]
+                [--chaos spec] [--tolerate-faults] [--heartbeat-ms MS]
+                [--missed-heartbeats N] [--max-rejoins N]
+       chaos spec: seed=7,drop=0.05,delay=0.1,delay_ms=2,dup=0.02,
+                   reorder=0.05,kill=1@3  (suffix _to_server/_to_shard
+                   for per-direction rates; async runs only)
   warpsci bench <fig2a|fig2b|fig2c|fig3|fig3-scaling|fig4|headline|
                  shard-scaling|ablation-transfer|ablation-kernel|
                  ablation-estimator|all>
@@ -146,6 +151,40 @@ fn parse_run_config(args: &Args) -> Result<RunConfig> {
     if let Some(p) = args.get("log-csv") {
         cfg.log_csv = Some(p.to_string());
     }
+    // Fault tolerance (async runs)
+    cfg.fault.heartbeat_ms =
+        args.get_parse("heartbeat-ms", cfg.fault.heartbeat_ms)?;
+    cfg.fault.missed_heartbeats =
+        args.get_parse("missed-heartbeats", cfg.fault.missed_heartbeats)?;
+    cfg.fault.tolerate =
+        args.get_parse("tolerate-faults", cfg.fault.tolerate)?;
+    cfg.fault.max_rejoins =
+        args.get_parse("max-rejoins", cfg.fault.max_rejoins)?;
+    if let Some(spec) = args.get("chaos") {
+        cfg.chaos = Some(warpsci::config::FaultPlan::parse(spec)
+            .context("--chaos")?);
+    }
+    cfg.checkpoint_every =
+        args.get_parse("checkpoint-every", cfg.checkpoint_every)?;
+    if let Some(d) = args.get("checkpoint-dir") {
+        cfg.checkpoint_dir = Some(d.to_string());
+    }
+    if let Some(d) = args.get("resume") {
+        cfg.resume = Some(d.to_string());
+    }
+    if !cfg.run_async {
+        anyhow::ensure!(cfg.chaos.is_none(),
+            "--chaos injects faults into the async transport — add --async");
+        anyhow::ensure!(cfg.resume.is_none() && cfg.checkpoint_every == 0,
+            "--resume/--checkpoint-every drive the async trainer's \
+             crash-recovery path — add --async");
+    }
+    // `--checkpoint-dir` alone (async): periodic saves at the metrics
+    // cadence plus the final end-of-serve save.
+    if cfg.run_async && cfg.checkpoint_dir.is_some()
+        && cfg.checkpoint_every == 0 {
+        cfg.checkpoint_every = cfg.metrics_every.max(1);
+    }
     Ok(cfg)
 }
 
@@ -158,11 +197,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     if cfg.run_async || cfg.shards > 1 || args.get("checkpoint-dir").is_some() {
         // the compiled-graph path: multi-shard orchestration and
         // checkpointing run over the in-process CPU device
-        if (cfg.shards > 1 || cfg.run_async)
+        if cfg.shards > 1 && !cfg.run_async
             && args.get("checkpoint-dir").is_some() {
-            bail!("--checkpoint-dir is not supported with --shards > 1 \
-                   or --async yet (checkpoint the single-shard run \
-                   instead)");
+            bail!("--checkpoint-dir is not supported with the synchronous \
+                   --shards > 1 trainer (use --async, which checkpoints \
+                   through the parameter server)");
         }
         if cfg.threads > 0 {
             eprintln!("note: --threads is ignored by the cpu graph \
@@ -246,10 +285,10 @@ fn cmd_train(args: &Args) -> Result<()> {
              warpsci::runtime::DeviceBackend::platform(&device));
 
     if cfg.shards > 1 || cfg.run_async {
-        if args.get("checkpoint-dir").is_some() {
-            bail!("--checkpoint-dir is not supported with --shards > 1 \
-                   or --async yet (checkpoint the single-shard run \
-                   instead)");
+        if !cfg.run_async && args.get("checkpoint-dir").is_some() {
+            bail!("--checkpoint-dir is not supported with the synchronous \
+                   --shards > 1 trainer (use --async, which checkpoints \
+                   through the parameter server)");
         }
         if cfg.run_async {
             return train_async(&device, &artifact, cfg);
@@ -353,6 +392,12 @@ where
              } else {
                  ""
              });
+    if let Some(plan) = &cfg.chaos {
+        println!("chaos transport armed: {plan:?}");
+    }
+    if let Some(dir) = &cfg.resume {
+        println!("resuming from checkpoint in {dir}");
+    }
     let shards = cfg.shards;
     let mut tr = AsyncShardTrainer::new(device, artifact, cfg)?;
     tr.verbose = true;
@@ -365,6 +410,22 @@ where
               mean return {:.2}",
              report.version, report.applied, report.rejected,
              report.mean_return);
+    if let Some(v) = report.resumed_from {
+        println!("resumed from version {v}");
+    }
+    if report.checkpoints_written > 0 {
+        println!("checkpoints written: {}", report.checkpoints_written);
+    }
+    if report.heartbeats > 0 || report.ignored > 0 || report.rejoins > 0
+        || !report.failed_shards.is_empty() {
+        println!("faults: {} shard(s) lost {:?}, {} rejoins, {} duplicate \
+                  pushes ignored, {} heartbeats",
+                 report.failed_shards.len(), report.failed_shards,
+                 report.rejoins, report.ignored, report.heartbeats);
+        for (shard, err) in &report.shard_errors {
+            println!("  shard {shard}: {err}");
+        }
+    }
     Ok(())
 }
 

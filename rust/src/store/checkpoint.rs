@@ -1,9 +1,18 @@
 //! Checkpointing: persist the policy parameter vector + run metadata.
 //!
 //! Format: a small JSON header file (`<name>.json`) plus a raw
-//! little-endian f32 blob (`<name>.params`).  Only parameters are saved —
-//! env state is cheap to re-initialize, which is also what the paper's
-//! framework does between experiments.
+//! little-endian f32 blob (`<name>.params`).  Only parameters (plus the
+//! server version and an optional RNG stream for async crash recovery)
+//! are saved — env state is cheap to re-initialize, which is also what
+//! the paper's framework does between experiments.
+//!
+//! Saves are **atomic**: each file is written to a `.tmp` sibling,
+//! fsynced, then renamed over the final name, so a process killed
+//! mid-save can never leave a partially-written file under the real
+//! name.  The header additionally records an FNV-1a checksum of the
+//! blob, verified on load — a crash landing between the two renames
+//! (new blob, old header) is detected as corruption instead of being
+//! half-read.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -16,23 +25,77 @@ use crate::util::Json;
 #[derive(Debug, Clone, PartialEq)]
 pub struct Checkpoint {
     pub tag: String,
+    /// Training iterations completed at save time.
     pub iter: u64,
+    /// Parameter-server publication counter at save time (the async
+    /// trainer's resume point; mirrors `iter` on single-trainer saves).
+    pub version: u64,
+    /// Serialized [`crate::util::Pcg64`] words of the trainer's
+    /// reseed stream (async crash recovery); `None` for plain saves.
+    pub rng: Option<[u32; 8]>,
     pub params: Vec<f32>,
+}
+
+/// FNV-1a 64-bit over raw bytes (checksum of the params blob).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Write `bytes` to `<final>.tmp`, fsync, rename to `final` — the only
+/// states a crash can leave behind are "old file" and "new file".
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = path.with_extension(
+        format!("{}.tmp",
+                path.extension().and_then(|e| e.to_str()).unwrap_or("")));
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming into {}", path.display()))?;
+    // Make the rename itself durable (best effort — directory fsync is
+    // not available everywhere).
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
 }
 
 impl Checkpoint {
     pub fn save(&self, dir: &Path, name: &str) -> Result<()> {
         std::fs::create_dir_all(dir)?;
+        let mut blob = Vec::with_capacity(self.params.len() * 4);
+        for x in &self.params {
+            blob.extend_from_slice(&x.to_le_bytes());
+        }
         let mut obj = std::collections::BTreeMap::new();
         obj.insert("tag".into(), Json::Str(self.tag.clone()));
         obj.insert("iter".into(), Json::Num(self.iter as f64));
+        obj.insert("version".into(), Json::Num(self.version as f64));
         obj.insert("params_len".into(), Json::Num(self.params.len() as f64));
-        std::fs::write(dir.join(format!("{name}.json")),
-                       Json::Obj(obj).to_string())?;
-        let mut blob = std::fs::File::create(dir.join(format!("{name}.params")))?;
-        for x in &self.params {
-            blob.write_all(&x.to_le_bytes())?;
+        obj.insert("checksum".into(),
+                   Json::Str(format!("{:016x}", fnv1a(&blob))));
+        if let Some(words) = &self.rng {
+            obj.insert(
+                "rng".into(),
+                Json::Arr(words.iter().map(|&w| Json::Num(w as f64))
+                    .collect()),
+            );
         }
+        // Blob first, header second: the header names (and checksums)
+        // only blobs that are already durable.
+        write_atomic(&dir.join(format!("{name}.params")), &blob)?;
+        write_atomic(&dir.join(format!("{name}.json")),
+                     Json::Obj(obj).to_string().as_bytes())?;
         Ok(())
     }
 
@@ -40,6 +103,26 @@ impl Checkpoint {
         let meta = Json::from_file(&dir.join(format!("{name}.json")))?;
         let tag = meta.at(&["tag"])?.as_str()?.to_string();
         let iter = meta.at(&["iter"])?.as_f64()? as u64;
+        // Pre-fault-tolerance headers carry no version/checksum/rng.
+        let version = match meta.get("version") {
+            Some(v) => v.as_f64()? as u64,
+            None => iter,
+        };
+        let rng = match meta.get("rng") {
+            Some(v) => {
+                let arr = v.as_arr()?;
+                if arr.len() != 8 {
+                    bail!("checkpoint rng has {} words, expected 8",
+                          arr.len());
+                }
+                let mut words = [0u32; 8];
+                for (w, j) in words.iter_mut().zip(arr) {
+                    *w = j.as_f64()? as u32;
+                }
+                Some(words)
+            }
+            None => None,
+        };
         let len = meta.at(&["params_len"])?.as_usize()?;
         let mut blob = Vec::new();
         std::fs::File::open(dir.join(format!("{name}.params")))
@@ -48,11 +131,19 @@ impl Checkpoint {
         if blob.len() != len * 4 {
             bail!("checkpoint blob {} bytes, expected {}", blob.len(), len * 4);
         }
+        if let Some(sum) = meta.get("checksum") {
+            let want = sum.as_str()?;
+            let got = format!("{:016x}", fnv1a(&blob));
+            if got != want {
+                bail!("checkpoint blob checksum {got} != header {want} \
+                       (torn or corrupted save)");
+            }
+        }
         let params = blob
             .chunks_exact(4)
             .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
             .collect();
-        Ok(Checkpoint { tag, iter, params })
+        Ok(Checkpoint { tag, iter, version, rng, params })
     }
 }
 
@@ -66,22 +157,61 @@ mod tests {
         let ck = Checkpoint {
             tag: "cartpole_n8_t4".into(),
             iter: 42,
+            version: 17,
+            rng: Some([1, 2, 3, 4, 5, 6, 7, u32::MAX]),
             params: vec![1.0, -2.5, f32::MIN_POSITIVE, 0.0],
         };
         ck.save(&dir, "best").unwrap();
         let back = Checkpoint::load(&dir, "best").unwrap();
         assert_eq!(ck, back);
+        // No stray .tmp siblings survive a clean save.
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let name = entry.unwrap().file_name();
+            assert!(!name.to_string_lossy().ends_with(".tmp"), "{name:?}");
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
     fn truncated_blob_rejected() {
         let dir = std::env::temp_dir().join("warpsci_ckpt_trunc");
-        let ck = Checkpoint { tag: "t".into(), iter: 1,
-                              params: vec![1.0, 2.0] };
+        let ck = Checkpoint { tag: "t".into(), iter: 1, version: 1,
+                              rng: None, params: vec![1.0, 2.0] };
         ck.save(&dir, "x").unwrap();
         std::fs::write(dir.join("x.params"), [0u8; 4]).unwrap();
         assert!(Checkpoint::load(&dir, "x").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupted_blob_rejected_by_checksum() {
+        let dir = std::env::temp_dir().join("warpsci_ckpt_sum");
+        let ck = Checkpoint { tag: "t".into(), iter: 1, version: 1,
+                              rng: None, params: vec![1.0, 2.0] };
+        ck.save(&dir, "x").unwrap();
+        // Same length, different bits: only the checksum can catch it.
+        std::fs::write(dir.join("x.params"), [0xAAu8; 8]).unwrap();
+        let err = Checkpoint::load(&dir, "x").unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn headers_without_new_fields_still_load() {
+        let dir = std::env::temp_dir().join("warpsci_ckpt_compat");
+        let ck = Checkpoint { tag: "old".into(), iter: 9, version: 9,
+                              rng: None, params: vec![0.5, 1.5] };
+        ck.save(&dir, "x").unwrap();
+        // Rewrite the header in the pre-fault-tolerance shape.
+        std::fs::write(
+            dir.join("x.json"),
+            r#"{"tag": "old", "iter": 9, "params_len": 2}"#,
+        )
+        .unwrap();
+        let back = Checkpoint::load(&dir, "x").unwrap();
+        assert_eq!(back.version, 9, "version defaults to iter");
+        assert_eq!(back.rng, None);
+        assert_eq!(back.params, vec![0.5, 1.5]);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

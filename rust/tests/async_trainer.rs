@@ -4,7 +4,7 @@
 //! round barrier, staleness-window convergence on two environments, and
 //! push accounting.  Everything here runs under default features.
 
-use warpsci::config::RunConfig;
+use warpsci::config::{FaultPlan, RunConfig};
 use warpsci::coordinator::{tree_average, AsyncShardTrainer,
                            MultiShardTrainer};
 use warpsci::runtime::CpuDevice;
@@ -167,5 +167,148 @@ fn short_job_without_windows_serves_initial_merge() {
     for s in &report.per_shard {
         assert_eq!(s.iters, 1);
         assert!(s.ep_return_ema.is_finite());
+    }
+}
+
+/// A chaos transport armed with an all-zero fault plan must be pure
+/// pass-through: the run is **bitwise** identical to the undecorated
+/// channel transport, and none of the fault machinery fires.  This is
+/// the PR-7 extension of the determinism pin — heartbeats, seq numbers,
+/// and the deadline-driven serve loop may not perturb the zero-fault
+/// arithmetic.
+#[test]
+fn zero_fault_chaos_is_bit_identical_to_plain_async() {
+    let d = device(16);
+    let artifact = d.artifact("cartpole", 8, 4).unwrap();
+    let cfg = cfg_for("cartpole", 8, 4, 6, 3, 2, 0);
+
+    let plain = AsyncShardTrainer::new(&d, &artifact, cfg.clone())
+        .unwrap().run().unwrap();
+
+    let mut chaos_cfg = cfg;
+    chaos_cfg.chaos = Some(FaultPlan::parse("seed=11").unwrap());
+    assert!(chaos_cfg.chaos.as_ref().unwrap().is_zero());
+    let chaotic = AsyncShardTrainer::new(&d, &artifact, chaos_cfg)
+        .unwrap().run().unwrap();
+
+    assert_eq!(bits(&plain.final_params), bits(&chaotic.final_params),
+               "zero-fault chaos transport perturbed the run");
+    assert_eq!(plain.version, chaotic.version);
+    assert_eq!(plain.applied, chaotic.applied);
+    assert_eq!(plain.rejected, chaotic.rejected);
+    assert_eq!(chaotic.ignored, 0);
+    assert_eq!(chaotic.rejoins, 0);
+    assert!(chaotic.failed_shards.is_empty());
+    assert!(chaotic.shard_errors.is_empty());
+}
+
+/// Killing one shard mid-run with `tolerate` on must degrade, not hang
+/// or fail: the survivors finish their full budget, the loss is
+/// recorded, and the report comes back with finite numbers — under both
+/// the BSP barrier (the dead shard leaves the round) and the stale
+/// window (the weight renormalizes over survivors).
+#[test]
+fn killed_shard_degrades_to_survivors_and_reports() {
+    let d = device(16);
+    let artifact = d.artifact("cartpole", 8, 4).unwrap();
+    for staleness in [0usize, 2] {
+        let mut cfg = cfg_for("cartpole", 8, 4, 8, 3, 2, staleness);
+        cfg.chaos = Some(FaultPlan::parse("seed=3,kill=1@2").unwrap());
+        cfg.fault.tolerate = true;
+        cfg.fault.heartbeat_ms = 25;
+        cfg.fault.missed_heartbeats = 4;
+        let report = AsyncShardTrainer::new(&d, &artifact, cfg)
+            .unwrap().run().unwrap();
+
+        assert_eq!(report.failed_shards, vec![1],
+                   "staleness={staleness}");
+        assert!(report.shard_errors.iter().any(|(s, _)| *s == 1),
+                "staleness={staleness}: no error recorded for the \
+                 killed shard");
+        // survivors finished their full budget and reported
+        for s in [0usize, 2] {
+            assert_eq!(report.per_shard[s].iters, 8,
+                       "staleness={staleness} shard={s}");
+            assert!(report.per_shard[s].ep_return_ema.is_finite());
+        }
+        // shard 1's first push landed before the kill at its second
+        assert!(report.applied >= 1, "staleness={staleness}");
+        assert!(report.version >= 1, "staleness={staleness}");
+        assert!(report.mean_return.is_finite(),
+                "staleness={staleness}");
+        assert!(report.final_params.iter().all(|x| x.is_finite()),
+                "staleness={staleness}");
+    }
+}
+
+/// Without `tolerate`, a killed shard still must not hang the run: the
+/// heartbeat deadline converts the silence into the same
+/// `"shard N failed"` error the Fatal fast path produces.
+#[test]
+fn killed_shard_without_tolerance_errors_instead_of_hanging() {
+    let d = device(16);
+    let artifact = d.artifact("cartpole", 8, 4).unwrap();
+    let mut cfg = cfg_for("cartpole", 8, 4, 8, 3, 2, 0);
+    cfg.chaos = Some(FaultPlan::parse("seed=5,kill=1@2").unwrap());
+    cfg.fault.heartbeat_ms = 25;
+    cfg.fault.missed_heartbeats = 4;
+    let err = AsyncShardTrainer::new(&d, &artifact, cfg)
+        .unwrap().run().unwrap_err();
+    assert!(format!("{err:#}").contains("shard 1 failed"), "{err:#}");
+}
+
+/// Crash recovery: a run checkpointed halfway and resumed for the rest
+/// of the budget must land in the same (generous) return band as the
+/// uninterrupted run, continue the server's version counter, and
+/// restore params verbatim — on a classic-control env and a scientific
+/// one.
+#[test]
+fn checkpoint_resume_reaches_the_uninterrupted_band() {
+    for (env, n, t, iters) in [("cartpole", 16, 8, 12),
+                               ("ecosystem", 8, 4, 8)] {
+        let d = device(16);
+        let artifact = d.artifact(env, n, t).unwrap();
+        let dir = std::env::temp_dir()
+            .join(format!("warpsci_async_resume_{env}"));
+        std::fs::remove_dir_all(&dir).ok();
+        let dir_s = dir.to_string_lossy().into_owned();
+
+        // Uninterrupted baseline.
+        let full_cfg = cfg_for(env, n, t, iters, 3, 2, 1);
+        let full = AsyncShardTrainer::new(&d, &artifact, full_cfg.clone())
+            .unwrap().run().unwrap();
+        assert!(full.mean_return.is_finite(), "{env}: baseline diverged");
+
+        // First half, checkpointing every version — the end-of-serve
+        // save is the "crash point" the resume picks up from.
+        let mut first = full_cfg.clone();
+        first.iters = iters / 2;
+        first.checkpoint_every = 1;
+        first.checkpoint_dir = Some(dir_s.clone());
+        let half = AsyncShardTrainer::new(&d, &artifact, first)
+            .unwrap().run().unwrap();
+        assert!(half.version > 0, "{env}: first half made no progress");
+        assert!(half.checkpoints_written >= 1, "{env}");
+
+        // Second half, resumed from the rolling checkpoint.
+        let mut second = full_cfg.clone();
+        second.iters = iters - iters / 2;
+        second.resume = Some(dir_s);
+        let resumed = AsyncShardTrainer::new(&d, &artifact, second)
+            .unwrap().run().unwrap();
+        assert_eq!(resumed.resumed_from, Some(half.version), "{env}");
+        assert!(resumed.version > half.version,
+                "{env}: resumed run applied nothing");
+        assert!(resumed.mean_return.is_finite(), "{env}");
+        assert!(resumed.final_params.iter().all(|x| x.is_finite()));
+
+        // Same generous band as the staleness test: scheduling reaches
+        // parameter values at max_staleness >= 1, so this pins "resume
+        // still trains", not an exact trajectory.
+        let tol = 0.75 * full.mean_return.abs() + 20.0;
+        assert!((resumed.mean_return - full.mean_return).abs() <= tol,
+                "{env}: resumed return {} left the band around {} \
+                 (tol {tol})", resumed.mean_return, full.mean_return);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

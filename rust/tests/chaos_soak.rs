@@ -1,0 +1,134 @@
+//! Chaos soak: a seeded fault matrix over the async parameter-server
+//! trainer.  Each case arms the [`warpsci::coordinator::ChaosTransport`]
+//! with a different fault plan (drop / delay / dup / reorder / kill)
+//! and checks the run *completes with a coherent report* — no hangs, no
+//! NaNs, accounting intact — under both the BSP round barrier
+//! (`max_staleness = 0`) and the stale-synchronous window (`2`).
+//!
+//! Every test is `#[ignore]`d: the matrix takes tens of seconds in
+//! debug mode, so plain `cargo test` skips it and CI runs
+//!
+//! ```text
+//! cargo test --release --test chaos_soak -- --ignored
+//! ```
+//!
+//! as its own timed job (see `.github/workflows/ci.yml`).
+
+use warpsci::config::{FaultPlan, RunConfig};
+use warpsci::coordinator::AsyncShardTrainer;
+use warpsci::runtime::CpuDevice;
+
+fn device(hidden: usize) -> CpuDevice {
+    let mut d = CpuDevice::new();
+    d.hp.hidden = hidden;
+    d
+}
+
+fn soak_cfg(spec: &str, max_staleness: usize) -> RunConfig {
+    let mut cfg = RunConfig {
+        env: "cartpole".into(),
+        n_envs: 8,
+        t: 4,
+        iters: 8,
+        seed: 7,
+        shards: 3,
+        sync_every: 2,
+        max_staleness,
+        ..Default::default()
+    };
+    cfg.chaos = Some(FaultPlan::parse(spec).expect(spec));
+    cfg.fault.tolerate = true;
+    // Tight deadlines keep the lost-frame recovery (probe + resend)
+    // exercised within test time.
+    cfg.fault.heartbeat_ms = 25;
+    cfg.fault.missed_heartbeats = 4;
+    cfg
+}
+
+/// Run one case to completion and apply the invariants every chaos run
+/// must satisfy, fault pattern regardless.
+fn soak(spec: &str, max_staleness: usize) {
+    let cfg = soak_cfg(spec, max_staleness);
+    let d = device(16);
+    let artifact = d.artifact(&cfg.env, cfg.n_envs, cfg.t).unwrap();
+    let report = AsyncShardTrainer::new(&d, &artifact, cfg)
+        .unwrap()
+        .run()
+        .unwrap_or_else(|e| panic!("{spec} staleness={max_staleness}: {e:#}"));
+    assert!(report.final_params.iter().all(|x| x.is_finite()),
+            "{spec} staleness={max_staleness}: non-finite params");
+    assert!(report.applied >= 1,
+            "{spec} staleness={max_staleness}: nothing applied");
+    assert!(report.version >= 1,
+            "{spec} staleness={max_staleness}: no versions published");
+    assert!(report.mean_return.is_finite(),
+            "{spec} staleness={max_staleness}: no surviving telemetry");
+}
+
+#[test]
+#[ignore = "chaos soak matrix — run explicitly (CI release job)"]
+fn soak_drop_matrix() {
+    for staleness in [0usize, 2] {
+        soak("seed=101,drop=0.15", staleness);
+        soak("seed=102,drop_to_shard=0.25", staleness);
+    }
+}
+
+#[test]
+#[ignore = "chaos soak matrix — run explicitly (CI release job)"]
+fn soak_delay_dup_reorder_matrix() {
+    for staleness in [0usize, 2] {
+        soak("seed=201,delay=0.3,delay_ms=2", staleness);
+        soak("seed=202,dup=0.2,reorder=0.2", staleness);
+        soak("seed=203,drop=0.1,delay=0.1,delay_ms=1,dup=0.1,reorder=0.1",
+             staleness);
+    }
+}
+
+#[test]
+#[ignore = "chaos soak matrix — run explicitly (CI release job)"]
+fn soak_kill_matrix() {
+    for staleness in [0usize, 2] {
+        for spec in ["seed=301,kill=1@2", "seed=302,kill=2@1",
+                     "seed=303,drop=0.1,kill=0@3"] {
+            let cfg = soak_cfg(spec, staleness);
+            let d = device(16);
+            let artifact =
+                d.artifact(&cfg.env, cfg.n_envs, cfg.t).unwrap();
+            let report = AsyncShardTrainer::new(&d, &artifact, cfg)
+                .unwrap()
+                .run()
+                .unwrap_or_else(|e| {
+                    panic!("{spec} staleness={staleness}: {e:#}")
+                });
+            assert_eq!(report.failed_shards.len(), 1,
+                       "{spec} staleness={staleness}: {:?}",
+                       report.failed_shards);
+            assert!(report.final_params.iter().all(|x| x.is_finite()),
+                    "{spec} staleness={staleness}");
+            assert!(report.mean_return.is_finite(),
+                    "{spec} staleness={staleness}");
+        }
+    }
+}
+
+/// Same plan + same seed twice: the chaos *decision stream* is seeded
+/// per edge, so the two runs inject faults at the same frame positions.
+/// Wall-clock still reaches delivery order under staleness >= 1, so the
+/// strongest end-to-end claim is at the BSP barrier: the surviving
+/// protocol outcome (versions, applied count, fleet losses) matches.
+#[test]
+#[ignore = "chaos soak matrix — run explicitly (CI release job)"]
+fn soak_same_seed_same_outcome_at_bsp() {
+    let run = || {
+        let cfg = soak_cfg("seed=401,kill=1@2", 0);
+        let d = device(16);
+        let artifact = d.artifact(&cfg.env, cfg.n_envs, cfg.t).unwrap();
+        AsyncShardTrainer::new(&d, &artifact, cfg).unwrap().run().unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.failed_shards, b.failed_shards);
+    assert_eq!(a.version, b.version);
+    assert_eq!(a.applied, b.applied);
+}

@@ -246,8 +246,8 @@ fn checkpoint_roundtrip_restores_params() {
     assert_eq!(ck.params, ck2.params);
 
     // arity mismatch is rejected
-    let bad = Checkpoint { tag: ck.tag.clone(), iter: 0,
-                           params: vec![0.0; 3] };
+    let bad = Checkpoint { tag: ck.tag.clone(), iter: 0, version: 0,
+                           rng: None, params: vec![0.0; 3] };
     assert!(tr2.restore(&bad).is_err());
     std::fs::remove_dir_all(&dir).ok();
 }
