@@ -12,9 +12,9 @@
 //! whole run is written as a JSON array to `BENCH_engine.json` at the
 //! repo root — the perf-trajectory baseline for future changes
 //! (`scripts/bench_gate.py` gates the `fused_rollout/*`, `gemm_tile/*`,
-//! `policy_forward/tiled/*`, per-env `env_step/*` and multi-shard
-//! `shard_scaling/{sync,async}/*` records against
-//! `BENCH_baseline.json`).
+//! `policy_forward/tiled/*`, per-env `env_step/*`, multi-shard
+//! `shard_scaling/{sync,async}/*` and inference-serving `serve/*`
+//! records against `BENCH_baseline.json`).
 //!
 //! Env overrides: `WARPSCI_BENCH_FAST=1` for a smoke run.
 
@@ -342,6 +342,33 @@ fn main() -> anyhow::Result<()> {
                     tr.run().unwrap();
                 });
             emit(&mut records, &r);
+        }
+    }
+
+    // micro-batched inference serving: closed-loop clients against the
+    // in-process policy server (each sample = every client playing
+    // cartpole end-to-end through the request queue) — the requests/s
+    // records behind the `serve/*` gate prefixes
+    {
+        use warpsci::harness::serve::drive_clients;
+        use warpsci::serve::{PolicyServer, ServeConfig};
+
+        let per_client = 64usize;
+        for clients in [1usize, 8, 64] {
+            let server = PolicyServer::start(ServeConfig {
+                envs: vec!["cartpole".into()],
+                ..ServeConfig::default()
+            })?;
+            let r = bench.run(
+                &format!("serve/cartpole/clients{clients}"),
+                (clients * per_client) as f64,
+                || {
+                    drive_clients(&server, "cartpole", clients,
+                                  per_client)
+                        .unwrap();
+                });
+            emit(&mut records, &r);
+            server.stop()?;
         }
     }
 

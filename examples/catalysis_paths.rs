@@ -18,7 +18,7 @@ use warpsci::envs::catalysis::{mb_energy, Catalysis, Mechanism,
                                MIN_PRODUCT};
 use warpsci::envs::CpuEnv;
 use warpsci::nn::mlp::Cache;
-use warpsci::nn::{Mlp, TiledPolicy};
+use warpsci::policy::{Policy, PolicySpec};
 use warpsci::runtime::{CpuDevice, GraphSet};
 use warpsci::store::Checkpoint;
 use warpsci::util::Pcg64;
@@ -55,32 +55,22 @@ fn train(device: &CpuDevice, mech: &str, iters: usize)
 /// Greedy rollout of the trained policy on the rust PES (argmax actions).
 fn replay(mech: Mechanism, ck: &Checkpoint) -> Result<()> {
     // rebuild the policy net from the checkpoint parameter vector
-    // (layout = models.PARAM_ORDER: w1,b1,w2,b2,wp,bp,wv,bv)
-    let (obs, hidden, acts) = (4usize, 64usize, 8usize);
-    let mut rng = Pcg64::new(0);
-    let mut mlp = Mlp::init(obs, hidden, acts, &mut rng);
-    let sizes = [obs * hidden, hidden, hidden * hidden, hidden,
-                 hidden * acts, acts, hidden, 1];
-    anyhow::ensure!(ck.params.len() == sizes.iter().sum::<usize>(),
-                    "unexpected checkpoint arity {}", ck.params.len());
-    let mut off = 0;
-    for (slot, size) in mlp.params_mut().into_iter().zip(sizes) {
-        slot.copy_from_slice(&ck.params[off..off + size]);
-        off += size;
-    }
+    // (layout = models.PARAM_ORDER, enforced by the facade)
+    let acts = 8usize;
+    let spec = PolicySpec::new(4, 64, acts);
+    let policy = Policy::from_checkpoint(ck, &spec)?;
 
     let mut env = Catalysis::new(mech);
     let mut prng = Pcg64::new(42);
     env.reset(&mut prng);
     env.perturb = 0.0; // canonical surface for the printed path
-    let tiled = TiledPolicy::new(&mlp);
     let mut cache = Cache::default();
     let mut path = vec![(env.x, env.y, env.energy())];
     for _ in 0..200 {
         // a single observation row is the same bytes column-major
         let mut o = [0f32; 4];
         env.write_obs(&mut o);
-        tiled.forward(&o, 1, &mut cache);
+        policy.forward_cols(&o, 1, &mut cache);
         let action = cache.logp[..acts]
             .iter()
             .enumerate()

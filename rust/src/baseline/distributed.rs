@@ -139,7 +139,7 @@ impl DistributedSystem {
             let policy = &mut w.policy;
             let bytes = &param_bytes;
             crate::util::Timer::time(&mut self.timer, "transfer", || {
-                deserialize_params_into(policy, bytes)
+                policy.update(|mlp| deserialize_params_into(mlp, bytes))
             })?;
         }
         // 2. roll-outs (the workers' compute phase)

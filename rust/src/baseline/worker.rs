@@ -13,25 +13,25 @@
 use anyhow::Result;
 
 use crate::engine::{BatchEngine, TrajectorySlices};
-use crate::nn::{Mlp, TiledPolicy};
+use crate::nn::Mlp;
+use crate::policy::Policy;
 
 use super::transfer::TrajectoryBatch;
 
 /// One worker with `n_envs` environment replicas.
 pub struct RolloutWorker {
     pub engine: BatchEngine,
-    pub policy: Mlp,
-    /// Kernel view of `policy`, re-derived per roll-out (the trainer
-    /// overwrites `policy` with every parameter broadcast).
-    tiled: TiledPolicy,
+    /// Local policy copy behind the [`Policy`] facade; the trainer
+    /// overwrites it with every parameter broadcast (via
+    /// [`Policy::update`], which keeps the kernel view in sync).
+    pub policy: Policy,
 }
 
 impl RolloutWorker {
     pub fn new(env: &str, n_envs: usize, policy: Mlp, seed: u64)
                -> Result<RolloutWorker> {
         let engine = BatchEngine::by_name(env, n_envs, 1, seed)?;
-        Ok(RolloutWorker { engine, tiled: TiledPolicy::new(&policy),
-                           policy })
+        Ok(RolloutWorker { engine, policy: Policy::from_mlp(policy) })
     }
 
     /// Simulate `t` steps in every env; auto-reset on done.
@@ -55,8 +55,8 @@ impl RolloutWorker {
             finished_lens: Vec::new(),
             finished_count: 0,
         };
-        self.tiled.refresh(&self.policy);
-        self.engine.fused_rollout(&self.tiled, t, Some(TrajectorySlices {
+        self.engine.fused_rollout(self.policy.tiled(), t,
+                                  Some(TrajectorySlices {
             obs: &mut batch.obs,
             actions: &mut batch.actions,
             rewards: &mut batch.rewards,

@@ -217,6 +217,64 @@ impl FaultPlan {
     }
 }
 
+/// Inference-serving knobs (`[serve]` table / `warpsci serve` flags).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServeOptions {
+    /// Flush a batch once it holds this many requests (`--max-batch`).
+    pub max_batch: usize,
+    /// Flush a batch this many microseconds after its oldest request
+    /// arrived; 0 = serve immediately (`--max-wait-us`).
+    pub max_wait_us: u64,
+    /// Minimum milliseconds between checkpoint-reload polls
+    /// (`--reload-poll-ms`).
+    pub reload_poll_ms: u64,
+    /// Concurrent demo/bench clients (`--clients`).
+    pub clients: usize,
+    /// Requests issued per client in the demo/bench loop
+    /// (`--requests`).
+    pub requests: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            max_batch: 64,
+            max_wait_us: 100,
+            reload_poll_ms: 50,
+            clients: 8,
+            requests: 512,
+        }
+    }
+}
+
+/// One view over `--flag value` style CLI arguments, so
+/// [`RunConfig::apply_overrides`] can merge file config and CLI flags
+/// without depending on the binary's argument parser.  Returns the raw
+/// string value for `key` (no `--` prefix) if the flag was passed.
+pub trait FlagSource {
+    fn flag(&self, key: &str) -> Option<&str>;
+}
+
+/// No flags at all — `RunConfig::load(&NoFlags)` is just file/defaults.
+pub struct NoFlags;
+
+impl FlagSource for NoFlags {
+    fn flag(&self, _key: &str) -> Option<&str> {
+        None
+    }
+}
+
+/// Parse an optional flag, keeping `default` when absent.
+pub fn parse_flag<T: std::str::FromStr>(flags: &dyn FlagSource, key: &str,
+                                        default: T) -> Result<T> {
+    match flags.flag(key) {
+        None => Ok(default),
+        Some(v) => v
+            .parse()
+            .map_err(|_| anyhow!("bad value for --{key}: {v}")),
+    }
+}
+
 /// A training / benchmark run description.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunConfig {
@@ -266,6 +324,8 @@ pub struct RunConfig {
     /// Resume an async run from the `latest` checkpoint in this
     /// directory (`--resume <dir>` / `[checkpoint] resume`).
     pub resume: Option<String>,
+    /// Inference-serving knobs (`warpsci serve` / `[serve]` table).
+    pub serve: ServeOptions,
 }
 
 impl Default for RunConfig {
@@ -290,6 +350,7 @@ impl Default for RunConfig {
             checkpoint_every: 0,
             checkpoint_dir: None,
             resume: None,
+            serve: ServeOptions::default(),
         }
     }
 }
@@ -381,10 +442,135 @@ impl RunConfig {
         if let Some(v) = doc.get("checkpoint.resume") {
             cfg.resume = Some(v.as_str()?.to_string());
         }
+        if let Some(v) = doc.get("serve.max_batch") {
+            cfg.serve.max_batch = (v.as_int()? as usize).max(1);
+        }
+        if let Some(v) = doc.get("serve.max_wait_us") {
+            cfg.serve.max_wait_us = v.as_int()? as u64;
+        }
+        if let Some(v) = doc.get("serve.reload_poll_ms") {
+            cfg.serve.reload_poll_ms = (v.as_int()? as u64).max(1);
+        }
+        if let Some(v) = doc.get("serve.clients") {
+            cfg.serve.clients = (v.as_int()? as usize).max(1);
+        }
+        if let Some(v) = doc.get("serve.requests") {
+            cfg.serve.requests = (v.as_int()? as usize).max(1);
+        }
         if cfg.n_envs == 0 || cfg.t == 0 {
             return Err(anyhow!("n_envs and t must be positive"));
         }
         Ok(cfg)
+    }
+
+    /// The one merge path every subcommand shares: load `--config`
+    /// (or defaults), overlay CLI flags, validate the cross-field
+    /// invariants.  `train`, `bench` and `serve` all resolve their
+    /// [`RunConfig`] through here, so a flag can never mean something
+    /// different per subcommand.
+    pub fn load(flags: &dyn FlagSource) -> Result<RunConfig> {
+        let mut cfg = match flags.flag("config") {
+            Some(path) => RunConfig::from_file(Path::new(path))?,
+            None => RunConfig::default(),
+        };
+        cfg.apply_overrides(flags)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Overlay CLI flags onto this config (flags win over file values;
+    /// absent flags leave the field alone).
+    pub fn apply_overrides(&mut self, flags: &dyn FlagSource)
+                           -> Result<()> {
+        if let Some(env) = flags.flag("env") {
+            if crate::envs::registry::find(env).is_none() {
+                return Err(anyhow!(
+                    "unknown env {:?} (known: {})", env,
+                    crate::envs::registry::known_names()));
+            }
+            self.env = env.to_string();
+        }
+        self.n_envs = parse_flag(flags, "n-envs", self.n_envs)?;
+        self.t = parse_flag(flags, "t", self.t)?;
+        self.iters = parse_flag(flags, "iters", self.iters)?;
+        self.seed = parse_flag(flags, "seed", self.seed)?;
+        self.shards = parse_flag(flags, "shards", self.shards)?;
+        self.sync_every = parse_flag(flags, "sync-every",
+                                     self.sync_every)?;
+        self.run_async = parse_flag(flags, "async", self.run_async)?;
+        self.max_staleness =
+            parse_flag(flags, "max-staleness", self.max_staleness)?;
+        self.threads = parse_flag(flags, "threads", self.threads)?;
+        self.metrics_every =
+            parse_flag(flags, "metrics-every", self.metrics_every)?;
+        if let Some(r) = flags.flag("target-return") {
+            self.target_return =
+                Some(r.parse().map_err(|_| {
+                    anyhow!("bad value for --target-return: {r}")
+                })?);
+        }
+        if let Some(p) = flags.flag("log-csv") {
+            self.log_csv = Some(p.to_string());
+        }
+        // Fault tolerance (async runs)
+        self.fault.heartbeat_ms =
+            parse_flag(flags, "heartbeat-ms", self.fault.heartbeat_ms)?;
+        self.fault.missed_heartbeats = parse_flag(
+            flags, "missed-heartbeats", self.fault.missed_heartbeats)?;
+        self.fault.tolerate =
+            parse_flag(flags, "tolerate-faults", self.fault.tolerate)?;
+        self.fault.max_rejoins =
+            parse_flag(flags, "max-rejoins", self.fault.max_rejoins)?;
+        if let Some(spec) = flags.flag("chaos") {
+            self.chaos = Some(FaultPlan::parse(spec).context("--chaos")?);
+        }
+        self.checkpoint_every =
+            parse_flag(flags, "checkpoint-every", self.checkpoint_every)?;
+        if let Some(d) = flags.flag("checkpoint-dir") {
+            self.checkpoint_dir = Some(d.to_string());
+        }
+        if let Some(d) = flags.flag("resume") {
+            self.resume = Some(d.to_string());
+        }
+        // Serving
+        self.serve.max_batch =
+            parse_flag(flags, "max-batch", self.serve.max_batch)?;
+        self.serve.max_wait_us =
+            parse_flag(flags, "max-wait-us", self.serve.max_wait_us)?;
+        self.serve.reload_poll_ms = parse_flag(
+            flags, "reload-poll-ms", self.serve.reload_poll_ms)?;
+        self.serve.clients =
+            parse_flag(flags, "clients", self.serve.clients)?;
+        self.serve.requests =
+            parse_flag(flags, "requests", self.serve.requests)?;
+        // `--checkpoint-dir` alone (async): periodic saves at the
+        // metrics cadence plus the final end-of-serve save.
+        if self.run_async && self.checkpoint_dir.is_some()
+            && self.checkpoint_every == 0 {
+            self.checkpoint_every = self.metrics_every.max(1);
+        }
+        Ok(())
+    }
+
+    /// Cross-field invariants shared by every subcommand.
+    pub fn validate(&self) -> Result<()> {
+        if self.n_envs == 0 || self.t == 0 {
+            return Err(anyhow!("n_envs and t must be positive"));
+        }
+        if self.serve.max_batch == 0 {
+            return Err(anyhow!("serve max_batch must be >= 1"));
+        }
+        if !self.run_async {
+            anyhow::ensure!(
+                self.chaos.is_none(),
+                "--chaos injects faults into the async transport — \
+                 add --async");
+            anyhow::ensure!(
+                self.resume.is_none() && self.checkpoint_every == 0,
+                "--resume/--checkpoint-every drive the async trainer's \
+                 crash-recovery path — add --async");
+        }
+        Ok(())
     }
 
     /// Assemble a [`FaultPlan`] from the `[chaos]` table: `spec` parses
@@ -547,6 +733,89 @@ resume = "out/prev"
     #[test]
     fn zero_envs_rejected() {
         assert!(RunConfig::from_toml_str("[env]\nn_envs = 0\n").is_err());
+    }
+
+    struct MapFlags(std::collections::BTreeMap<String, String>);
+
+    impl MapFlags {
+        fn of(pairs: &[(&str, &str)]) -> MapFlags {
+            MapFlags(pairs.iter()
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect())
+        }
+    }
+
+    impl FlagSource for MapFlags {
+        fn flag(&self, key: &str) -> Option<&str> {
+            self.0.get(key).map(|s| s.as_str())
+        }
+    }
+
+    #[test]
+    fn serve_table_parses() {
+        let text = r#"
+[serve]
+max_batch = 16
+max_wait_us = 250
+reload_poll_ms = 10
+clients = 4
+requests = 64
+"#;
+        let cfg = RunConfig::from_toml_str(text).unwrap();
+        assert_eq!(cfg.serve.max_batch, 16);
+        assert_eq!(cfg.serve.max_wait_us, 250);
+        assert_eq!(cfg.serve.reload_poll_ms, 10);
+        assert_eq!(cfg.serve.clients, 4);
+        assert_eq!(cfg.serve.requests, 64);
+        // no table -> defaults
+        let cfg = RunConfig::from_toml_str("").unwrap();
+        assert_eq!(cfg.serve, ServeOptions::default());
+    }
+
+    #[test]
+    fn flags_override_defaults_through_shared_path() {
+        let flags = MapFlags::of(&[
+            ("env", "acrobot"),
+            ("n-envs", "64"),
+            ("seed", "9"),
+            ("max-batch", "8"),
+            ("max-wait-us", "0"),
+            ("clients", "2"),
+        ]);
+        let cfg = RunConfig::load(&flags).unwrap();
+        assert_eq!(cfg.env, "acrobot");
+        assert_eq!(cfg.n_envs, 64);
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.serve.max_batch, 8);
+        assert_eq!(cfg.serve.max_wait_us, 0);
+        assert_eq!(cfg.serve.clients, 2);
+        // untouched fields keep defaults
+        assert_eq!(cfg.t, RunConfig::default().t);
+        assert_eq!(cfg.serve.requests, ServeOptions::default().requests);
+    }
+
+    #[test]
+    fn flag_overrides_validate_like_toml() {
+        // unknown env rejected with the registry listing
+        let err = RunConfig::load(&MapFlags::of(&[("env", "warp")]))
+            .unwrap_err().to_string();
+        assert!(err.contains("cartpole"), "{err}");
+        // unparsable value names the flag
+        let err = RunConfig::load(&MapFlags::of(&[("n-envs", "lots")]))
+            .unwrap_err().to_string();
+        assert!(err.contains("n-envs"), "{err}");
+        // sync + chaos is a cross-field validation error
+        let err = RunConfig::load(
+            &MapFlags::of(&[("chaos", "drop=0.1")]))
+            .unwrap_err().to_string();
+        assert!(err.contains("--async"), "{err}");
+        // sync + checkpoint-every likewise
+        assert!(RunConfig::load(
+            &MapFlags::of(&[("checkpoint-every", "4")])).is_err());
+        // async + checkpoint-dir defaults the cadence on
+        let cfg = RunConfig::load(&MapFlags::of(&[
+            ("async", "true"), ("checkpoint-dir", "/tmp/ck")])).unwrap();
+        assert_eq!(cfg.checkpoint_every, cfg.metrics_every.max(1));
     }
 
     #[test]

@@ -22,8 +22,9 @@ use anyhow::Result;
 
 use crate::engine::{BatchEngine, TrajectorySlices};
 use crate::nn::mlp::Cache;
-use crate::nn::{Adam, Mlp, TiledPolicy};
-use crate::util::{Pcg64, Timer};
+use crate::nn::{Adam, Mlp};
+use crate::policy::{Policy, PolicySpec};
+use crate::util::Timer;
 
 use super::backend::Backend;
 use super::metrics::MetricRow;
@@ -91,15 +92,14 @@ impl CpuEngineConfig {
     }
 }
 
-/// Backend over [`BatchEngine`] + [`Mlp`] + [`Adam`].
+/// Backend over [`BatchEngine`] + [`Policy`] + [`Adam`].
 pub struct CpuEngine {
     pub cfg: CpuEngineConfig,
     engine: BatchEngine,
-    policy: Mlp,
-    /// Kernel-ready transposed-weight view of `policy`, refreshed at
-    /// the top of every iteration (i.e. after every Adam update) so it
-    /// can never go stale.
-    tiled: TiledPolicy,
+    /// Master parameters plus the kernel-ready transposed view, kept in
+    /// sync by the facade: [`Policy::update`] refreshes the view after
+    /// every Adam step, so the workers can never read stale weights.
+    policy: Policy,
     adam: Adam,
     cache: Cache,
     boot_cache: Cache,
@@ -132,18 +132,18 @@ impl CpuEngine {
         let threads = cfg.resolved_threads();
         let engine = BatchEngine::new(kernel, cfg.n_envs, threads,
                                       cfg.seed);
-        // fixed streams sit at the top of the id space so they can never
-        // collide with the engine's per-lane env/action stream ranges
+        // Policy::init draws on the reserved stream at the top of the
+        // id space (`policy::INIT_STREAM`), so it can never collide
+        // with the engine's per-lane env/action stream ranges
         // (`u64::MAX - 2` belonged to the retired single-stream action
         // sampler; action sampling is per-lane now, see
         // `engine::ACTION_STREAM_BASE`)
-        let mut init_rng = Pcg64::with_stream(cfg.seed, u64::MAX - 1);
-        let policy = Mlp::init(engine.obs_dim(), cfg.hidden,
-                               engine.n_actions(), &mut init_rng);
+        let spec = PolicySpec::new(engine.obs_dim(), cfg.hidden,
+                                   engine.n_actions());
+        let policy = Policy::init(&spec, cfg.seed);
         Ok(CpuEngine {
-            adam: Adam::new(cfg.lr, &policy.param_shapes()),
+            adam: Adam::new(cfg.lr, &policy.mlp().param_shapes()),
             engine,
-            tiled: TiledPolicy::new(&policy),
             policy,
             cache: Cache::default(),
             boot_cache: Cache::default(),
@@ -179,8 +179,13 @@ impl CpuEngine {
         &self.engine
     }
 
-    /// Current policy (tests, greedy replay).
+    /// Current policy parameters (tests, greedy replay).
     pub fn policy(&self) -> &Mlp {
+        self.policy.mlp()
+    }
+
+    /// The full policy facade (checkpoint export, serving handoff).
+    pub fn policy_facade(&self) -> &Policy {
         &self.policy
     }
 
@@ -215,8 +220,9 @@ impl CpuEngine {
         // trainer forward over every transition + bootstrap values —
         // both straight over the engine's column-major SoA buffers, no
         // transpose or copy anywhere
-        self.tiled.forward(&self.traj_obs, total, &mut self.cache);
-        self.tiled.forward(&self.engine.obs, rows, &mut self.boot_cache);
+        self.policy.forward_cols(&self.traj_obs, total, &mut self.cache);
+        self.policy.forward_cols(&self.engine.obs, rows,
+                                 &mut self.boot_cache);
 
         let returns = crate::nn::nstep_returns(
             &self.traj_rewards, &self.traj_dones, &self.boot_cache.value,
@@ -224,8 +230,8 @@ impl CpuEngine {
         let adv =
             crate::nn::normalized_advantages(&returns, &self.cache.value);
 
-        let mut grads = self.policy.zeros_like();
-        let (pi_loss, v_loss, entropy) = self.policy.backward_a2c(
+        let mut grads = self.policy.mlp().zeros_like();
+        let (pi_loss, v_loss, entropy) = self.policy.mlp().backward_a2c(
             &self.traj_obs, &self.cache, &self.traj_actions, &adv,
             &returns, self.cfg.vf_coef, self.cfg.ent_coef, &mut grads);
         let gn = grads.global_norm();
@@ -233,7 +239,9 @@ impl CpuEngine {
             grads.scale(self.cfg.max_grad_norm / gn);
         }
         let gviews = grads.views();
-        self.adam.step(&mut self.policy.params_mut(), &gviews);
+        let adam = &mut self.adam;
+        self.policy
+            .update(|mlp| adam.step(&mut mlp.params_mut(), &gviews));
 
         self.pi_loss = pi_loss as f64;
         self.v_loss = v_loss as f64;
@@ -250,15 +258,14 @@ impl CpuEngine {
         let n_envs = self.engine.n_envs();
         let rows = n_envs * self.engine.n_agents();
         let od = self.engine.obs_dim();
-        // re-derive the transposed kernel layouts from the (possibly
-        // just-updated) policy before the workers touch them
-        self.tiled.refresh(&self.policy);
+        // the facade refreshed the transposed kernel layouts when the
+        // Adam step ran, so the workers always read current weights
         let phases = if train {
             self.traj_obs.resize(t * rows * od, 0.0);
             self.traj_actions.resize(t * rows, 0);
             self.traj_rewards.resize(t * rows, 0.0);
             self.traj_dones.resize(t * n_envs, 0.0);
-            self.engine.fused_rollout(&self.tiled, t,
+            self.engine.fused_rollout(self.policy.tiled(), t,
                                       Some(TrajectorySlices {
                                           obs: &mut self.traj_obs,
                                           actions: &mut self.traj_actions,
@@ -266,7 +273,7 @@ impl CpuEngine {
                                           dones: &mut self.traj_dones,
                                       }))
         } else {
-            self.engine.fused_rollout(&self.tiled, t, None)
+            self.engine.fused_rollout(self.policy.tiled(), t, None)
         };
         self.timer.add("inference",
                        Duration::from_secs_f64(phases.inference_secs));

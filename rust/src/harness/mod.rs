@@ -17,6 +17,7 @@ pub mod fig3;
 pub mod fig4;
 pub mod headline;
 pub mod scaling;
+pub mod serve;
 
 use std::path::PathBuf;
 
@@ -50,6 +51,27 @@ impl Default for HarnessOpts {
             iters: 10,
             threads: 0,
         }
+    }
+}
+
+impl HarnessOpts {
+    /// Build from CLI flags (`--out-dir`, `--budget-secs`, `--seeds`,
+    /// `--iters`, `--threads`) through the same [`FlagSource`] path the
+    /// run config uses.
+    ///
+    /// [`FlagSource`]: crate::config::FlagSource
+    pub fn from_flags(flags: &dyn crate::config::FlagSource)
+                      -> Result<HarnessOpts> {
+        use crate::config::parse_flag;
+        let d = HarnessOpts::default();
+        Ok(HarnessOpts {
+            artifacts_root: d.artifacts_root,
+            out_dir: flags.flag("out-dir").unwrap_or("results").into(),
+            budget_secs: parse_flag(flags, "budget-secs", d.budget_secs)?,
+            seeds: parse_flag(flags, "seeds", d.seeds)?,
+            iters: parse_flag(flags, "iters", d.iters)?,
+            threads: parse_flag(flags, "threads", d.threads)?,
+        })
     }
 }
 

@@ -1,0 +1,121 @@
+//! Serving benchmark: closed-loop latency/throughput at 1/8/64 clients.
+//!
+//! Each client thread owns one CPU environment and plays it through the
+//! policy server — observe, submit, wait for the action, step — so the
+//! measured p50/p99 is the end-to-end enqueue-to-response time under a
+//! realistic closed loop, not an open-loop flood.  The sweep shows the
+//! micro-batching trade directly: one client pays the `max_wait_us`
+//! coalescing window, many clients amortize it into larger batches and
+//! higher aggregate requests/s.
+
+use anyhow::Result;
+
+use crate::envs::make_cpu_env;
+use crate::serve::{ActionMode, Frontend, InferRequest, PolicyServer,
+                   ServeConfig, ServeReport};
+use crate::util::csv::CsvWriter;
+use crate::util::Pcg64;
+
+use super::HarnessOpts;
+
+/// Requests each client submits per sweep point.
+pub const REQUESTS_PER_CLIENT: usize = 256;
+
+/// One closed-loop client: play `env` for `requests` steps (auto-reset
+/// on episode end), sampling actions through the server on a private
+/// RNG stream.  Returns the number of answered requests.
+fn run_client(client: &dyn Frontend, env_name: &str, requests: usize,
+              stream: u64) -> Result<usize> {
+    let mut env = make_cpu_env(env_name)?;
+    let mut rng = Pcg64::with_stream(9, stream);
+    env.reset(&mut rng);
+    let (od, na) = (env.obs_dim(), env.n_agents());
+    let mut obs = vec![0f32; na * od];
+    let mut rewards = vec![0f32; na];
+    let mut answered = 0usize;
+    for i in 0..requests {
+        env.write_obs(&mut obs);
+        // agent 0's row drives the loop; extra agents just ride along
+        let resp = client.infer(InferRequest {
+            env: env_name.to_string(),
+            obs: obs[..od].to_vec(),
+            mode: ActionMode::Sample {
+                stream: stream.wrapping_mul(1 << 20)
+                    .wrapping_add(i as u64),
+            },
+        })?;
+        let actions = vec![resp.action as usize; na];
+        if env.step(&actions, &mut rng, &mut rewards) {
+            env.reset(&mut rng);
+        }
+        answered += 1;
+    }
+    Ok(answered)
+}
+
+/// Drive `clients` closed-loop client threads against a running
+/// server, `requests_per_client` requests each (the `warpsci serve`
+/// demo and the bench sweep share this loop).
+pub fn drive_clients(server: &PolicyServer, env: &str, clients: usize,
+                     requests_per_client: usize) -> Result<()> {
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::with_capacity(clients);
+        for c in 0..clients {
+            let client = server.client();
+            handles.push(scope.spawn(move || {
+                run_client(&client, env, requests_per_client, c as u64)
+            }));
+        }
+        for h in handles {
+            let answered = h.join()
+                .map_err(|_| anyhow::anyhow!("serve client panicked"))??;
+            anyhow::ensure!(answered == requests_per_client,
+                            "client answered {answered} of \
+                             {requests_per_client}");
+        }
+        Ok(())
+    })
+}
+
+/// Run one sweep point: `clients` closed-loop threads against a fresh
+/// server, `REQUESTS_PER_CLIENT` requests each.
+pub fn serve_point(env: &str, clients: usize) -> Result<ServeReport> {
+    let cfg = ServeConfig {
+        envs: vec![env.to_string()],
+        ..ServeConfig::default()
+    };
+    let server = PolicyServer::start(cfg)?;
+    drive_clients(&server, env, clients, REQUESTS_PER_CLIENT)?;
+    server.stop()
+}
+
+/// The `warpsci bench serve` entry point: sweep the client counts,
+/// print the latency table and write `serve_latency.csv`.
+pub fn serve_bench(opts: &HarnessOpts, env: &str, client_counts: &[usize])
+                   -> Result<()> {
+    let mut csv = CsvWriter::create(
+        &opts.out_dir.join("serve_latency.csv"),
+        &["env", "clients", "requests", "wall_secs", "req_per_sec",
+          "p50_us", "p95_us", "p99_us", "max_us", "mean_batch"],
+    )?;
+    println!("== serving: {env}, closed loop, {} requests/client ==",
+             REQUESTS_PER_CLIENT);
+    println!("{:>8} {:>10} {:>12} {:>10} {:>10} {:>10} {:>11}",
+             "clients", "requests", "req/s", "p50 us", "p95 us",
+             "p99 us", "mean batch");
+    for &clients in client_counts {
+        let r = serve_point(env, clients)?;
+        println!("{clients:>8} {:>10} {:>12.0} {:>10.0} {:>10.0} \
+                  {:>10.0} {:>11.1}",
+                 r.requests, r.requests_per_sec, r.p50_us, r.p95_us,
+                 r.p99_us, r.mean_batch);
+        csv.row(&[env.to_string(), clients.to_string(),
+                  r.requests.to_string(), format!("{:.4}", r.wall_secs),
+                  format!("{:.1}", r.requests_per_sec),
+                  format!("{:.1}", r.p50_us), format!("{:.1}", r.p95_us),
+                  format!("{:.1}", r.p99_us), format!("{:.1}", r.max_us),
+                  format!("{:.2}", r.mean_batch)])?;
+    }
+    csv.flush()?;
+    Ok(())
+}

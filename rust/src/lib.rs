@@ -37,7 +37,9 @@ pub mod engine;
 pub mod envs;
 pub mod harness;
 pub mod nn;
+pub mod policy;
 pub mod runtime;
+pub mod serve;
 pub mod store;
 pub mod util;
 

@@ -16,8 +16,6 @@
 //!
 //! Python never runs here: artifacts are produced once by `make artifacts`.
 
-use std::path::PathBuf;
-
 use anyhow::{bail, Context, Result};
 
 use warpsci::config::RunConfig;
@@ -60,15 +58,13 @@ impl Args {
     fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
+}
 
-    fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T)
-                                       -> Result<T> {
-        match self.get(key) {
-            None => Ok(default),
-            Some(v) => v
-                .parse()
-                .map_err(|_| anyhow::anyhow!("bad value for --{key}: {v}")),
-        }
+/// The shared CLI-flag <-> TOML merge path (`RunConfig::load`,
+/// `HarnessOpts::from_flags`) reads flags through this.
+impl warpsci::config::FlagSource for Args {
+    fn flag(&self, key: &str) -> Option<&str> {
+        self.get(key)
     }
 }
 
@@ -87,10 +83,16 @@ USAGE:
                    reorder=0.05,kill=1@3  (suffix _to_server/_to_shard
                    for per-direction rates; async runs only)
   warpsci bench <fig2a|fig2b|fig2c|fig3|fig3-scaling|fig4|headline|
-                 shard-scaling|ablation-transfer|ablation-kernel|
+                 shard-scaling|serve|ablation-transfer|ablation-kernel|
                  ablation-estimator|all>
                 [--budget-secs S] [--seeds N] [--iters K] [--threads P]
                 [--out-dir d]
+  warpsci serve [--env cartpole] [--seed S] [--max-batch N]
+                [--max-wait-us US] [--checkpoint-dir d]
+                [--reload-poll-ms MS] [--clients C] [--requests R]
+                (in-process demo: C closed-loop clients against the
+                 micro-batching policy server, hot-reloading checkpoints
+                 from --checkpoint-dir)
   warpsci envs
   warpsci list
   warpsci info <tag>
@@ -115,6 +117,7 @@ fn run(argv: &[String]) -> Result<()> {
     match cmd {
         "train" => cmd_train(&args),
         "bench" => cmd_bench(&args),
+        "serve" => cmd_serve(&args),
         "envs" => cmd_envs(),
         "list" => cmd_list(),
         "info" => cmd_info(&args),
@@ -127,78 +130,17 @@ fn run(argv: &[String]) -> Result<()> {
     }
 }
 
-fn parse_run_config(args: &Args) -> Result<RunConfig> {
-    let mut cfg = match args.get("config") {
-        Some(path) => RunConfig::from_file(std::path::Path::new(path))?,
-        None => RunConfig::default(),
-    };
-    if let Some(env) = args.get("env") {
-        cfg.env = env.to_string();
-    }
-    cfg.n_envs = args.get_parse("n-envs", cfg.n_envs)?;
-    cfg.t = args.get_parse("t", cfg.t)?;
-    cfg.iters = args.get_parse("iters", cfg.iters)?;
-    cfg.seed = args.get_parse("seed", cfg.seed)?;
-    cfg.shards = args.get_parse("shards", cfg.shards)?;
-    cfg.sync_every = args.get_parse("sync-every", cfg.sync_every)?;
-    cfg.run_async = args.get_parse("async", cfg.run_async)?;
-    cfg.max_staleness = args.get_parse("max-staleness", cfg.max_staleness)?;
-    cfg.threads = args.get_parse("threads", cfg.threads)?;
-    cfg.metrics_every = args.get_parse("metrics-every", cfg.metrics_every)?;
-    if let Some(r) = args.get("target-return") {
-        cfg.target_return = Some(r.parse().context("--target-return")?);
-    }
-    if let Some(p) = args.get("log-csv") {
-        cfg.log_csv = Some(p.to_string());
-    }
-    // Fault tolerance (async runs)
-    cfg.fault.heartbeat_ms =
-        args.get_parse("heartbeat-ms", cfg.fault.heartbeat_ms)?;
-    cfg.fault.missed_heartbeats =
-        args.get_parse("missed-heartbeats", cfg.fault.missed_heartbeats)?;
-    cfg.fault.tolerate =
-        args.get_parse("tolerate-faults", cfg.fault.tolerate)?;
-    cfg.fault.max_rejoins =
-        args.get_parse("max-rejoins", cfg.fault.max_rejoins)?;
-    if let Some(spec) = args.get("chaos") {
-        cfg.chaos = Some(warpsci::config::FaultPlan::parse(spec)
-            .context("--chaos")?);
-    }
-    cfg.checkpoint_every =
-        args.get_parse("checkpoint-every", cfg.checkpoint_every)?;
-    if let Some(d) = args.get("checkpoint-dir") {
-        cfg.checkpoint_dir = Some(d.to_string());
-    }
-    if let Some(d) = args.get("resume") {
-        cfg.resume = Some(d.to_string());
-    }
-    if !cfg.run_async {
-        anyhow::ensure!(cfg.chaos.is_none(),
-            "--chaos injects faults into the async transport — add --async");
-        anyhow::ensure!(cfg.resume.is_none() && cfg.checkpoint_every == 0,
-            "--resume/--checkpoint-every drive the async trainer's \
-             crash-recovery path — add --async");
-    }
-    // `--checkpoint-dir` alone (async): periodic saves at the metrics
-    // cadence plus the final end-of-serve save.
-    if cfg.run_async && cfg.checkpoint_dir.is_some()
-        && cfg.checkpoint_every == 0 {
-        cfg.checkpoint_every = cfg.metrics_every.max(1);
-    }
-    Ok(cfg)
-}
-
 #[cfg(not(feature = "pjrt"))]
 fn cmd_train(args: &Args) -> Result<()> {
     use warpsci::coordinator::{Backend, CpuEngine, CpuEngineConfig};
     use warpsci::runtime::CpuDevice;
 
-    let cfg = parse_run_config(args)?;
-    if cfg.run_async || cfg.shards > 1 || args.get("checkpoint-dir").is_some() {
+    let cfg = RunConfig::load(args)?;
+    if cfg.run_async || cfg.shards > 1 || cfg.checkpoint_dir.is_some() {
         // the compiled-graph path: multi-shard orchestration and
         // checkpointing run over the in-process CPU device
         if cfg.shards > 1 && !cfg.run_async
-            && args.get("checkpoint-dir").is_some() {
+            && cfg.checkpoint_dir.is_some() {
             bail!("--checkpoint-dir is not supported with the synchronous \
                    --shards > 1 trainer (use --async, which checkpoints \
                    through the parameter server)");
@@ -217,8 +159,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         if cfg.shards > 1 {
             return train_sharded(&device, &artifact, cfg);
         }
-        return train_single(&device, artifact, cfg,
-                            args.get("checkpoint-dir"));
+        let ckpt = cfg.checkpoint_dir.clone();
+        return train_single(&device, artifact, cfg, ckpt.as_deref());
     }
     let ecfg = CpuEngineConfig {
         threads: cfg.threads,
@@ -275,7 +217,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_train(args: &Args) -> Result<()> {
     use warpsci::runtime::Device;
 
-    let cfg = parse_run_config(args)?;
+    let cfg = RunConfig::load(args)?;
     let root = warpsci::try_artifacts_dir()?;
     let tag = cfg.artifact_tag();
     println!("loading artifact {tag} from {}", root.display());
@@ -285,7 +227,7 @@ fn cmd_train(args: &Args) -> Result<()> {
              warpsci::runtime::DeviceBackend::platform(&device));
 
     if cfg.shards > 1 || cfg.run_async {
-        if !cfg.run_async && args.get("checkpoint-dir").is_some() {
+        if !cfg.run_async && cfg.checkpoint_dir.is_some() {
             bail!("--checkpoint-dir is not supported with the synchronous \
                    --shards > 1 trainer (use --async, which checkpoints \
                    through the parameter server)");
@@ -295,7 +237,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
         return train_sharded(&device, &artifact, cfg);
     }
-    train_single(&device, artifact, cfg, args.get("checkpoint-dir"))
+    let ckpt = cfg.checkpoint_dir.clone();
+    train_single(&device, artifact, cfg, ckpt.as_deref())
 }
 
 /// Single-shard compiled-graph training, on any device backend.
@@ -429,21 +372,16 @@ where
     Ok(())
 }
 
+/// Client counts swept by `warpsci bench serve`.
+const SERVE_CLIENT_LEVELS: [usize; 3] = [1, 8, 64];
+
 fn cmd_bench(args: &Args) -> Result<()> {
     let exp = args
         .positional
         .first()
         .context("bench needs an experiment id (see --help)")?
         .clone();
-    let opts = HarnessOpts {
-        artifacts_root: warpsci::artifacts_dir(),
-        out_dir: PathBuf::from(
-            args.get("out-dir").unwrap_or("results")),
-        budget_secs: args.get_parse("budget-secs", 20.0)?,
-        seeds: args.get_parse("seeds", 3)?,
-        iters: args.get_parse("iters", 10)?,
-        threads: args.get_parse("threads", 0)?,
-    };
+    let opts = HarnessOpts::from_flags(args)?;
     std::fs::create_dir_all(&opts.out_dir).ok();
     const FIG2A_LEVELS: [usize; 4] = [64, 256, 1024, 4096];
     const ECON_LEVELS: [usize; 4] = [15, 60, 250, 1000];
@@ -464,6 +402,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "headline" => harness::headline::headline(&opts)?,
         "shard-scaling" => harness::scaling::shard_scaling(
             &opts, "cartpole", &[1, 2, 3, 4, 8])?,
+        "serve" => harness::serve::serve_bench(
+            &opts, args.get("env").unwrap_or("cartpole"),
+            &SERVE_CLIENT_LEVELS)?,
         "all" => {
             harness::headline::headline(&opts)?;
             harness::fig2::fig2a(&opts, &["cartpole", "acrobot"],
@@ -504,6 +445,33 @@ fn cmd_bench_ablation(opts: &HarnessOpts, args: &Args, exp: &str)
         }
         other => bail!("unknown experiment {other:?}\n{USAGE}"),
     }
+}
+
+/// In-process serving demo: start the micro-batching policy server for
+/// one env and drive it with closed-loop clients (play the env with
+/// the served actions), printing the latency/throughput report.  With
+/// `--checkpoint-dir`, hot-reloads new checkpoints while serving.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use warpsci::serve::{PolicyServer, ServeConfig};
+
+    let cfg = RunConfig::load(args)?;
+    let scfg = ServeConfig::from_run(&cfg);
+    let clients = cfg.serve.clients.max(1);
+    let per_client = (cfg.serve.requests / clients).max(1);
+    println!("serving {}: max_batch {}, max_wait {}us{}",
+             cfg.env, scfg.max_batch, scfg.max_wait_us,
+             match &scfg.checkpoint_dir {
+                 Some(d) => format!(", hot-reloading from {}",
+                                    d.display()),
+                 None => ", seed-initialized params".to_string(),
+             });
+    let server = PolicyServer::start(scfg)?;
+    println!("{clients} closed-loop clients x {per_client} requests ...");
+    harness::serve::drive_clients(&server, &cfg.env, clients,
+                                  per_client)?;
+    let report = server.stop()?;
+    println!("{}", report.summary());
+    Ok(())
 }
 
 /// Print the environment registry: every trainable scenario with its

@@ -103,6 +103,14 @@ pub struct SampleScratch {
 /// parameter update — the transpose is O(params), negligible next to
 /// one forward over a shard, and refreshing per update keeps the view
 /// from ever going stale.
+///
+/// **Migration note:** code above the kernel layer should not hold a
+/// raw `TiledPolicy` next to its `Mlp` and hand-call `refresh` — use
+/// [`crate::policy::Policy`], which owns both and refreshes the view on
+/// every update by construction.  Raw construction remains the right
+/// tool for kernel-level code: the engine's fused roll-out takes
+/// `&TiledPolicy` directly and the bit-exactness tests/benches build
+/// one per tile configuration.
 #[derive(Debug, Default, Clone)]
 pub struct TiledPolicy {
     pub obs: usize,

@@ -14,7 +14,7 @@ pub mod kernels;
 pub mod mlp;
 
 pub use adam::Adam;
-pub use mlp::{Mlp, MlpGrads, SampleScratch, TiledPolicy};
+pub use mlp::{Cache, Mlp, MlpGrads, RefCache, SampleScratch, TiledPolicy};
 
 /// Reverse-time n-step returns over a `[step][env][agent]` batch.
 ///

@@ -1,0 +1,348 @@
+//! `Policy` — one facade over the scattered policy-construction paths.
+//!
+//! Before this module, every call site that wanted a usable policy had
+//! to wire three layers together by hand: look the environment up in
+//! [`crate::envs::registry`] for dims, seed an [`Mlp`] (or unflatten a
+//! [`Checkpoint`] parameter vector into one, shape by shape), then
+//! build and [`TiledPolicy::refresh`] the transposed inference view —
+//! and keep view and master in sync after every update.  The trainer,
+//! the CPU baseline, the examples and the serving layer each repeated
+//! that dance with slightly different bugs available.
+//!
+//! [`Policy`] owns the `Mlp` master copy *and* its tiled view and keeps
+//! them in sync by construction:
+//!
+//! * [`Policy::init`] — seeded init from a [`PolicySpec`] (bit-identical
+//!   to the trainer's historical init stream);
+//! * [`Policy::load`] / [`Policy::from_checkpoint`] — restore from a
+//!   [`Checkpoint`], validating the parameter arity against the spec;
+//! * [`Policy::forward_cols`] / [`Policy::sample_actions_lanes`] —
+//!   inference over the always-fresh tiled view;
+//! * [`Policy::update`] — the only mutable access to the `Mlp`; the
+//!   tiled view is refreshed when the closure returns, so it can never
+//!   go stale.
+//!
+//! # Migrating from raw `TiledPolicy`
+//!
+//! Old call sites held an `Mlp` plus a `TiledPolicy` side by side and
+//! manually called `refresh` after every optimizer step or parameter
+//! broadcast.  New code holds one [`Policy`]:
+//!
+//! ```text
+//! // before                                // after
+//! let mlp = Mlp::init(o, h, a, &mut rng);  let p = Policy::init(&spec, seed);
+//! let mut t = TiledPolicy::new(&mlp);      p.forward_cols(x, n, &mut cache);
+//! t.forward(x, n, &mut cache);             p.update(|mlp| adam.step(..));
+//! adam.step(&mut mlp.params_mut(), ..);    // view refreshed on return
+//! t.refresh(&mlp);
+//! ```
+//!
+//! `TiledPolicy` stays public for kernel-level code (the engine's fused
+//! roll-out takes `&TiledPolicy` directly, and the bit-exactness tests
+//! construct it raw); everything above the kernels should go through
+//! this facade.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::envs::registry;
+use crate::nn::{Cache, Mlp, SampleScratch, TiledPolicy};
+use crate::store::Checkpoint;
+use crate::util::Pcg64;
+
+/// Hidden width shared by every trainer default.
+pub const DEFAULT_HIDDEN: usize = 64;
+
+/// Reserved [`Pcg64`] stream for policy initialization — distinct from
+/// every per-lane env/action stream (lane streams count up from 0, this
+/// counts down from the top).  Matches the trainer's historical init
+/// stream, so `Policy::init` is bit-identical to the params
+/// `CpuEngine` has always started from.
+pub const INIT_STREAM: u64 = u64::MAX - 1;
+
+/// Network shape: everything needed to init or validate a policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PolicySpec {
+    /// Per-agent observation width (input features).
+    pub obs_dim: usize,
+    /// Hidden width of both tanh layers.
+    pub hidden: usize,
+    /// Discrete action count (policy-head outputs).
+    pub n_actions: usize,
+}
+
+impl PolicySpec {
+    pub fn new(obs_dim: usize, hidden: usize, n_actions: usize)
+               -> PolicySpec {
+        PolicySpec { obs_dim, hidden, n_actions }
+    }
+
+    /// Spec for a registered environment (dims from
+    /// [`crate::envs::registry`], [`DEFAULT_HIDDEN`] hidden width).
+    pub fn for_env(name: &str) -> Result<PolicySpec> {
+        Self::for_env_hidden(name, DEFAULT_HIDDEN)
+    }
+
+    /// [`PolicySpec::for_env`] with an explicit hidden width.
+    pub fn for_env_hidden(name: &str, hidden: usize) -> Result<PolicySpec> {
+        let spec = registry::find(name).with_context(|| {
+            format!("unknown env '{name}' (known: {})",
+                    registry::known_names())
+        })?;
+        Ok(PolicySpec::new(spec.obs_dim, hidden, spec.n_actions))
+    }
+
+    /// Flat parameter lengths in [`Mlp::params_mut`] order
+    /// (w1, b1, w2, b2, wp, bp, wv, bv).
+    pub fn shapes(&self) -> [usize; 8] {
+        let (o, h, a) = (self.obs_dim, self.hidden, self.n_actions);
+        [o * h, h, h * h, h, h * a, a, h, 1]
+    }
+
+    /// Total flat parameter count.
+    pub fn param_count(&self) -> usize {
+        self.shapes().iter().sum()
+    }
+}
+
+/// An inference-ready policy: the [`Mlp`] master parameters plus the
+/// transposed [`TiledPolicy`] view, kept in sync by construction (see
+/// the module docs for the migration story).
+#[derive(Debug, Clone)]
+pub struct Policy {
+    spec: PolicySpec,
+    mlp: Mlp,
+    tiled: TiledPolicy,
+}
+
+impl Policy {
+    /// Seeded initialization on the reserved [`INIT_STREAM`] — for a
+    /// given `(spec, seed)` this reproduces the exact parameters the
+    /// trainer has always started from.
+    pub fn init(spec: &PolicySpec, seed: u64) -> Policy {
+        let mut rng = Pcg64::with_stream(seed, INIT_STREAM);
+        let mlp = Mlp::init(spec.obs_dim, spec.hidden, spec.n_actions,
+                            &mut rng);
+        Policy::from_mlp(mlp)
+    }
+
+    /// Wrap an existing [`Mlp`] (derives the spec from its shape).
+    pub fn from_mlp(mlp: Mlp) -> Policy {
+        let spec = PolicySpec::new(mlp.obs, mlp.hidden, mlp.n_out);
+        let tiled = TiledPolicy::new(&mlp);
+        Policy { spec, mlp, tiled }
+    }
+
+    /// Load `<name>` from `dir` via [`Checkpoint::load`] and unflatten
+    /// into a policy of shape `spec` (arity-checked).
+    pub fn load(dir: &Path, name: &str, spec: &PolicySpec)
+                -> Result<Policy> {
+        let ck = Checkpoint::load(dir, name)
+            .with_context(|| format!("loading policy '{name}' from {}",
+                                     dir.display()))?;
+        Policy::from_checkpoint(&ck, spec)
+    }
+
+    /// Unflatten a loaded [`Checkpoint`] parameter vector into a policy
+    /// of shape `spec`.
+    pub fn from_checkpoint(ck: &Checkpoint, spec: &PolicySpec)
+                           -> Result<Policy> {
+        let mut p = Policy::init(spec, 0);
+        p.set_flat_params(&ck.params)?;
+        Ok(p)
+    }
+
+    /// Network shape.
+    pub fn spec(&self) -> &PolicySpec {
+        &self.spec
+    }
+
+    /// The master parameters (read-only; mutate via [`Policy::update`]).
+    pub fn mlp(&self) -> &Mlp {
+        &self.mlp
+    }
+
+    /// The transposed inference view (always in sync with the master).
+    pub fn tiled(&self) -> &TiledPolicy {
+        &self.tiled
+    }
+
+    /// Flatten all parameters in [`Mlp::params_mut`] order — the
+    /// checkpoint wire format.
+    pub fn flat_params(&self) -> Vec<f32> {
+        let m = &self.mlp;
+        let mut flat = Vec::with_capacity(self.spec.param_count());
+        for v in [&m.w1, &m.b1, &m.w2, &m.b2, &m.wp, &m.bp, &m.wv, &m.bv] {
+            flat.extend_from_slice(v);
+        }
+        flat
+    }
+
+    /// Overwrite all parameters from a flat vector in
+    /// [`Mlp::params_mut`] order and refresh the tiled view.  Errors
+    /// (leaving the policy unchanged) when the arity doesn't match the
+    /// spec — the serve hot-reload path depends on this rejecting a
+    /// checkpoint saved for a different env/shape.
+    pub fn set_flat_params(&mut self, flat: &[f32]) -> Result<()> {
+        if flat.len() != self.spec.param_count() {
+            bail!("parameter vector has {} values, policy shape \
+                   (obs {}, hidden {}, actions {}) needs {}",
+                  flat.len(), self.spec.obs_dim, self.spec.hidden,
+                  self.spec.n_actions, self.spec.param_count());
+        }
+        let mut off = 0;
+        for dst in self.mlp.params_mut() {
+            dst.copy_from_slice(&flat[off..off + dst.len()]);
+            off += dst.len();
+        }
+        self.tiled.refresh(&self.mlp);
+        Ok(())
+    }
+
+    /// Batched tiled forward over a column-major `(obs_dim, n)` block
+    /// (see [`TiledPolicy::forward`]).
+    pub fn forward_cols(&self, x: &[f32], n: usize, cache: &mut Cache) {
+        self.tiled.forward(x, n, cache);
+    }
+
+    /// Fused inference + per-lane categorical sampling (see
+    /// [`TiledPolicy::sample_actions_lanes`]).
+    pub fn sample_actions_lanes(&self, obs: &[f32], n_agents: usize,
+                                act_rngs: &mut [Pcg64],
+                                scratch: &mut SampleScratch,
+                                actions: &mut [u32]) {
+        self.tiled.sample_actions_lanes(obs, n_agents, act_rngs, scratch,
+                                        actions);
+    }
+
+    /// Mutate the master parameters through `f` (optimizer step,
+    /// parameter broadcast, manual edit); the tiled view is refreshed
+    /// when `f` returns, so readers can never observe a stale view.
+    pub fn update<R>(&mut self, f: impl FnOnce(&mut Mlp) -> R) -> R {
+        let out = f(&mut self.mlp);
+        self.tiled.refresh(&self.mlp);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::RefCache;
+
+    #[test]
+    fn spec_shapes_match_live_mlp() {
+        let spec = PolicySpec::new(7, 16, 3);
+        let p = Policy::init(&spec, 1);
+        assert_eq!(spec.shapes(), p.mlp().param_shapes());
+        assert_eq!(spec.param_count(), p.mlp().param_count());
+    }
+
+    #[test]
+    fn for_env_resolves_registry_dims() {
+        let spec = PolicySpec::for_env("cartpole").unwrap();
+        assert_eq!((spec.obs_dim, spec.n_actions), (4, 2));
+        assert_eq!(spec.hidden, DEFAULT_HIDDEN);
+        let err = PolicySpec::for_env("nope").unwrap_err().to_string();
+        assert!(err.contains("cartpole"), "{err}");
+    }
+
+    /// `Policy::init` reproduces the trainer's historical init: same
+    /// seed, same reserved stream, same `Mlp::init` draw order.
+    #[test]
+    fn init_matches_trainer_init_stream_bitwise() {
+        let spec = PolicySpec::new(4, 8, 2);
+        let p = Policy::init(&spec, 42);
+        let mut rng = Pcg64::with_stream(42, INIT_STREAM);
+        let want = Mlp::init(4, 8, 2, &mut rng);
+        assert_eq!(p.mlp().w1, want.w1);
+        assert_eq!(p.mlp().wv, want.wv);
+    }
+
+    #[test]
+    fn flat_params_roundtrip_bitwise() {
+        let spec = PolicySpec::new(5, 12, 4);
+        let a = Policy::init(&spec, 3);
+        let flat = a.flat_params();
+        assert_eq!(flat.len(), spec.param_count());
+        let mut b = Policy::init(&spec, 99);
+        b.set_flat_params(&flat).unwrap();
+        assert_eq!(b.flat_params(), flat);
+        // The tiled view tracked the new params: forwards agree with
+        // the scalar reference of the restored master bitwise.
+        let n = 3;
+        let x_rows: Vec<f32> = (0..n * 5).map(|i| i as f32 * 0.1).collect();
+        let mut x_cols = vec![0f32; n * 5];
+        for r in 0..n {
+            for f in 0..5 {
+                x_cols[f * n + r] = x_rows[r * 5 + f];
+            }
+        }
+        let mut cache = Cache::default();
+        b.forward_cols(&x_cols, n, &mut cache);
+        let mut rc = RefCache::default();
+        b.mlp().forward_ref(&x_rows, n, &mut rc);
+        for i in 0..n {
+            assert_eq!(rc.value[i].to_bits(), cache.value[i].to_bits());
+        }
+    }
+
+    #[test]
+    fn set_flat_params_rejects_wrong_arity() {
+        let spec = PolicySpec::new(4, 8, 2);
+        let mut p = Policy::init(&spec, 1);
+        let before = p.flat_params();
+        assert!(p.set_flat_params(&[0.0; 3]).is_err());
+        assert_eq!(p.flat_params(), before, "failed set left params alone");
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_through_facade() {
+        let dir = std::env::temp_dir().join("warpsci_policy_ck");
+        let spec = PolicySpec::new(6, 10, 3);
+        let p = Policy::init(&spec, 7);
+        let ck = Checkpoint {
+            tag: "t".into(),
+            iter: 1,
+            version: 1,
+            rng: None,
+            params: p.flat_params(),
+        };
+        ck.save(&dir, "p").unwrap();
+        let q = Policy::load(&dir, "p", &spec).unwrap();
+        assert_eq!(q.flat_params(), p.flat_params());
+        // Wrong spec -> arity error, not a mis-shaped policy.
+        let bad = PolicySpec::new(6, 11, 3);
+        assert!(Policy::load(&dir, "p", &bad).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn update_refreshes_tiled_view() {
+        let spec = PolicySpec::new(3, 6, 2);
+        let mut p = Policy::init(&spec, 5);
+        p.update(|mlp| {
+            for w in mlp.w1.iter_mut() {
+                *w = 0.5;
+            }
+            mlp.b1[0] = -1.0;
+        });
+        let n = 2;
+        let x_rows = [0.3f32, -0.2, 0.9, 1.0, 0.0, -0.5];
+        let mut x_cols = vec![0f32; n * 3];
+        for r in 0..n {
+            for f in 0..3 {
+                x_cols[f * n + r] = x_rows[r * 3 + f];
+            }
+        }
+        let mut cache = Cache::default();
+        p.forward_cols(&x_cols, n, &mut cache);
+        let mut rc = RefCache::default();
+        p.mlp().forward_ref(&x_rows, n, &mut rc);
+        for i in 0..n {
+            assert_eq!(rc.value[i].to_bits(), cache.value[i].to_bits(),
+                       "tiled view stale after update");
+        }
+    }
+}

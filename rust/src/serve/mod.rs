@@ -1,0 +1,106 @@
+//! Batched inference serving — the "millions of users" path.
+//!
+//! Training keeps data resident and batches everything; this module
+//! extends that idea past the trainer: concurrent inference requests
+//! are **free batch rows** for the same column-major tiled kernels the
+//! roll-out engine runs on.  A [`PolicyServer`] owns one batcher
+//! thread and a lock-guarded request queue; clients enqueue
+//! observations from any thread and block on a per-request ticket.
+//! Each tick the batcher drains up to `max_batch` pending requests —
+//! waiting at most `max_wait_us` after the first arrival to let a
+//! batch fill — packs them into one column-major `(obs_dim, m)` block
+//! per environment, and answers them all with a single
+//! [`crate::policy::Policy::forward_cols`] call per env.
+//!
+//! **Flush policy.** A batch is flushed when it reaches `max_batch`
+//! rows, when `max_wait_us` has elapsed since its *oldest* pending
+//! request arrived, or at shutdown.  `max_wait_us = 0` serves every
+//! request as soon as the batcher sees it (minimum latency, smallest
+//! batches); large values trade tail latency for fuller batches.
+//!
+//! **Determinism.** Responses are a pure function of (checkpoint
+//! params, observation, action mode): greedy requests take the argmax
+//! of the log-probability row, and sampling requests draw from a fresh
+//! per-request [`Pcg64`] stream keyed by the caller-supplied stream id
+//! — never from shared server state.  Since the tiled forward is
+//! bit-identical per row regardless of batch composition, the same
+//! request gets the bit-same answer no matter how client interleaving
+//! or flush timing grouped it (pinned by `tests/serve.rs`).
+//!
+//! **Hot reload.** With a `checkpoint_dir` configured, the batcher
+//! polls for checkpoint changes *between* batches and swaps the policy
+//! through [`crate::policy::Policy::set_flat_params`] — queued requests
+//! are never dropped, and every request is answered entirely by
+//! exactly one parameter version (reported back as `params_version`).
+//! Bad snapshots (torn saves, wrong shapes, partial headers) are
+//! skipped loudly via the typed [`crate::store::CheckpointError`]
+//! while the old parameters keep serving.
+//!
+//! The client surface is the [`Frontend`] trait so the in-process
+//! handle and a future socket front-end (carried by the
+//! [`crate::coordinator::transport`] abstraction) expose the same
+//! contract.
+//!
+//! [`Pcg64`]: crate::util::Pcg64
+
+pub mod queue;
+pub mod server;
+
+pub use queue::{ActionMode, Frontend, InferRequest, InferResponse,
+                ServeClient};
+pub use server::{PolicyServer, ServeReport};
+
+use std::path::PathBuf;
+
+use crate::config::RunConfig;
+
+/// Server configuration (CLI `[serve]` section / `warpsci serve` flags).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Environments to host (each gets its own policy instance).
+    pub envs: Vec<String>,
+    /// Hidden width of every hosted policy.
+    pub hidden: usize,
+    /// Seed for freshly initialized policies (no checkpoint yet).
+    pub seed: u64,
+    /// Flush a batch once it holds this many requests.
+    pub max_batch: usize,
+    /// Flush a batch this many microseconds after its oldest request
+    /// arrived (0 = serve immediately, never coalesce).
+    pub max_wait_us: u64,
+    /// Directory watched for checkpoint hot-reload (`None` = serve the
+    /// seed-initialized params forever).
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Minimum milliseconds between two reload polls.
+    pub reload_poll_ms: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            envs: vec!["cartpole".into()],
+            hidden: crate::policy::DEFAULT_HIDDEN,
+            seed: 0,
+            max_batch: 64,
+            max_wait_us: 100,
+            checkpoint_dir: None,
+            reload_poll_ms: 50,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Derive a serve config from a merged [`RunConfig`] (env, seed,
+    /// checkpoint dir and the `[serve]` knobs).
+    pub fn from_run(cfg: &RunConfig) -> ServeConfig {
+        ServeConfig {
+            envs: vec![cfg.env.clone()],
+            hidden: crate::policy::DEFAULT_HIDDEN,
+            seed: cfg.seed,
+            max_batch: cfg.serve.max_batch,
+            max_wait_us: cfg.serve.max_wait_us,
+            checkpoint_dir: cfg.checkpoint_dir.clone().map(PathBuf::from),
+            reload_poll_ms: cfg.serve.reload_poll_ms,
+        }
+    }
+}

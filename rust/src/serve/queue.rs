@@ -1,0 +1,180 @@
+//! The serving request queue: typed requests, per-request tickets, and
+//! the lock-guarded pending list the batcher drains.
+//!
+//! Clients validate against the hosted env specs *at enqueue* (unknown
+//! env, wrong observation width and enqueue-after-shutdown are
+//! immediate errors — they never reach the batcher), then park on an
+//! mpsc ticket until the batcher answers.  The queue itself is a
+//! `Mutex<VecDeque>` + condvar: requests arrive a handful at a time
+//! and the batcher holds the lock only to drain, so contention is
+//! negligible next to the forward pass it amortizes.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+/// How the server turns a log-probability row into an action.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActionMode {
+    /// Deterministic argmax over the action log-probabilities.
+    Greedy,
+    /// Categorical draw from a fresh per-request RNG stream: the same
+    /// `(server seed, stream)` pair always draws the same action for
+    /// the same observation and params, independent of how requests
+    /// were batched.
+    Sample {
+        /// Caller-chosen stream id (e.g. a user/session id).
+        stream: u64,
+    },
+}
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct InferRequest {
+    /// Hosted environment name (registry name).
+    pub env: String,
+    /// One observation row, `obs_dim` values.
+    pub obs: Vec<f32>,
+    pub mode: ActionMode,
+}
+
+/// The server's answer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InferResponse {
+    /// Chosen action index.
+    pub action: u32,
+    /// Value-head estimate for the observation.
+    pub value: f32,
+    /// Parameter version that answered (0 = seed init, +1 per
+    /// successful hot reload) — every request is answered entirely by
+    /// one version.
+    pub params_version: u64,
+}
+
+/// Static description of one hosted environment (index = queue env id).
+#[derive(Debug, Clone)]
+pub(crate) struct HostedSpec {
+    pub name: String,
+    pub obs_dim: usize,
+}
+
+/// A queued request, env resolved and obs validated.
+pub(crate) struct Pending {
+    pub env_idx: usize,
+    pub obs: Vec<f32>,
+    pub mode: ActionMode,
+    pub enqueued: Instant,
+    pub tx: mpsc::Sender<InferResponse>,
+}
+
+/// Lock-guarded queue state.
+pub(crate) struct QueueState {
+    pub items: VecDeque<Pending>,
+    /// Set once by [`crate::serve::PolicyServer::stop`]; enqueues fail
+    /// afterwards but everything already queued is still answered.
+    pub stopping: bool,
+}
+
+/// Everything the clients and the batcher share.
+pub(crate) struct Shared {
+    pub q: Mutex<QueueState>,
+    pub cv: Condvar,
+    pub hosted: Vec<HostedSpec>,
+}
+
+impl Shared {
+    pub fn new(hosted: Vec<HostedSpec>) -> Shared {
+        Shared {
+            q: Mutex::new(QueueState {
+                items: VecDeque::new(),
+                stopping: false,
+            }),
+            cv: Condvar::new(),
+            hosted,
+        }
+    }
+}
+
+/// A pending response: block on [`Ticket::wait`] to collect it.
+pub struct Ticket {
+    rx: mpsc::Receiver<InferResponse>,
+}
+
+impl Ticket {
+    /// Block until the batcher answers.  Errors only if the server
+    /// thread died without responding (a bug, not a load condition —
+    /// shutdown drains the queue first).
+    pub fn wait(self) -> Result<InferResponse> {
+        match self.rx.recv() {
+            Ok(resp) => Ok(resp),
+            Err(_) => bail!("serve batcher dropped the request"),
+        }
+    }
+}
+
+/// The request surface, implemented by the in-process [`ServeClient`]
+/// today and shaped so a socket front-end over
+/// [`crate::coordinator::transport`] can implement the same contract
+/// later (submit = send frame, ticket = awaited reply frame).
+pub trait Frontend {
+    /// Validate and enqueue; returns a ticket for the response.
+    fn submit(&self, req: InferRequest) -> Result<Ticket>;
+
+    /// Synchronous convenience: submit + wait.
+    fn infer(&self, req: InferRequest) -> Result<InferResponse> {
+        self.submit(req)?.wait()
+    }
+}
+
+/// Cheap cloneable in-process client handle.
+#[derive(Clone)]
+pub struct ServeClient {
+    pub(crate) shared: Arc<Shared>,
+}
+
+impl Frontend for ServeClient {
+    fn submit(&self, req: InferRequest) -> Result<Ticket> {
+        let env_idx = match self
+            .shared
+            .hosted
+            .iter()
+            .position(|h| h.name == req.env)
+        {
+            Some(i) => i,
+            None => bail!(
+                "env '{}' is not hosted (serving: {})",
+                req.env,
+                self.shared
+                    .hosted
+                    .iter()
+                    .map(|h| h.name.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ),
+        };
+        let want = self.shared.hosted[env_idx].obs_dim;
+        if req.obs.len() != want {
+            bail!("env '{}' takes {} observation values, got {}",
+                  req.env, want, req.obs.len());
+        }
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut q = self.shared.q.lock().unwrap();
+            if q.stopping {
+                bail!("serve queue is shutting down");
+            }
+            q.items.push_back(Pending {
+                env_idx,
+                obs: req.obs,
+                mode: req.mode,
+                enqueued: Instant::now(),
+                tx,
+            });
+        }
+        self.shared.cv.notify_all();
+        Ok(Ticket { rx })
+    }
+}

@@ -1,0 +1,401 @@
+//! The policy server: one batcher thread draining the request queue
+//! into micro-batched tiled forwards, with checkpoint hot-reload
+//! between batches.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::envs::registry;
+use crate::nn::Cache;
+use crate::policy::{Policy, PolicySpec};
+use crate::store::Checkpoint;
+use crate::util::stats::percentile;
+use crate::util::Pcg64;
+
+use super::queue::{HostedSpec, Pending, ServeClient, Shared};
+use super::ServeConfig;
+
+/// Checkpoint stems probed (in order) for env `name` inside the watch
+/// directory: the per-env name first, then the generic names the
+/// trainer writes.
+fn candidate_stems(name: &str) -> [String; 4] {
+    [name.to_string(), "ckpt".into(), "latest".into(), "final".into()]
+}
+
+/// One hosted environment: its policy plus reload bookkeeping.
+struct EnvEntry {
+    name: String,
+    policy: Policy,
+    /// 0 = seed init; +1 per successful hot reload.
+    version: u64,
+    /// Header text of the last checkpoint loaded (content-based change
+    /// detection — atomic renames don't bump mtimes reliably).
+    last_header: Option<String>,
+    /// Header text of the last *failed* load, so a persistently bad
+    /// snapshot is reported once, not once per poll.
+    last_failed_header: Option<String>,
+}
+
+/// Latency/throughput summary returned by
+/// [`PolicyServer::stop`] — all latencies are enqueue-to-response,
+/// in microseconds.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub requests: u64,
+    pub batches: u64,
+    /// Successful hot reloads (summed over hosted envs).
+    pub reloads: u64,
+    /// Rejected snapshots (bad magic, torn save, wrong shape, …).
+    pub reload_failures: u64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+    /// Mean rows per forwarded batch (batching efficiency).
+    pub mean_batch: f64,
+    pub wall_secs: f64,
+    pub requests_per_sec: f64,
+}
+
+impl ServeReport {
+    /// One-line human summary (CLI output).
+    pub fn summary(&self) -> String {
+        format!(
+            "{} requests in {:.2}s ({:.0} req/s) | batches {} \
+             (mean {:.1} rows) | latency us p50 {:.0} p95 {:.0} \
+             p99 {:.0} max {:.0} | reloads {} ({} rejected)",
+            self.requests, self.wall_secs, self.requests_per_sec,
+            self.batches, self.mean_batch, self.p50_us, self.p95_us,
+            self.p99_us, self.max_us, self.reloads,
+            self.reload_failures)
+    }
+}
+
+/// Batcher-side mutable state (everything the loop accumulates).
+struct BatcherState {
+    envs: Vec<EnvEntry>,
+    cache: Cache,
+    latencies_us: Vec<f64>,
+    batches: u64,
+    batch_rows: u64,
+    reloads: u64,
+    reload_failures: u64,
+    last_poll: Option<Instant>,
+}
+
+/// An in-process batched inference server.  [`PolicyServer::start`]
+/// spawns the batcher thread; [`PolicyServer::client`] hands out
+/// cloneable [`ServeClient`] handles; [`PolicyServer::stop`] drains
+/// the queue, joins the thread and returns the [`ServeReport`].
+pub struct PolicyServer {
+    shared: Arc<Shared>,
+    handle: thread::JoinHandle<BatcherState>,
+    started: Instant,
+}
+
+impl PolicyServer {
+    pub fn start(cfg: ServeConfig) -> Result<PolicyServer> {
+        if cfg.envs.is_empty() {
+            bail!("serve needs at least one env to host");
+        }
+        if cfg.max_batch == 0 {
+            bail!("serve max_batch must be >= 1");
+        }
+        let mut hosted = Vec::new();
+        let mut envs = Vec::new();
+        for name in &cfg.envs {
+            let spec = registry::find(name).with_context(|| {
+                format!("unknown env '{name}' (known: {})",
+                        registry::known_names())
+            })?;
+            let pspec = PolicySpec::new(spec.obs_dim, cfg.hidden,
+                                        spec.n_actions);
+            hosted.push(HostedSpec {
+                name: name.clone(),
+                obs_dim: spec.obs_dim,
+            });
+            envs.push(EnvEntry {
+                name: name.clone(),
+                policy: Policy::init(&pspec, cfg.seed),
+                version: 0,
+                last_header: None,
+                last_failed_header: None,
+            });
+        }
+        let shared = Arc::new(Shared::new(hosted));
+        let mut state = BatcherState {
+            envs,
+            cache: Cache::default(),
+            latencies_us: Vec::new(),
+            batches: 0,
+            batch_rows: 0,
+            reloads: 0,
+            reload_failures: 0,
+            last_poll: None,
+        };
+        // Load any checkpoint already in the watch directory before
+        // answering the first request, so a server started over a
+        // trained run never serves seed-initialized params.
+        maybe_reload(&mut state, &cfg, true);
+        let loop_shared = Arc::clone(&shared);
+        let loop_cfg = cfg.clone();
+        let handle = thread::Builder::new()
+            .name("warpsci-serve-batcher".into())
+            .spawn(move || batcher_loop(loop_shared, loop_cfg, state))
+            .context("spawning serve batcher thread")?;
+        Ok(PolicyServer { shared, handle, started: Instant::now() })
+    }
+
+    /// A cheap cloneable client handle (any thread, any count).
+    pub fn client(&self) -> ServeClient {
+        ServeClient { shared: Arc::clone(&self.shared) }
+    }
+
+    /// Stop accepting new requests, answer everything still queued,
+    /// join the batcher and summarize.
+    pub fn stop(self) -> Result<ServeReport> {
+        {
+            let mut q = self.shared.q.lock().unwrap();
+            q.stopping = true;
+        }
+        self.shared.cv.notify_all();
+        let state = match self.handle.join() {
+            Ok(s) => s,
+            Err(_) => bail!("serve batcher thread panicked"),
+        };
+        let wall_secs = self.started.elapsed().as_secs_f64();
+        let mut lat = state.latencies_us;
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let requests = lat.len() as u64;
+        let pct = |p: f64| -> f64 {
+            if lat.is_empty() { 0.0 } else { percentile(&lat, p) }
+        };
+        Ok(ServeReport {
+            requests,
+            batches: state.batches,
+            reloads: state.reloads,
+            reload_failures: state.reload_failures,
+            p50_us: pct(50.0),
+            p95_us: pct(95.0),
+            p99_us: pct(99.0),
+            max_us: lat.last().copied().unwrap_or(0.0),
+            mean_batch: if state.batches > 0 {
+                state.batch_rows as f64 / state.batches as f64
+            } else {
+                0.0
+            },
+            wall_secs,
+            requests_per_sec: if wall_secs > 0.0 {
+                requests as f64 / wall_secs
+            } else {
+                0.0
+            },
+        })
+    }
+}
+
+/// The batcher: wait for requests, let a batch coalesce for up to
+/// `max_wait_us`, drain up to `max_batch`, answer with one forward per
+/// hosted env, poll for checkpoint changes in between.
+fn batcher_loop(shared: Arc<Shared>, cfg: ServeConfig,
+                mut state: BatcherState) -> BatcherState {
+    let max_wait = Duration::from_micros(cfg.max_wait_us);
+    let poll = Duration::from_millis(cfg.reload_poll_ms.max(1));
+    loop {
+        let mut batch: Vec<Pending> = Vec::new();
+        {
+            let mut q = shared.q.lock().unwrap();
+            // Sleep until the first request (or shutdown), waking at
+            // the reload-poll cadence so a quiet server still notices
+            // new checkpoints.
+            loop {
+                if !q.items.is_empty() {
+                    break;
+                }
+                if q.stopping {
+                    return state;
+                }
+                let (guard, timeout) =
+                    shared.cv.wait_timeout(q, poll).unwrap();
+                q = guard;
+                if timeout.timed_out() && q.items.is_empty() {
+                    drop(q);
+                    maybe_reload(&mut state, &cfg, false);
+                    q = shared.q.lock().unwrap();
+                }
+            }
+            // Coalesce: hold the batch open until it fills or the
+            // oldest request has waited max_wait_us.  Shutdown skips
+            // straight to the flush — queued requests are never
+            // dropped.
+            let deadline = q.items.front().unwrap().enqueued + max_wait;
+            while q.items.len() < cfg.max_batch && !q.stopping {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _) = shared
+                    .cv
+                    .wait_timeout(q, deadline - now)
+                    .unwrap();
+                q = guard;
+            }
+            for _ in 0..cfg.max_batch.min(q.items.len()) {
+                batch.push(q.items.pop_front().unwrap());
+            }
+        }
+        // Params may swap here, between batches — never inside one.
+        maybe_reload(&mut state, &cfg, false);
+        process_batch(&mut state, &cfg, batch);
+    }
+}
+
+/// Answer one drained batch: group rows by env (stable order), pack
+/// each group into a column-major `(obs_dim, m)` block, run one tiled
+/// forward per env, and resolve every ticket.
+fn process_batch(state: &mut BatcherState, cfg: &ServeConfig,
+                 batch: Vec<Pending>) {
+    if batch.is_empty() {
+        return;
+    }
+    state.batches += 1;
+    state.batch_rows += batch.len() as u64;
+    // Field split: the forward borrows an env entry (shared) and the
+    // activation cache (mutable) at once.
+    let BatcherState { envs, cache, latencies_us, .. } = state;
+    for (env_idx, entry) in envs.iter().enumerate() {
+        let rows: Vec<&Pending> =
+            batch.iter().filter(|p| p.env_idx == env_idx).collect();
+        if rows.is_empty() {
+            continue;
+        }
+        let (o, a) = (entry.policy.spec().obs_dim,
+                      entry.policy.spec().n_actions);
+        let m = rows.len();
+        // Column-major pack: x[feature * m + row], the same SoA
+        // convention as the engine's observation slabs.
+        let mut x = vec![0f32; o * m];
+        for (r, p) in rows.iter().enumerate() {
+            for (f, &v) in p.obs.iter().enumerate() {
+                x[f * m + r] = v;
+            }
+        }
+        entry.policy.forward_cols(&x, m, cache);
+        let mut row_logp = vec![0f32; a];
+        for (r, p) in rows.iter().enumerate() {
+            for (j, slot) in row_logp.iter_mut().enumerate() {
+                *slot = cache.logp[j * m + r];
+            }
+            let action = match p.mode {
+                super::ActionMode::Greedy => {
+                    row_logp
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .unwrap()
+                        .0 as u32
+                }
+                super::ActionMode::Sample { stream } => {
+                    // A fresh stream per request: the draw depends
+                    // only on (seed, stream, logp row), never on what
+                    // else shared the batch.
+                    Pcg64::with_stream(cfg.seed, stream)
+                        .categorical(&row_logp) as u32
+                }
+            };
+            let resp = super::InferResponse {
+                action,
+                value: cache.value[r],
+                params_version: entry.version,
+            };
+            latencies_us.push(p.enqueued.elapsed().as_secs_f64() * 1e6);
+            // A client that gave up on its ticket is not an error.
+            let _ = p.tx.send(resp);
+        }
+    }
+}
+
+/// Poll the watch directory (throttled to `reload_poll_ms`) and swap
+/// any env whose checkpoint header text changed.  `force` skips the
+/// throttle (startup).
+fn maybe_reload(state: &mut BatcherState, cfg: &ServeConfig,
+                force: bool) {
+    let Some(dir) = cfg.checkpoint_dir.as_deref() else {
+        return;
+    };
+    if !force {
+        if let Some(last) = state.last_poll {
+            if last.elapsed() < Duration::from_millis(cfg.reload_poll_ms)
+            {
+                return;
+            }
+        }
+    }
+    state.last_poll = Some(Instant::now());
+    for entry in state.envs.iter_mut() {
+        reload_env(entry, dir, &mut state.reloads,
+                   &mut state.reload_failures);
+    }
+}
+
+/// Try to hot-swap one env's params from the newest matching
+/// checkpoint in `dir`.  Change detection is content-based (header
+/// text): the trainer's atomic tmp+fsync+rename saves mean the header
+/// is only ever observed whole, so "text changed" is exactly "new
+/// checkpoint published".
+fn reload_env(entry: &mut EnvEntry, dir: &Path, reloads: &mut u64,
+              failures: &mut u64) {
+    let Some(stem) = candidate_stems(&entry.name)
+        .into_iter()
+        .find(|s| dir.join(format!("{s}.json")).is_file())
+    else {
+        return;
+    };
+    let header = match std::fs::read_to_string(
+        dir.join(format!("{stem}.json"))) {
+        Ok(text) => text,
+        Err(_) => return, // racing a writer; next poll sees it whole
+    };
+    if state_matches(entry, &header) {
+        return;
+    }
+    match Checkpoint::load_typed(dir, &stem) {
+        Ok(ck) => match entry.policy.set_flat_params(&ck.params) {
+            Ok(()) => {
+                entry.version += 1;
+                entry.last_header = Some(header);
+                entry.last_failed_header = None;
+                *reloads += 1;
+            }
+            Err(e) => {
+                // Loaded fine but shaped for some other policy: skip
+                // loudly, keep serving the old params.
+                eprintln!(
+                    "serve: rejecting checkpoint '{stem}' for env \
+                     '{}': {e}",
+                    entry.name);
+                entry.last_failed_header = Some(header);
+                *failures += 1;
+            }
+        },
+        Err(e) => {
+            eprintln!(
+                "serve: skipping bad checkpoint '{stem}' for env \
+                 '{}': {e}",
+                entry.name);
+            entry.last_failed_header = Some(header);
+            *failures += 1;
+        }
+    }
+}
+
+/// True when `header` matches the last loaded *or* last failed header
+/// — either way there is nothing new to try.
+fn state_matches(entry: &EnvEntry, header: &str) -> bool {
+    entry.last_header.as_deref() == Some(header)
+        || entry.last_failed_header.as_deref() == Some(header)
+}

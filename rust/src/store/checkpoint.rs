@@ -17,9 +17,76 @@
 use std::io::{Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
 use crate::util::Json;
+
+/// Magic string stamped into every header this crate writes.
+pub const MAGIC: &str = "warpsci-checkpoint";
+/// Current header format revision.
+pub const FORMAT: u64 = 1;
+
+/// Typed load failures, so callers that must keep running on a bad
+/// snapshot (the serve hot-reload loop) can tell a partial legacy
+/// header from corruption and report *which* fields are missing
+/// instead of panicking on a generic error.  `Display` spells each
+/// case out; [`Checkpoint::load`] folds them into `anyhow` for call
+/// sites that just propagate.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CheckpointError {
+    /// Header or blob file unreadable (missing file, permissions, …).
+    Io(String),
+    /// Header present but not parseable as the expected JSON shape.
+    Malformed(String),
+    /// Header carries a `magic` field that isn't ours — some other
+    /// program's JSON, not a checkpoint.
+    BadMagic { found: String },
+    /// Header written by a newer format revision than we read.
+    UnsupportedFormat { format: u64 },
+    /// Required fields absent.  A partial legacy header (pre-magic
+    /// saves carry no `magic`/`version`/`checksum` and still load) is
+    /// only diagnosed as this when one of the always-required fields
+    /// (`tag`, `iter`, `params_len`) is itself missing.
+    MissingFields { fields: Vec<&'static str> },
+    /// Blob length disagrees with the header's `params_len`.
+    SizeMismatch { expected_bytes: usize, got_bytes: usize },
+    /// Blob bytes don't hash to the header's checksum (torn or
+    /// corrupted save).
+    ChecksumMismatch { want: String, got: String },
+}
+
+impl std::fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CheckpointError::Io(e) => write!(f, "checkpoint io: {e}"),
+            CheckpointError::Malformed(e) => {
+                write!(f, "malformed checkpoint header: {e}")
+            }
+            CheckpointError::BadMagic { found } => {
+                write!(f, "checkpoint magic '{found}' != '{MAGIC}' \
+                           (not a warpsci checkpoint)")
+            }
+            CheckpointError::UnsupportedFormat { format } => {
+                write!(f, "checkpoint format {format} is newer than \
+                           supported format {FORMAT}")
+            }
+            CheckpointError::MissingFields { fields } => {
+                write!(f, "checkpoint header missing required fields: {}",
+                       fields.join(", "))
+            }
+            CheckpointError::SizeMismatch { expected_bytes, got_bytes } => {
+                write!(f, "checkpoint blob {got_bytes} bytes, expected \
+                           {expected_bytes}")
+            }
+            CheckpointError::ChecksumMismatch { want, got } => {
+                write!(f, "checkpoint blob checksum {got} != header \
+                           {want} (torn or corrupted save)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
 
 /// A saved parameter vector with provenance.
 #[derive(Debug, Clone, PartialEq)]
@@ -78,6 +145,8 @@ impl Checkpoint {
             blob.extend_from_slice(&x.to_le_bytes());
         }
         let mut obj = std::collections::BTreeMap::new();
+        obj.insert("magic".into(), Json::Str(MAGIC.into()));
+        obj.insert("format".into(), Json::Num(FORMAT as f64));
         obj.insert("tag".into(), Json::Str(self.tag.clone()));
         obj.insert("iter".into(), Json::Num(self.iter as f64));
         obj.insert("version".into(), Json::Num(self.version as f64));
@@ -99,44 +168,98 @@ impl Checkpoint {
         Ok(())
     }
 
+    /// [`Checkpoint::load_typed`] with the typed error folded into
+    /// `anyhow` — for call sites that just propagate.
     pub fn load(dir: &Path, name: &str) -> Result<Checkpoint> {
-        let meta = Json::from_file(&dir.join(format!("{name}.json")))?;
-        let tag = meta.at(&["tag"])?.as_str()?.to_string();
-        let iter = meta.at(&["iter"])?.as_f64()? as u64;
+        Ok(Checkpoint::load_typed(dir, name)?)
+    }
+
+    /// Load with a typed error ([`CheckpointError`]), so a supervising
+    /// loop can distinguish "partial legacy header, fields X/Y absent"
+    /// from "torn/corrupted save" from "someone else's file" without
+    /// string-matching.  Headers this crate writes carry
+    /// `magic`/`format`; pre-magic headers (PRs ≤ 7) are accepted as
+    /// long as the always-required fields are present.
+    pub fn load_typed(dir: &Path, name: &str)
+                      -> std::result::Result<Checkpoint, CheckpointError> {
+        let header = dir.join(format!("{name}.json"));
+        let text = std::fs::read_to_string(&header).map_err(|e| {
+            CheckpointError::Io(format!("reading {}: {e}",
+                                        header.display()))
+        })?;
+        let meta = Json::parse(&text)
+            .map_err(|e| CheckpointError::Malformed(e.to_string()))?;
+        // Magic/format gate first: a wrong-magic or future-format file
+        // should never be diagnosed as "missing fields".
+        if let Some(m) = meta.get("magic") {
+            let found = m.as_str().map_err(malformed)?;
+            if found != MAGIC {
+                return Err(CheckpointError::BadMagic {
+                    found: found.to_string(),
+                });
+            }
+        }
+        if let Some(v) = meta.get("format") {
+            let format = v.as_f64().map_err(malformed)? as u64;
+            if format > FORMAT {
+                return Err(CheckpointError::UnsupportedFormat { format });
+            }
+        }
+        let missing: Vec<&'static str> = ["tag", "iter", "params_len"]
+            .into_iter()
+            .filter(|k| meta.get(k).is_none())
+            .collect();
+        if !missing.is_empty() {
+            return Err(CheckpointError::MissingFields { fields: missing });
+        }
+        let tag = meta.at(&["tag"]).and_then(|v| v.as_str())
+            .map_err(malformed)?.to_string();
+        let iter =
+            meta.at(&["iter"]).and_then(|v| v.as_f64())
+                .map_err(malformed)? as u64;
         // Pre-fault-tolerance headers carry no version/checksum/rng.
         let version = match meta.get("version") {
-            Some(v) => v.as_f64()? as u64,
+            Some(v) => v.as_f64().map_err(malformed)? as u64,
             None => iter,
         };
         let rng = match meta.get("rng") {
             Some(v) => {
-                let arr = v.as_arr()?;
+                let arr = v.as_arr().map_err(malformed)?;
                 if arr.len() != 8 {
-                    bail!("checkpoint rng has {} words, expected 8",
-                          arr.len());
+                    return Err(CheckpointError::Malformed(format!(
+                        "checkpoint rng has {} words, expected 8",
+                        arr.len())));
                 }
                 let mut words = [0u32; 8];
                 for (w, j) in words.iter_mut().zip(arr) {
-                    *w = j.as_f64()? as u32;
+                    *w = j.as_f64().map_err(malformed)? as u32;
                 }
                 Some(words)
             }
             None => None,
         };
-        let len = meta.at(&["params_len"])?.as_usize()?;
+        let len = meta.at(&["params_len"]).and_then(|v| v.as_usize())
+            .map_err(malformed)?;
+        let blob_path = dir.join(format!("{name}.params"));
         let mut blob = Vec::new();
-        std::fs::File::open(dir.join(format!("{name}.params")))
-            .with_context(|| format!("opening {name}.params"))?
-            .read_to_end(&mut blob)?;
+        std::fs::File::open(&blob_path)
+            .and_then(|mut f| f.read_to_end(&mut blob))
+            .map_err(|e| CheckpointError::Io(format!(
+                "reading {}: {e}", blob_path.display())))?;
         if blob.len() != len * 4 {
-            bail!("checkpoint blob {} bytes, expected {}", blob.len(), len * 4);
+            return Err(CheckpointError::SizeMismatch {
+                expected_bytes: len * 4,
+                got_bytes: blob.len(),
+            });
         }
         if let Some(sum) = meta.get("checksum") {
-            let want = sum.as_str()?;
+            let want = sum.as_str().map_err(malformed)?;
             let got = format!("{:016x}", fnv1a(&blob));
             if got != want {
-                bail!("checkpoint blob checksum {got} != header {want} \
-                       (torn or corrupted save)");
+                return Err(CheckpointError::ChecksumMismatch {
+                    want: want.to_string(),
+                    got,
+                });
             }
         }
         let params = blob
@@ -145,6 +268,11 @@ impl Checkpoint {
             .collect();
         Ok(Checkpoint { tag, iter, version, rng, params })
     }
+}
+
+/// Fold a JSON field-access error into [`CheckpointError::Malformed`].
+fn malformed(e: anyhow::Error) -> CheckpointError {
+    CheckpointError::Malformed(e.to_string())
 }
 
 #[cfg(test)]
@@ -212,6 +340,97 @@ mod tests {
         assert_eq!(back.version, 9, "version defaults to iter");
         assert_eq!(back.rng, None);
         assert_eq!(back.params, vec![0.5, 1.5]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn partial_legacy_header_names_missing_fields() {
+        let dir = std::env::temp_dir().join("warpsci_ckpt_partial");
+        let ck = Checkpoint { tag: "t".into(), iter: 1, version: 1,
+                              rng: None, params: vec![1.0] };
+        ck.save(&dir, "x").unwrap();
+        // A torn legacy header: valid JSON, but two required fields
+        // never made it.  Must be diagnosed as MissingFields naming
+        // exactly the absent fields — not as corruption.
+        std::fs::write(dir.join("x.json"), r#"{"tag": "t"}"#).unwrap();
+        match Checkpoint::load_typed(&dir, "x") {
+            Err(CheckpointError::MissingFields { fields }) => {
+                assert_eq!(fields, vec!["iter", "params_len"]);
+            }
+            other => panic!("expected MissingFields, got {other:?}"),
+        }
+        // The anyhow wrapper carries the field names through.
+        let err = Checkpoint::load(&dir, "x").unwrap_err().to_string();
+        assert!(err.contains("iter") && err.contains("params_len"),
+                "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wrong_magic_and_future_format_rejected() {
+        let dir = std::env::temp_dir().join("warpsci_ckpt_magic");
+        let ck = Checkpoint { tag: "t".into(), iter: 1, version: 1,
+                              rng: None, params: vec![1.0] };
+        ck.save(&dir, "x").unwrap();
+        std::fs::write(
+            dir.join("x.json"),
+            r#"{"magic": "other-tool", "tag": "t", "iter": 1,
+                "params_len": 1}"#,
+        )
+        .unwrap();
+        assert!(matches!(Checkpoint::load_typed(&dir, "x"),
+                         Err(CheckpointError::BadMagic { .. })));
+        std::fs::write(
+            dir.join("x.json"),
+            format!(r#"{{"magic": "{MAGIC}", "format": 999, "tag": "t",
+                        "iter": 1, "params_len": 1}}"#),
+        )
+        .unwrap();
+        assert!(matches!(
+            Checkpoint::load_typed(&dir, "x"),
+            Err(CheckpointError::UnsupportedFormat { format: 999 })));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn typed_errors_distinguish_io_corruption_and_size() {
+        let dir = std::env::temp_dir().join("warpsci_ckpt_typed");
+        std::fs::create_dir_all(&dir).unwrap();
+        // Missing header -> Io.
+        assert!(matches!(Checkpoint::load_typed(&dir, "none"),
+                         Err(CheckpointError::Io(_))));
+        // Unparseable header -> Malformed.
+        std::fs::write(dir.join("bad.json"), "{nope").unwrap();
+        assert!(matches!(Checkpoint::load_typed(&dir, "bad"),
+                         Err(CheckpointError::Malformed(_))));
+        let ck = Checkpoint { tag: "t".into(), iter: 1, version: 1,
+                              rng: None, params: vec![1.0, 2.0] };
+        ck.save(&dir, "x").unwrap();
+        // Truncated blob -> SizeMismatch with both byte counts.
+        std::fs::write(dir.join("x.params"), [0u8; 4]).unwrap();
+        assert!(matches!(
+            Checkpoint::load_typed(&dir, "x"),
+            Err(CheckpointError::SizeMismatch {
+                expected_bytes: 8, got_bytes: 4 })));
+        // Bit-flipped blob of the right size -> ChecksumMismatch.
+        std::fs::write(dir.join("x.params"), [0xAAu8; 8]).unwrap();
+        assert!(matches!(Checkpoint::load_typed(&dir, "x"),
+                         Err(CheckpointError::ChecksumMismatch { .. })));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Saves stamped with the current magic/format load back and the
+    /// header is self-describing.
+    #[test]
+    fn saves_carry_magic_and_format() {
+        let dir = std::env::temp_dir().join("warpsci_ckpt_stamp");
+        let ck = Checkpoint { tag: "t".into(), iter: 1, version: 1,
+                              rng: None, params: vec![1.0] };
+        ck.save(&dir, "x").unwrap();
+        let text = std::fs::read_to_string(dir.join("x.json")).unwrap();
+        assert!(text.contains(MAGIC), "{text}");
+        assert!(text.contains("format"), "{text}");
+        assert_eq!(Checkpoint::load(&dir, "x").unwrap(), ck);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -7,7 +7,7 @@
 
 pub mod checkpoint;
 
-pub use checkpoint::Checkpoint;
+pub use checkpoint::{Checkpoint, CheckpointError};
 
 use anyhow::{bail, Result};
 

@@ -1,0 +1,277 @@
+//! Serving-layer integration tests: batching-independent determinism,
+//! checkpoint hot-reload atomicity, and enqueue-time validation.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use warpsci::policy::{Policy, PolicySpec, DEFAULT_HIDDEN};
+use warpsci::serve::{ActionMode, Frontend, InferRequest, PolicyServer,
+                     ServeConfig};
+use warpsci::store::Checkpoint;
+use warpsci::util::Pcg64;
+
+/// The fixed request stream every determinism run replays: stream id ->
+/// (observation, action mode).  Greedy and sampled requests alternate
+/// so both action paths are pinned.
+fn request_set(n: usize) -> Vec<(u64, Vec<f32>, ActionMode)> {
+    (0..n as u64)
+        .map(|s| {
+            let mut rng = Pcg64::with_stream(7, s);
+            let obs: Vec<f32> =
+                (0..4).map(|_| rng.normal() * 0.3).collect();
+            let mode = if s % 2 == 0 {
+                ActionMode::Greedy
+            } else {
+                ActionMode::Sample { stream: s }
+            };
+            (s, obs, mode)
+        })
+        .collect()
+}
+
+/// Run the fixed request set through a fresh server under the given
+/// client/batch/flush shape; returns stream -> (action, value bits).
+fn run_stream(clients: usize, max_batch: usize, max_wait_us: u64)
+              -> BTreeMap<u64, (u32, u32)> {
+    let server = PolicyServer::start(ServeConfig {
+        envs: vec!["cartpole".into()],
+        seed: 5,
+        max_batch,
+        max_wait_us,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let requests = request_set(96);
+    let results = std::sync::Mutex::new(BTreeMap::new());
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let client = server.client();
+            let requests = &requests;
+            let results = &results;
+            scope.spawn(move || {
+                // strided assignment: interleaving differs per shape
+                for (s, obs, mode) in
+                    requests.iter().skip(c).step_by(clients)
+                {
+                    let resp = client
+                        .infer(InferRequest {
+                            env: "cartpole".into(),
+                            obs: obs.clone(),
+                            mode: *mode,
+                        })
+                        .unwrap();
+                    results.lock().unwrap().insert(
+                        *s, (resp.action, resp.value.to_bits()));
+                }
+            });
+        }
+    });
+    server.stop().unwrap();
+    results.into_inner().unwrap()
+}
+
+/// The headline guarantee: the same request stream + server seed gives
+/// bitwise-identical actions and values no matter how many clients
+/// submitted it or how the flush policy grouped the batches.
+#[test]
+fn responses_independent_of_batching_and_interleaving() {
+    let reference = run_stream(1, 1, 0); // every request its own batch
+    assert_eq!(reference.len(), 96);
+    for (clients, max_batch, max_wait_us) in
+        [(4, 16, 200), (8, 64, 1000), (3, 7, 50)]
+    {
+        let got = run_stream(clients, max_batch, max_wait_us);
+        assert_eq!(got, reference,
+                   "responses changed under clients={clients} \
+                    max_batch={max_batch} max_wait_us={max_wait_us}");
+    }
+}
+
+fn save_params(dir: &std::path::Path, iter: u64, seed: u64,
+               spec: &PolicySpec) {
+    let ck = Checkpoint {
+        tag: "serve-test".into(),
+        iter,
+        version: iter,
+        rng: None,
+        params: Policy::init(spec, seed).flat_params(),
+    };
+    ck.save(dir, "latest").unwrap();
+}
+
+fn infer_version(client: &dyn Frontend) -> u64 {
+    client
+        .infer(InferRequest {
+            env: "cartpole".into(),
+            obs: vec![0.1, -0.2, 0.05, 0.0],
+            mode: ActionMode::Greedy,
+        })
+        .unwrap()
+        .params_version
+}
+
+/// Wait (bounded) until a request is answered by `want` params.
+fn wait_for_version(client: &dyn Frontend, want: u64) -> u64 {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let v = infer_version(client);
+        if v >= want || Instant::now() > deadline {
+            return v;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Hot reload: new checkpoints swap in between batches (every request
+/// is answered by exactly one version, monotonically increasing), bad
+/// snapshots are skipped while the old params keep serving.
+#[test]
+fn hot_reload_swaps_atomically_and_skips_bad_snapshots() {
+    let dir = std::env::temp_dir().join(format!(
+        "warpsci_serve_reload_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let spec = PolicySpec::new(4, DEFAULT_HIDDEN, 2);
+    save_params(&dir, 1, 100, &spec);
+
+    let server = PolicyServer::start(ServeConfig {
+        envs: vec!["cartpole".into()],
+        checkpoint_dir: Some(dir.clone()),
+        reload_poll_ms: 1,
+        max_wait_us: 0,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let client = server.client();
+
+    // the checkpoint already present was loaded before the first answer
+    assert_eq!(infer_version(&client), 1);
+
+    // publish v2: versions seen are monotone, only ever 1 or 2
+    save_params(&dir, 2, 101, &spec);
+    let mut last = 1;
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while last < 2 && Instant::now() < deadline {
+        let v = infer_version(&client);
+        assert!(v == 1 || v == 2, "unexpected params version {v}");
+        assert!(v >= last, "version went backwards: {last} -> {v}");
+        last = v;
+    }
+    assert_eq!(last, 2, "v2 checkpoint never served");
+
+    // a torn/garbage header is skipped loudly; v2 keeps serving
+    std::fs::write(dir.join("latest.json"), "{\"tag\": \"trunc").unwrap();
+    std::thread::sleep(Duration::from_millis(20));
+    assert_eq!(infer_version(&client), 2);
+
+    // a later valid checkpoint recovers
+    save_params(&dir, 3, 102, &spec);
+    assert_eq!(wait_for_version(&client, 3), 3);
+
+    let report = server.stop().unwrap();
+    assert!(report.reloads >= 3, "reloads {}", report.reloads);
+    assert!(report.reload_failures >= 1,
+            "bad snapshot was not counted: {}", report.reload_failures);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Requests that can never be answered fail at enqueue, with the
+/// hosted-env list in the error; enqueues after shutdown fail too.
+#[test]
+fn enqueue_validation_and_shutdown() {
+    let server = PolicyServer::start(ServeConfig {
+        envs: vec!["cartpole".into(), "acrobot".into()],
+        max_wait_us: 0,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let client = server.client();
+
+    let err = client
+        .submit(InferRequest {
+            env: "pendulum".into(),
+            obs: vec![0.0; 3],
+            mode: ActionMode::Greedy,
+        })
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("cartpole") && err.contains("acrobot"),
+            "error should list hosted envs: {err}");
+
+    let err = client
+        .submit(InferRequest {
+            env: "cartpole".into(),
+            obs: vec![0.0; 3], // cartpole takes 4
+            mode: ActionMode::Greedy,
+        })
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains('4') && err.contains('3'), "{err}");
+
+    // both hosted envs answer, each through its own policy
+    let a = client
+        .infer(InferRequest {
+            env: "cartpole".into(),
+            obs: vec![0.1; 4],
+            mode: ActionMode::Greedy,
+        })
+        .unwrap();
+    assert!(a.action < 2);
+    let b = client
+        .infer(InferRequest {
+            env: "acrobot".into(),
+            obs: vec![0.1; 6],
+            mode: ActionMode::Greedy,
+        })
+        .unwrap();
+    assert!(b.action < 3);
+    assert!(a.value.is_finite() && b.value.is_finite());
+
+    let report = server.stop().unwrap();
+    assert_eq!(report.requests, 2);
+    assert!(report.p50_us <= report.p99_us);
+    assert!(report.mean_batch >= 1.0);
+    assert!(client
+        .submit(InferRequest {
+            env: "cartpole".into(),
+            obs: vec![0.0; 4],
+            mode: ActionMode::Greedy,
+        })
+        .is_err(), "enqueue after shutdown must fail");
+}
+
+/// Micro-batching actually batches: many concurrent clients under a
+/// generous flush window produce multi-row forwards.
+#[test]
+fn concurrent_clients_coalesce_into_batches() {
+    let server = PolicyServer::start(ServeConfig {
+        envs: vec!["cartpole".into()],
+        max_batch: 64,
+        max_wait_us: 2000,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    std::thread::scope(|scope| {
+        for c in 0..16u64 {
+            let client = server.client();
+            scope.spawn(move || {
+                for i in 0..8u64 {
+                    client
+                        .infer(InferRequest {
+                            env: "cartpole".into(),
+                            obs: vec![0.01 * (c + i) as f32; 4],
+                            mode: ActionMode::Sample {
+                                stream: c * 100 + i,
+                            },
+                        })
+                        .unwrap();
+                }
+            });
+        }
+    });
+    let report = server.stop().unwrap();
+    assert_eq!(report.requests, 16 * 8);
+    assert!(report.batches < report.requests,
+            "nothing coalesced: {} batches for {} requests",
+            report.batches, report.requests);
+    assert!(report.mean_batch > 1.0, "mean batch {}", report.mean_batch);
+}

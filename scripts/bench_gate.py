@@ -42,6 +42,7 @@ REQUIRED_PREFIXES = [
     "policy_forward/scalar/",
     "shard_scaling/sync/",
     "shard_scaling/async/",
+    "serve/",
 ]
 
 # The per-env required records are derived from the "registry/envs"
