@@ -16,6 +16,11 @@
 //! `shard_scaling/{sync,async}/*` and inference-serving `serve/*`
 //! records against `BENCH_baseline.json`).
 //!
+//! Thread counts for the sweep families are derived from the machine
+//! (`thread_levels`: the 1..8 power-of-two ladder clipped to available
+//! cores) rather than hard-coded, and the run emits a `sweep/threads`
+//! manifest record naming the levels it covered.
+//!
 //! Env overrides: `WARPSCI_BENCH_FAST=1` for a smoke run.
 
 use warpsci::bench::Bench;
@@ -78,8 +83,34 @@ impl UnfusedRollout {
     }
 }
 
+/// Thread counts for the sweep families, derived from the machine
+/// instead of hard-coded: the power-of-two ladder 1..8 clipped to the
+/// available cores (plus the core count itself on small non-power-of-2
+/// machines), so a 2-core CI runner no longer times an oversubscribed
+/// 8-thread pool and an 8+-core box reproduces the historical
+/// [1, 2, 4, 8] record names exactly.
+fn thread_levels(cores: usize) -> Vec<usize> {
+    let mut levels: Vec<usize> =
+        [1usize, 2, 4, 8].iter().copied().filter(|&x| x <= cores).collect();
+    if levels.is_empty() {
+        levels.push(1);
+    }
+    if cores < 8 && !levels.contains(&cores) {
+        levels.push(cores);
+        levels.sort_unstable();
+    }
+    levels
+}
+
 fn main() -> anyhow::Result<()> {
     let bench = Bench::from_env();
+    let cores = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    let levels = thread_levels(cores);
+    // fixed-thread records (per-env fused, train) use this count so
+    // their names stay `threads4` anywhere with >= 4 cores
+    let per_env_threads = 4usize.min(cores.max(1));
     let mut records: Vec<Json> = Vec::new();
     let emit = |records: &mut Vec<Json>,
                 r: &warpsci::bench::BenchResult| {
@@ -161,8 +192,10 @@ fn main() -> anyhow::Result<()> {
     }
 
     // raw SoA stepping (no policy): constant action pattern per lane
-    for (n_envs, threads) in [(4096usize, 1usize), (4096, 2), (4096, 4),
-                              (16384, 4)] {
+    let mut step_shapes: Vec<(usize, usize)> =
+        levels.iter().map(|&th| (4096usize, th)).collect();
+    step_shapes.push((16384, per_env_threads));
+    for (n_envs, threads) in step_shapes {
         let mut eng = BatchEngine::by_name("cartpole", n_envs, threads, 0)?;
         let actions: Vec<u32> =
             (0..n_envs).map(|i| (i % 2) as u32).collect();
@@ -227,7 +260,7 @@ fn main() -> anyhow::Result<()> {
     // serial phase and per-tick rounds
     for (env, n_envs, t) in [("cartpole", 4096usize, 8usize),
                              ("covid_econ", 128, 4)] {
-        for threads in [1usize, 2, 4, 8] {
+        for &threads in &levels {
             let mut eng = CpuEngine::new(CpuEngineConfig {
                 threads,
                 ..CpuEngineConfig::new(env, n_envs, t)
@@ -261,12 +294,12 @@ fn main() -> anyhow::Result<()> {
     {
         let (n_envs, t) = (spec.bench_n_envs, spec.bench_t);
         let mut eng = CpuEngine::new(CpuEngineConfig {
-            threads: 4,
+            threads: per_env_threads,
             ..CpuEngineConfig::new(spec.name, n_envs, t)
         })?;
         let r = bench.run(
-            &format!("fused_rollout/{}/n{n_envs}/t{t}/threads4",
-                     spec.name),
+            &format!("fused_rollout/{}/n{n_envs}/t{t}/threads{}",
+                     spec.name, per_env_threads),
             eng.steps_per_iter() as f64,
             || {
                 eng.rollout_iter().unwrap();
@@ -278,11 +311,12 @@ fn main() -> anyhow::Result<()> {
     for (env, n_envs, t) in [("cartpole", 4096usize, 8usize),
                              ("covid_econ", 128, 4)] {
         let mut eng = CpuEngine::new(CpuEngineConfig {
-            threads: 4,
+            threads: per_env_threads,
             ..CpuEngineConfig::new(env, n_envs, t)
         })?;
         let r = bench.run(
-            &format!("cpu_engine_train/{env}/n{n_envs}/t{t}/threads4"),
+            &format!("cpu_engine_train/{env}/n{n_envs}/t{t}/threads{}",
+                     per_env_threads),
             eng.steps_per_iter() as f64,
             || {
                 eng.train_iter().unwrap();
@@ -370,6 +404,24 @@ fn main() -> anyhow::Result<()> {
             emit(&mut records, &r);
             server.stop()?;
         }
+    }
+
+    // thread-sweep manifest record: which thread counts this machine's
+    // sweep actually covered (derived from available_parallelism above)
+    // so scripts/bench_gate.py can skip baseline `threadsN` records a
+    // smaller runner legitimately never produced
+    {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("name".to_string(),
+                 Json::Str("sweep/threads".to_string()));
+        m.insert("levels".to_string(),
+                 Json::Arr(levels.iter()
+                     .map(|&t| Json::Num(t as f64))
+                     .collect()));
+        m.insert("per_env_threads".to_string(),
+                 Json::Num(per_env_threads as f64));
+        m.insert("cores".to_string(), Json::Num(cores as f64));
+        records.push(Json::Obj(m));
     }
 
     // registry manifest record: the env-name list this run covered,

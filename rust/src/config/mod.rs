@@ -13,6 +13,8 @@ use anyhow::{anyhow, Context, Result};
 
 pub use parser::TomlValue;
 
+use crate::util::simd::{simd_compiled, KernelVariant};
+
 /// Fault-tolerance knobs for the async trainer: how liveness is
 /// detected and what happens when it is lost.
 ///
@@ -326,6 +328,13 @@ pub struct RunConfig {
     pub resume: Option<String>,
     /// Inference-serving knobs (`warpsci serve` / `[serve]` table).
     pub serve: ServeOptions,
+    /// Kernel arm override (`--kernel tiled|simd` / `[train] kernel`);
+    /// `None` = unset, which lets a tuned profile choose, falling back
+    /// to the build's compiled default.
+    pub kernel: Option<KernelVariant>,
+    /// Path of the tuned profile that filled unset shape fields (set
+    /// by [`RunConfig::load`]; `None` when no profile applied).
+    pub tuned_profile: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -351,6 +360,8 @@ impl Default for RunConfig {
             checkpoint_dir: None,
             resume: None,
             serve: ServeOptions::default(),
+            kernel: None,
+            tuned_profile: None,
         }
     }
 }
@@ -401,6 +412,10 @@ impl RunConfig {
         }
         if let Some(v) = doc.get("train.log_csv") {
             cfg.log_csv = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = doc.get("train.kernel") {
+            cfg.kernel = Some(v.as_str()?.parse::<KernelVariant>()
+                .map_err(|e| anyhow!("[train] kernel: {e}"))?);
         }
         if let Some(v) = doc.get("parallel.shards") {
             cfg.shards = (v.as_int()? as usize).max(1);
@@ -464,18 +479,97 @@ impl RunConfig {
     }
 
     /// The one merge path every subcommand shares: load `--config`
-    /// (or defaults), overlay CLI flags, validate the cross-field
-    /// invariants.  `train`, `bench` and `serve` all resolve their
-    /// [`RunConfig`] through here, so a flag can never mean something
-    /// different per subcommand.
+    /// (or defaults), overlay CLI flags, resolve the tuned profile,
+    /// validate the cross-field invariants.  `train`, `bench` and
+    /// `serve` all resolve their [`RunConfig`] through here, so a flag
+    /// can never mean something different per subcommand.
+    ///
+    /// Precedence per shape field (`n_envs`/`t`/`threads`/`kernel`):
+    /// explicit flag > TOML key > tuned profile
+    /// (`tuned/<fingerprint>/<env>.toml`, see [`crate::tune`]) >
+    /// built-in default.  `--no-tuned-profile` skips the profile layer
+    /// entirely.
     pub fn load(flags: &dyn FlagSource) -> Result<RunConfig> {
-        let mut cfg = match flags.flag("config") {
-            Some(path) => RunConfig::from_file(Path::new(path))?,
-            None => RunConfig::default(),
+        let (mut cfg, doc) = match flags.flag("config") {
+            Some(path) => {
+                let text = std::fs::read_to_string(path).with_context(
+                    || format!("reading {path}"))?;
+                let cfg = Self::from_toml_str(&text)
+                    .with_context(|| format!("parsing {path}"))?;
+                let doc = parser::parse(&text)
+                    .with_context(|| format!("parsing {path}"))?;
+                (cfg, Some(doc))
+            }
+            None => (RunConfig::default(), None),
         };
         cfg.apply_overrides(flags)?;
+        cfg.apply_tuned_profile_from(flags, doc.as_ref(),
+                                     &crate::tune::tuned_root())?;
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// The tuned-profile layer of [`RunConfig::load`], with the
+    /// profile root injected (tests point it at a temp dir; `load`
+    /// passes [`crate::tune::tuned_root`]).  A shape field is filled
+    /// from the profile only when **neither** its CLI flag nor its
+    /// TOML key was given; `--no-tuned-profile` skips the layer.
+    /// Missing or invalid profiles never fail the run — they fall back
+    /// (loudly, for invalid ones) to whatever the field already holds.
+    pub fn apply_tuned_profile_from(&mut self, flags: &dyn FlagSource,
+                                    doc: Option<&parser::TomlDoc>,
+                                    root: &Path) -> Result<()> {
+        if parse_flag(flags, "no-tuned-profile", false)? {
+            return Ok(());
+        }
+        let given = |flag: &str, key: &str| {
+            flags.flag(flag).is_some()
+                || doc.is_some_and(|d| d.get(key).is_some())
+        };
+        let Some(p) = crate::tune::profile::resolve(root, &self.env)
+        else {
+            return Ok(());
+        };
+        if !given("n-envs", "env.n_envs") {
+            self.n_envs = p.n_envs;
+        }
+        if !given("t", "rollout.t") {
+            self.t = p.t;
+        }
+        if !given("threads", "parallel.threads") {
+            self.threads = p.threads;
+        }
+        if !given("kernel", "train.kernel") {
+            if p.kernel == KernelVariant::Simd && !simd_compiled() {
+                eprintln!(
+                    "warning: tuned profile for {} requests the simd \
+                     kernel arm, but this build lacks --features simd; \
+                     keeping the tiled arm",
+                    self.env
+                );
+            } else {
+                self.kernel = Some(p.kernel);
+            }
+        }
+        self.tuned_profile = Some(
+            crate::tune::TunedProfile::path_for(
+                root, &crate::tune::machine_fingerprint(), &self.env)
+                .display()
+                .to_string(),
+        );
+        Ok(())
+    }
+
+    /// Activate this config's kernel arm (process-wide) and return the
+    /// variant now in effect.  An unset `kernel` leaves the build
+    /// default active.  Explicit-but-uncompiled requests were already
+    /// rejected by [`RunConfig::validate`], so this cannot downgrade
+    /// silently.
+    pub fn apply_kernel_variant(&self) -> KernelVariant {
+        if let Some(k) = self.kernel {
+            crate::util::simd::set_kernel_variant(k);
+        }
+        crate::util::simd::kernel_variant()
     }
 
     /// Overlay CLI flags onto this config (flags win over file values;
@@ -511,6 +605,10 @@ impl RunConfig {
         }
         if let Some(p) = flags.flag("log-csv") {
             self.log_csv = Some(p.to_string());
+        }
+        if let Some(k) = flags.flag("kernel") {
+            self.kernel = Some(k.parse::<KernelVariant>()
+                .map_err(|e| anyhow!("--kernel: {e}"))?);
         }
         // Fault tolerance (async runs)
         self.fault.heartbeat_ms =
@@ -559,6 +657,12 @@ impl RunConfig {
         }
         if self.serve.max_batch == 0 {
             return Err(anyhow!("serve max_batch must be >= 1"));
+        }
+        if self.kernel == Some(KernelVariant::Simd) && !simd_compiled() {
+            return Err(anyhow!(
+                "--kernel simd requires a build with --features simd \
+                 (tuned profiles degrade to tiled automatically; an \
+                 explicit request must not)"));
         }
         if !self.run_async {
             anyhow::ensure!(
@@ -781,6 +885,9 @@ requests = 64
             ("max-batch", "8"),
             ("max-wait-us", "0"),
             ("clients", "2"),
+            // keep this test hermetic: a developer's real tuned/
+            // profile must not leak into the default-field assertions
+            ("no-tuned-profile", "true"),
         ]);
         let cfg = RunConfig::load(&flags).unwrap();
         assert_eq!(cfg.env, "acrobot");
@@ -816,6 +923,109 @@ requests = 64
         let cfg = RunConfig::load(&MapFlags::of(&[
             ("async", "true"), ("checkpoint-dir", "/tmp/ck")])).unwrap();
         assert_eq!(cfg.checkpoint_every, cfg.metrics_every.max(1));
+    }
+
+    fn write_profile(root: &Path, env: &str, n_envs: usize, t: usize,
+                     threads: usize, kernel: KernelVariant) {
+        let p = crate::tune::TunedProfile {
+            env: env.into(),
+            fingerprint: crate::tune::machine_fingerprint(),
+            n_envs,
+            t,
+            threads,
+            kernel,
+            steps_per_sec: 1000.0,
+            default_steps_per_sec: 900.0,
+            quick: true,
+            repeats: 2,
+        };
+        p.save(root).unwrap();
+    }
+
+    #[test]
+    fn tuned_profile_fills_only_unset_shape_fields() {
+        let root = std::env::temp_dir().join("warpsci_cfg_profile_a");
+        let _ = std::fs::remove_dir_all(&root);
+        write_profile(&root, "cartpole", 2048, 16, 3,
+                      KernelVariant::Tiled);
+        // nothing pinned: every shape field comes from the profile
+        let mut cfg = RunConfig::default();
+        cfg.apply_tuned_profile_from(&NoFlags, None, &root).unwrap();
+        assert_eq!((cfg.n_envs, cfg.t, cfg.threads), (2048, 16, 3));
+        assert_eq!(cfg.kernel, Some(KernelVariant::Tiled));
+        assert!(cfg.tuned_profile.is_some());
+        // a flag pins its field; the others still fill
+        let flags = MapFlags::of(&[("t", "4")]);
+        let mut cfg = RunConfig::default();
+        cfg.apply_overrides(&flags).unwrap();
+        cfg.apply_tuned_profile_from(&flags, None, &root).unwrap();
+        assert_eq!(cfg.t, 4, "flag beats profile");
+        assert_eq!(cfg.n_envs, 2048, "unpinned field fills");
+        // a TOML key pins its field the same way
+        let text = "[env]\nn_envs = 512\n";
+        let doc = parser::parse(text).unwrap();
+        let mut cfg = RunConfig::from_toml_str(text).unwrap();
+        cfg.apply_tuned_profile_from(&NoFlags, Some(&doc), &root)
+            .unwrap();
+        assert_eq!(cfg.n_envs, 512, "toml beats profile");
+        assert_eq!(cfg.t, 16, "unpinned field fills");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn no_tuned_profile_flag_skips_the_layer() {
+        let root = std::env::temp_dir().join("warpsci_cfg_profile_b");
+        let _ = std::fs::remove_dir_all(&root);
+        write_profile(&root, "cartpole", 2048, 16, 3,
+                      KernelVariant::Tiled);
+        let flags = MapFlags::of(&[("no-tuned-profile", "true")]);
+        let mut cfg = RunConfig::default();
+        cfg.apply_tuned_profile_from(&flags, None, &root).unwrap();
+        assert_eq!(cfg, RunConfig::default(), "layer fully skipped");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn missing_or_corrupt_profile_leaves_config_untouched() {
+        let root = std::env::temp_dir().join("warpsci_cfg_profile_c");
+        let _ = std::fs::remove_dir_all(&root);
+        // missing root: no-op, no error
+        let mut cfg = RunConfig::default();
+        cfg.apply_tuned_profile_from(&NoFlags, None, &root).unwrap();
+        assert_eq!(cfg, RunConfig::default());
+        // corrupt file: loud fallback, still no error
+        let path = crate::tune::TunedProfile::path_for(
+            &root, &crate::tune::machine_fingerprint(), "cartpole");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, "not a profile").unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_tuned_profile_from(&NoFlags, None, &root).unwrap();
+        assert_eq!(cfg, RunConfig::default());
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn kernel_flag_and_toml_parse_and_validate() {
+        let mut cfg = RunConfig::default();
+        cfg.apply_overrides(&MapFlags::of(&[("kernel", "tiled")]))
+            .unwrap();
+        assert_eq!(cfg.kernel, Some(KernelVariant::Tiled));
+        assert!(RunConfig::default()
+            .apply_overrides(&MapFlags::of(&[("kernel", "avx512")]))
+            .is_err());
+        let cfg = RunConfig::from_toml_str(
+            "[train]\nkernel = \"tiled\"\n").unwrap();
+        assert_eq!(cfg.kernel, Some(KernelVariant::Tiled));
+        assert!(RunConfig::from_toml_str(
+            "[train]\nkernel = \"warp\"\n").is_err());
+        // explicit simd on a non-simd build is a validation error;
+        // on a simd build it validates
+        let mut cfg = RunConfig::default();
+        cfg.kernel = Some(KernelVariant::Simd);
+        assert_eq!(cfg.validate().is_ok(), simd_compiled());
+        // applying an unset kernel reports the build default
+        assert_eq!(RunConfig::default().apply_kernel_variant(),
+                   crate::util::simd::kernel_variant());
     }
 
     #[test]

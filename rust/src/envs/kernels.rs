@@ -84,6 +84,18 @@ pub fn wrap(x: &mut [f32; LANES], lo: f32, hi: f32) {
 #[inline]
 pub fn axpy(a: &[f32; LANES], k: f32, b: &[f32; LANES],
             out: &mut [f32; LANES]) {
+    // Explicit f32x8 arm: same `a + (k * b)` two-rounding chain (no
+    // FMA), so bit-identical to the scalar loop.  See `util::simd`.
+    #[cfg(feature = "simd")]
+    {
+        use crate::util::simd::{simd_enabled, F32x8};
+        if simd_enabled() {
+            F32x8::from_slice(a)
+                .add(F32x8::splat(k).mul(F32x8::from_slice(b)))
+                .write(out);
+            return;
+        }
+    }
     for l in 0..LANES {
         out[l] = a[l] + k * b[l];
     }
@@ -131,6 +143,25 @@ where
     }
     deriv(&tmp, &mut k4);
     let sixth = dt / 6.0;
+    // Explicit f32x8 combine: `((k1 + 2*k2) + 2*k3) + k4` in the scalar
+    // loop's exact left-to-right order, then one mul by dt/6 and one
+    // add — the identical rounding chain, so bit-identical per lane.
+    #[cfg(feature = "simd")]
+    {
+        use crate::util::simd::{simd_enabled, F32x8};
+        if simd_enabled() {
+            let two = F32x8::splat(2.0);
+            let sx = F32x8::splat(sixth);
+            for f in 0..D {
+                let sum = F32x8::from_slice(&k1[f])
+                    .add(two.mul(F32x8::from_slice(&k2[f])))
+                    .add(two.mul(F32x8::from_slice(&k3[f])))
+                    .add(F32x8::from_slice(&k4[f]));
+                F32x8::from_slice(&s[f]).add(sx.mul(sum)).write(&mut s[f]);
+            }
+            return;
+        }
+    }
     for f in 0..D {
         for l in 0..LANES {
             s[f][l] += sixth
@@ -180,6 +211,46 @@ mod tests {
         axpy(&x0, 0.25, &cl, &mut out);
         for l in 0..LANES {
             assert_eq!(out[l].to_bits(), (x0[l] + 0.25 * cl[l]).to_bits());
+        }
+    }
+
+    /// With the `simd` feature, the explicit arm must agree bitwise
+    /// with the tiled arm on the same inputs.
+    #[cfg(feature = "simd")]
+    #[test]
+    fn simd_arm_matches_tiled_arm_bitwise() {
+        use crate::util::simd::{kernel_variant, set_kernel_variant,
+                                KernelVariant};
+        let a: [f32; LANES] = [0.3, -1.7, 4.0, -9.5, 0.0, 2.25, -0.125,
+                               7.5];
+        let b: [f32; LANES] = [1.0, -0.5, 0.25, 3.0, -2.0, 1.0e-7, 10.0,
+                               -7.5];
+        let prior = kernel_variant();
+        assert!(set_kernel_variant(KernelVariant::Tiled));
+        let mut out_t = [0f32; LANES];
+        axpy(&a, 0.37, &b, &mut out_t);
+        let mut s_t = [a, b];
+        rk4_tile(&mut s_t, 0.05, |st, ds| {
+            for l in 0..LANES {
+                ds[0][l] = st[1][l];
+                ds[1][l] = -st[0][l];
+            }
+        });
+        assert!(set_kernel_variant(KernelVariant::Simd));
+        let mut out_s = [0f32; LANES];
+        axpy(&a, 0.37, &b, &mut out_s);
+        let mut s_s = [a, b];
+        rk4_tile(&mut s_s, 0.05, |st, ds| {
+            for l in 0..LANES {
+                ds[0][l] = st[1][l];
+                ds[1][l] = -st[0][l];
+            }
+        });
+        set_kernel_variant(prior);
+        for l in 0..LANES {
+            assert_eq!(out_t[l].to_bits(), out_s[l].to_bits(), "axpy {l}");
+            assert_eq!(s_t[0][l].to_bits(), s_s[0][l].to_bits(), "rk4 {l}");
+            assert_eq!(s_t[1][l].to_bits(), s_s[1][l].to_bits(), "rk4 {l}");
         }
     }
 

@@ -37,8 +37,13 @@ pub struct HarnessOpts {
     pub seeds: usize,
     /// Iterations for throughput measurements.
     pub iters: usize,
-    /// Shard worker threads for the CPU engine (0 = all cores).
+    /// Shard worker threads for the CPU engine (0 = all cores, unless
+    /// a tuned profile supplies a measured-better count).
     pub threads: usize,
+    /// Skip the tuned-profile layer (`--no-tuned-profile`): 0 threads
+    /// then always means all cores and the kernel arm stays the build
+    /// default.
+    pub no_tuned: bool,
 }
 
 impl Default for HarnessOpts {
@@ -50,14 +55,15 @@ impl Default for HarnessOpts {
             seeds: 3,
             iters: 10,
             threads: 0,
+            no_tuned: false,
         }
     }
 }
 
 impl HarnessOpts {
     /// Build from CLI flags (`--out-dir`, `--budget-secs`, `--seeds`,
-    /// `--iters`, `--threads`) through the same [`FlagSource`] path the
-    /// run config uses.
+    /// `--iters`, `--threads`, `--no-tuned-profile`) through the same
+    /// [`FlagSource`] path the run config uses.
     ///
     /// [`FlagSource`]: crate::config::FlagSource
     pub fn from_flags(flags: &dyn crate::config::FlagSource)
@@ -71,6 +77,7 @@ impl HarnessOpts {
             seeds: parse_flag(flags, "seeds", d.seeds)?,
             iters: parse_flag(flags, "iters", d.iters)?,
             threads: parse_flag(flags, "threads", d.threads)?,
+            no_tuned: parse_flag(flags, "no-tuned-profile", d.no_tuned)?,
         })
     }
 }
@@ -93,8 +100,24 @@ pub fn make_backend(opts: &HarnessOpts, env: &str, n_envs: usize, t: usize,
         }
         eprintln!("note: no artifact {tag}; using the cpu engine backend");
     }
+    // The tuned profile steers the machine-dependent knobs only: the
+    // harness's `(n_envs, t)` are the figure's sweep axes, but an
+    // unset thread count (0 = all cores) defers to the tuned winner,
+    // and the tuned kernel arm (bit-identical, perf-only) is applied.
+    let mut threads = opts.threads;
+    if !opts.no_tuned {
+        if let Some(p) =
+            crate::tune::profile::resolve(&crate::tune::tuned_root(), env)
+        {
+            if threads == 0 {
+                threads = p.threads;
+            }
+            // silently ignored when the arm is not compiled in
+            crate::util::simd::set_kernel_variant(p.kernel);
+        }
+    }
     let cfg = CpuEngineConfig {
-        threads: opts.threads,
+        threads,
         seed,
         ..CpuEngineConfig::new(env, n_envs, t)
     };

@@ -41,6 +41,7 @@ pub mod policy;
 pub mod runtime;
 pub mod serve;
 pub mod store;
+pub mod tune;
 pub mod util;
 
 /// Default artifacts directory relative to the repo root.

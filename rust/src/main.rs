@@ -8,6 +8,9 @@
 //!                    feature: compiled AOT artifacts)
 //!   bench <exp>      regenerate a paper table/figure (fig2a, fig2b, fig2c,
 //!                    fig3, fig3-scaling, fig4, headline, ablation-*)
+//!   tune             measure a launch-shape sweep per env and persist
+//!                    the winner as a tuned per-(env, machine) profile
+//!                    that train/serve/bench auto-load
 //!   envs             list the environment registry (all trainable
 //!                    scenarios with their dimensions)
 //!   list             list available artifact tags
@@ -79,9 +82,18 @@ USAGE:
                 [--checkpoint-dir d] [--checkpoint-every K] [--resume d]
                 [--chaos spec] [--tolerate-faults] [--heartbeat-ms MS]
                 [--missed-heartbeats N] [--max-rejoins N]
+                [--kernel tiled|simd] [--no-tuned-profile]
        chaos spec: seed=7,drop=0.05,delay=0.1,delay_ms=2,dup=0.02,
                    reorder=0.05,kill=1@3  (suffix _to_server/_to_shard
                    for per-direction rates; async runs only)
+       shape precedence: explicit flag > TOML > tuned profile
+                   (tuned/<fingerprint>/<env>.toml) > built-in default;
+                   --no-tuned-profile skips the profile layer
+  warpsci tune  [--env cartpole,ecosystem|all] [--quick] [--repeats N]
+                [--warmup N] [--seed S] [--out-dir tuned]
+                [--gate-json BENCH_tune.json]
+                (sweeps n_envs/t/threads/kernel per env, persists the
+                 measured-fastest shape as the machine's tuned profile)
   warpsci bench <fig2a|fig2b|fig2c|fig3|fig3-scaling|fig4|headline|
                  shard-scaling|serve|ablation-transfer|ablation-kernel|
                  ablation-estimator|all>
@@ -118,6 +130,7 @@ fn run(argv: &[String]) -> Result<()> {
         "train" => cmd_train(&args),
         "bench" => cmd_bench(&args),
         "serve" => cmd_serve(&args),
+        "tune" => cmd_tune(&args),
         "envs" => cmd_envs(),
         "list" => cmd_list(),
         "info" => cmd_info(&args),
@@ -136,6 +149,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     use warpsci::runtime::CpuDevice;
 
     let cfg = RunConfig::load(args)?;
+    report_tuned(&cfg);
     if cfg.run_async || cfg.shards > 1 || cfg.checkpoint_dir.is_some() {
         // the compiled-graph path: multi-shard orchestration and
         // checkpointing run over the in-process CPU device
@@ -218,6 +232,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     use warpsci::runtime::Device;
 
     let cfg = RunConfig::load(args)?;
+    report_tuned(&cfg);
     let root = warpsci::try_artifacts_dir()?;
     let tag = cfg.artifact_tag();
     println!("loading artifact {tag} from {}", root.display());
@@ -372,6 +387,112 @@ where
     Ok(())
 }
 
+/// Activate the resolved kernel arm and say when a tuned profile
+/// steered the launch shape (train/serve call this right after
+/// `RunConfig::load`).
+fn report_tuned(cfg: &RunConfig) {
+    let variant = cfg.apply_kernel_variant();
+    if let Some(path) = &cfg.tuned_profile {
+        println!("tuned profile: {path} (n_envs {}, t {}, threads {}, \
+                  kernel {}; --no-tuned-profile to ignore)",
+                 cfg.n_envs, cfg.t, cfg.threads, variant.as_str());
+    }
+}
+
+/// `warpsci tune`: sweep launch shapes per env, persist each winner as
+/// this machine's tuned profile, and (with `--gate-json`) emit
+/// `tune/<env>` bench-gate records so a tuner regression fails CI.
+fn cmd_tune(args: &Args) -> Result<()> {
+    use warpsci::config::parse_flag;
+    use warpsci::tune::{self, TuneOpts};
+    use warpsci::util::Json;
+
+    let quick = parse_flag(args, "quick", false)?;
+    let mut opts = if quick { TuneOpts::quick() } else {
+        TuneOpts::full()
+    };
+    opts.repeats = parse_flag(args, "repeats", opts.repeats)?;
+    opts.warmup = parse_flag(args, "warmup", opts.warmup)?;
+    opts.seed = parse_flag(args, "seed", opts.seed)?;
+    let root = match args.get("out-dir") {
+        Some(d) => std::path::PathBuf::from(d),
+        None => tune::tuned_root(),
+    };
+    let envs: Vec<String> = match args.get("env") {
+        None | Some("all") => {
+            warpsci::envs::registry::names().map(String::from).collect()
+        }
+        Some(list) => list
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect(),
+    };
+    anyhow::ensure!(!envs.is_empty(), "no envs to tune");
+    println!("tuning {} env(s) on {} ({} search, {} repeats, warmup {})",
+             envs.len(), tune::machine_fingerprint(),
+             if opts.quick { "quick" } else { "full" }, opts.repeats,
+             opts.warmup);
+    let mut gate_records = Vec::new();
+    for env in &envs {
+        let report = tune::run_tune(
+            env, &opts, &root,
+            Some(&mut |line: &str| println!("  {line}")))?;
+        // The registry default is one of the measured candidates, so
+        // this holds by construction — asserting it keeps the CI smoke
+        // honest about the tuner's core promise.
+        anyhow::ensure!(
+            report.winner.steps_per_sec
+                >= report.default_score.steps_per_sec,
+            "tuned winner for {env} scored below the registry default");
+        println!(
+            "tuned {env}: {} at {} steps/s ({} steps/s-per-core) — \
+             default {} steps/s ({} per-core) — profile {}",
+            report.winner.candidate.label(),
+            human(report.winner.steps_per_sec),
+            human(report.per_core()),
+            human(report.default_score.steps_per_sec),
+            human(report.default_per_core()),
+            report.profile_path.display());
+        let c = report.winner.candidate;
+        let steps = (c.n_envs * c.t) as f64;
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("name".to_string(), Json::Str(format!("tune/{env}")));
+        o.insert("items_per_sec".to_string(),
+                 Json::Num(report.winner.steps_per_sec));
+        o.insert("mean_secs".to_string(),
+                 Json::Num(steps / report.winner.steps_per_sec));
+        o.insert("std_secs".to_string(), Json::Num(0.0));
+        o.insert("p50_secs".to_string(),
+                 Json::Num(steps / report.winner.steps_per_sec));
+        o.insert("p95_secs".to_string(),
+                 Json::Num(steps / report.winner.steps_per_sec));
+        o.insert("samples".to_string(),
+                 Json::Num(opts.repeats as f64));
+        o.insert("items_per_sample".to_string(), Json::Num(steps));
+        o.insert("items_per_sec_per_core".to_string(),
+                 Json::Num(report.per_core()));
+        o.insert("default_items_per_sec".to_string(),
+                 Json::Num(report.default_score.steps_per_sec));
+        o.insert("candidate".to_string(),
+                 Json::Str(c.label()));
+        gate_records.push(Json::Obj(o));
+    }
+    if let Some(path) = args.get("gate-json") {
+        let mut text = String::from("[\n");
+        for (i, rec) in gate_records.iter().enumerate() {
+            text.push_str(&format!(
+                "{rec}{}\n",
+                if i + 1 < gate_records.len() { "," } else { "" }));
+        }
+        text.push_str("]\n");
+        std::fs::write(path, text)
+            .with_context(|| format!("writing {path}"))?;
+        println!("gate records written to {path}");
+    }
+    Ok(())
+}
+
 /// Client counts swept by `warpsci bench serve`.
 const SERVE_CLIENT_LEVELS: [usize; 3] = [1, 8, 64];
 
@@ -455,6 +576,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     use warpsci::serve::{PolicyServer, ServeConfig};
 
     let cfg = RunConfig::load(args)?;
+    report_tuned(&cfg);
     let scfg = ServeConfig::from_run(&cfg);
     let clients = cfg.serve.clients.max(1);
     let per_client = (cfg.serve.requests / clients).max(1);

@@ -62,6 +62,37 @@ pub fn dense_block(x: &[f32], ldx: usize, row0: usize, nrows: usize,
     debug_assert!(x.len() >= ldx * in_dim);
     debug_assert!(out.len() >= ldo * out_dim);
     let mut r0 = 0;
+    // Explicit f32x8 arm: identical accumulation order (xs * w added to
+    // acc — two roundings, no FMA), so bit-identical to the tiled loop
+    // below; tanh stays scalar per-lane.  See `util::simd`.
+    #[cfg(feature = "simd")]
+    {
+        use crate::util::simd::{simd_enabled, F32x8};
+        if simd_enabled() {
+            while r0 + TILE <= nrows {
+                for j in 0..out_dim {
+                    let wrow = &wt[j * in_dim..(j + 1) * in_dim];
+                    let mut acc = F32x8::splat(bias[j]);
+                    for (k, &w) in wrow.iter().enumerate() {
+                        let base = k * ldx + row0 + r0;
+                        let xs = F32x8::from_slice(&x[base..base + TILE]);
+                        acc = acc.add(xs.mul(F32x8::splat(w)));
+                    }
+                    let obase = j * ldo + orow0 + r0;
+                    let o = &mut out[obase..obase + TILE];
+                    if tanh {
+                        let a = acc.to_array();
+                        for r in 0..TILE {
+                            o[r] = a[r].tanh();
+                        }
+                    } else {
+                        acc.write(o);
+                    }
+                }
+                r0 += TILE;
+            }
+        }
+    }
     while r0 + TILE <= nrows {
         for j in 0..out_dim {
             let wrow = &wt[j * in_dim..(j + 1) * in_dim];
@@ -117,6 +148,23 @@ pub fn value_cols(h: &[f32], n: usize, dim: usize, wv: &[f32], bv: f32,
     debug_assert_eq!(wv.len(), dim);
     debug_assert_eq!(out.len(), n);
     let mut r0 = 0;
+    // Explicit f32x8 arm — same two-rounding accumulation as below.
+    #[cfg(feature = "simd")]
+    {
+        use crate::util::simd::{simd_enabled, F32x8};
+        if simd_enabled() {
+            while r0 + TILE <= n {
+                let mut acc = F32x8::splat(bv);
+                for (k, &w) in wv.iter().enumerate() {
+                    let base = k * n + r0;
+                    let col = F32x8::from_slice(&h[base..base + TILE]);
+                    acc = acc.add(col.mul(F32x8::splat(w)));
+                }
+                acc.write(&mut out[r0..r0 + TILE]);
+                r0 += TILE;
+            }
+        }
+    }
     while r0 + TILE <= n {
         let mut acc = [bv; TILE];
         for (k, &w) in wv.iter().enumerate() {
@@ -307,6 +355,50 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// With the `simd` feature both arms must agree bitwise — flip the
+    /// runtime toggle and compare directly.  (The other tests in this
+    /// file already exercise whichever arm is active, so the oracle
+    /// pins cover both under `--features simd`.)
+    #[cfg(feature = "simd")]
+    #[test]
+    fn simd_arm_matches_tiled_arm_bitwise() {
+        use crate::util::simd::{kernel_variant, set_kernel_variant,
+                                KernelVariant};
+        let mut rng = Pcg64::new(11);
+        let (n, in_dim, out_dim) = (33usize, 7usize, 5usize);
+        let x = randv(&mut rng, in_dim * n);
+        let wt = randv(&mut rng, out_dim * in_dim);
+        let bias = randv(&mut rng, out_dim);
+        let wv = randv(&mut rng, out_dim);
+        let bv = rng.normal();
+        let prior = kernel_variant();
+        for &tanh in &[false, true] {
+            assert!(set_kernel_variant(KernelVariant::Tiled));
+            let mut tiled = vec![0f32; out_dim * n];
+            dense_cols(&x, n, in_dim, &wt, &bias, out_dim, tanh,
+                       &mut tiled);
+            let mut vt = vec![0f32; n];
+            value_cols(&tiled, n, out_dim, &wv, bv, &mut vt);
+            assert!(set_kernel_variant(KernelVariant::Simd));
+            let mut simd = vec![0f32; out_dim * n];
+            dense_cols(&x, n, in_dim, &wt, &bias, out_dim, tanh,
+                       &mut simd);
+            let mut vs = vec![0f32; n];
+            value_cols(&simd, n, out_dim, &wv, bv, &mut vs);
+            assert_eq!(
+                tiled.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                simd.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "dense tanh={tanh}"
+            );
+            assert_eq!(
+                vt.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                vs.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "value tanh={tanh}"
+            );
+        }
+        set_kernel_variant(prior);
     }
 
     #[test]

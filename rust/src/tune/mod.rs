@@ -1,0 +1,168 @@
+//! `warpsci tune` — the auto-tuning harness (WarpDrive v1.3's
+//! auto-scaling, for this engine).
+//!
+//! Throughput on the fused-rollout hot path depends on launch shape:
+//! replicas per shard, rollout length, worker-thread count, kernel
+//! arm.  Instead of hand-picking those per machine, `warpsci tune`
+//! measures a deterministic candidate sweep ([`search`]) against each
+//! registered env's bench shape and persists the winner as a versioned
+//! per-(env, machine) profile ([`profile`]) that
+//! [`crate::config::RunConfig::load`] resolves by default — explicit
+//! flags and TOML keys still win, and `--no-tuned-profile` opts out.
+//!
+//! The registry-default configuration is always one of the measured
+//! candidates, so the persisted winner's score is >= the default's on
+//! the same machine by construction — `warpsci tune` asserts exactly
+//! that and reports both as steps/sec-per-core.
+
+pub mod profile;
+pub mod search;
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+pub use profile::{machine_fingerprint, tuned_root, ProfileError,
+                  TunedProfile};
+pub use search::{enumerate_candidates, measure, Candidate, Measurement,
+                 TuneOpts};
+
+use crate::envs::registry;
+
+/// The outcome of tuning one env on this machine.
+#[derive(Debug, Clone)]
+pub struct TuneReport {
+    pub env: String,
+    pub winner: Measurement,
+    /// Score of the registry-default candidate on this machine.
+    pub default_score: Measurement,
+    pub candidates_tried: usize,
+    /// Where the profile was persisted.
+    pub profile_path: std::path::PathBuf,
+}
+
+impl TuneReport {
+    /// Winner steps/sec normalized by its worker-thread count.
+    pub fn per_core(&self) -> f64 {
+        self.winner.steps_per_sec
+            / self.winner.candidate.threads.max(1) as f64
+    }
+
+    /// Default steps/sec normalized by its worker-thread count.
+    pub fn default_per_core(&self) -> f64 {
+        self.default_score.steps_per_sec
+            / self.default_score.candidate.threads.max(1) as f64
+    }
+}
+
+/// Tune one env: enumerate, measure every candidate, persist the
+/// winner under `root`, and return the report.  `progress` (when set)
+/// receives one line per measured candidate.
+pub fn run_tune(env: &str, opts: &TuneOpts, root: &Path,
+                mut progress: Option<&mut dyn FnMut(&str)>)
+                -> Result<TuneReport> {
+    let spec = registry::find(env).with_context(|| {
+        format!("unknown env {env:?} (known: {})",
+                registry::known_names())
+    })?;
+    let cores = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    let candidates = enumerate_candidates(spec, cores, opts);
+    let default = Candidate::registry_default(spec, cores);
+    let mut measured = Vec::with_capacity(candidates.len());
+    for (i, cand) in candidates.iter().enumerate() {
+        let m = measure(env, cand, opts)?;
+        if let Some(cb) = progress.as_deref_mut() {
+            cb(&format!("[{}/{}] {env} {:<28} {:>12.0} steps/s",
+                        i + 1, candidates.len(), cand.label(),
+                        m.steps_per_sec));
+        }
+        measured.push(m);
+    }
+    // Winner: best measured steps/sec; ties break toward the candidate
+    // with fewer threads, then smaller n_envs/t (cheaper shape), then
+    // the tiled arm — fully deterministic given the measurements.
+    let winner = *measured
+        .iter()
+        .max_by(|a, b| {
+            a.steps_per_sec
+                .partial_cmp(&b.steps_per_sec)
+                .expect("finite scores")
+                .then_with(|| cand_pref(&b.candidate)
+                    .cmp(&cand_pref(&a.candidate)))
+        })
+        .expect("non-empty candidate set");
+    let default_score = *measured
+        .iter()
+        .find(|m| m.candidate == default)
+        .expect("registry default is always a candidate");
+    let prof = TunedProfile {
+        env: env.to_string(),
+        fingerprint: machine_fingerprint(),
+        n_envs: winner.candidate.n_envs,
+        t: winner.candidate.t,
+        threads: winner.candidate.threads,
+        kernel: winner.candidate.kernel,
+        steps_per_sec: winner.steps_per_sec,
+        default_steps_per_sec: default_score.steps_per_sec,
+        quick: opts.quick,
+        repeats: opts.repeats,
+    };
+    let profile_path = prof
+        .save(root)
+        .with_context(|| format!("persisting tuned profile for {env}"))?;
+    Ok(TuneReport {
+        env: env.to_string(),
+        winner,
+        default_score,
+        candidates_tried: candidates.len(),
+        profile_path,
+    })
+}
+
+/// Tie-break preference key: lower is better.
+fn cand_pref(c: &Candidate) -> (usize, usize, usize, u8) {
+    let kernel_rank = match c.kernel {
+        crate::util::simd::KernelVariant::Tiled => 0,
+        crate::util::simd::KernelVariant::Simd => 1,
+    };
+    (c.threads, c.n_envs, c.t, kernel_rank)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_tune_persists_a_winner_not_below_default() {
+        let root = std::env::temp_dir().join("warpsci_tune_unit");
+        let _ = std::fs::remove_dir_all(&root);
+        // WARPSCI_BENCH_FAST-free path: quick opts are already tiny,
+        // and cartpole's bench shape rolls out in milliseconds.
+        let opts = TuneOpts { repeats: 1, warmup: 0, ..TuneOpts::quick() };
+        let mut lines = 0usize;
+        let report = run_tune("cartpole", &opts, &root,
+                              Some(&mut |_l: &str| lines += 1))
+            .unwrap();
+        assert_eq!(lines, report.candidates_tried);
+        assert!(report.winner.steps_per_sec
+                >= report.default_score.steps_per_sec,
+                "winner beats or ties the default by construction");
+        assert!(report.per_core() > 0.0);
+        let loaded = TunedProfile::load(&report.profile_path).unwrap();
+        assert_eq!(loaded.env, "cartpole");
+        assert_eq!(loaded.n_envs, report.winner.candidate.n_envs);
+        assert_eq!(loaded.threads, report.winner.candidate.threads);
+        assert!(loaded.quick);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn unknown_env_lists_known_names() {
+        let root = std::env::temp_dir().join("warpsci_tune_unknown");
+        let err = run_tune("nope", &TuneOpts::quick(), &root, None)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("cartpole"));
+    }
+}

@@ -1,0 +1,305 @@
+//! Candidate enumeration + measurement for `warpsci tune`.
+//!
+//! The search space is the launch configuration of the fused-rollout
+//! hot path: replicas per shard (`n_envs`), rollout length (`t`),
+//! shard worker-thread count, and the kernel arm
+//! ([`crate::util::simd::KernelVariant`]).  Enumeration is **pure and
+//! deterministic** for a given `(env spec, core count, seed)` — two
+//! tune runs on one machine walk the same candidates in the same
+//! order, so they agree on the winner modulo timing noise (pinned by
+//! `tests/tune.rs`).  Measurement drives
+//! [`crate::coordinator::Backend::rollout_iter`] (inference + sampling
+//! + env stepping + trajectory capture, no update) with warmup
+//! iterations and a trimmed-mean over timed repeats.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::{Backend, CpuEngine, CpuEngineConfig};
+use crate::envs::registry::EnvSpec;
+use crate::util::simd::{kernel_variant, set_kernel_variant,
+                        simd_compiled, KernelVariant, WIDTH};
+use crate::util::Pcg64;
+
+/// One launch configuration under test.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Candidate {
+    pub n_envs: usize,
+    pub t: usize,
+    pub threads: usize,
+    pub kernel: KernelVariant,
+}
+
+impl Candidate {
+    /// The registry-default configuration for `spec` on a
+    /// `cores`-thread machine — always part of the search space, so
+    /// the winner's measured score is >= the default's by
+    /// construction.
+    pub fn registry_default(spec: &EnvSpec, cores: usize) -> Candidate {
+        Candidate {
+            n_envs: spec.bench_n_envs,
+            t: spec.bench_t,
+            threads: cores.max(1),
+            kernel: KernelVariant::Tiled,
+        }
+    }
+
+    /// Stable display form (`n4096/t8/threads4/tiled`).
+    pub fn label(&self) -> String {
+        format!("n{}/t{}/threads{}/{}", self.n_envs, self.t,
+                self.threads, self.kernel.as_str())
+    }
+}
+
+/// Search-breadth knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct TuneOpts {
+    /// Small search space + fewer repeats (CI smoke).
+    pub quick: bool,
+    /// Timed repeats per candidate.
+    pub repeats: usize,
+    /// Untimed warmup iterations per candidate.
+    pub warmup: usize,
+    /// Seed for the measurement-order shuffle.
+    pub seed: u64,
+}
+
+impl TuneOpts {
+    pub fn full() -> TuneOpts {
+        TuneOpts { quick: false, repeats: 5, warmup: 2, seed: 0 }
+    }
+
+    pub fn quick() -> TuneOpts {
+        TuneOpts { quick: true, repeats: 2, warmup: 1, seed: 0 }
+    }
+}
+
+impl Default for TuneOpts {
+    fn default() -> TuneOpts {
+        TuneOpts::full()
+    }
+}
+
+/// Power-of-two thread ladder up to `cores`, plus `cores` itself.
+fn thread_ladder(cores: usize) -> Vec<usize> {
+    let cores = cores.max(1);
+    let mut out = Vec::new();
+    let mut p = 1usize;
+    while p <= cores {
+        out.push(p);
+        p *= 2;
+    }
+    if *out.last().unwrap() != cores {
+        out.push(cores);
+    }
+    out
+}
+
+/// The kernel arms this build can actually run.
+fn kernel_axis() -> Vec<KernelVariant> {
+    if simd_compiled() {
+        vec![KernelVariant::Tiled, KernelVariant::Simd]
+    } else {
+        vec![KernelVariant::Tiled]
+    }
+}
+
+/// Enumerate the candidate set for `spec` on a `cores`-thread machine.
+///
+/// Deterministic: the set is built in a canonical nested order, then
+/// the **measurement order** is shuffled by a [`Pcg64`] seeded from
+/// `opts.seed` (decorrelates adjacent-candidate cache/thermal effects
+/// while keeping runs reproducible).  The registry-default candidate
+/// is always a member.  Candidate lane counts stay multiples of the
+/// 8-wide tile so measured shapes exercise the vector path only
+/// (registry bench shapes already are).
+pub fn enumerate_candidates(spec: &EnvSpec, cores: usize, opts: &TuneOpts)
+                            -> Vec<Candidate> {
+    let base_n = spec.bench_n_envs;
+    let base_t = spec.bench_t;
+    let n_axis: Vec<usize> = if opts.quick {
+        vec![base_n]
+    } else {
+        let mut v = vec![base_n / 2, base_n, base_n * 2];
+        v.retain(|&n| n >= WIDTH);
+        v
+    };
+    let t_axis: Vec<usize> = if opts.quick {
+        vec![base_t]
+    } else {
+        vec![base_t, base_t * 2, base_t * 4]
+    };
+    let thread_axis = if opts.quick {
+        let mut v = vec![1, cores.max(1)];
+        v.dedup();
+        v
+    } else {
+        thread_ladder(cores)
+    };
+    let mut out = Vec::new();
+    for &n_envs in &n_axis {
+        for &t in &t_axis {
+            for &threads in &thread_axis {
+                for &kernel in &kernel_axis() {
+                    out.push(Candidate { n_envs, t, threads, kernel });
+                }
+            }
+        }
+    }
+    let default = Candidate::registry_default(spec, cores);
+    if !out.contains(&default) {
+        out.push(default);
+    }
+    // Fisher-Yates with the repo's own PCG — deterministic per seed.
+    let mut rng = Pcg64::with_stream(opts.seed, TUNE_STREAM);
+    for i in (1..out.len()).rev() {
+        let j = rng.below(i + 1);
+        out.swap(i, j);
+    }
+    out
+}
+
+/// RNG stream id reserved for the tuner's measurement-order shuffle
+/// (keeps it decorrelated from the engine's per-lane streams).
+const TUNE_STREAM: u64 = 0x7;
+
+/// Measured score for one candidate.
+#[derive(Debug, Clone, Copy)]
+pub struct Measurement {
+    pub candidate: Candidate,
+    /// Fused-rollout steps/sec (trimmed mean over repeats).
+    pub steps_per_sec: f64,
+}
+
+/// Measure one candidate: select its kernel arm, build a fresh
+/// [`CpuEngine`] at its shape, run `warmup` untimed then `repeats`
+/// timed [`Backend::rollout_iter`] calls, and score by
+/// `steps_per_iter / trimmed_mean(times)`.  The previously-active
+/// kernel arm is restored before returning.
+pub fn measure(env: &str, cand: &Candidate, opts: &TuneOpts)
+               -> Result<Measurement> {
+    let prior = kernel_variant();
+    if !set_kernel_variant(cand.kernel) {
+        anyhow::bail!(
+            "kernel variant {} is not compiled into this build \
+             (rebuild with --features simd)",
+            cand.kernel.as_str()
+        );
+    }
+    let run = || -> Result<f64> {
+        let cfg = CpuEngineConfig {
+            threads: cand.threads,
+            seed: opts.seed,
+            ..CpuEngineConfig::new(env, cand.n_envs, cand.t)
+        };
+        let mut engine = CpuEngine::new(cfg)?;
+        let steps = engine.steps_per_iter() as f64;
+        for _ in 0..opts.warmup {
+            engine.rollout_iter()?;
+        }
+        let mut times = Vec::with_capacity(opts.repeats.max(1));
+        for _ in 0..opts.repeats.max(1) {
+            let t0 = Instant::now();
+            engine.rollout_iter()?;
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        Ok(steps / trimmed_mean(&mut times))
+    };
+    let result = run();
+    set_kernel_variant(prior);
+    result.map(|steps_per_sec| Measurement {
+        candidate: *cand,
+        steps_per_sec,
+    })
+}
+
+/// Mean after dropping the min and max sample (when there are at
+/// least three) — one scheduler hiccup cannot steer the winner.
+pub fn trimmed_mean(times: &mut [f64]) -> f64 {
+    assert!(!times.is_empty());
+    times.sort_by(|a, b| a.partial_cmp(b).expect("finite times"));
+    let trimmed: &[f64] = if times.len() >= 3 {
+        &times[1..times.len() - 1]
+    } else {
+        times
+    };
+    trimmed.iter().sum::<f64>() / trimmed.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::registry;
+
+    #[test]
+    fn enumeration_is_deterministic_and_contains_default() {
+        let spec = registry::find("cartpole").unwrap();
+        for opts in [TuneOpts::full(), TuneOpts::quick()] {
+            let a = enumerate_candidates(spec, 4, &opts);
+            let b = enumerate_candidates(spec, 4, &opts);
+            assert_eq!(a, b, "same seed, same order");
+            assert!(a.contains(&Candidate::registry_default(spec, 4)));
+            let mut dedup = a.clone();
+            dedup.sort_by_key(|c| (c.n_envs, c.t, c.threads,
+                                   c.kernel.as_str()));
+            dedup.dedup();
+            assert_eq!(dedup.len(), a.len(), "no duplicate candidates");
+        }
+        // a different seed permutes, same set
+        let mut a =
+            enumerate_candidates(spec, 4, &TuneOpts::full());
+        let mut b = enumerate_candidates(
+            spec, 4, &TuneOpts { seed: 1, ..TuneOpts::full() });
+        assert_ne!(a, b, "different seed shuffles the order");
+        let key = |c: &Candidate| (c.n_envs, c.t, c.threads,
+                                   c.kernel.as_str());
+        a.sort_by_key(key);
+        b.sort_by_key(key);
+        assert_eq!(a, b, "same underlying set");
+    }
+
+    #[test]
+    fn thread_ladder_covers_non_powers_of_two() {
+        assert_eq!(thread_ladder(1), vec![1]);
+        assert_eq!(thread_ladder(4), vec![1, 2, 4]);
+        assert_eq!(thread_ladder(6), vec![1, 2, 4, 6]);
+        assert_eq!(thread_ladder(0), vec![1]);
+    }
+
+    #[test]
+    fn quick_space_is_small() {
+        let spec = registry::find("ecosystem").unwrap();
+        let quick =
+            enumerate_candidates(spec, 8, &TuneOpts::quick());
+        let full = enumerate_candidates(spec, 8, &TuneOpts::full());
+        assert!(quick.len() < full.len());
+        assert!(quick.len() <= 2 * kernel_axis().len());
+        for c in &quick {
+            assert_eq!((c.n_envs, c.t),
+                       (spec.bench_n_envs, spec.bench_t));
+        }
+    }
+
+    #[test]
+    fn trimmed_mean_drops_outliers() {
+        let mut t = vec![1.0, 100.0, 1.0, 1.0, 0.001];
+        assert!((trimmed_mean(&mut t) - 1.0).abs() < 1e-12);
+        let mut two = vec![2.0, 4.0];
+        assert!((trimmed_mean(&mut two) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn measure_scores_a_tiny_candidate() {
+        let cand = Candidate {
+            n_envs: 8,
+            t: 2,
+            threads: 1,
+            kernel: KernelVariant::Tiled,
+        };
+        let opts = TuneOpts { repeats: 2, warmup: 0, ..TuneOpts::quick() };
+        let m = measure("cartpole", &cand, &opts).unwrap();
+        assert!(m.steps_per_sec > 0.0);
+        assert_eq!(m.candidate, cand);
+    }
+}

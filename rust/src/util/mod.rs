@@ -7,6 +7,7 @@
 pub mod csv;
 pub mod json;
 pub mod rng;
+pub mod simd;
 pub mod stats;
 pub mod timer;
 

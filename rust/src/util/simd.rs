@@ -1,0 +1,297 @@
+//! Explicit `f32x8` SIMD wrapper + runtime kernel-variant toggle.
+//!
+//! The tiled kernels in [`crate::nn::kernels`] / [`crate::envs::kernels`]
+//! are written so the autovectorizer can lift their 8-wide inner loops
+//! to SIMD.  When it underdelivers, the `simd` feature adds an explicit
+//! arm built on this wrapper: on x86_64 it lowers to SSE2 intrinsics
+//! (baseline on every x86_64 target, so no runtime feature detection is
+//! needed); elsewhere it falls back to a plain `[f32; 8]` loop the
+//! compiler vectorizes as it sees fit.
+//!
+//! # Bitwise determinism contract
+//!
+//! The wrapper exposes **only** lane-wise `mul` and `add`.  SSE2
+//! `_mm_mul_ps` / `_mm_add_ps` perform exactly one IEEE-754 rounding
+//! each — the same two roundings as the scalar `a + k * b` they
+//! replace — so the SIMD arm is bit-identical to the scalar oracles.
+//! There is deliberately no FMA (single rounding: different bits), no
+//! min/max (`_mm_max_ps` NaN/±0 semantics differ from `f32::max`), and
+//! no transcendentals (libm calls stay scalar per-lane).  The
+//! bit-exactness suites pin this across every registered env and
+//! policy shape.
+
+/// Lane width of the wrapper — matches `nn::kernels::TILE` and
+/// `envs::kernels::LANES`.
+pub const WIDTH: usize = 8;
+
+/// Which kernel arm the engine runs.  Both arms are bit-identical, so
+/// this is purely a performance axis — the tuner searches it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelVariant {
+    /// Tiled scalar loops (autovectorized) — the default arm.
+    Tiled,
+    /// Explicit `f32x8` intrinsics arm (requires the `simd` feature).
+    Simd,
+}
+
+impl KernelVariant {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KernelVariant::Tiled => "tiled",
+            KernelVariant::Simd => "simd",
+        }
+    }
+}
+
+impl std::str::FromStr for KernelVariant {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<KernelVariant, String> {
+        match s {
+            "tiled" => Ok(KernelVariant::Tiled),
+            "simd" => Ok(KernelVariant::Simd),
+            other => Err(format!(
+                "unknown kernel variant {other:?} (expected tiled|simd)"
+            )),
+        }
+    }
+}
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+// Default: when the feature is compiled in, the SIMD arm is on, so the
+// plain `--features simd` test run exercises it everywhere.
+static SIMD_ON: AtomicBool = AtomicBool::new(cfg!(feature = "simd"));
+
+/// Whether the explicit SIMD arm was compiled in at all.
+pub const fn simd_compiled() -> bool {
+    cfg!(feature = "simd")
+}
+
+/// Whether the kernels should take the explicit SIMD arm right now.
+/// Const-folds to `false` without the `simd` feature, so the dispatch
+/// branches vanish from default builds.
+#[inline(always)]
+pub fn simd_enabled() -> bool {
+    cfg!(feature = "simd") && SIMD_ON.load(Ordering::Relaxed)
+}
+
+/// Select the kernel arm at runtime.  Returns `false` (and leaves the
+/// tiled arm active) when `Simd` is requested on a build without the
+/// `simd` feature.
+pub fn set_kernel_variant(v: KernelVariant) -> bool {
+    match v {
+        KernelVariant::Tiled => {
+            SIMD_ON.store(false, Ordering::Relaxed);
+            true
+        }
+        KernelVariant::Simd => {
+            if !simd_compiled() {
+                return false;
+            }
+            SIMD_ON.store(true, Ordering::Relaxed);
+            true
+        }
+    }
+}
+
+/// The currently-active kernel arm.
+pub fn kernel_variant() -> KernelVariant {
+    if simd_enabled() {
+        KernelVariant::Simd
+    } else {
+        KernelVariant::Tiled
+    }
+}
+
+/// Eight f32 lanes.  On x86_64 this is two SSE2 `__m128` registers;
+/// elsewhere a plain array the compiler is free to vectorize.
+#[derive(Clone, Copy)]
+pub struct F32x8 {
+    #[cfg(target_arch = "x86_64")]
+    lo: core::arch::x86_64::__m128,
+    #[cfg(target_arch = "x86_64")]
+    hi: core::arch::x86_64::__m128,
+    #[cfg(not(target_arch = "x86_64"))]
+    v: [f32; WIDTH],
+}
+
+#[cfg(target_arch = "x86_64")]
+mod imp {
+    use super::{F32x8, WIDTH};
+    use core::arch::x86_64::*;
+
+    impl F32x8 {
+        /// Load 8 lanes from the front of `s` (`s.len() >= 8`).
+        #[inline(always)]
+        pub fn from_slice(s: &[f32]) -> F32x8 {
+            assert!(s.len() >= WIDTH);
+            // SAFETY: bounds asserted above; loadu has no alignment
+            // requirement, and SSE2 is baseline on x86_64.
+            unsafe {
+                F32x8 {
+                    lo: _mm_loadu_ps(s.as_ptr()),
+                    hi: _mm_loadu_ps(s.as_ptr().add(4)),
+                }
+            }
+        }
+
+        /// Broadcast one value to all 8 lanes.
+        #[inline(always)]
+        pub fn splat(v: f32) -> F32x8 {
+            // SAFETY: set1 is a register-only SSE2 op.
+            unsafe {
+                F32x8 {
+                    lo: _mm_set1_ps(v),
+                    hi: _mm_set1_ps(v),
+                }
+            }
+        }
+
+        /// Lane-wise add — one IEEE rounding per lane, exactly like
+        /// the scalar `+` it replaces.
+        #[inline(always)]
+        pub fn add(self, o: F32x8) -> F32x8 {
+            // SAFETY: register-only SSE2 ops.
+            unsafe {
+                F32x8 {
+                    lo: _mm_add_ps(self.lo, o.lo),
+                    hi: _mm_add_ps(self.hi, o.hi),
+                }
+            }
+        }
+
+        /// Lane-wise multiply — one IEEE rounding per lane (never
+        /// fused with a following add).
+        #[inline(always)]
+        pub fn mul(self, o: F32x8) -> F32x8 {
+            // SAFETY: register-only SSE2 ops.
+            unsafe {
+                F32x8 {
+                    lo: _mm_mul_ps(self.lo, o.lo),
+                    hi: _mm_mul_ps(self.hi, o.hi),
+                }
+            }
+        }
+
+        /// Store the 8 lanes to the front of `out` (`out.len() >= 8`).
+        #[inline(always)]
+        pub fn write(self, out: &mut [f32]) {
+            assert!(out.len() >= WIDTH);
+            // SAFETY: bounds asserted above; storeu is unaligned.
+            unsafe {
+                _mm_storeu_ps(out.as_mut_ptr(), self.lo);
+                _mm_storeu_ps(out.as_mut_ptr().add(4), self.hi);
+            }
+        }
+
+        /// The lanes as an array (test/inspection helper).
+        #[inline(always)]
+        pub fn to_array(self) -> [f32; WIDTH] {
+            let mut out = [0.0f32; WIDTH];
+            self.write(&mut out);
+            out
+        }
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+mod imp {
+    use super::{F32x8, WIDTH};
+
+    impl F32x8 {
+        /// Load 8 lanes from the front of `s` (`s.len() >= 8`).
+        #[inline(always)]
+        pub fn from_slice(s: &[f32]) -> F32x8 {
+            let mut v = [0.0f32; WIDTH];
+            v.copy_from_slice(&s[..WIDTH]);
+            F32x8 { v }
+        }
+
+        /// Broadcast one value to all 8 lanes.
+        #[inline(always)]
+        pub fn splat(x: f32) -> F32x8 {
+            F32x8 { v: [x; WIDTH] }
+        }
+
+        /// Lane-wise add — one rounding per lane.
+        #[inline(always)]
+        pub fn add(self, o: F32x8) -> F32x8 {
+            let mut v = self.v;
+            for l in 0..WIDTH {
+                v[l] += o.v[l];
+            }
+            F32x8 { v }
+        }
+
+        /// Lane-wise multiply — one rounding per lane, never fused.
+        #[inline(always)]
+        pub fn mul(self, o: F32x8) -> F32x8 {
+            let mut v = self.v;
+            for l in 0..WIDTH {
+                v[l] *= o.v[l];
+            }
+            F32x8 { v }
+        }
+
+        /// Store the 8 lanes to the front of `out` (`out.len() >= 8`).
+        #[inline(always)]
+        pub fn write(self, out: &mut [f32]) {
+            out[..WIDTH].copy_from_slice(&self.v);
+        }
+
+        /// The lanes as an array (test/inspection helper).
+        #[inline(always)]
+        pub fn to_array(self) -> [f32; WIDTH] {
+            self.v
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lanewise_ops_match_scalar_bitwise() {
+        let a = [1.5f32, -2.25, 3.0e-7, 4.0e7, -0.0, 1.0, 7.25, -8.5];
+        let b = [0.3f32, 1.7, -2.9e6, 5.5e-8, 2.0, -0.125, 0.0, 9.75];
+        let k = 0.777f32;
+        let got = F32x8::from_slice(&a)
+            .add(F32x8::splat(k).mul(F32x8::from_slice(&b)))
+            .to_array();
+        for l in 0..WIDTH {
+            let want = a[l] + k * b[l];
+            assert_eq!(got[l].to_bits(), want.to_bits(), "lane {l}");
+        }
+    }
+
+    #[test]
+    fn write_roundtrips() {
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let mut out = [0.0f32; WIDTH];
+        F32x8::from_slice(&a).write(&mut out);
+        assert_eq!(a, out);
+    }
+
+    #[test]
+    fn variant_parse_roundtrips() {
+        for v in [KernelVariant::Tiled, KernelVariant::Simd] {
+            assert_eq!(v.as_str().parse::<KernelVariant>().unwrap(), v);
+        }
+        assert!("avx512".parse::<KernelVariant>().is_err());
+    }
+
+    #[test]
+    fn set_variant_respects_feature_gate() {
+        // Restore whatever the compiled-in default was afterwards so
+        // parallel tests observing simd_enabled() see a stable value.
+        let prior = kernel_variant();
+        assert!(set_kernel_variant(KernelVariant::Tiled));
+        assert!(!simd_enabled());
+        let ok = set_kernel_variant(KernelVariant::Simd);
+        assert_eq!(ok, simd_compiled());
+        assert_eq!(simd_enabled(), simd_compiled());
+        set_kernel_variant(prior);
+    }
+}

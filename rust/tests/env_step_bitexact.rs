@@ -65,6 +65,59 @@ fn tiled_step_all_is_bit_identical_to_scalar_oracle() {
     }
 }
 
+/// The explicit f32x8 arm (`--features simd`) toggled on and off at
+/// runtime produces the exact same state/reward/done bits as the
+/// plain tiled arm, for every registered env and every lane count in
+/// the 1..64 sweep.  (The scalar-oracle pin above already runs against
+/// the SIMD arm when the feature is on; this makes arm-vs-arm
+/// equality explicit.)
+#[cfg(feature = "simd")]
+#[test]
+fn simd_step_all_is_bit_identical_to_tiled_step_all() {
+    use warpsci::util::simd::{kernel_variant, set_kernel_variant,
+                              KernelVariant};
+    let prior = kernel_variant();
+    for spec in registry::SPECS.iter() {
+        let env = (spec.make_batch)();
+        let na = env.n_agents();
+        let n_act = env.n_actions() as u32;
+        for &n in &LANE_COUNTS {
+            let mut state = vec![0f32; env.state_dim() * n];
+            for i in 0..n {
+                let mut rng = Pcg64::with_stream(11, i as u64);
+                env.reset_lane(&mut state, n, i, &mut rng);
+            }
+            let mut state_simd = state.clone();
+            let rows = n * na;
+            let mut rewards = vec![0f32; rows];
+            let mut dones = vec![0f32; n];
+            let mut rewards_simd = vec![0f32; rows];
+            let mut dones_simd = vec![0f32; n];
+            for step in 0..STEPS {
+                let actions: Vec<u32> = (0..rows)
+                    .map(|r| (r + step) as u32 % n_act)
+                    .collect();
+                assert!(set_kernel_variant(KernelVariant::Tiled));
+                env.step_all(&mut state, n, &actions, &mut [],
+                             &mut rewards, &mut dones);
+                assert!(set_kernel_variant(KernelVariant::Simd));
+                env.step_all(&mut state_simd, n, &actions, &mut [],
+                             &mut rewards_simd, &mut dones_simd);
+                assert_eq!(bits(&rewards), bits(&rewards_simd),
+                           "{} n={n} step {step}: rewards diverged",
+                           spec.name);
+                assert_eq!(bits(&dones), bits(&dones_simd),
+                           "{} n={n} step {step}: dones diverged",
+                           spec.name);
+                assert_eq!(bits(&state), bits(&state_simd),
+                           "{} n={n} step {step}: state diverged",
+                           spec.name);
+            }
+        }
+    }
+    set_kernel_variant(prior);
+}
+
 /// Lane-count invariance of the tiled path itself: lane `i` of an
 /// `n`-lane batch evolves exactly like the same lane stepped alone —
 /// the property shard partitioning (and the engine's lane-local

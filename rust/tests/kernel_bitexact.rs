@@ -163,6 +163,43 @@ fn tiled_sampling_is_bit_identical_and_partition_invariant() {
     }
 }
 
+/// The explicit f32x8 arm (`--features simd`) is a *perf-only* axis:
+/// toggled on and off at runtime, the tiled forward produces the exact
+/// same bits for every pinned shape and every tile-remainder row
+/// count.  (The two scalar-oracle pins above already run *against* the
+/// SIMD arm when the feature is on, since it defaults to enabled; this
+/// pin makes the arm-vs-arm equality itself explicit.)
+#[cfg(feature = "simd")]
+#[test]
+fn simd_forward_is_bit_identical_to_tiled_forward() {
+    use warpsci::util::simd::{kernel_variant, set_kernel_variant,
+                              KernelVariant};
+    let prior = kernel_variant();
+    let mut rng = Pcg64::new(404);
+    for &(od, hidden, acts) in &SHAPES {
+        let mlp = Mlp::init(od, hidden, acts, &mut rng);
+        let tiled = TiledPolicy::new(&mlp);
+        for &n in &ROW_COUNTS {
+            let x_rows = randv(&mut rng, n * od);
+            let x_cols = to_cols(&x_rows, n, od);
+            assert!(set_kernel_variant(KernelVariant::Simd));
+            let mut simd_cache = Cache::default();
+            tiled.forward(&x_cols, n, &mut simd_cache);
+            assert!(set_kernel_variant(KernelVariant::Tiled));
+            let mut cache = Cache::default();
+            tiled.forward(&x_cols, n, &mut cache);
+            let tag = format!("shape ({od},{hidden},{acts}) n={n}");
+            assert_eq!(bits(&cache.h1), bits(&simd_cache.h1), "{tag} h1");
+            assert_eq!(bits(&cache.h2), bits(&simd_cache.h2), "{tag} h2");
+            assert_eq!(bits(&cache.logp), bits(&simd_cache.logp),
+                       "{tag} logp");
+            assert_eq!(bits(&cache.value), bits(&simd_cache.value),
+                       "{tag} value");
+        }
+    }
+    set_kernel_variant(prior);
+}
+
 /// End to end: one fused roll-out through the engine's SoA obs path
 /// produces the exact trajectory the scalar reference policy would,
 /// replayed tick by tick on the recorded observations.

@@ -1,0 +1,171 @@
+//! End-to-end tuned-profile tests that exercise the real resolution
+//! path `RunConfig::load` uses in production — including the
+//! `$WARPSCI_TUNED_DIR` root override.  This binary has its own
+//! `[[test]]` target precisely because it mutates the process
+//! environment: every test that touches `WARPSCI_TUNED_DIR` holds
+//! [`ENV_LOCK`] so the mutation never races another thread's env read
+//! (the library's own unit tests inject the root explicitly and never
+//! set env vars).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use warpsci::config::{FlagSource, NoFlags, RunConfig};
+use warpsci::tune::{machine_fingerprint, TunedProfile};
+use warpsci::util::simd::KernelVariant;
+
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+struct MapFlags(BTreeMap<String, String>);
+
+impl MapFlags {
+    fn new(pairs: &[(&str, &str)]) -> MapFlags {
+        MapFlags(pairs.iter()
+            .map(|&(k, v)| (k.to_string(), v.to_string()))
+            .collect())
+    }
+}
+
+impl FlagSource for MapFlags {
+    fn flag(&self, key: &str) -> Option<&str> {
+        self.0.get(key).map(|s| s.as_str())
+    }
+}
+
+/// A fresh temp root holding one valid cartpole profile for this
+/// machine; returns `(root, profile)`.
+fn tuned_root_with_profile(tag: &str) -> (PathBuf, TunedProfile) {
+    let root = std::env::temp_dir().join(format!("warpsci_tune_it_{tag}"));
+    let _ = std::fs::remove_dir_all(&root);
+    let prof = TunedProfile {
+        env: "cartpole".into(),
+        fingerprint: machine_fingerprint(),
+        n_envs: 2048,
+        t: 16,
+        threads: 3,
+        kernel: KernelVariant::Tiled,
+        steps_per_sec: 500_000.0,
+        default_steps_per_sec: 400_000.0,
+        quick: true,
+        repeats: 2,
+    };
+    prof.save(&root).unwrap();
+    (root, prof)
+}
+
+/// RAII guard: points `WARPSCI_TUNED_DIR` at `root` for the test body
+/// and removes it on drop, under the lock.
+struct EnvRoot<'a> {
+    _guard: std::sync::MutexGuard<'a, ()>,
+}
+
+impl<'a> EnvRoot<'a> {
+    fn set(root: &std::path::Path) -> EnvRoot<'a> {
+        let guard = ENV_LOCK.lock().unwrap();
+        std::env::set_var("WARPSCI_TUNED_DIR", root);
+        EnvRoot { _guard: guard }
+    }
+}
+
+impl Drop for EnvRoot<'_> {
+    fn drop(&mut self) {
+        std::env::remove_var("WARPSCI_TUNED_DIR");
+    }
+}
+
+#[test]
+fn load_resolves_tuned_profile_through_env_root() {
+    let (root, prof) = tuned_root_with_profile("resolve");
+    let _env = EnvRoot::set(&root);
+
+    // no flags: the profile fills every unset shape field
+    let cfg = RunConfig::load(&NoFlags).unwrap();
+    assert_eq!(cfg.env, "cartpole");
+    assert_eq!(cfg.n_envs, prof.n_envs);
+    assert_eq!(cfg.t, prof.t);
+    assert_eq!(cfg.threads, prof.threads);
+    assert_eq!(cfg.kernel, Some(KernelVariant::Tiled));
+    let path = cfg.tuned_profile.as_deref().expect("profile path set");
+    assert!(path.contains(&machine_fingerprint()), "{path}");
+    assert!(path.ends_with("cartpole.toml"), "{path}");
+
+    // an explicit flag pins its field; the rest still tune
+    let flags = MapFlags::new(&[("t", "64")]);
+    let cfg = RunConfig::load(&flags).unwrap();
+    assert_eq!(cfg.t, 64, "explicit flag beats the tuned profile");
+    assert_eq!(cfg.n_envs, prof.n_envs);
+    assert_eq!(cfg.threads, prof.threads);
+
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn no_tuned_profile_flag_is_a_full_escape_hatch() {
+    let (root, _prof) = tuned_root_with_profile("escape");
+    let _env = EnvRoot::set(&root);
+
+    let flags = MapFlags::new(&[("no-tuned-profile", "true")]);
+    let cfg = RunConfig::load(&flags).unwrap();
+    let d = RunConfig::default();
+    assert_eq!(cfg.n_envs, d.n_envs);
+    assert_eq!(cfg.t, d.t);
+    assert_eq!(cfg.threads, d.threads);
+    assert_eq!(cfg.kernel, None);
+    assert_eq!(cfg.tuned_profile, None);
+
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn corrupt_profile_falls_back_to_defaults_loudly() {
+    let (root, prof) = tuned_root_with_profile("corrupt");
+    let path = TunedProfile::path_for(&root, &prof.fingerprint,
+                                      "cartpole");
+    std::fs::write(&path, "this is not a tuned profile at all =").unwrap();
+    let _env = EnvRoot::set(&root);
+
+    // load still succeeds (warning goes to stderr) with defaults
+    let cfg = RunConfig::load(&NoFlags).unwrap();
+    let d = RunConfig::default();
+    assert_eq!(cfg.n_envs, d.n_envs);
+    assert_eq!(cfg.threads, d.threads);
+    assert_eq!(cfg.tuned_profile, None);
+
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn newer_format_profile_is_rejected_with_fallback() {
+    let (root, prof) = tuned_root_with_profile("stale");
+    let path = TunedProfile::path_for(&root, &prof.fingerprint,
+                                      "cartpole");
+    let newer = prof.to_toml().replace("format = 1", "format = 99");
+    std::fs::write(&path, newer).unwrap();
+    let _env = EnvRoot::set(&root);
+
+    let cfg = RunConfig::load(&NoFlags).unwrap();
+    let d = RunConfig::default();
+    assert_eq!(cfg.n_envs, d.n_envs, "future-format file must not steer");
+    assert_eq!(cfg.tuned_profile, None);
+
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn search_order_is_seeded_and_deterministic() {
+    use warpsci::envs::registry;
+    use warpsci::tune::{enumerate_candidates, TuneOpts};
+
+    let spec = registry::find("cartpole").unwrap();
+    let a = enumerate_candidates(spec, 8, &TuneOpts::full());
+    let b = enumerate_candidates(spec, 8, &TuneOpts::full());
+    assert_eq!(a, b, "same seed => same order");
+    let other = TuneOpts { seed: 99, ..TuneOpts::full() };
+    let c = enumerate_candidates(spec, 8, &other);
+    assert_ne!(a, c, "different seed permutes");
+    let (mut sa, mut sc) = (a.clone(), c.clone());
+    sa.sort_by_key(|x| (x.n_envs, x.t, x.threads, x.kernel.as_str()));
+    sc.sort_by_key(|x| (x.n_envs, x.t, x.threads, x.kernel.as_str()));
+    assert_eq!(sa, sc, "same candidate set regardless of seed");
+}
