@@ -13,8 +13,9 @@
 //! repo root — the perf-trajectory baseline for future changes
 //! (`scripts/bench_gate.py` gates the `fused_rollout/*`, `gemm_tile/*`,
 //! `policy_forward/tiled/*`, per-env `env_step/*`, multi-shard
-//! `shard_scaling/{sync,async}/*` and inference-serving `serve/*`
-//! records against `BENCH_baseline.json`).
+//! `shard_scaling/{sync,async}/*`, inference-serving `serve/*` and
+//! isolated-update `train_phase/*` records against
+//! `BENCH_baseline.json`).
 //!
 //! Thread counts for the sweep families are derived from the machine
 //! (`thread_levels`: the 1..8 power-of-two ladder clipped to available
@@ -322,6 +323,35 @@ fn main() -> anyhow::Result<()> {
                 eng.train_iter().unwrap();
             });
         emit(&mut records, &r);
+    }
+
+    // the train phase in isolation: one A2C/Adam update over a captured
+    // trajectory (`CpuEngine::update_only`), pool-parallel vs the
+    // single-thread serial oracle.  Both arms run the identical
+    // config-fixed slice partition, so the trained parameters are
+    // bit-identical — only the wall clock may differ, which is exactly
+    // what the `train_phase/*` gate records pin (the par floor sits
+    // above the serial floor, encoding that the sharded update must
+    // beat the serial oracle on a multi-core runner)
+    for (env, n_envs, t) in [("cartpole", 4096usize, 8usize),
+                             ("ecosystem", 1024, 8)] {
+        for (arm, threads) in
+            [("serial".to_string(), 1usize),
+             (format!("par/threads{per_env_threads}"), per_env_threads)]
+        {
+            let mut eng = CpuEngine::new(CpuEngineConfig {
+                threads,
+                ..CpuEngineConfig::new(env, n_envs, t)
+            })?;
+            eng.train_iter()?; // capture one trajectory to re-update
+            let r = bench.run(
+                &format!("train_phase/{env}/{arm}"),
+                eng.steps_per_iter() as f64,
+                || {
+                    eng.update_only().unwrap();
+                });
+            emit(&mut records, &r);
+        }
     }
 
     // multi-shard scaling: the lockstep sync collective vs the async

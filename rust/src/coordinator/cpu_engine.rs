@@ -6,23 +6,28 @@
 //! workers — policy inference, per-lane action sampling, env stepping and
 //! trajectory capture all run **inside** the workers
 //! ([`BatchEngine::fused_rollout`]), writing straight into this backend's
-//! preallocated SoA trajectory buffers — then applies one A2C/Adam update
-//! on the coordinator thread.  The environment state never leaves the
-//! engine's flat arrays — the in-process analogue of the unified
-//! on-device store, and the system the distributed baseline
-//! (`crate::baseline`) is compared against.
+//! preallocated SoA trajectory buffers — then fans the A2C/Adam update
+//! across the *same* pool in four `run_sharded` rounds (sharded
+//! forward/backward with a fixed-order partial-gradient merge, span-
+//! parallel Adam, column-parallel view refresh; see [`CpuEngine`]'s
+//! private `update`).  The environment state never leaves the engine's
+//! flat arrays — the in-process analogue of the unified on-device
+//! store, and the system the distributed baseline (`crate::baseline`)
+//! is compared against.
 //!
 //! Phase timers: the fused roll-out reports its critical-path split
 //! (max across shards, capture copies included) as `inference` /
-//! `env_step`; the coordinator-side update is `train`.
+//! `env_step`; the sharded update is `train`, measured on the
+//! coordinator around all four rounds.
 
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::engine::pool::{SendConstPtr, SendPtr};
 use crate::engine::{BatchEngine, TrajectorySlices};
-use crate::nn::mlp::Cache;
-use crate::nn::{Adam, Mlp};
+use crate::nn::mlp::{slice_rows, Cache};
+use crate::nn::{Adam, Mlp, MlpGrads, TiledPolicy};
 use crate::policy::{Policy, PolicySpec};
 use crate::util::Timer;
 
@@ -45,6 +50,13 @@ pub struct CpuEngineConfig {
     pub vf_coef: f32,
     pub ent_coef: f32,
     pub max_grad_norm: f32,
+    /// Fixed row-slice count for the sharded backward.  The partition
+    /// — not the runtime thread count — determines the f32 reduction
+    /// grouping, so trained parameters are bit-identical across any
+    /// `threads` for a given `grad_slices` (workers walk slices
+    /// strided; the merge happens on the caller in ascending slice
+    /// order).  `1` reproduces the historical serial update bitwise.
+    pub grad_slices: usize,
     pub seed: u64,
 }
 
@@ -61,6 +73,7 @@ impl Default for CpuEngineConfig {
             vf_coef: 0.25,
             ent_coef: 0.005,
             max_grad_norm: 2.0,
+            grad_slices: crate::nn::mlp::GRAD_SLICES,
             seed: 0,
         }
     }
@@ -96,13 +109,24 @@ impl CpuEngineConfig {
 pub struct CpuEngine {
     pub cfg: CpuEngineConfig,
     engine: BatchEngine,
-    /// Master parameters plus the kernel-ready transposed view, kept in
-    /// sync by the facade: [`Policy::update`] refreshes the view after
-    /// every Adam step, so the workers can never read stale weights.
+    /// Master parameters plus the kernel-ready transposed view.  The
+    /// sharded update goes through [`Policy::update_views`] and
+    /// refreshes the view itself (round 4, column-parallel) before the
+    /// closure returns, so the workers can never read stale weights.
     policy: Policy,
     adam: Adam,
-    cache: Cache,
-    boot_cache: Cache,
+    // per-slice scratch for the sharded train phase: forward
+    // activations, scattered whole-batch value columns and f64 stat
+    // partials per trajectory slice, plus one partial gradient buffer
+    // and loss triple per slice for the fixed-order merge
+    slice_caches: Vec<Cache>,
+    boot_caches: Vec<Cache>,
+    values: Vec<f32>,
+    boot_values: Vec<f32>,
+    partial_grads: Vec<MlpGrads>,
+    partial_losses: Vec<[f32; 3]>,
+    reward_sums: Vec<f64>,
+    value_sums: Vec<f64>,
     timer: Timer,
     iter: u64,
     env_steps: u64,
@@ -145,8 +169,14 @@ impl CpuEngine {
             adam: Adam::new(cfg.lr, &policy.mlp().param_shapes()),
             engine,
             policy,
-            cache: Cache::default(),
-            boot_cache: Cache::default(),
+            slice_caches: Vec::new(),
+            boot_caches: Vec::new(),
+            values: Vec::new(),
+            boot_values: Vec::new(),
+            partial_grads: Vec::new(),
+            partial_losses: Vec::new(),
+            reward_sums: Vec::new(),
+            value_sums: Vec::new(),
             timer: Timer::new(),
             iter: 0,
             env_steps: 0,
@@ -209,48 +239,302 @@ impl CpuEngine {
         }
     }
 
-    /// A2C update over the recorded trajectory.
+    /// A2C update over the recorded trajectory, fanned across the
+    /// engine's persistent worker pool in four
+    /// [`crate::engine::pool::WorkerPool::run_sharded`] rounds:
+    ///
+    /// 1. **forward** — trainer + bootstrap activations per fixed row
+    ///    slice ([`slice_rows`] of `cfg.grad_slices`), straight over
+    ///    the engine's column-major SoA buffers;
+    /// 2. **backward** — one partial gradient buffer and loss triple
+    ///    per slice ([`Mlp::backward_a2c_rows`]), merged *on the
+    ///    caller* in ascending slice order;
+    /// 3. **Adam** — element-independent spans of every parameter
+    ///    tensor ([`Adam::update_span`]);
+    /// 4. **refresh** — transposed-view rebuild by column ranges
+    ///    ([`crate::nn::kernels::transpose_block`]).
+    ///
+    /// Only the slice *partition* (config-fixed, never thread-derived)
+    /// shapes the f32 reductions, and workers claim slices strided
+    /// while all merges replay in slice order on the caller — so the
+    /// trained parameters are bit-identical for any thread count, and
+    /// [`Mlp::backward_a2c_sliced_ref`] pins the exact grouping.
     fn update(&mut self) {
         let t = self.cfg.t;
         let n_envs = self.engine.n_envs();
         let na = self.engine.n_agents();
         let rows = n_envs * na;
         let total = rows * t;
+        let od = self.engine.obs_dim();
+        let k = self.engine.threads();
 
-        // trainer forward over every transition + bootstrap values —
-        // both straight over the engine's column-major SoA buffers, no
-        // transpose or copy anywhere
-        self.policy.forward_cols(&self.traj_obs, total, &mut self.cache);
-        self.policy.forward_cols(&self.engine.obs, rows,
-                                 &mut self.boot_cache);
+        // trajectory rows and bootstrap rows are partitioned
+        // independently (their row counts differ, and `slice_rows`
+        // clamps to at most one slice per row)
+        let tslices = slice_rows(total, self.cfg.grad_slices);
+        let bslices = slice_rows(rows, self.cfg.grad_slices);
+        let n_t = tslices.len();
+        if self.slice_caches.len() < n_t {
+            self.slice_caches.resize_with(n_t, Cache::default);
+        }
+        if self.boot_caches.len() < bslices.len() {
+            self.boot_caches.resize_with(bslices.len(), Cache::default);
+        }
+        while self.partial_grads.len() < n_t {
+            self.partial_grads.push(self.policy.mlp().zeros_like());
+        }
+        self.partial_losses.resize(n_t, [0.0; 3]);
+        self.reward_sums.resize(n_t, 0.0);
+        self.value_sums.resize(n_t, 0.0);
+        self.values.resize(total, 0.0);
+        self.boot_values.resize(rows, 0.0);
 
+        // round 1: forward every trajectory slice + bootstrap slice,
+        // scattering each slice's value column into the whole-batch
+        // vectors and folding its f64 reward/value stat partials
+        {
+            let pool = self.engine.pool();
+            let tiled =
+                SendConstPtr(self.policy.tiled() as *const TiledPolicy);
+            let x = SendConstPtr(self.traj_obs.as_ptr());
+            let boot_x = SendConstPtr(self.engine.obs.as_ptr());
+            let caches = SendPtr(self.slice_caches.as_mut_ptr());
+            let boot_caches = SendPtr(self.boot_caches.as_mut_ptr());
+            let values = SendPtr(self.values.as_mut_ptr());
+            let boot_values = SendPtr(self.boot_values.as_mut_ptr());
+            let rewards = SendConstPtr(self.traj_rewards.as_ptr());
+            let rsums = SendPtr(self.reward_sums.as_mut_ptr());
+            let vsums = SendPtr(self.value_sums.as_mut_ptr());
+            let (ts, bs) = (tslices.clone(), bslices.clone());
+            // SAFETY: `run_sharded` is the barrier — every pointer
+            // outlives the call.  Worker `w` touches only slice
+            // indices `w, w + k, …`, so the per-slice caches, sum
+            // cells and the disjoint contiguous `[lo, lo + nr)` value
+            // ranges are each written by exactly one thread; the
+            // inputs (weights, obs, rewards) are read-only here.
+            pool.run_sharded(move |w| unsafe {
+                let tiled = &*tiled.0;
+                let x = std::slice::from_raw_parts(x.0, total * od);
+                let mut s = w;
+                while s < ts.len() {
+                    let (lo, nr) = ts[s];
+                    let cache = &mut *caches.0.add(s);
+                    tiled.forward_rows(x, total, lo, nr, cache);
+                    std::slice::from_raw_parts_mut(values.0.add(lo), nr)
+                        .copy_from_slice(&cache.value);
+                    let rew =
+                        std::slice::from_raw_parts(rewards.0.add(lo), nr);
+                    let (mut pr, mut pv) = (0.0f64, 0.0f64);
+                    for r in 0..nr {
+                        pr += rew[r] as f64;
+                        pv += cache.value[r] as f64;
+                    }
+                    *rsums.0.add(s) = pr;
+                    *vsums.0.add(s) = pv;
+                    s += k;
+                }
+                let boot_x =
+                    std::slice::from_raw_parts(boot_x.0, rows * od);
+                let mut s = w;
+                while s < bs.len() {
+                    let (lo, nr) = bs[s];
+                    let cache = &mut *boot_caches.0.add(s);
+                    tiled.forward_rows(boot_x, rows, lo, nr, cache);
+                    std::slice::from_raw_parts_mut(boot_values.0.add(lo),
+                                                   nr)
+                        .copy_from_slice(&cache.value);
+                    s += k;
+                }
+            });
+        }
+
+        // serial between rounds: the return scan is order-sensitive
+        // along t and cheap, the advantage normalization is two
+        // whole-batch folds — both read the scattered value columns,
+        // which are partition-invariant (forward values depend only on
+        // their own row)
         let returns = crate::nn::nstep_returns(
-            &self.traj_rewards, &self.traj_dones, &self.boot_cache.value,
+            &self.traj_rewards, &self.traj_dones, &self.boot_values,
             n_envs, na, t, self.cfg.gamma);
         let adv =
-            crate::nn::normalized_advantages(&returns, &self.cache.value);
+            crate::nn::normalized_advantages(&returns, &self.values);
 
+        // round 2: backward per slice into per-slice partial buffers
+        let inv_n = 1.0 / total as f32;
+        {
+            let pool = self.engine.pool();
+            let mlp = SendConstPtr(self.policy.mlp() as *const Mlp);
+            let x = SendConstPtr(self.traj_obs.as_ptr());
+            let caches = SendConstPtr(self.slice_caches.as_ptr());
+            let partials = SendPtr(self.partial_grads.as_mut_ptr());
+            let losses = SendPtr(self.partial_losses.as_mut_ptr());
+            let actions = SendConstPtr(self.traj_actions.as_ptr());
+            let advp = SendConstPtr(adv.as_ptr());
+            let retp = SendConstPtr(returns.as_ptr());
+            let (vf, ec) = (self.cfg.vf_coef, self.cfg.ent_coef);
+            let ts = tslices.clone();
+            // SAFETY: same strided-slice ownership as round 1 — worker
+            // `w` alone writes partial buffer / loss cell `s ≡ w
+            // (mod k)`; caches are read-only now, inputs shared
+            // read-only, and `run_sharded` returning is the barrier.
+            pool.run_sharded(move |w| unsafe {
+                let mlp = &*mlp.0;
+                let x = std::slice::from_raw_parts(x.0, total * od);
+                let mut s = w;
+                while s < ts.len() {
+                    let (lo, nr) = ts[s];
+                    let cache = &*caches.0.add(s);
+                    let g = &mut *partials.0.add(s);
+                    g.zero();
+                    let l = mlp.backward_a2c_rows(
+                        x, total, lo, cache,
+                        std::slice::from_raw_parts(actions.0.add(lo), nr),
+                        std::slice::from_raw_parts(advp.0.add(lo), nr),
+                        std::slice::from_raw_parts(retp.0.add(lo), nr),
+                        inv_n, vf, ec, g);
+                    *losses.0.add(s) = [l.0, l.1, l.2];
+                    s += k;
+                }
+            });
+        }
+
+        // deterministic reduction: fixed ascending slice order, slice 0
+        // copied (so one slice == the unsharded serial update bitwise)
         let mut grads = self.policy.mlp().zeros_like();
-        let (pi_loss, v_loss, entropy) = self.policy.mlp().backward_a2c(
-            &self.traj_obs, &self.cache, &self.traj_actions, &adv,
-            &returns, self.cfg.vf_coef, self.cfg.ent_coef, &mut grads);
+        let (mut pi_loss, mut v_loss, mut entropy) = (0.0f32, 0.0, 0.0);
+        for s in 0..n_t {
+            let l = self.partial_losses[s];
+            if s == 0 {
+                grads.copy_from(&self.partial_grads[s]);
+                pi_loss = l[0];
+                v_loss = l[1];
+                entropy = l[2];
+            } else {
+                grads.add_assign(&self.partial_grads[s]);
+                pi_loss += l[0];
+                v_loss += l[1];
+                entropy += l[2];
+            }
+        }
         let gn = grads.global_norm();
         if gn > self.cfg.max_grad_norm {
             grads.scale(self.cfg.max_grad_norm / gn);
         }
-        let gviews = grads.views();
-        let adam = &mut self.adam;
-        self.policy
-            .update(|mlp| adam.step(&mut mlp.params_mut(), &gviews));
+
+        // rounds 3 + 4: Adam over disjoint element spans, then the
+        // transposed-view refresh by column ranges — both partitions
+        // are element-independent copies/updates, so (unlike the
+        // gradient slices) they may derive from the thread count
+        // without touching a single reduction
+        {
+            let adam = &mut self.adam;
+            let pool = self.engine.pool();
+            self.policy.update_views(|mlp, tiled| {
+                let (lr, b1, b2, eps) =
+                    (adam.lr, adam.b1, adam.b2, adam.eps);
+                let (bc1, bc2) = adam.begin_step();
+                let gviews = grads.views();
+                let lens: [usize; 8] =
+                    std::array::from_fn(|i| gviews[i].len());
+                let g_ptrs: [SendConstPtr<f32>; 8] =
+                    std::array::from_fn(|i| {
+                        SendConstPtr(gviews[i].as_ptr())
+                    });
+                let (m, v) = adam.moments_mut();
+                let m_ptrs: [SendPtr<f32>; 8] =
+                    std::array::from_fn(|i| SendPtr(m[i].as_mut_ptr()));
+                let v_ptrs: [SendPtr<f32>; 8] =
+                    std::array::from_fn(|i| SendPtr(v[i].as_mut_ptr()));
+                let p_ptrs: [SendPtr<f32>; 8] = {
+                    let mut params = mlp.params_mut();
+                    std::array::from_fn(|i| {
+                        SendPtr(params[i].as_mut_ptr())
+                    })
+                };
+                // SAFETY: worker `w` updates the half-open element
+                // span `[w·chunk, (w+1)·chunk)` of every tensor —
+                // spans are disjoint and cover each tensor exactly;
+                // every cell update reads only its own m/v/p/g cells.
+                pool.run_sharded(move |w| unsafe {
+                    for i in 0..8 {
+                        let len = lens[i];
+                        let chunk = len.div_ceil(k);
+                        let lo = (w * chunk).min(len);
+                        let hi = ((w + 1) * chunk).min(len);
+                        if lo < hi {
+                            Adam::update_span(
+                                lr, b1, b2, eps, bc1, bc2,
+                                std::slice::from_raw_parts_mut(
+                                    m_ptrs[i].0.add(lo), hi - lo),
+                                std::slice::from_raw_parts_mut(
+                                    v_ptrs[i].0.add(lo), hi - lo),
+                                std::slice::from_raw_parts_mut(
+                                    p_ptrs[i].0.add(lo), hi - lo),
+                                std::slice::from_raw_parts(
+                                    g_ptrs[i].0.add(lo), hi - lo));
+                        }
+                    }
+                });
+                // refresh: sizes/copies serially (cheap), the three
+                // O(d²) transposes split by column ranges
+                tiled.refresh_layout(mlp);
+                let (o, h, a) = (mlp.obs, mlp.hidden, mlp.n_out);
+                let (w1t, w2t, wpt) = tiled.transposed_mut();
+                let jobs = [
+                    (SendConstPtr(mlp.w1.as_ptr()), o, h,
+                     SendPtr(w1t.as_mut_ptr())),
+                    (SendConstPtr(mlp.w2.as_ptr()), h, h,
+                     SendPtr(w2t.as_mut_ptr())),
+                    (SendConstPtr(mlp.wp.as_ptr()), h, a,
+                     SendPtr(wpt.as_mut_ptr())),
+                ];
+                // SAFETY: worker `w` writes the disjoint destination
+                // region for source columns `[c0, c1)` of each matrix
+                // (`transpose_block` column ranges compose exactly);
+                // sources are read-only until `run_sharded` returns.
+                pool.run_sharded(move |w| unsafe {
+                    for &(src, nr, nc, dst) in &jobs {
+                        let chunk = nc.div_ceil(k);
+                        let c0 = (w * chunk).min(nc);
+                        let c1 = ((w + 1) * chunk).min(nc);
+                        if c0 < c1 {
+                            crate::nn::kernels::transpose_block(
+                                std::slice::from_raw_parts(src.0,
+                                                           nr * nc),
+                                nr, nc, c0, c1,
+                                std::slice::from_raw_parts_mut(
+                                    dst.0.add(c0 * nr),
+                                    (c1 - c0) * nr));
+                        }
+                    }
+                });
+            });
+        }
 
         self.pi_loss = pi_loss as f64;
         self.v_loss = v_loss as f64;
         self.entropy = entropy as f64;
         self.grad_norm = gn as f64;
-        self.reward_mean = self.traj_rewards.iter().map(|r| *r as f64)
-            .sum::<f64>() / total as f64;
-        self.value_mean = self.cache.value.iter().map(|v| *v as f64)
-            .sum::<f64>() / total as f64;
+        // per-slice f64 partials merged in ascending slice order — the
+        // same fixed grouping contract as the gradients
+        let (mut rsum, mut vsum) = (0.0f64, 0.0f64);
+        for s in 0..n_t {
+            rsum += self.reward_sums[s];
+            vsum += self.value_sums[s];
+        }
+        self.reward_mean = rsum / total as f64;
+        self.value_mean = vsum / total as f64;
+    }
+
+    /// Re-run the A2C/Adam update over the last captured trajectory —
+    /// the train phase in isolation, as the throughput benches measure
+    /// it.  Requires at least one prior [`Backend::train_iter`] so the
+    /// trajectory buffers are populated.
+    pub fn update_only(&mut self) -> Result<()> {
+        anyhow::ensure!(!self.traj_obs.is_empty(),
+                        "update_only needs one prior train_iter");
+        self.update();
+        Ok(())
     }
 
     fn iterate(&mut self, train: bool) -> Result<()> {
@@ -258,8 +542,9 @@ impl CpuEngine {
         let n_envs = self.engine.n_envs();
         let rows = n_envs * self.engine.n_agents();
         let od = self.engine.obs_dim();
-        // the facade refreshed the transposed kernel layouts when the
-        // Adam step ran, so the workers always read current weights
+        // the update's refresh round rebuilt the transposed kernel
+        // layouts right after the Adam step, so the workers always
+        // read current weights
         let phases = if train {
             self.traj_obs.resize(t * rows * od, 0.0);
             self.traj_actions.resize(t * rows, 0);
@@ -312,10 +597,30 @@ impl Backend for CpuEngine {
         self.engine.n_envs() * self.cfg.t
     }
 
+    /// Re-seed **in place**: the engine resets every replica and RNG
+    /// stream without touching its worker pool (no thread respawn per
+    /// re-seed — `warpsci tune` re-seeds per profile trial), and the
+    /// policy/optimizer are re-initialized from the seed streams — all
+    /// bit-identical to a freshly built backend.
     fn init(&mut self, seed: u64) -> Result<()> {
-        let mut cfg = self.cfg.clone();
-        cfg.seed = seed;
-        *self = CpuEngine::new(cfg)?;
+        self.cfg.seed = seed;
+        self.engine.reseed(seed);
+        let spec = *self.policy.spec();
+        self.policy = Policy::init(&spec, seed);
+        self.adam = Adam::new(self.cfg.lr,
+                              &self.policy.mlp().param_shapes());
+        self.timer.reset();
+        self.iter = 0;
+        self.env_steps = 0;
+        self.ret_ema = f64::NAN;
+        self.len_ema = f64::NAN;
+        self.episodes_done = 0.0;
+        self.pi_loss = 0.0;
+        self.v_loss = 0.0;
+        self.entropy = 0.0;
+        self.grad_norm = 0.0;
+        self.reward_mean = 0.0;
+        self.value_mean = 0.0;
         Ok(())
     }
 

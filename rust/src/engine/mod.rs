@@ -190,7 +190,8 @@ pub struct RolloutPhases {
 pub struct BatchEngine {
     /// Declared first so it drops (and joins its workers) before the
     /// buffers below — defense in depth on top of the pool's own
-    /// guarantee that `run` never returns (or unwinds) mid-round.
+    /// guarantee that `run_sharded` never returns (or unwinds)
+    /// mid-round.
     pool: WorkerPool,
     env: Box<dyn BatchEnv>,
     shards: Vec<Shard>,
@@ -349,6 +350,54 @@ impl BatchEngine {
         self.total_steps
     }
 
+    /// The engine's persistent worker pool — the generic parallel-for
+    /// region any phase can fan work over ([`WorkerPool::run_sharded`]),
+    /// with `threads()` shard slots (`n_workers() + 1`).  The sharded
+    /// A2C update in `coordinator::cpu_engine` runs its forward /
+    /// backward / Adam / refresh rounds here, on the same threads that
+    /// ran the roll-out.
+    pub fn pool(&self) -> &WorkerPool {
+        &self.pool
+    }
+
+    /// Re-seed and reset every replica **in place**, bit-identically to
+    /// a freshly built engine with the same `(env, n_envs, threads,
+    /// seed)`: per-lane env/action RNG streams are re-derived from
+    /// `seed`, every lane is re-reset, episode stats and tick/step
+    /// counters are zeroed, and `obs` is rewritten.  The worker pool is
+    /// untouched — repeated re-seeding (`warpsci tune`, `Backend::init`)
+    /// never tears down or respawns threads.
+    pub fn reseed(&mut self, seed: u64) {
+        let env = &*self.env;
+        for shard in self.shards.iter_mut() {
+            shard.state.fill(0.0);
+            for i in 0..shard.n {
+                let lane = (shard.lo + i) as u64;
+                shard.rngs[i] = Pcg64::with_stream(seed, lane);
+                shard.act_rngs[i] =
+                    Pcg64::with_stream(seed, ACTION_STREAM_BASE + lane);
+            }
+            for i in 0..shard.n {
+                env.reset_lane(&mut shard.state, shard.n, i,
+                               &mut shard.rngs[i]);
+            }
+            shard.steps.fill(0);
+            shard.ep_return.fill(0.0);
+            shard.finished_keys.clear();
+            shard.finished_returns.clear();
+            shard.finished_lens.clear();
+            shard.tick = 0;
+            shard.actions.fill(0);
+            shard.inference_secs = 0.0;
+            shard.env_secs = 0.0;
+        }
+        self.total_steps = 0;
+        self.drain_scratch.clear();
+        self.rewards.fill(0.0);
+        self.dones.fill(0.0);
+        self.write_all_obs();
+    }
+
     /// Step every replica once with caller-provided actions
     /// (`[env][agent]` row-major): one pool round.
     pub fn step(&mut self, actions: &[u32]) {
@@ -366,10 +415,12 @@ impl BatchEngine {
             n_envs: self.n_envs,
             max_steps: self.env.max_steps(),
         };
-        // SAFETY: `run` blocks until every worker finishes the round, so
-        // the raw pointers in `round` outlive every access; worker `w`
-        // touches only shard `w` and its disjoint buffer ranges.
-        self.pool.run(move |w| unsafe { step_shard_round(&round, w) });
+        // SAFETY: `run_sharded` blocks until every worker finishes the
+        // round, so the raw pointers in `round` outlive every access;
+        // worker `w` touches only shard `w` and its disjoint buffer
+        // ranges.
+        self.pool
+            .run_sharded(move |w| unsafe { step_shard_round(&round, w) });
         self.total_steps += self.n_envs as u64;
     }
 
@@ -436,11 +487,12 @@ impl BatchEngine {
             n_envs: self.n_envs,
             max_steps: self.env.max_steps(),
         };
-        // SAFETY: as in `step` — `run` is the round barrier, shard `w` and
-        // every strided trajectory range it writes are exclusive to
-        // worker `w`, and `traj` (the live `&mut` borrows) outlives the
-        // round because it is still in scope below.
-        self.pool.run(move |w| unsafe { fused_shard_round(&round, w) });
+        // SAFETY: as in `step` — `run_sharded` is the round barrier,
+        // shard `w` and every strided trajectory range it writes are
+        // exclusive to worker `w`, and `traj` (the live `&mut` borrows)
+        // outlives the round because it is still in scope below.
+        self.pool
+            .run_sharded(move |w| unsafe { fused_shard_round(&round, w) });
         self.total_steps += (self.n_envs * t) as u64;
         let mut phases = RolloutPhases::default();
         for shard in &self.shards {

@@ -2,22 +2,26 @@
 //!
 //! One pool is spawned per [`crate::engine::BatchEngine`] and lives as
 //! long as the engine: `threads - 1` parked worker threads plus the
-//! caller, which executes shard 0 itself.  A *round* publishes one job —
-//! a closure executed once per shard index — wakes every worker, and
-//! blocks the caller until the last worker checks in.  Compared with the
-//! seed's per-tick `std::thread::scope` spawn/join (~tens of µs per
-//! tick), a round costs one mutex/condvar handshake per worker (~1 µs),
-//! and the fused roll-out amortizes even that over `t` ticks.
+//! caller, which executes shard 0 itself.  A *round*
+//! ([`WorkerPool::run_sharded`]) publishes one job — a closure executed
+//! once per shard index — wakes every worker, and blocks the caller
+//! until the last worker checks in.  Compared with the seed's per-tick
+//! `std::thread::scope` spawn/join (~tens of µs per tick), a round costs
+//! one mutex/condvar handshake per worker (~1 µs), and the fused
+//! roll-out amortizes even that over `t` ticks.  The round is a generic
+//! parallel-for region: the fused roll-out, the sharded A2C update
+//! (`coordinator::cpu_engine`), and any future phase all fan work over
+//! the same threads with no new spawns.
 //!
 //! The pool itself is lifetime-safe Rust: jobs must be `'static`, so
 //! callers that need a round to touch borrowed engine state (the engine
 //! does) capture raw pointers and carry the safety argument themselves —
-//! `run` does not return until every worker has finished the round, so a
-//! pointed-to buffer outlives every access.  That holds even under
-//! panics: a panicking shard job (the caller's own shard 0 or a
+//! `run_sharded` does not return until every worker has finished the
+//! round, so a pointed-to buffer outlives every access.  That holds even
+//! under panics: a panicking shard job (the caller's own shard 0 or a
 //! worker's) is caught, the barrier is waited out, and the panic is
-//! re-raised from `run` afterwards — never a deadlock, never an unwind
-//! past live raw pointers.
+//! re-raised from `run_sharded` afterwards — never a deadlock, never an
+//! unwind past live raw pointers.
 //!
 //! Shutdown: dropping the pool flags every worker and joins them; a
 //! dropped engine never leaks threads (pinned by `tests/fused_rollout.rs`).
@@ -57,7 +61,7 @@ pub struct WorkerPool {
 
 impl WorkerPool {
     /// Spawn `n_workers` parked threads (shard indices `1..=n_workers`;
-    /// the caller runs shard 0 inside [`WorkerPool::run`]).
+    /// the caller runs shard 0 inside [`WorkerPool::run_sharded`]).
     pub fn new(n_workers: usize) -> WorkerPool {
         let shared = Arc::new(Shared {
             ctrl: Mutex::new(Ctrl {
@@ -87,12 +91,15 @@ impl WorkerPool {
         self.workers.len()
     }
 
-    /// Run one round: `job(i)` for every shard index `i` in
+    /// Run one parallel region: `job(i)` for every shard index `i` in
     /// `0..=n_workers`, with `job(0)` executed on the calling thread in
     /// parallel with the workers.  Returns only after every worker has
     /// finished, so `job` may (unsafely) reference buffers borrowed for
-    /// the duration of the call.
-    pub fn run<F>(&self, job: F)
+    /// the duration of the call.  Work units need not map 1:1 onto
+    /// shard indices — a job given more units than shards walks them
+    /// strided (`i`, `i + shards`, …), as the sharded trainer update
+    /// does with its gradient slices.
+    pub fn run_sharded<F>(&self, job: F)
     where
         F: Fn(usize) + Send + Sync + 'static,
     {
@@ -163,8 +170,8 @@ fn worker_loop(shared: &Shared, index: usize) {
         };
         // a panicking job must still check in at the barrier — otherwise
         // the coordinator waits on `remaining` forever; the panic is
-        // recorded and re-raised by `run` instead, and this worker stays
-        // alive for later rounds
+        // recorded and re-raised by `run_sharded` instead, and this
+        // worker stays alive for later rounds
         let outcome = std::panic::catch_unwind(
             std::panic::AssertUnwindSafe(|| job(index)));
         let mut ctrl = shared.ctrl.lock().unwrap();
@@ -180,8 +187,8 @@ fn worker_loop(shared: &Shared, index: usize) {
 
 /// `Send + Sync` wrapper for a raw mutable pointer captured by a round
 /// job.  Safety contract: each shard index touches only its own disjoint
-/// region, and [`WorkerPool::run`] keeps the allocation alive by not
-/// returning until the round is over.
+/// region, and [`WorkerPool::run_sharded`] keeps the allocation alive by
+/// not returning until the round is over.
 pub(crate) struct SendPtr<T: ?Sized>(pub *mut T);
 
 // manual impls: a derive would (wrongly) require `T: Copy`, which the
@@ -224,7 +231,7 @@ mod tests {
         ]);
         for round in 1..=5usize {
             let h = Arc::clone(&hits);
-            pool.run(move |i| {
+            pool.run_sharded(move |i| {
                 h[i].fetch_add(1, Ordering::SeqCst);
             });
             for (i, h) in hits.iter().enumerate() {
@@ -238,7 +245,7 @@ mod tests {
         let pool = WorkerPool::new(0);
         let hits = Arc::new(AtomicUsize::new(0));
         let h = Arc::clone(&hits);
-        pool.run(move |i| {
+        pool.run_sharded(move |i| {
             assert_eq!(i, 0);
             h.fetch_add(1, Ordering::SeqCst);
         });
@@ -250,7 +257,7 @@ mod tests {
         let sentinel = Arc::new(());
         let pool = WorkerPool::new(2);
         let s = Arc::clone(&sentinel);
-        pool.run(move |_| {
+        pool.run_sharded(move |_| {
             let _ = &s;
         });
         drop(pool);
@@ -263,7 +270,7 @@ mod tests {
         let pool = WorkerPool::new(2);
         let outcome = std::panic::catch_unwind(
             std::panic::AssertUnwindSafe(|| {
-                pool.run(|i| {
+                pool.run_sharded(|i| {
                     assert_ne!(i, 1, "injected shard failure");
                 });
             }));
@@ -271,7 +278,7 @@ mod tests {
         // the pool survives the failed round and runs later rounds
         let n = Arc::new(AtomicUsize::new(0));
         let m = Arc::clone(&n);
-        pool.run(move |_| {
+        pool.run_sharded(move |_| {
             m.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(n.load(Ordering::SeqCst), 3);
@@ -284,7 +291,7 @@ mod tests {
         let w = Arc::clone(&witness);
         let outcome = std::panic::catch_unwind(
             std::panic::AssertUnwindSafe(|| {
-                pool.run(move |i| {
+                pool.run_sharded(move |i| {
                     assert_ne!(i, 0, "injected caller-shard failure");
                     std::thread::sleep(
                         std::time::Duration::from_millis(20));
@@ -297,13 +304,46 @@ mod tests {
         assert_eq!(witness.load(Ordering::SeqCst), 2);
     }
 
+    /// The generic parallel-for contract: many rounds through one pool
+    /// reuse the *same* worker threads (no respawn per region) and a
+    /// worker always serves the same shard index, so per-shard state
+    /// built in one round is still thread-local in the next.
+    #[test]
+    fn run_sharded_reuses_the_same_worker_threads_across_rounds() {
+        use std::collections::BTreeMap;
+        use std::thread::ThreadId;
+
+        let pool = WorkerPool::new(3);
+        let record = |ids: &Arc<Mutex<BTreeMap<usize, ThreadId>>>| {
+            let ids = Arc::clone(ids);
+            pool.run_sharded(move |i| {
+                ids.lock().unwrap().insert(i, std::thread::current().id());
+            });
+        };
+        let first: Arc<Mutex<BTreeMap<usize, ThreadId>>> =
+            Arc::new(Mutex::new(BTreeMap::new()));
+        record(&first);
+        let first = first.lock().unwrap().clone();
+        assert_eq!(first.len(), 4, "caller shard + 3 workers");
+        for round in 0..50 {
+            let again: Arc<Mutex<BTreeMap<usize, ThreadId>>> =
+                Arc::new(Mutex::new(BTreeMap::new()));
+            record(&again);
+            assert_eq!(*again.lock().unwrap(), first,
+                       "round {round} ran on different threads — the \
+                        pool leaked or respawned workers");
+        }
+        // and the pool never grew: exactly the original worker set
+        assert_eq!(pool.n_workers(), 3);
+    }
+
     #[test]
     fn repeated_create_drop_does_not_hang() {
         for _ in 0..20 {
             let pool = WorkerPool::new(4);
             let n = Arc::new(AtomicUsize::new(0));
             let m = Arc::clone(&n);
-            pool.run(move |_| {
+            pool.run_sharded(move |_| {
                 m.fetch_add(1, Ordering::SeqCst);
             });
             assert_eq!(n.load(Ordering::SeqCst), 5);

@@ -30,23 +30,53 @@ impl Adam {
     pub fn step(&mut self, params: &mut [&mut Vec<f32>], grads: &[&Vec<f32>]) {
         assert_eq!(params.len(), self.m.len());
         assert_eq!(grads.len(), self.m.len());
-        self.t += 1.0;
-        let bc1 = 1.0 - self.b1.powf(self.t);
-        let bc2 = 1.0 - self.b2.powf(self.t);
+        let (lr, b1, b2, eps) = (self.lr, self.b1, self.b2, self.eps);
+        let (bc1, bc2) = self.begin_step();
         for ((p, g), (m, v)) in params
             .iter_mut()
             .zip(grads)
             .zip(self.m.iter_mut().zip(self.v.iter_mut()))
         {
             assert_eq!(p.len(), g.len());
-            for i in 0..p.len() {
-                m[i] = self.b1 * m[i] + (1.0 - self.b1) * g[i];
-                v[i] = self.b2 * v[i] + (1.0 - self.b2) * g[i] * g[i];
-                let mh = m[i] / bc1;
-                let vh = v[i] / bc2;
-                p[i] -= self.lr * mh / (vh.sqrt() + self.eps);
-            }
+            Adam::update_span(lr, b1, b2, eps, bc1, bc2, m, v, p, g);
         }
+    }
+
+    /// Advance the step counter and return the bias-correction pair
+    /// `(1 - b1^t, 1 - b2^t)` for this step.  Callers that drive
+    /// [`Adam::update_span`] directly (the sharded trainer) call this
+    /// exactly once per optimizer step, before fanning spans out.
+    pub fn begin_step(&mut self) -> (f32, f32) {
+        self.t += 1.0;
+        (1.0 - self.b1.powf(self.t), 1.0 - self.b2.powf(self.t))
+    }
+
+    /// The Adam update over one contiguous span of a parameter tensor
+    /// (matching spans of its first/second moments and gradient).
+    /// Every element is updated independently with the exact per-cell
+    /// expressions [`Adam::step`] uses, so any partition of a tensor
+    /// into spans — including across threads — is bit-identical to the
+    /// serial sweep.
+    #[allow(clippy::too_many_arguments)]
+    pub fn update_span(lr: f32, b1: f32, b2: f32, eps: f32, bc1: f32,
+                       bc2: f32, m: &mut [f32], v: &mut [f32],
+                       p: &mut [f32], g: &[f32]) {
+        for i in 0..p.len() {
+            m[i] = b1 * m[i] + (1.0 - b1) * g[i];
+            v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
+            let mh = m[i] / bc1;
+            let vh = v[i] / bc2;
+            p[i] -= lr * mh / (vh.sqrt() + eps);
+        }
+    }
+
+    /// Mutable views of the per-tensor first/second moment vectors, in
+    /// the same order as the `shapes` passed to [`Adam::new`] — the
+    /// sharded trainer borrows these alongside the parameters to drive
+    /// [`Adam::update_span`] from worker threads.
+    pub(crate) fn moments_mut(&mut self)
+                              -> (&mut [Vec<f32>], &mut [Vec<f32>]) {
+        (&mut self.m, &mut self.v)
     }
 
     pub fn t(&self) -> f32 {

@@ -31,11 +31,25 @@ pub const TILE: usize = 8;
 /// Transpose a row-major `(rows, cols)` matrix into `dst` (row-major
 /// `(cols, rows)`, i.e. the column-major view of `src`).
 pub fn transpose(src: &[f32], rows: usize, cols: usize, dst: &mut [f32]) {
-    debug_assert_eq!(src.len(), rows * cols);
     debug_assert_eq!(dst.len(), rows * cols);
+    transpose_block(src, rows, cols, 0, cols, dst);
+}
+
+/// Transpose the source-column range `[c0, c1)` only: `dst` receives
+/// rows `c0..c1` of the transposed matrix, packed
+/// (`dst[(c - c0) * rows + r] = src[r * cols + c]`).  Destination rows
+/// are contiguous disjoint chunks per column range, so partitions of
+/// `0..cols` compose into exactly [`transpose`]'s output — pure element
+/// copies, bit-exact under any split — which is what lets the trainer's
+/// parallel tiled-view refresh fan one transpose across pool workers.
+pub fn transpose_block(src: &[f32], rows: usize, cols: usize, c0: usize,
+                       c1: usize, dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), rows * cols);
+    debug_assert!(c0 <= c1 && c1 <= cols);
+    debug_assert!(dst.len() >= (c1 - c0) * rows);
     for r in 0..rows {
-        for c in 0..cols {
-            dst[c * rows + r] = src[r * cols + c];
+        for c in c0..c1 {
+            dst[(c - c0) * rows + r] = src[r * cols + c];
         }
     }
 }
@@ -413,5 +427,25 @@ mod tests {
         assert_eq!(src, back);
         assert_eq!(t[0], src[0]);
         assert_eq!(t[rows * cols - 1], src[rows * cols - 1]);
+    }
+
+    #[test]
+    fn transpose_block_column_ranges_compose() {
+        // any partition of the source columns, written as packed
+        // contiguous dst chunks, reproduces the whole transpose — the
+        // property the parallel tiled-view refresh rests on
+        let mut rng = Pcg64::new(2);
+        let (rows, cols) = (6usize, 11usize);
+        let src = randv(&mut rng, rows * cols);
+        let mut whole = vec![0f32; rows * cols];
+        transpose(&src, rows, cols, &mut whole);
+        for cut in [1usize, 4, 8, 10] {
+            let mut parts = vec![0f32; rows * cols];
+            transpose_block(&src, rows, cols, 0, cut,
+                            &mut parts[..cut * rows]);
+            transpose_block(&src, rows, cols, cut, cols,
+                            &mut parts[cut * rows..]);
+            assert_eq!(whole, parts, "cut={cut}");
+        }
     }
 }

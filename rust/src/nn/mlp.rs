@@ -27,6 +27,40 @@ use crate::util::Pcg64;
 use super::kernels::{self, TILE};
 use super::log_softmax;
 
+/// Default gradient slice count for the sharded train phase.  The
+/// slice partition — not the runtime thread count — fixes the f32
+/// accumulation grouping of the sliced backward and its loss/stat
+/// folds, so trained parameters are bit-identical across any thread
+/// count at a given slice count (the rollout's determinism guarantee,
+/// extended to the update).  Both CPU backends
+/// (`coordinator::CpuEngineConfig::grad_slices`,
+/// `runtime::CpuHyperParams::grad_slices`) default to this shared
+/// value so their bit-identity pin holds by construction.
+pub const GRAD_SLICES: usize = 8;
+
+/// The fixed row partition of the sharded train phase: slice `s` of
+/// `n_slices` over `total` rows covers `(lo, nrows)`, with the same
+/// base/extra split as the engine's lane shards (`base = total /
+/// n_slices`; the first `total % n_slices` slices take one extra row).
+/// `n_slices` is clamped to `[1, total]` so no slice is empty.  Every
+/// consumer of the sliced accumulation — the parallel `CpuEngine`
+/// update, `CpuDevice`'s serial replay, and the scalar reference
+/// [`Mlp::backward_a2c_sliced_ref`] — derives its grouping from this
+/// one function, which is what makes them bitwise comparable.
+pub fn slice_rows(total: usize, n_slices: usize) -> Vec<(usize, usize)> {
+    let n_slices = n_slices.clamp(1, total.max(1));
+    let base = total / n_slices;
+    let extra = total % n_slices;
+    let mut out = Vec::with_capacity(n_slices);
+    let mut lo = 0;
+    for s in 0..n_slices {
+        let nrows = base + usize::from(s < extra);
+        out.push((lo, nrows));
+        lo += nrows;
+    }
+    out
+}
+
 /// Row-major matrix stored flat.
 #[derive(Debug, Clone)]
 pub struct Mlp {
@@ -137,15 +171,28 @@ impl TiledPolicy {
     /// the first call at a given shape).
     pub fn refresh(&mut self, p: &Mlp) {
         let (o, h, a) = (p.obs, p.hidden, p.n_out);
+        self.refresh_layout(p);
+        kernels::transpose(&p.w1, o, h, &mut self.w1t);
+        kernels::transpose(&p.w2, h, h, &mut self.w2t);
+        kernels::transpose(&p.wp, h, a, &mut self.wpt);
+    }
+
+    /// The serial prologue of a parallel refresh: dims, transposed
+    /// buffer sizing, and the (tiny) bias / value-head copies —
+    /// everything in [`TiledPolicy::refresh`] *except* the three weight
+    /// transposes, which the caller then fills itself, e.g. fanned over
+    /// pool workers via [`kernels::transpose_block`] on the buffers
+    /// from [`TiledPolicy::transposed_mut`].  Transposes are pure
+    /// element copies, so any destination-row partition reproduces
+    /// `refresh` bit-for-bit.
+    pub fn refresh_layout(&mut self, p: &Mlp) {
+        let (o, h, a) = (p.obs, p.hidden, p.n_out);
         self.obs = o;
         self.hidden = h;
         self.n_out = a;
         self.w1t.resize(h * o, 0.0);
         self.w2t.resize(h * h, 0.0);
         self.wpt.resize(a * h, 0.0);
-        kernels::transpose(&p.w1, o, h, &mut self.w1t);
-        kernels::transpose(&p.w2, h, h, &mut self.w2t);
-        kernels::transpose(&p.wp, h, a, &mut self.wpt);
         self.b1.clear();
         self.b1.extend_from_slice(&p.b1);
         self.b2.clear();
@@ -158,26 +205,53 @@ impl TiledPolicy {
         self.bv.extend_from_slice(&p.bv);
     }
 
+    /// Raw transposed weight buffers `(w1t, w2t, wpt)` — the transpose
+    /// *destinations* of a parallel refresh, sized by
+    /// [`TiledPolicy::refresh_layout`] as `(hidden, obs)`,
+    /// `(hidden, hidden)` and `(n_out, hidden)` respectively.  Callers
+    /// must leave them fully transposed before the next forward.
+    pub(crate) fn transposed_mut(&mut self)
+                                 -> (&mut [f32], &mut [f32], &mut [f32]) {
+        (&mut self.w1t, &mut self.w2t, &mut self.wpt)
+    }
+
     /// Batched tiled forward.  `x` is a column-major `(obs, n)` block;
     /// fills the column-major cache (logits stored as
     /// log-probabilities).  Bit-identical per row to
     /// [`Mlp::forward_ref`].
     pub fn forward(&self, x: &[f32], n: usize, cache: &mut Cache) {
+        debug_assert_eq!(x.len(), n * self.obs);
+        self.forward_rows(x, n, 0, n, cache);
+    }
+
+    /// Forward over the row range `[row0, row0 + nrows)` of a
+    /// column-major `(obs, ldx)` input block, into a **packed**
+    /// slice-local cache (`cache.n == nrows`, leading dimension
+    /// `nrows`).  Every row's result is bit-identical to the same row
+    /// of a full-batch [`TiledPolicy::forward`] — per-row outputs are
+    /// independent of the batch partition (the `dense_block` row-range
+    /// composition property; softmax and the value head are per-row) —
+    /// so the sharded train phase can fan slices over pool workers,
+    /// each owning its cache, without perturbing a single bit.
+    pub fn forward_rows(&self, x: &[f32], ldx: usize, row0: usize,
+                        nrows: usize, cache: &mut Cache) {
         let (o, h, a) = (self.obs, self.hidden, self.n_out);
-        debug_assert_eq!(x.len(), n * o);
-        cache.n = n;
-        cache.h1.resize(h * n, 0.0);
-        cache.h2.resize(h * n, 0.0);
-        cache.logp.resize(a * n, 0.0);
-        cache.value.resize(n, 0.0);
-        kernels::dense_cols(x, n, o, &self.w1t, &self.b1, h, true,
-                            &mut cache.h1);
-        kernels::dense_cols(&cache.h1, n, h, &self.w2t, &self.b2, h, true,
-                            &mut cache.h2);
-        kernels::dense_cols(&cache.h2, n, h, &self.wpt, &self.bp, a,
-                            false, &mut cache.logp);
-        kernels::log_softmax_cols(&mut cache.logp, n, a);
-        kernels::value_cols(&cache.h2, n, h, &self.wv, self.bv[0],
+        debug_assert!(row0 + nrows <= ldx);
+        debug_assert!(x.len() >= ldx * o);
+        cache.n = nrows;
+        cache.h1.resize(h * nrows, 0.0);
+        cache.h2.resize(h * nrows, 0.0);
+        cache.logp.resize(a * nrows, 0.0);
+        cache.value.resize(nrows, 0.0);
+        kernels::dense_block(x, ldx, row0, nrows, o, &self.w1t, &self.b1,
+                             h, true, &mut cache.h1, nrows, 0);
+        kernels::dense_block(&cache.h1, nrows, 0, nrows, h, &self.w2t,
+                             &self.b2, h, true, &mut cache.h2, nrows, 0);
+        kernels::dense_block(&cache.h2, nrows, 0, nrows, h, &self.wpt,
+                             &self.bp, a, false, &mut cache.logp, nrows,
+                             0);
+        kernels::log_softmax_cols(&mut cache.logp, nrows, a);
+        kernels::value_cols(&cache.h2, nrows, h, &self.wv, self.bv[0],
                             &mut cache.value);
     }
 
@@ -288,10 +362,38 @@ impl Mlp {
                         advantages: &[f32], returns: &[f32], vf_coef: f32,
                         ent_coef: f32, grads: &mut MlpGrads)
                         -> (f32, f32, f32) {
-        let (o, h, a) = (self.obs, self.hidden, self.n_out);
         let n = cache.n;
-        debug_assert_eq!(x.len(), n * o);
-        let inv_n = 1.0 / n as f32;
+        debug_assert_eq!(x.len(), n * self.obs);
+        self.backward_a2c_rows(x, n, 0, cache, actions, advantages,
+                               returns, 1.0 / n as f32, vf_coef, ent_coef,
+                               grads)
+    }
+
+    /// One slice of the sharded A2C backward: the rows
+    /// `[row0, row0 + cache.n)` of a column-major `(obs, ldx)` input
+    /// block, with `cache` the **packed** slice-local activations from
+    /// [`TiledPolicy::forward_rows`] and `actions` / `advantages` /
+    /// `returns` the matching sub-slices (`cache.n` entries each).
+    /// `inv_n` is the *full-batch* `1 / total` weight, so per-slice
+    /// partial losses and gradients merged in fixed slice order
+    /// reproduce one deterministic whole-batch grouping regardless of
+    /// which thread ran which slice.  Accumulates into `grads` (a
+    /// zeroed per-slice partial in the sharded path) and returns the
+    /// partial `(pi_loss, v_loss, entropy)` sums.  With `ldx == n`,
+    /// `row0 == 0` and `inv_n == 1/n` this *is* [`Mlp::backward_a2c`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward_a2c_rows(&self, x: &[f32], ldx: usize, row0: usize,
+                             cache: &Cache, actions: &[u32],
+                             advantages: &[f32], returns: &[f32],
+                             inv_n: f32, vf_coef: f32, ent_coef: f32,
+                             grads: &mut MlpGrads) -> (f32, f32, f32) {
+        let (o, h, a) = (self.obs, self.hidden, self.n_out);
+        let nl = cache.n;
+        debug_assert!(row0 + nl <= ldx);
+        debug_assert!(x.len() >= ldx * o);
+        debug_assert_eq!(actions.len(), nl);
+        debug_assert_eq!(advantages.len(), nl);
+        debug_assert_eq!(returns.len(), nl);
         let (mut pi_loss, mut v_loss, mut ent_sum) = (0.0f32, 0.0, 0.0);
         // column-major (feature, tile-row) scratch blocks
         let mut dl = vec![0f32; a * TILE];
@@ -299,10 +401,10 @@ impl Mlp {
         let mut dh1 = vec![0f32; h * TILE];
         let mut dv = [0f32; TILE];
         let mut base = 0;
-        while base < n {
-            let w = TILE.min(n - base);
-            // per-row head terms, in global row order (the losses are
-            // order-sensitive f32 folds)
+        while base < nl {
+            let w = TILE.min(nl - base);
+            // per-row head terms, in ascending row order (the losses
+            // are order-sensitive f32 folds)
             for r in 0..w {
                 let i = base + r;
                 let act = actions[i] as usize;
@@ -311,16 +413,16 @@ impl Mlp {
                 let ret = returns[i];
                 let mut entropy = 0.0f32;
                 for j in 0..a {
-                    let l = cache.logp[j * n + i];
+                    let l = cache.logp[j * nl + i];
                     entropy += -l.exp() * l;
                 }
-                pi_loss += -cache.logp[act * n + i] * adv * inv_n;
+                pi_loss += -cache.logp[act * nl + i] * adv * inv_n;
                 v_loss += (v - ret) * (v - ret) * inv_n;
                 ent_sum += entropy * inv_n;
                 // d pi_loss / d logits = (p - onehot) * adv / n
                 // d (-ent*H)  / d logits = ent * p * (logp + H) / n
                 for j in 0..a {
-                    let l = cache.logp[j * n + i];
+                    let l = cache.logp[j * nl + i];
                     let p = l.exp();
                     let onehot = if j == act { 1.0 } else { 0.0 };
                     dl[j * w + r] = ((p - onehot) * adv
@@ -341,7 +443,7 @@ impl Mlp {
                         acc[r] += wkj * dl[j * w + r];
                     }
                 }
-                let h2col = &cache.h2[k * n + base..k * n + base + w];
+                let h2col = &cache.h2[k * nl + base..k * nl + base + w];
                 for r in 0..w {
                     dh2[k * w + r] = acc[r] * (1.0 - h2col[r] * h2col[r]);
                 }
@@ -355,7 +457,7 @@ impl Mlp {
                 grads.bp[j] = acc;
             }
             for k in 0..h {
-                let h2col = &cache.h2[k * n + base..k * n + base + w];
+                let h2col = &cache.h2[k * nl + base..k * nl + base + w];
                 for j in 0..a {
                     let mut acc = grads.wp[k * a + j];
                     for r in 0..w {
@@ -385,7 +487,7 @@ impl Mlp {
                         acc[r] += wkj * dh2[j * w + r];
                     }
                 }
-                let h1col = &cache.h1[k * n + base..k * n + base + w];
+                let h1col = &cache.h1[k * nl + base..k * nl + base + w];
                 for r in 0..w {
                     dh1[k * w + r] = acc[r] * (1.0 - h1col[r] * h1col[r]);
                 }
@@ -398,7 +500,7 @@ impl Mlp {
                 grads.b2[j] = acc;
             }
             for k in 0..h {
-                let h1col = &cache.h1[k * n + base..k * n + base + w];
+                let h1col = &cache.h1[k * nl + base..k * nl + base + w];
                 for j in 0..h {
                     let mut acc = grads.w2[k * h + j];
                     for r in 0..w {
@@ -416,7 +518,8 @@ impl Mlp {
                 grads.b1[j] = acc;
             }
             for k in 0..o {
-                let xcol = &x[k * n + base..k * n + base + w];
+                let x0 = k * ldx + row0 + base;
+                let xcol = &x[x0..x0 + w];
                 for j in 0..h {
                     let mut acc = grads.w1[k * h + j];
                     for r in 0..w {
@@ -576,14 +679,30 @@ impl Mlp {
                             advantages: &[f32], returns: &[f32],
                             vf_coef: f32, ent_coef: f32,
                             grads: &mut MlpGrads) -> (f32, f32, f32) {
+        self.backward_a2c_ref_rows(cache, 0, cache.n, actions, advantages,
+                                   returns, 1.0 / cache.n as f32, vf_coef,
+                                   ent_coef, grads)
+    }
+
+    /// One slice of the scalar reference backward: rows
+    /// `[row0, row0 + nrows)` of a *whole-batch* [`RefCache`], with
+    /// `actions` / `advantages` / `returns` likewise whole-batch and
+    /// indexed globally (unlike [`Mlp::backward_a2c_rows`], which takes
+    /// a packed per-slice cache and sub-slices).  `inv_n` is the
+    /// full-batch `1 / total` weight.
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward_a2c_ref_rows(&self, cache: &RefCache, row0: usize,
+                                 nrows: usize, actions: &[u32],
+                                 advantages: &[f32], returns: &[f32],
+                                 inv_n: f32, vf_coef: f32, ent_coef: f32,
+                                 grads: &mut MlpGrads) -> (f32, f32, f32) {
         let (o, h, a) = (self.obs, self.hidden, self.n_out);
-        let n = cache.n;
-        let inv_n = 1.0 / n as f32;
+        debug_assert!(row0 + nrows <= cache.n);
         let (mut pi_loss, mut v_loss, mut ent_sum) = (0.0f32, 0.0, 0.0);
         let mut dlogits = vec![0f32; a];
         let mut dh2 = vec![0f32; h];
         let mut dh1 = vec![0f32; h];
-        for i in 0..n {
+        for i in row0..row0 + nrows {
             let lp = &cache.logp[i * a..(i + 1) * a];
             let h2 = &cache.h2[i * h..(i + 1) * h];
             let h1 = &cache.h1[i * h..(i + 1) * h];
@@ -646,6 +765,45 @@ impl Mlp {
         }
         (pi_loss, v_loss, ent_sum)
     }
+
+    /// Scalar reference for the *sharded* backward: replays the exact
+    /// slice partition ([`slice_rows`]) and fixed-order partial merge
+    /// (slice 0 copied, later slices added in ascending index) that the
+    /// parallel trainer uses, entirely on one thread.  With
+    /// `n_slices == 1` this reproduces [`Mlp::backward_a2c_ref`]
+    /// bitwise; for any `n_slices` it pins the deterministic grouping
+    /// the tiled sharded path must match bit-for-bit.
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward_a2c_sliced_ref(&self, cache: &RefCache,
+                                   actions: &[u32], advantages: &[f32],
+                                   returns: &[f32], vf_coef: f32,
+                                   ent_coef: f32, n_slices: usize,
+                                   grads: &mut MlpGrads)
+                                   -> (f32, f32, f32) {
+        let n = cache.n;
+        let inv_n = 1.0 / n as f32;
+        let mut partial = self.zeros_like();
+        let (mut pi, mut vl, mut ent) = (0.0f32, 0.0, 0.0);
+        for (s, &(lo, nr)) in slice_rows(n, n_slices).iter().enumerate() {
+            partial.zero();
+            let l = self.backward_a2c_ref_rows(cache, lo, nr, actions,
+                                               advantages, returns, inv_n,
+                                               vf_coef, ent_coef,
+                                               &mut partial);
+            if s == 0 {
+                grads.copy_from(&partial);
+                pi = l.0;
+                vl = l.1;
+                ent = l.2;
+            } else {
+                grads.add_assign(&partial);
+                pi += l.0;
+                vl += l.1;
+                ent += l.2;
+            }
+        }
+        (pi, vl, ent)
+    }
 }
 
 impl MlpGrads {
@@ -668,6 +826,40 @@ impl MlpGrads {
                   &mut self.wp, &mut self.bp, &mut self.wv, &mut self.bv] {
             for g in v.iter_mut() {
                 *g *= k;
+            }
+        }
+    }
+
+    /// Reset every gradient cell to zero (per-slice partial reuse).
+    pub fn zero(&mut self) {
+        for v in [&mut self.w1, &mut self.b1, &mut self.w2, &mut self.b2,
+                  &mut self.wp, &mut self.bp, &mut self.wv, &mut self.bv] {
+            v.fill(0.0);
+        }
+    }
+
+    /// Overwrite `self` with `src` (the slice-0 step of the fixed-order
+    /// partial-gradient merge — copying instead of zero-then-add keeps
+    /// the one-slice case bitwise equal to the unsharded backward).
+    pub fn copy_from(&mut self, src: &MlpGrads) {
+        for (d, s) in [(&mut self.w1, &src.w1), (&mut self.b1, &src.b1),
+                       (&mut self.w2, &src.w2), (&mut self.b2, &src.b2),
+                       (&mut self.wp, &src.wp), (&mut self.bp, &src.bp),
+                       (&mut self.wv, &src.wv), (&mut self.bv, &src.bv)] {
+            d.copy_from_slice(s);
+        }
+    }
+
+    /// Element-wise `self += src`, every tensor in ascending index
+    /// order — the deterministic reduction step for slices 1.. of the
+    /// partial-gradient merge.
+    pub fn add_assign(&mut self, src: &MlpGrads) {
+        for (d, s) in [(&mut self.w1, &src.w1), (&mut self.b1, &src.b1),
+                       (&mut self.w2, &src.w2), (&mut self.b2, &src.b2),
+                       (&mut self.wp, &src.wp), (&mut self.bp, &src.bp),
+                       (&mut self.wv, &src.wv), (&mut self.bv, &src.bv)] {
+            for (dg, sg) in d.iter_mut().zip(s) {
+                *dg += *sg;
             }
         }
     }

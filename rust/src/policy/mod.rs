@@ -18,9 +18,10 @@
 //!   [`Checkpoint`], validating the parameter arity against the spec;
 //! * [`Policy::forward_cols`] / [`Policy::sample_actions_lanes`] —
 //!   inference over the always-fresh tiled view;
-//! * [`Policy::update`] — the only mutable access to the `Mlp`; the
+//! * [`Policy::update`] — the default mutable access to the `Mlp`; the
 //!   tiled view is refreshed when the closure returns, so it can never
-//!   go stale.
+//!   go stale.  ([`Policy::update_views`] is the expert variant that
+//!   lets the sharded trainer refresh the view itself, in parallel.)
 //!
 //! # Migrating from raw `TiledPolicy`
 //!
@@ -223,6 +224,21 @@ impl Policy {
         let out = f(&mut self.mlp);
         self.tiled.refresh(&self.mlp);
         out
+    }
+
+    /// Like [`Policy::update`], but hands `f` the tiled view as well
+    /// and performs **no** automatic refresh — the seam the sharded
+    /// trainer uses to refresh the view in parallel (transposing
+    /// column ranges across the worker pool) right after its sharded
+    /// optimizer step.  Contract: `f` must leave the tiled view fully
+    /// consistent with the master parameters before returning, e.g.
+    /// via [`TiledPolicy::refresh`] or a complete
+    /// [`TiledPolicy::refresh_layout`] + transpose pass; readers
+    /// observe whatever state `f` leaves behind.
+    pub fn update_views<R>(&mut self,
+                           f: impl FnOnce(&mut Mlp, &mut TiledPolicy) -> R)
+                           -> R {
+        f(&mut self.mlp, &mut self.tiled)
     }
 }
 

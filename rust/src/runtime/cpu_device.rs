@@ -81,6 +81,11 @@ pub struct CpuHyperParams {
     pub vf_coef: f32,
     pub ent_coef: f32,
     pub max_grad_norm: f32,
+    /// Row-slice count of the sharded gradient accumulation (must
+    /// match the engine's `grad_slices` — the partition shapes the f32
+    /// reduction grouping, which this device replays serially to stay
+    /// bit-identical to the pool-parallel trainer).
+    pub grad_slices: usize,
 }
 
 impl Default for CpuHyperParams {
@@ -92,6 +97,7 @@ impl Default for CpuHyperParams {
             vf_coef: 0.25,
             ent_coef: 0.005,
             max_grad_norm: 2.0,
+            grad_slices: crate::nn::mlp::GRAD_SLICES,
         }
     }
 }
@@ -421,8 +427,14 @@ struct CpuScratch {
     traj_actions: Vec<u32>,
     traj_rewards: Vec<f32>,
     traj_dones: Vec<f32>,
-    cache: Cache,
+    /// Per-slice forward activations for the sharded-update replay
+    /// (one packed [`Cache`] per trajectory row slice); the bootstrap
+    /// forward reuses one cache across its slices.
+    slice_caches: Vec<Cache>,
     boot_cache: Cache,
+    /// Whole-batch value columns, scattered from the per-slice caches.
+    values: Vec<f32>,
+    boot_values: Vec<f32>,
 }
 
 /// One "compiled" in-process graph.
@@ -632,17 +644,60 @@ impl CpuProgram {
         state[l.stats + S_ENV_STEPS] += (n * t) as f32;
 
         if train {
-            sc.tiled.forward(&sc.traj_obs, total, &mut sc.cache);
-            sc.tiled.forward(&sc.obs, rows, &mut sc.boot_cache);
+            // serial replay of the engine's sharded update: the same
+            // fixed row-slice partition and ascending-slice merge
+            // order, so the trained segment stays bit-identical to the
+            // pool-parallel trainer (see `coordinator::cpu_engine`)
+            let ts = crate::nn::mlp::slice_rows(total,
+                                                self.hp.grad_slices);
+            let bs = crate::nn::mlp::slice_rows(rows,
+                                                self.hp.grad_slices);
+            if sc.slice_caches.len() < ts.len() {
+                sc.slice_caches.resize_with(ts.len(), Cache::default);
+            }
+            sc.values.resize(total, 0.0);
+            sc.boot_values.resize(rows, 0.0);
+            for (s, &(lo, nr)) in ts.iter().enumerate() {
+                sc.tiled.forward_rows(&sc.traj_obs, total, lo, nr,
+                                      &mut sc.slice_caches[s]);
+                sc.values[lo..lo + nr]
+                    .copy_from_slice(&sc.slice_caches[s].value);
+            }
+            for &(lo, nr) in &bs {
+                sc.tiled.forward_rows(&sc.obs, rows, lo, nr,
+                                      &mut sc.boot_cache);
+                sc.boot_values[lo..lo + nr]
+                    .copy_from_slice(&sc.boot_cache.value);
+            }
             let returns = crate::nn::nstep_returns(
-                &sc.traj_rewards, &sc.traj_dones, &sc.boot_cache.value,
+                &sc.traj_rewards, &sc.traj_dones, &sc.boot_values,
                 n, na, t, self.hp.gamma);
             let adv = crate::nn::normalized_advantages(&returns,
-                                                       &sc.cache.value);
+                                                       &sc.values);
+            let inv_n = 1.0 / total as f32;
             let mut grads = policy.zeros_like();
-            let (pi_loss, v_loss, entropy) = policy.backward_a2c(
-                &sc.traj_obs, &sc.cache, &sc.traj_actions, &adv, &returns,
-                self.hp.vf_coef, self.hp.ent_coef, &mut grads);
+            let mut partial = policy.zeros_like();
+            let (mut pi_loss, mut v_loss, mut entropy) =
+                (0.0f32, 0.0, 0.0);
+            for (s, &(lo, nr)) in ts.iter().enumerate() {
+                partial.zero();
+                let l = policy.backward_a2c_rows(
+                    &sc.traj_obs, total, lo, &sc.slice_caches[s],
+                    &sc.traj_actions[lo..lo + nr], &adv[lo..lo + nr],
+                    &returns[lo..lo + nr], inv_n, self.hp.vf_coef,
+                    self.hp.ent_coef, &mut partial);
+                if s == 0 {
+                    grads.copy_from(&partial);
+                    pi_loss = l.0;
+                    v_loss = l.1;
+                    entropy = l.2;
+                } else {
+                    grads.add_assign(&partial);
+                    pi_loss += l.0;
+                    v_loss += l.1;
+                    entropy += l.2;
+                }
+            }
             let gn = grads.global_norm();
             if gn > self.hp.max_grad_norm {
                 grads.scale(self.hp.max_grad_norm / gn);
@@ -668,12 +723,20 @@ impl CpuProgram {
             state[l.stats + S_V_LOSS] = v_loss;
             state[l.stats + S_ENTROPY] = entropy;
             state[l.stats + S_GRAD_NORM] = gn;
-            state[l.stats + S_REWARD_MEAN] = (sc.traj_rewards.iter()
-                .map(|r| *r as f64).sum::<f64>()
-                / total as f64) as f32;
-            state[l.stats + S_VALUE_MEAN] = (sc.cache.value.iter()
-                .map(|v| *v as f64).sum::<f64>()
-                / total as f64) as f32;
+            // per-slice f64 partials merged in ascending slice order —
+            // the engine's exact stat-fold grouping
+            let (mut rsum, mut vsum) = (0.0f64, 0.0f64);
+            for &(lo, nr) in &ts {
+                let (mut pr, mut pv) = (0.0f64, 0.0f64);
+                for r in lo..lo + nr {
+                    pr += sc.traj_rewards[r] as f64;
+                    pv += sc.values[r] as f64;
+                }
+                rsum += pr;
+                vsum += pv;
+            }
+            state[l.stats + S_REWARD_MEAN] = (rsum / total as f64) as f32;
+            state[l.stats + S_VALUE_MEAN] = (vsum / total as f64) as f32;
             state[l.stats + S_ITER] += 1.0;
         }
         state

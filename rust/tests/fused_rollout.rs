@@ -4,11 +4,13 @@
 //!    at a fixed seed — policies *and* metrics — because action sampling
 //!    draws from per-lane streams, the tiled policy kernels give every
 //!    batch row its own accumulator chain, trajectory capture writes
-//!    global SoA column offsets, and completed-episode telemetry is
-//!    drained in global `(tick, lane)` order;
+//!    global SoA column offsets, completed-episode telemetry is drained
+//!    in global `(tick, lane)` order, and the sharded train phase
+//!    reduces its per-slice partial gradients in fixed slice order (the
+//!    slice partition is config-determined, never thread-derived);
 //! 2. the engine's persistent worker pool shuts down cleanly: repeated
-//!    `init()` reseeding rebuilds the pool every time without hanging or
-//!    leaking threads.
+//!    `init()` reseeding reuses one pool without hanging or leaking
+//!    threads.
 
 use warpsci::coordinator::{Backend, CpuEngine, CpuEngineConfig};
 use warpsci::nn::Mlp;
@@ -73,6 +75,37 @@ fn catalysis_train_iter_is_bit_identical_across_thread_counts() {
     }
 }
 
+/// The sharded train phase must not let the thread count leak into the
+/// f32 reductions: 1/2/4/8 threads, same seed, same trained bits.
+/// `n_envs = 9` keeps at least one thread count above the default
+/// `grad_slices = 8` stride boundary while the engine still clamps to
+/// one lane per shard.
+#[test]
+fn covid_trained_params_bit_identical_at_1_2_4_8_threads() {
+    let reference = train_fingerprint("covid_econ", 9, 6, 1, 3);
+    for threads in [2, 4, 8] {
+        let got = train_fingerprint("covid_econ", 9, 6, threads, 3);
+        assert_eq!(got.0, reference.0,
+                   "covid_econ trained params diverged at {threads} \
+                    threads");
+        assert_eq!(got.1, reference.1,
+                   "covid_econ metrics diverged at {threads} threads");
+    }
+}
+
+#[test]
+fn bioreactor_trained_params_bit_identical_at_1_2_4_8_threads() {
+    let reference = train_fingerprint("bioreactor", 9, 8, 1, 3);
+    for threads in [2, 4, 8] {
+        let got = train_fingerprint("bioreactor", 9, 8, threads, 3);
+        assert_eq!(got.0, reference.0,
+                   "bioreactor trained params diverged at {threads} \
+                    threads");
+        assert_eq!(got.1, reference.1,
+                   "bioreactor metrics diverged at {threads} threads");
+    }
+}
+
 #[cfg(target_os = "linux")]
 fn os_thread_count() -> usize {
     std::fs::read_to_string("/proc/self/status")
@@ -96,8 +129,9 @@ fn repeated_init_reseeding_never_hangs_or_leaks_pool_threads() {
     })
     .unwrap();
     for seed in 0..20u64 {
-        // init() rebuilds the whole backend: the old engine's pool must
-        // join its workers on drop, the new one spawns a fresh pool
+        // init() re-seeds in place: the engine resets every replica and
+        // RNG stream on the same pool, so no threads are spawned or
+        // joined across the whole loop
         eng.init(seed).unwrap();
         eng.train_iter().unwrap();
         assert_eq!(eng.metrics_row(0.0).unwrap().iter, 1.0);

@@ -9,7 +9,7 @@
 //! pinning thread-count invariance and CpuDevice-vs-CpuEngine equality
 //! *through* the tiled path.
 
-use warpsci::nn::mlp::{Cache, RefCache};
+use warpsci::nn::mlp::{slice_rows, Cache, RefCache};
 use warpsci::nn::{kernels, Mlp, SampleScratch, TiledPolicy};
 use warpsci::util::Pcg64;
 
@@ -101,6 +101,99 @@ fn tiled_backward_is_bit_identical_to_scalar_reference() {
                 .zip(ref_grads.views().iter()).enumerate()
             {
                 assert_eq!(bits(g), bits(rg), "{tag} tensor {idx}");
+            }
+        }
+    }
+}
+
+/// The sharded backward contract: slicing the batch into fixed row
+/// ranges (`slice_rows`), running the *tiled* per-slice kernel
+/// (`forward_rows` + `backward_a2c_rows`) over each slice, and merging
+/// the partial gradients and losses in ascending slice order (slice 0
+/// copied, later slices added) is bit-identical to the scalar
+/// `backward_a2c_sliced_ref` oracle replaying the same grouping — and
+/// with one slice, bit-identical to the whole-batch `backward_a2c`.
+/// This is exactly the reduction the pool-parallel trainer performs, so
+/// its trained parameters cannot depend on which thread ran which
+/// slice.
+#[test]
+fn sliced_tiled_backward_matches_sliced_scalar_reference() {
+    let mut rng = Pcg64::new(505);
+    for &(od, hidden, acts) in &SHAPES {
+        let mlp = Mlp::init(od, hidden, acts, &mut rng);
+        let tiled = TiledPolicy::new(&mlp);
+        for &n in &[5usize, 8, 16, 33] {
+            let x_rows = randv(&mut rng, n * od);
+            let x_cols = to_cols(&x_rows, n, od);
+            let actions: Vec<u32> =
+                (0..n).map(|_| rng.below(acts) as u32).collect();
+            let adv = randv(&mut rng, n);
+            let ret = randv(&mut rng, n);
+            let (vf, ec) = (0.5f32, 0.01f32);
+            let mut rc = RefCache::default();
+            mlp.forward_ref(&x_rows, n, &mut rc);
+            let mut full_grads = mlp.zeros_like();
+            let mut full_cache = Cache::default();
+            tiled.forward(&x_cols, n, &mut full_cache);
+            let full = mlp.backward_a2c(&x_cols, &full_cache, &actions,
+                                        &adv, &ret, vf, ec,
+                                        &mut full_grads);
+            for n_slices in [1usize, 2, 3, 8] {
+                let tag = format!("shape ({od},{hidden},{acts}) n={n} \
+                                   slices={n_slices}");
+                // tiled sharded driver: per-slice forward + backward,
+                // fixed-order merge — the trainer's exact reduction
+                let inv_n = 1.0 / n as f32;
+                let mut cache = Cache::default();
+                let mut partial = mlp.zeros_like();
+                let mut grads = mlp.zeros_like();
+                let mut losses = (0.0f32, 0.0f32, 0.0f32);
+                for (s, &(lo, nr)) in
+                    slice_rows(n, n_slices).iter().enumerate()
+                {
+                    tiled.forward_rows(&x_cols, n, lo, nr, &mut cache);
+                    partial.zero();
+                    let l = mlp.backward_a2c_rows(
+                        &x_cols, n, lo, &cache, &actions[lo..lo + nr],
+                        &adv[lo..lo + nr], &ret[lo..lo + nr], inv_n, vf,
+                        ec, &mut partial);
+                    if s == 0 {
+                        grads.copy_from(&partial);
+                        losses = l;
+                    } else {
+                        grads.add_assign(&partial);
+                        losses.0 += l.0;
+                        losses.1 += l.1;
+                        losses.2 += l.2;
+                    }
+                }
+                // scalar oracle replaying the identical grouping
+                let mut ref_grads = mlp.zeros_like();
+                let want = mlp.backward_a2c_sliced_ref(
+                    &rc, &actions, &adv, &ret, vf, ec, n_slices,
+                    &mut ref_grads);
+                assert_eq!(want.0.to_bits(), losses.0.to_bits(),
+                           "{tag} pi_loss");
+                assert_eq!(want.1.to_bits(), losses.1.to_bits(),
+                           "{tag} v_loss");
+                assert_eq!(want.2.to_bits(), losses.2.to_bits(),
+                           "{tag} entropy");
+                for (idx, (g, rg)) in grads.views().iter()
+                    .zip(ref_grads.views().iter()).enumerate()
+                {
+                    assert_eq!(bits(g), bits(rg), "{tag} tensor {idx}");
+                }
+                if n_slices == 1 {
+                    // one slice degenerates to the unsharded backward
+                    assert_eq!(full.0.to_bits(), losses.0.to_bits(),
+                               "{tag} pi_loss vs whole-batch");
+                    for (idx, (g, fg)) in grads.views().iter()
+                        .zip(full_grads.views().iter()).enumerate()
+                    {
+                        assert_eq!(bits(g), bits(fg),
+                                   "{tag} tensor {idx} vs whole-batch");
+                    }
+                }
             }
         }
     }

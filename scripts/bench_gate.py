@@ -57,6 +57,7 @@ REQUIRED_PREFIXES = [
     "shard_scaling/sync/",
     "shard_scaling/async/",
     "serve/",
+    "train_phase/",
 ]
 
 # The per-env required records are derived from the "registry/envs"
